@@ -1,0 +1,36 @@
+//! Design-space explorer: the analytical V100/A100 latency model applied to
+//! the paper's backbone — layer shares (Fig 1), block costs (Fig 4), MoE
+//! scaling (Fig 9) and what each latency target buys (no training needed).
+//!
+//!     cargo run --release --example latency_explorer
+
+use planer::arch::SearchSpace;
+use planer::coordinator::figures;
+use planer::latency::{AnalyticalModel, Device};
+use planer::runtime::manifest::Block;
+use planer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let cfg = &engine.manifest.config;
+
+    print!("{}", figures::fig1(&engine));
+    println!();
+    print!("{}", figures::fig9(&engine));
+    println!();
+
+    // block-cost ladder on both devices
+    let opts = SearchSpace::Paper.options(cfg.n_heads_full);
+    println!("block latency ladder (us), batch {}:", cfg.batch);
+    println!("{:10} {:>12} {:>12}", "block", "V100", "A100");
+    for b in opts.iter().chain([&Block::SFfl]) {
+        let v = AnalyticalModel::new(Device::V100).block_latency(b, cfg, cfg.batch);
+        let a = AnalyticalModel::new(Device::A100).block_latency(b, cfg, cfg.batch);
+        println!("{:10} {:12.1} {:12.1}", b.name(), v * 1e6, a * 1e6);
+    }
+
+    // what a target buys: cheapest archs meeting each target under Eq. 2
+    println!("\nsearch-space cardinality: {:.2e}", SearchSpace::Paper.cardinality(cfg.n_heads_full, cfg.n_slots));
+    print!("{}", figures::archs(&engine));
+    Ok(())
+}

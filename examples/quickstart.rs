@@ -1,0 +1,35 @@
+//! Quickstart: load the AOT artifacts, train the baseline Transformer-XL on
+//! a synthetic char corpus for a few steps, and evaluate BPC.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use planer::coordinator::Pipeline;
+use planer::data::Corpus;
+use planer::runtime::Engine;
+use planer::train::TrainConfig;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let cfg = &engine.manifest.config;
+    println!(
+        "model: d={} slots={} vocab={} (metric: {})",
+        cfg.d_model, cfg.n_slots, cfg.vocab, cfg.metric
+    );
+
+    let corpus = Corpus::synth_char(120_000, cfg.vocab, 0);
+    let pipeline = Pipeline::new(&engine, &corpus);
+
+    let rep = pipeline.retrain("baseline", TrainConfig::quick(60, 0))?;
+    println!("baseline after 60 steps:");
+    for r in rep.curve.iter().step_by(10) {
+        println!("  step {:3}  ce {:5.3}  lr {:7.5}", r.step, r.ce, r.lr);
+    }
+    println!(
+        "valid {} = {:.3}, test {} = {:.3}",
+        cfg.metric,
+        rep.valid_metric.unwrap_or(f64::NAN),
+        cfg.metric,
+        rep.test_metric.unwrap_or(f64::NAN)
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Serving example: SLA-aware routing over PLANER's latency variants with
+//! wave batching; reports per-variant latency percentiles and throughput.
+//!
+//!     cargo run --release --example serve_batched
+
+use std::time::Duration;
+
+use planer::runtime::Engine;
+use planer::serve::{DecodeEngine, Request, Router, RouterPolicy, ServeMetrics, VariantInfo, WaveBatcher};
+use planer::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let cfg = &engine.manifest.config;
+
+    // pick two variants: best quality (baseline) and a latency-optimized one
+    let mut names = vec!["baseline".to_string()];
+    for cand in ["planer65", "planer50", "par"] {
+        if engine.has_program(&format!("gen_{cand}")) {
+            names.push(cand.to_string());
+            break;
+        }
+    }
+    println!("serving variants: {names:?} (width {})", cfg.batch);
+
+    // profile a decode step per variant for the router
+    let mut variants = Vec::new();
+    for (i, n) in names.iter().enumerate() {
+        let gen = engine.program(&format!("gen_{n}"))?;
+        let inputs: Vec<xla::Literal> =
+            gen.spec.inputs.iter().map(planer::runtime::literal::zeros).collect();
+        let t = planer::util::timer::time_iters(|| { gen.execute(&inputs).unwrap(); }, 1, 5);
+        let lat = planer::util::timer::stats(&t).p50;
+        println!("  {n}: {:6.2}ms/decode-step", lat * 1e3);
+        variants.push(VariantInfo {
+            name: n.clone(),
+            token_latency: lat,
+            quality: (names.len() - i) as f64,
+        });
+    }
+    let router = Router::new(variants.clone(), RouterPolicy::QualityWithinSla);
+
+    // 20 requests with mixed SLAs
+    let mut rng = Rng::new(7);
+    let slow = variants.iter().map(|v| v.token_latency).fold(0.0, f64::max);
+    let mut queues: std::collections::HashMap<String, WaveBatcher> = names
+        .iter()
+        .map(|n| (n.clone(), WaveBatcher::new(cfg.batch, Duration::ZERO)))
+        .collect();
+    for id in 0..20u64 {
+        let prompt: Vec<i32> = (0..3 + rng.below(4)).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let sla = if id % 2 == 0 { f64::INFINITY } else { slow * 5.0 };
+        let r = Request { id, prompt, n_gen: 5, sla };
+        let v = router.route(&r).to_string();
+        queues.get_mut(&v).unwrap().submit(r);
+    }
+
+    for n in &names {
+        let de = DecodeEngine::new(&engine, n)?;
+        let mut st = de.init_state(0)?;
+        let q = queues.get_mut(n).unwrap();
+        let mut m = ServeMetrics::default();
+        while let Some(w) = q.next_wave(std::time::Instant::now()) {
+            de.decode_wave(&mut st, &w, &mut m)?;
+        }
+        if m.requests > 0 {
+            println!(
+                "[{n}] {:2} reqs {:2} waves occ {:4.2} p50 {:7.1}ms p95 {:7.1}ms {:7.1} tok/s",
+                m.requests, m.waves, m.occupancy,
+                m.p50() * 1e3, m.p95() * 1e3, m.throughput_tok_s()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,406 @@
+"""AOT export: lower every program the Rust coordinator needs to HLO text.
+
+Interchange is HLO *text* (never ``.serialize()``): jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each program is exported as
+
+    artifacts/<name>.hlo.txt
+
+plus one ``artifacts/manifest.json`` describing, for every program, the flat
+input/output tensor list (name/shape/dtype), named index *groups* (params,
+opt state, mems, data slots) and, implicitly through matching group names,
+how outputs thread back into inputs across steps.  The Rust runtime
+(rust/src/runtime) is entirely manifest-driven.
+
+Programs
+--------
+per architecture (presets + any --arch JSONs):
+    init_<a>    seed -> params
+    train_<a>   params,m,v,mems,x,y,seed,step,bal_coef -> params,m,v,mems,ce,bal,lr
+    eval_<a>    params,mems,x,y -> ce,mems
+    infer_<a>_b<B>   params,mems,x -> logits,mems      (scoring / prefill)
+    gen_<a>     params,mems,x[B,1] -> logits,mems      (token-by-token decode)
+search space (paper space + iso-parameter ablation space):
+    search_init, search_weight_step, search_arch_step, search_eval
+    (prefix ``searchiso_`` for the ablation space)
+block micro-benches (latency lookup tables, Figs 4/9):
+    bench_<option>_b<B>
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archspec, layers, model, optim, searchnet
+from .config import CONFIGS, ModelConfig, load_config
+
+I32, F32 = jnp.int32, jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# ------------------------------------------------------------- flatten utils
+
+def tree_specs(tree, prefix):
+    """Flatten an abstract pytree into [(name, shape, dtype)] leaf specs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        out.append((prefix + jax.tree_util.keystr(kp),
+                    list(leaf.shape), str(leaf.dtype)))
+    return out
+
+
+def abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+class ProgramExporter:
+    def __init__(self, out_dir: str, cfg: ModelConfig, merge: bool = False):
+        self.out_dir = out_dir
+        self.cfg = cfg
+        existing = None
+        mpath = os.path.join(out_dir, "manifest.json")
+        if merge and os.path.exists(mpath):
+            with open(mpath) as f:
+                existing = json.load(f)
+        self.manifest = existing or {
+            "config": cfg.to_json(),
+            "options": [archspec.option_name(o) for o in self._space()],
+            "iso_options": [archspec.option_name(o)
+                            for o in self._space(iso=True)],
+            "archs": {},
+            "programs": {},
+        }
+
+    def _space(self, iso: bool = False):
+        opts = archspec.ISO_OPTIONS if iso else archspec.SEARCH_OPTIONS
+        return [archspec.clamp_heads(o, self.cfg) for o in opts]
+
+    def export(self, name: str, fn, groups_in: list[tuple[str, object]],
+               out_group_names: list[str]):
+        """Lower `fn(*pytrees)` to HLO with a flat ABI and record manifest.
+
+        groups_in: ordered (group_name, abstract_pytree).  fn returns a tuple
+        of pytrees, one per out_group_names entry.
+        """
+        trees = [t for _, t in groups_in]
+        flat_all, in_tree = jax.tree_util.tree_flatten(tuple(trees))
+
+        def flat_fn(*leaves):
+            args = jax.tree_util.tree_unflatten(in_tree, leaves)
+            outs = fn(*args)
+            flat_out, _ = jax.tree_util.tree_flatten(outs)
+            return tuple(flat_out)
+
+        lowered = jax.jit(flat_fn, keep_unused=True).lower(*flat_all)
+        text = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, hlo_file), "w") as f:
+            f.write(text)
+
+        # input specs + group offsets
+        inputs, in_groups, off = [], {}, 0
+        for gname, tree in groups_in:
+            specs = tree_specs(tree, gname)
+            inputs += specs
+            in_groups[gname] = [off, off + len(specs)]
+            off += len(specs)
+
+        out_abs = jax.eval_shape(fn, *trees)
+        outputs, out_groups, off = [], {}, 0
+        for gname, tree in zip(out_group_names, out_abs):
+            specs = tree_specs(tree, gname)
+            outputs += specs
+            out_groups[gname] = [off, off + len(specs)]
+            off += len(specs)
+
+        self.manifest["programs"][name] = {
+            "hlo": hlo_file,
+            "inputs": [{"name": n, "shape": s, "dtype": d} for n, s, d in inputs],
+            "outputs": [{"name": n, "shape": s, "dtype": d} for n, s, d in outputs],
+            "in_groups": in_groups,
+            "out_groups": out_groups,
+        }
+        print(f"  exported {name}: {len(inputs)} in, {len(outputs)} out, "
+              f"{len(text)//1024} KiB hlo")
+
+    # --------------------------------------------------- fixed-arch programs
+
+    def arch_programs(self, aname: str, arch: list[dict], infer_batches):
+        cfg = self.cfg
+        self.manifest["archs"][aname] = arch
+        L = len(arch)
+        params_abs = jax.eval_shape(
+            lambda s: model.init_model(jax.random.PRNGKey(s[0]), cfg, arch),
+            jax.ShapeDtypeStruct((1,), I32))
+        mems_abs = jax.ShapeDtypeStruct((L, cfg.batch, cfg.mem_len, cfg.d_model), F32)
+        x_abs = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), I32)
+        s1 = jax.ShapeDtypeStruct((1,), I32)
+        f1 = jax.ShapeDtypeStruct((1,), F32)
+
+        def init_fn(seed):
+            return (model.init_model(jax.random.PRNGKey(seed[0]), cfg, arch),)
+
+        self.export(f"init_{aname}", init_fn, [("seed", s1)], ["params"])
+
+        total, warm = cfg.train_steps, cfg.warmup_steps
+
+        def train_fn(params, m, v, mems, x, y, seed, step, bal_coef):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed[0]), step[0])
+
+            def loss_fn(p):
+                logits, new_mems, bal = model.forward(p, arch, cfg, x, mems, key, True)
+                ce = model.cross_entropy(logits, y)
+                return ce + bal_coef[0] * bal, (new_mems, ce, bal)
+
+            grads, (new_mems, ce, bal) = jax.grad(loss_fn, has_aux=True)(params)
+            grads, _ = optim.clip_by_global_norm(grads, cfg.clip)
+            stepf = step[0].astype(F32) + 1.0
+            lr = model.lr_schedule(step[0], cfg, total, warm)
+            params, m, v = optim.lamb_update(params, grads, m, v, stepf, lr,
+                                             weight_decay=cfg.weight_decay)
+            return (params, m, v, new_mems, ce.reshape(1), bal.reshape(1),
+                    lr.reshape(1))
+
+        zeros = params_abs
+        self.export(
+            f"train_{aname}", train_fn,
+            [("params", params_abs), ("m", zeros), ("v", zeros),
+             ("mems", mems_abs), ("x", x_abs), ("y", x_abs),
+             ("seed", s1), ("step", s1), ("bal_coef", f1)],
+            ["params", "m", "v", "mems", "ce", "bal", "lr"])
+
+        def eval_fn(params, mems, x, y):
+            logits, new_mems, _ = model.forward(
+                params, arch, cfg, x, mems, jax.random.PRNGKey(0), False)
+            ce = model.cross_entropy(logits, y)
+            return (ce.reshape(1), new_mems)
+
+        self.export(f"eval_{aname}", eval_fn,
+                    [("params", params_abs), ("mems", mems_abs),
+                     ("x", x_abs), ("y", x_abs)],
+                    ["ce", "mems"])
+
+        for b in infer_batches:
+            mems_b = jax.ShapeDtypeStruct((L, b, cfg.mem_len, cfg.d_model), F32)
+            x_b = jax.ShapeDtypeStruct((b, cfg.seq_len), I32)
+            cfg_b = dataclasses.replace(cfg, batch=b)
+
+            def infer_fn(params, mems, x, _cfg=cfg_b):
+                logits, new_mems, _ = model.forward(
+                    params, arch, _cfg, x, mems, jax.random.PRNGKey(0), False)
+                return (logits, new_mems)
+
+            self.export(f"infer_{aname}_b{b}", infer_fn,
+                        [("params", params_abs), ("mems", mems_b), ("x", x_b)],
+                        ["logits", "mems"])
+
+        # token-by-token decode program (serving hot path)
+        cfg_gen = dataclasses.replace(cfg, seq_len=1)
+        mems_g = jax.ShapeDtypeStruct((L, cfg.batch, cfg.mem_len, cfg.d_model), F32)
+        x_g = jax.ShapeDtypeStruct((cfg.batch, 1), I32)
+
+        def gen_fn(params, mems, x):
+            logits, new_mems, _ = model.forward(
+                params, arch, cfg_gen, x, mems, jax.random.PRNGKey(0), False)
+            return (logits, new_mems)
+
+        self.export(f"gen_{aname}", gen_fn,
+                    [("params", params_abs), ("mems", mems_g), ("x", x_g)],
+                    ["logits", "mems"])
+
+    # ------------------------------------------------------- search programs
+
+    def search_programs(self, prefix: str, iso: bool):
+        cfg = self.cfg
+        options = self._space(iso=iso)
+        O = len(options)
+        L = cfg.n_slots
+        sp_abs, al_abs = jax.eval_shape(
+            lambda s: searchnet.init_search(jax.random.PRNGKey(s[0]), cfg, options),
+            jax.ShapeDtypeStruct((1,), I32))
+        mems_abs = jax.ShapeDtypeStruct((L, cfg.batch, cfg.mem_len, cfg.d_model), F32)
+        x_abs = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), I32)
+        s1 = jax.ShapeDtypeStruct((1,), I32)
+        f1 = jax.ShapeDtypeStruct((1,), F32)
+        fO = jax.ShapeDtypeStruct((O,), F32)
+
+        def init_fn(seed):
+            return searchnet.init_search(jax.random.PRNGKey(seed[0]), cfg, options)
+
+        self.export(f"{prefix}init", init_fn, [("seed", s1)], ["params", "alphas"])
+
+        total, warm = cfg.train_steps, cfg.warmup_steps
+
+        def weight_fn(params, m, v, alphas, mems, x, y, seed, step, temp):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed[0]), step[0])
+            key, skey = jax.random.split(key)
+
+            def loss_fn(p):
+                logits, new_mems, _ = searchnet.forward(
+                    p, alphas, options, cfg, x, mems, key, temp[0], True,
+                    hard=True, sample_key=skey)
+                ce = model.cross_entropy(logits, y)
+                return ce, (new_mems, ce)
+
+            grads, (new_mems, ce) = jax.grad(loss_fn, has_aux=True)(params)
+            grads, _ = optim.clip_by_global_norm(grads, cfg.clip)
+            stepf = step[0].astype(F32) + 1.0
+            lr = model.lr_schedule(step[0], cfg, total, warm)
+            params, m, v = optim.lamb_update(params, grads, m, v, stepf, lr)
+            return (params, m, v, new_mems, ce.reshape(1))
+
+        self.export(
+            f"{prefix}weight_step", weight_fn,
+            [("params", sp_abs), ("m", sp_abs), ("v", sp_abs),
+             ("alphas", al_abs), ("mems", mems_abs), ("x", x_abs),
+             ("y", x_abs), ("seed", s1), ("step", s1), ("temp", f1)],
+            ["params", "m", "v", "mems", "ce"])
+
+        def arch_fn(params, alphas, am, av, mems, x, y, seed, step, temp,
+                    lat_table, lat_base, target):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed[0]), step[0])
+            key, skey = jax.random.split(key)
+
+            def loss_fn(al):
+                logits, new_mems, p_all = searchnet.forward(
+                    params, al, options, cfg, x, mems, key, temp[0], True,
+                    hard=False, sample_key=skey)
+                ce = model.cross_entropy(logits, y)
+                lat_l, ratio, est = searchnet.latency_loss(
+                    p_all, lat_table, lat_base[0], target[0])
+                return ce + lat_l, (new_mems, ce, ratio, est)
+
+            grads, (new_mems, ce, ratio, est) = jax.grad(loss_fn, has_aux=True)(alphas)
+            stepf = step[0].astype(F32) + 1.0
+            alphas, am, av = optim.adam_update(alphas, grads, am, av, stepf,
+                                               cfg.arch_lr)
+            return (alphas, am, av, new_mems, ce.reshape(1),
+                    ratio.reshape(1), est.reshape(1))
+
+        self.export(
+            f"{prefix}arch_step", arch_fn,
+            [("params", sp_abs), ("alphas", al_abs), ("am", al_abs),
+             ("av", al_abs), ("mems", mems_abs), ("x", x_abs), ("y", x_abs),
+             ("seed", s1), ("step", s1), ("temp", f1),
+             ("lat_table", fO), ("lat_base", f1), ("target", f1)],
+            ["alphas", "am", "av", "mems", "ce", "lat_ratio", "est_lat"])
+
+        def eval_fn(params, alphas, mems, x, y):
+            logits, new_mems, _ = searchnet.forward(
+                params, alphas, options, cfg, x, mems, jax.random.PRNGKey(0),
+                1.0, False, hard=True, sample_key=None)
+            ce = model.cross_entropy(logits, y)
+            return (ce.reshape(1), new_mems)
+
+        self.export(f"{prefix}eval", eval_fn,
+                    [("params", sp_abs), ("alphas", al_abs),
+                     ("mems", mems_abs), ("x", x_abs), ("y", x_abs)],
+                    ["ce", "mems"])
+
+    # ------------------------------------------------------- block benches
+
+    def bench_programs(self, batches):
+        cfg = self.cfg
+        for opt in self._space() + [{"type": "sffl"}]:
+            oname = archspec.option_name(opt)
+            if f"bench_{oname}_b{batches[0]}" in self.manifest["programs"]:
+                continue
+            p_abs = jax.eval_shape(
+                lambda s, _o=opt: layers.init_block(jax.random.PRNGKey(s[0]), _o, cfg),
+                jax.ShapeDtypeStruct((1,), I32))
+            for b in batches:
+                cfg_b = dataclasses.replace(cfg, batch=b)
+                x_abs = jax.ShapeDtypeStruct((b, cfg.seq_len, cfg.d_model), F32)
+                mem_abs = jax.ShapeDtypeStruct((b, cfg.mem_len, cfg.d_model), F32)
+
+                def bench_fn(p, x, mem, _o=opt, _c=cfg_b):
+                    y, _ = layers.apply_block(_o, p, x, mem, _c,
+                                              jax.random.PRNGKey(0), False)
+                    return (y,)
+
+                self.export(f"bench_{oname}_b{b}", bench_fn,
+                            [("params", p_abs), ("x", x_abs), ("mem", mem_abs)],
+                            ["y"])
+            self.manifest["programs"][f"bench_{oname}_b{batches[0]}"]["meta"] = {
+                "flops": {str(b): layers.block_flops(opt, dataclasses.replace(cfg, batch=b), b)
+                          for b in batches}}
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest: {len(self.manifest['programs'])} programs")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny", help="tiny|base|path.json")
+    ap.add_argument("--archs", default="all",
+                    help="comma list of preset names, 'all', or 'none'")
+    ap.add_argument("--arch", action="append", default=[],
+                    help="extra arch JSON file(s): name=path")
+    ap.add_argument("--infer-batches", default="")
+    ap.add_argument("--bench-batches", default="")
+    ap.add_argument("--no-search", action="store_true")
+    ap.add_argument("--no-bench", action="store_true")
+    ap.add_argument("--merge", action="store_true",
+                    help="merge new programs into an existing manifest "
+                         "(used by `planer compile` for searched archs)")
+    args = ap.parse_args()
+
+    cfg = load_config(args.config)
+    os.makedirs(args.out, exist_ok=True)
+    ex = ProgramExporter(args.out, cfg, merge=args.merge)
+
+    infer_batches = ([int(b) for b in args.infer_batches.split(",") if b]
+                     or [cfg.batch])
+    bench_batches = ([int(b) for b in args.bench_batches.split(",") if b]
+                     or sorted({1, cfg.batch, 4 * cfg.batch}))
+
+    presets = archspec.presets(cfg)
+    if args.archs == "all":
+        selected = presets
+    elif args.archs == "none":
+        selected = {}
+    else:
+        selected = {k: presets[k] for k in args.archs.split(",")}
+    for spec in args.arch:
+        name, path = spec.split("=", 1)
+        selected[name] = [archspec.clamp_heads(o, cfg) for o in archspec.load(path)]
+
+    for aname, arch in selected.items():
+        print(f"[arch {aname}] {[archspec.option_name(o) for o in arch]}")
+        ex.arch_programs(aname, arch, infer_batches)
+
+    if not args.no_search:
+        print("[search space]")
+        ex.search_programs("search_", iso=False)
+        print("[iso-parameter search space]")
+        ex.search_programs("searchiso_", iso=True)
+
+    if not args.no_bench:
+        print(f"[block benches] batches={bench_batches}")
+        ex.bench_programs(bench_batches)
+
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Architecture specifications: the per-slot block choices PLANER searches over.
+
+An architecture is a JSON list of block dicts, one per backbone slot:
+
+    {"type": "skip"}
+    {"type": "mha",  "heads": 1|2|4|8}
+    {"type": "ffl"}                      # inner = cfg.d_inner
+    {"type": "sffl"}                     # iso-param scaled FFL, inner = cfg.sffl_inner
+    {"type": "moe",  "top_k": 1|2}       # cfg.n_experts experts
+
+The same encoding round-trips through artifacts/archs/*.json to the Rust
+`arch` module.  Option *indices* into SEARCH_OPTIONS are the contract between
+the exported search-net HLOs (alpha column order, latency-table order) and
+the Rust search orchestrator — keep the order stable.
+"""
+from __future__ import annotations
+
+import json
+
+# Search space of the paper (§4.1): skip, MHA x {1,2,4,8} heads, FFL,
+# MoE x {top1, top2}.  Index order is the cross-layer ABI.
+SEARCH_OPTIONS = [
+    {"type": "skip"},
+    {"type": "mha", "heads": 1},
+    {"type": "mha", "heads": 2},
+    {"type": "mha", "heads": 4},
+    {"type": "mha", "heads": 8},
+    {"type": "ffl"},
+    {"type": "moe", "top_k": 1},
+    {"type": "moe", "top_k": 2},
+]
+
+# Iso-parameter ablation space (§4.3): MoE options replaced by scaled FFL.
+ISO_OPTIONS = [
+    {"type": "skip"},
+    {"type": "mha", "heads": 1},
+    {"type": "mha", "heads": 2},
+    {"type": "mha", "heads": 4},
+    {"type": "mha", "heads": 8},
+    {"type": "ffl"},
+    {"type": "sffl"},
+]
+
+
+def option_name(o: dict) -> str:
+    t = o["type"]
+    if t == "mha":
+        return f"mha{o['heads']}"
+    if t == "moe":
+        return f"moe_t{o['top_k']}"
+    return t
+
+
+def clamp_heads(o: dict, cfg) -> dict:
+    """Tiny configs cannot host 8 heads; clamp while keeping distinct options."""
+    if o.get("type") == "mha":
+        return {"type": "mha", "heads": min(o["heads"], cfg.n_heads_full)}
+    return o
+
+
+def baseline(cfg) -> list[dict]:
+    """Paper backbone: interleaved MHA(8 heads) / FFL."""
+    out = []
+    for i in range(cfg.n_slots):
+        if i % 2 == 0:
+            out.append({"type": "mha", "heads": cfg.n_heads_full})
+        else:
+            out.append({"type": "ffl"})
+    return out
+
+
+def sandwich(cfg) -> list[dict]:
+    """Sandwich Transformer (Press et al. 2019): same blocks, attention
+    concentrated at the bottom, FFLs at the top (sandwich coefficient k=n/3)."""
+    n = cfg.n_slots
+    n_mha = n // 2
+    n_ffl = n - n_mha
+    k = max(1, n // 6)
+    head = [{"type": "mha", "heads": cfg.n_heads_full}] * k
+    tail = [{"type": "ffl"}] * k
+    mid = []
+    rem_m, rem_f = n_mha - k, n_ffl - k
+    for i in range(rem_m + rem_f):
+        mid.append({"type": "mha", "heads": cfg.n_heads_full} if i % 2 == 0 and rem_m > 0 else {"type": "ffl"})
+        if mid[-1]["type"] == "mha":
+            rem_m -= 1
+        else:
+            rem_f -= 1
+    return head + mid + tail
+
+
+def par(cfg) -> list[dict]:
+    """PAR Transformer (Mandava et al. 2020): attention only where required —
+    ~1/3 of the attention layers, placed early; the rest replaced with FFLs."""
+    n = cfg.n_slots
+    n_mha = max(1, (n // 2) // 3)
+    out = []
+    mha_pos = set(range(0, 2 * n_mha, 2))
+    for i in range(n):
+        if i in mha_pos:
+            out.append({"type": "mha", "heads": cfg.n_heads_full})
+        else:
+            out.append({"type": "ffl"})
+    return out
+
+
+def planer(cfg, target: float) -> list[dict]:
+    """Seed PLANER architectures per Appendix A's observed pattern: sparse,
+    narrow attention early/middle, MoE layers concentrated toward the end.
+    These seed the artifact set; the *searched* archs from the Rust phase-1
+    run are compiled via `planer compile --arch` and replace them.
+    """
+    n = cfg.n_slots
+    out: list[dict] = []
+    if target >= 0.9:
+        heads = [cfg.n_heads_full, cfg.n_heads_full // 2]
+        n_mha = max(2, n // 3)
+    elif target >= 0.8:
+        heads = [cfg.n_heads_full // 2, cfg.n_heads_full // 2]
+        n_mha = max(2, n // 3)
+    elif target >= 0.65:
+        heads = [cfg.n_heads_full // 2, cfg.n_heads_full // 4]
+        n_mha = max(2, n // 4)
+    else:
+        heads = [cfg.n_heads_full // 4, max(1, cfg.n_heads_full // 8)]
+        n_mha = max(1, n // 6)
+    mha_pos = {round(i * (n * 0.7) / max(1, n_mha)) for i in range(n_mha)}
+    n_moe = max(1, n // 6)
+    moe_pos = set(range(n - 2 * n_moe, n, 2))
+    hi = 0
+    for i in range(n):
+        if i in mha_pos:
+            out.append({"type": "mha", "heads": max(1, heads[hi % len(heads)])})
+            hi += 1
+        elif i in moe_pos:
+            out.append({"type": "moe", "top_k": 2})
+        elif target < 0.65 and i % 3 == 2:
+            out.append({"type": "skip"})
+        else:
+            out.append({"type": "ffl"})
+    return out
+
+
+def presets(cfg) -> dict[str, list[dict]]:
+    ps = {
+        "baseline": baseline(cfg),
+        "sandwich": sandwich(cfg),
+        "par": par(cfg),
+        "planer50": planer(cfg, 0.50),
+        "planer65": planer(cfg, 0.65),
+        "planer80": planer(cfg, 0.80),
+        "planer95": planer(cfg, 0.95),
+    }
+    return {k: [clamp_heads(o, cfg) for o in v] for k, v in ps.items()}
+
+
+def save(arch: list[dict], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(arch, f, indent=1)
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

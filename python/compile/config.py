@@ -1,0 +1,77 @@
+"""Model / search configuration shared by every exported program.
+
+The same dataclass is serialised into the artifact manifest so the Rust
+coordinator (rust/src/config) sees exactly the shapes Python lowered with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer-XL backbone + training hyper-parameters.
+
+    `n_slots` counts MHA/FFL *blocks* (the paper's unit: 2x per transformer
+    layer — 24 for enwik8, 32 for WT103 at full scale).
+    """
+    vocab: int = 256
+    d_model: int = 128
+    n_slots: int = 12
+    d_inner: int = 512            # FFL inner dim (paper: 2048 @ d=512)
+    n_heads_full: int = 8
+    seq_len: int = 64             # target_len
+    mem_len: int = 64
+    batch: int = 16
+    dropout: float = 0.1
+    moe_dropout: float = 0.2
+    n_experts: int = 4            # paper: 8
+    capacity_factor: float = 1.5
+    sffl_inner: int = 2048        # iso-param scaled FFL (paper: 16384 @ 2048 inner)
+    lr: float = 0.01              # JITLamb lr (paper wt103)
+    arch_lr: float = 0.01         # Adam lr for architecture weights
+    weight_decay: float = 0.0
+    clip: float = 0.25
+    init_std: float = 0.02
+    metric: str = "bpc"           # "bpc" (char) or "ppl" (word)
+    balance_coef: float = 0.01    # Switch-style aux-loss weight (paper Eq. 4)
+    train_steps: int = 2000       # lr-schedule horizon baked into train HLOs
+    warmup_steps: int = 200
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq_len
+
+    @property
+    def s_total(self) -> int:
+        return self.mem_len + self.seq_len
+
+    def capacity(self, top_k: int) -> int:
+        cap = int(self.capacity_factor * top_k * self.tokens / self.n_experts)
+        return max(4, cap)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ModelConfig":
+        known = {f.name for f in dataclasses.fields(ModelConfig)}
+        return ModelConfig(**{k: v for k, v in d.items() if k in known})
+
+
+# Canonical configs.  `tiny` keeps artifact build + cargo tests fast;
+# `base` is the repro scale used by examples and the paper-figure benches.
+TINY = ModelConfig(vocab=97, d_model=32, n_slots=6, d_inner=64, n_heads_full=4,
+                   seq_len=16, mem_len=16, batch=4, n_experts=4, sffl_inner=256,
+                   capacity_factor=2.0, train_steps=600, warmup_steps=20)
+BASE = ModelConfig()
+CONFIGS = {"tiny": TINY, "base": BASE}
+
+
+def load_config(name_or_path: str) -> ModelConfig:
+    if name_or_path in CONFIGS:
+        return CONFIGS[name_or_path]
+    with open(name_or_path) as f:
+        return ModelConfig.from_json(json.load(f))

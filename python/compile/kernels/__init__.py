@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for PLANER's compute hot-spots.
+
+- ``moe``       capacity-based mixture-of-experts FFL (the paper's core block)
+- ``ffl``       fused position-wise feed-forward layer
+- ``attention`` relative multi-head attention core (Transformer-XL)
+- ``ref``       pure-jnp oracles, the pytest ground truth
+"""
+from . import attention, ffl, moe, ref  # noqa: F401

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: relative multi-head attention core (Transformer-XL).
+
+Attention is >80% of TXL inference latency (paper Fig. 1) and the block
+PLANER prunes most aggressively.  The kernel computes the quadratic part —
+content scores, +precomputed position scores, masked softmax, value gather —
+with a (batch, head) grid so each program holds one head's [T, S] score
+matrix in VMEM.  The position term BD (relative-shifted (q+v_bias)@R^T) is a
+cheap [T, S] precompute done in jnp by the caller; keeping it an input lets
+one kernel serve every head-count search option.
+
+interpret=True: see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bd_ref, mask_ref, o_ref, *, scale):
+    q = q_ref[...]                  # [T, dh]
+    k = k_ref[...]                  # [S, dh]
+    ac = q @ k.T                    # [T, S] content score
+    logits = (ac + bd_ref[...]) * scale + mask_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = p @ v_ref[...]     # [T, dh]
+
+
+def rel_attention_fwd_only(q, k, v, bd, mask, scale):
+    """Forward-only TXL attention core (no autodiff).
+
+    q [B,Hh,T,dh], k/v [B,Hh,S,dh], bd [B,Hh,T,S], mask [T,S] -> [B,Hh,T,dh]
+    """
+    b, hh, t, dh = q.shape
+    s = k.shape[2]
+    import functools
+    kern = functools.partial(_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(b, hh),
+        in_specs=[
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, s), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((t, s), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hh, t, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, bd, mask)
+
+
+def vmem_footprint_bytes(t, s, dh, itemsize=4):
+    """Per-(batch,head) VMEM residency estimate for §Perf."""
+    return itemsize * (t * dh + 2 * s * dh + 2 * t * s + t * dh)
+
+
+# Differentiable entry point (see ffl.py for the custom_vjp rationale).
+import functools  # noqa: E402
+
+from . import ref as _ref  # noqa: E402
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _rel_attention(q, k, v, bd, mask, scale):
+    return rel_attention_fwd_only(q, k, v, bd, mask, scale)
+
+
+def _attn_vjp_fwd(q, k, v, bd, mask, scale):
+    return rel_attention_fwd_only(q, k, v, bd, mask, scale), (q, k, v, bd, mask)
+
+
+def _attn_vjp_bwd(scale, res, g):
+    q, k, v, bd, mask = res
+    _, vjp = jax.vjp(lambda q, k, v, bd, mask:
+                     _ref.rel_attention_ref(q, k, v, bd, mask, scale),
+                     q, k, v, bd, mask)
+    return vjp(g)
+
+
+_rel_attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)
+
+
+def rel_attention(q, k, v, bd, mask, scale):
+    """TXL attention core, differentiable.  See ref.rel_attention_ref."""
+    return _rel_attention(q, k, v, bd, mask, scale)

@@ -1,0 +1,157 @@
+"""L1 Pallas kernel: capacity-based mixture-of-experts FFL.
+
+This is the paper's compute hot-spot.  PLANER's reference implementation
+(paper §4.2) processes experts *sequentially* in mini-batches of
+``TopK*N/E`` tokens; the oracle line in Fig. 9 is the dense-GEMM ideal.
+On TPU the idiomatic realisation (GShard) expresses dispatch and combine as
+one-hot matmuls so the whole MoE becomes three MXU-friendly batched GEMMs:
+
+    xe  = dispatch[e] @ x            # [C,N] @ [N,D] -> [C,D]   gather
+    ye  = relu(xe @ w1[e]) @ w2[e]   # expert FFN on its capacity buffer
+    out += dispatch[e].T @ (ye * combine[e])   # scatter-add
+
+The grid iterates over experts; the output block is shared across grid steps
+(TPU grids execute sequentially, as does interpret mode) so the scatter is a
+read-modify-write accumulation, zero-initialised at e == 0.
+
+Hardware adaptation (DESIGN.md §2): the paper's GPU under-utilisation at
+small batch comes from launching E small GEMMs; here each expert's GEMM is
+shaped [C, D] x [D, H] with C a multiple of the MXU tile, so utilisation is
+batch-independent by construction — this is the "optimized parallel
+implementation" the paper leaves as future work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(x_ref, disp_ref, comb_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                o_ref):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    disp = disp_ref[...]            # [C, N]
+    xe = disp @ x_ref[...]          # gather: [C, D]
+    h = jnp.maximum(xe @ w1_ref[...] + b1_ref[...], 0.0)
+    ye = h @ w2_ref[...] + b2_ref[...]
+    ye = ye * comb_ref[...][:, None]
+    o_ref[...] += disp.T @ ye       # scatter-add
+
+
+@jax.jit
+def moe_fwd_only(x, dispatch, combine, w1, b1, w2, b2):
+    """Forward-only capacity-based MoE FFL (no autodiff).
+
+    x [N,D], dispatch [E,C,N], combine [E,C], w1 [E,D,H], b1 [E,H],
+    w2 [E,H,D], b2 [E,D]  ->  [N,D]
+    """
+    n, d = x.shape
+    e, c, _ = dispatch.shape
+    hdim = w1.shape[2]
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((None, c, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, c), lambda i: (i, 0)),
+            pl.BlockSpec((None, d, hdim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((None, hdim, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, dispatch, combine, w1, b1, w2, b2)
+
+
+def _topk_by_argmax(probs, k: int):
+    """Iterative-argmax top-k.  jax.lax.top_k lowers to the `topk` HLO
+    instruction whose text form xla_extension 0.5.1 cannot parse; for the
+    small k of MoE routing (1 or 2) repeated argmax is equally fast and
+    lowers to plain reduce ops."""
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        v = jnp.take_along_axis(p, i[:, None], axis=-1)[:, 0]
+        vals.append(v)
+        idxs.append(i)
+        p = p - jax.nn.one_hot(i, p.shape[-1], dtype=p.dtype) * 1e9
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def top_k_dispatch(gate_logits, top_k: int, capacity: int):
+    """Build dispatch/combine tensors from gate logits (pure jnp, cheap).
+
+    gate_logits: [N, E].  Returns (dispatch [E,C,N], combine [E,C],
+    probs [N,E], fraction_per_expert [E]) — the latter two feed the
+    Switch-style balance loss (Eq. 4).
+
+    Routing follows the paper: softmax gate, each token picks its top-k
+    experts; within an expert, tokens are admitted in index order up to
+    `capacity` (overflow tokens are dropped for that expert, residual path
+    covers them).  Combine weights are the gate probabilities renormalised
+    over the chosen k.
+    """
+    n, num_e = gate_logits.shape
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    topv, topi = _topk_by_argmax(probs, top_k)               # [N,k]
+    norm = jnp.sum(topv, axis=-1, keepdims=True)
+    topv = topv / jnp.maximum(norm, 1e-9)
+
+    # assign[n,k,e] one-hot over experts for each of the token's k choices
+    assign = jax.nn.one_hot(topi, num_e, dtype=gate_logits.dtype)  # [N,k,E]
+    # position of each (token, choice) within its expert queue
+    flat = assign.reshape(n * top_k, num_e)                  # choice-major? token-major
+    pos = jnp.cumsum(flat, axis=0) - flat                    # [N*k, E]
+    slot = jnp.sum(pos * flat, axis=-1)                      # [N*k]
+    keep = (slot < capacity) & (jnp.sum(flat, -1) > 0)
+    slot_oh = jax.nn.one_hot(slot, capacity, dtype=gate_logits.dtype)  # [N*k, C]
+    # dispatch[e, c, n] = keep * flat[nk, e] * slot_oh[nk, c], folded over k
+    d_full = jnp.einsum("me,mc->ecm", flat * keep[:, None], slot_oh)   # [E,C,N*k]
+    dispatch = d_full.reshape(num_e, capacity, n, top_k).sum(-1)
+    gates = (topv.reshape(n * top_k) * keep)
+    comb_full = jnp.einsum("me,mc,m->ecm", flat, slot_oh, gates)
+    combine = comb_full.reshape(num_e, capacity, n, top_k).sum(-1).sum(-1)
+
+    fraction = jnp.mean(assign.sum(1), axis=0) / top_k       # tokens fraction F_e
+    return dispatch, combine, probs, fraction
+
+
+def vmem_footprint_bytes(n, d, hdim, c, itemsize=4):
+    """Per-grid-step VMEM residency estimate for §Perf."""
+    return itemsize * (n * d * 2 + c * n + c + d * hdim + hdim + hdim * d + d
+                       + c * d + c * hdim)
+
+
+# Differentiable entry point: Pallas forward, jnp-reference VJP backward
+# (see ffl.py for rationale — Pallas has no reverse-mode AD).
+from . import ref as _ref  # noqa: E402
+
+
+@jax.custom_vjp
+def moe(x, dispatch, combine, w1, b1, w2, b2):
+    """Capacity-based MoE FFL, differentiable.  See ref.moe_ref."""
+    return moe_fwd_only(x, dispatch, combine, w1, b1, w2, b2)
+
+
+def _moe_vjp_fwd(x, dispatch, combine, w1, b1, w2, b2):
+    return moe_fwd_only(x, dispatch, combine, w1, b1, w2, b2), (
+        x, dispatch, combine, w1, b1, w2, b2)
+
+
+def _moe_vjp_bwd(res, g):
+    _, vjp = jax.vjp(_ref.moe_ref, *res)
+    return vjp(g)
+
+
+moe.defvjp(_moe_vjp_fwd, _moe_vjp_bwd)

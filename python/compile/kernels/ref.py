@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a corresponding `*_ref` here with an
+identical signature and semantics.  pytest (python/tests/) asserts allclose
+between kernel and oracle across shape/dtype sweeps — this is the core
+correctness signal for Layer 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ffl_ref(x, w1, b1, w2, b2):
+    """Position-wise feed-forward layer: ReLU MLP.
+
+    x: [N, D]; w1: [D, H]; b1: [H]; w2: [H, D]; b2: [D]  ->  [N, D]
+    """
+    h = jax.nn.relu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def moe_ref(x, dispatch, combine, w1, b1, w2, b2):
+    """Capacity-based mixture-of-experts FFL (GShard-style dispatch).
+
+    x:        [N, D]   flattened tokens
+    dispatch: [E, C, N] one-hot dispatch matrix (row c of expert e selects the
+              token routed to that expert's capacity slot c; all-zero rows are
+              padding slots)
+    combine:  [E, C]   gate scale applied to each slot's output on the way back
+    w1,b1,w2,b2: per-expert FFN params, shapes [E,D,H],[E,H],[E,H,D],[E,D]
+
+    Returns [N, D]: sum over experts of the scattered, gate-scaled outputs.
+    Tokens that were dropped (not routed anywhere) contribute zero, matching
+    the Switch Transformer residual-passthrough convention handled by the
+    caller.
+    """
+    xe = jnp.einsum("ecn,nd->ecd", dispatch, x)
+    h = jax.nn.relu(jnp.einsum("ecd,edh->ech", xe, w1) + b1[:, None, :])
+    ye = jnp.einsum("ech,ehd->ecd", h, w2) + b2[:, None, :]
+    ye = ye * combine[:, :, None]
+    return jnp.einsum("ecn,ecd->nd", dispatch, ye)
+
+
+def rel_attention_ref(q, k, v, bd, mask, scale):
+    """Relative multi-head attention core (Transformer-XL, post-projection).
+
+    q:    [B, Hh, T, dh]  queries (content bias u already added by caller)
+    k:    [B, Hh, S, dh]  keys over memory+current segment (S = M + T)
+    v:    [B, Hh, S, dh]
+    bd:   [B, Hh, T, S]   precomputed position-score term (rel-shifted)
+    mask: [T, S]          additive mask (0 or -inf), causal w.r.t. memory
+    scale: 1/sqrt(dh)
+
+    Returns [B, Hh, T, dh].
+    """
+    ac = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    logits = (ac + bd) * scale + mask[None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)

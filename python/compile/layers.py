@@ -1,0 +1,228 @@
+"""Transformer-XL building blocks (Layer 2).
+
+Every block type in PLANER's search space lives here: relative multi-head
+attention (with segment memory), feed-forward, scaled iso-param feed-forward,
+mixture-of-experts, and skip.  Each block's heavy compute is a Layer-1 Pallas
+kernel; everything else (layernorm, projections, routing bookkeeping) is
+plain jnp that XLA fuses around the kernels.
+
+All block functions share the signature
+
+    apply(params, x, mem, cfg, key, train) -> (y, balance_loss)
+
+with x [B,T,D] and mem [B,M,D] (ignored by non-attention blocks), so the
+fixed-arch network and the super-block search network can treat them
+uniformly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import ffl as ffl_k
+from .kernels import moe as moe_k
+
+
+# ------------------------------------------------------------------ utils
+
+def layer_norm(p, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def dropout(x, rate, key, train: bool):
+    if not train or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def sinusoid_pos_emb(s: int, d: int, dtype=jnp.float32):
+    """Relative position embedding for distances s-1 .. 0 (TXL convention)."""
+    pos = jnp.arange(s - 1, -1, -1.0, dtype=dtype)
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=dtype) / d))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rel_shift(x):
+    """TXL relative shift: aligns the (q, r) score matrix so column j of row i
+    holds the score for relative distance (S - T) + i - j."""
+    b, h, t, s = x.shape
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (1, 0)))
+    x = x.reshape(b, h, s + 1, t)
+    return x[:, :, 1:, :].reshape(b, h, t, s)
+
+
+def causal_mask(t: int, m: int, dtype=jnp.float32):
+    """Additive mask [T, M+T]: query i sees keys j <= m + i."""
+    s = m + t
+    j = jnp.arange(s)[None, :]
+    i = jnp.arange(t)[:, None]
+    return jnp.where(j > m + i, jnp.asarray(-1e30, dtype), jnp.asarray(0.0, dtype))
+
+
+# ------------------------------------------------------------------ init
+
+def _norm_init(key, shape, std):
+    return jax.random.normal(key, shape) * std
+
+
+def init_ln(d):
+    return {"g": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def init_mha(key, cfg, heads: int):
+    d = cfg.d_model
+    dh = d // heads
+    ks = jax.random.split(key, 5)
+    std = cfg.init_std
+    return {
+        "ln": init_ln(d),
+        "wq": _norm_init(ks[0], (d, d), std),
+        "wkv": _norm_init(ks[1], (d, 2 * d), std),
+        "wr": _norm_init(ks[2], (d, d), std),
+        "wo": _norm_init(ks[3], (d, d), std),
+        "u": _norm_init(ks[4], (heads, dh), std),
+        "v": _norm_init(jax.random.fold_in(ks[4], 1), (heads, dh), std),
+    }
+
+
+def init_ffl(key, cfg, inner: int):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    std = cfg.init_std
+    return {
+        "ln": init_ln(d),
+        "w1": _norm_init(ks[0], (d, inner), std),
+        "b1": jnp.zeros((inner,)),
+        "w2": _norm_init(ks[1], (inner, d), std),
+        "b2": jnp.zeros((d,)),
+    }
+
+
+def init_moe(key, cfg):
+    d, h, e = cfg.d_model, cfg.d_inner, cfg.n_experts
+    ks = jax.random.split(key, 3)
+    std = cfg.init_std
+    return {
+        "ln": init_ln(d),
+        "wg": _norm_init(ks[0], (d, e), std),
+        "w1": _norm_init(ks[1], (e, d, h), std),
+        "b1": jnp.zeros((e, h)),
+        "w2": _norm_init(ks[2], (e, h, d), std),
+        "b2": jnp.zeros((e, d)),
+    }
+
+
+def init_block(key, option: dict, cfg):
+    t = option["type"]
+    if t == "skip":
+        return {}
+    if t == "mha":
+        return init_mha(key, cfg, option["heads"])
+    if t == "ffl":
+        return init_ffl(key, cfg, cfg.d_inner)
+    if t == "sffl":
+        return init_ffl(key, cfg, cfg.sffl_inner)
+    if t == "moe":
+        return init_moe(key, cfg)
+    raise ValueError(f"unknown block type {t}")
+
+
+# ------------------------------------------------------------------ apply
+
+def apply_mha(p, x, mem, cfg, key, train, heads: int):
+    b, t, d = x.shape
+    m = mem.shape[1]
+    s = m + t
+    dh = d // heads
+    scale = 1.0 / math.sqrt(dh)
+
+    xn = layer_norm(p["ln"], x)
+    cat = jnp.concatenate([mem, x], axis=1)
+    catn = layer_norm(p["ln"], cat)
+
+    q = (xn @ p["wq"]).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    kv = (catn @ p["wkv"]).reshape(b, s, 2, heads, dh)
+    k = kv[:, :, 0].transpose(0, 2, 1, 3)
+    v = kv[:, :, 1].transpose(0, 2, 1, 3)
+
+    r = sinusoid_pos_emb(s, d, x.dtype)
+    rk = (r @ p["wr"]).reshape(s, heads, dh).transpose(1, 0, 2)  # [h,S,dh]
+
+    bd = jnp.einsum("bhtd,hsd->bhts", q + p["v"][None, :, None, :], rk)
+    bd = rel_shift(bd)
+    mask = causal_mask(t, m, x.dtype)
+
+    o = attn_k.rel_attention(q + p["u"][None, :, None, :], k, v, bd, mask, scale)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d) @ p["wo"]
+    o = dropout(o, cfg.dropout, key, train)
+    return x + o, jnp.asarray(0.0, x.dtype)
+
+
+def apply_ffl(p, x, mem, cfg, key, train):
+    b, t, d = x.shape
+    xn = layer_norm(p["ln"], x).reshape(b * t, d)
+    y = ffl_k.ffl(xn, p["w1"], p["b1"], p["w2"], p["b2"]).reshape(b, t, d)
+    y = dropout(y, cfg.dropout, key, train)
+    return x + y, jnp.asarray(0.0, x.dtype)
+
+
+def apply_moe(p, x, mem, cfg, key, train, top_k: int):
+    b, t, d = x.shape
+    n = b * t
+    e = cfg.n_experts
+    cap = cfg.capacity(top_k)
+    xn = layer_norm(p["ln"], x).reshape(n, d)
+    gate_logits = xn @ p["wg"]
+    disp, comb, probs, frac = moe_k.top_k_dispatch(gate_logits, top_k, cap)
+    y = moe_k.moe(xn, disp, comb, p["w1"], p["b1"], p["w2"], p["b2"])
+    y = y.reshape(b, t, d)
+    y = dropout(y, cfg.moe_dropout, key, train)
+    # Switch-style balance loss (paper Eq. 4): E * sum_e F_e * G_e
+    balance = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return x + y, balance.astype(x.dtype)
+
+
+def apply_block(option: dict, p, x, mem, cfg, key, train):
+    t = option["type"]
+    if t == "skip":
+        return x, jnp.asarray(0.0, x.dtype)
+    if t == "mha":
+        return apply_mha(p, x, mem, cfg, key, train, option["heads"])
+    if t in ("ffl", "sffl"):
+        return apply_ffl(p, x, mem, cfg, key, train)
+    if t == "moe":
+        return apply_moe(p, x, mem, cfg, key, train, option["top_k"])
+    raise ValueError(f"unknown block type {t}")
+
+
+def block_flops(option: dict, cfg, batch: int) -> float:
+    """Analytical forward FLOPs per block — feeds the latency model (L3 owns
+    the device-specific roofline; this is the arithmetic count)."""
+    t, d = cfg.seq_len, cfg.d_model
+    n = batch * t
+    s = cfg.mem_len + t
+    ty = option["type"]
+    if ty == "skip":
+        return 0.0
+    if ty == "mha":
+        proj = 2.0 * n * d * (4 * d + 2 * d)      # q,kv,r,o projections
+        scores = 2.0 * batch * option["heads"] * t * s * (d // option["heads"]) * 2
+        return proj + 2.0 * scores
+    if ty == "ffl":
+        return 4.0 * n * d * cfg.d_inner
+    if ty == "sffl":
+        return 4.0 * n * d * cfg.sffl_inner
+    if ty == "moe":
+        k = option["top_k"]
+        gate = 2.0 * n * d * cfg.n_experts
+        expert = 4.0 * (k * n) * d * cfg.d_inner
+        return gate + expert
+    raise ValueError(ty)

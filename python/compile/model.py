@@ -1,0 +1,74 @@
+"""L2: the Transformer-XL language model over an arbitrary architecture spec.
+
+`init_model` / `forward` implement the fixed-architecture network used for
+baseline training, phase-2 retraining and serving.  The paper's metrics map
+directly: CE loss in nats -> PPL = exp(ce) (WT103) or BPC = ce/ln2 (enwik8).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+
+def init_model(key, cfg: ModelConfig, arch: list[dict]):
+    ks = jax.random.split(key, len(arch) + 2)
+    params = {
+        "emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * cfg.init_std,
+        "out_b": jnp.zeros((cfg.vocab,)),
+        "ln_f": layers.init_ln(cfg.d_model),
+        "blocks": [layers.init_block(ks[i + 1], o, cfg) for i, o in enumerate(arch)],
+    }
+    return params
+
+
+def forward(params, arch, cfg: ModelConfig, x_ids, mems, key, train: bool):
+    """x_ids [B,T] int32, mems [L,B,M,D] -> (logits [B,T,V], new_mems, balance).
+
+    new_mems[l] is the (stop-gradient) input hidden state of block l from this
+    segment, truncated to mem_len — TXL segment recurrence.
+    balance is the mean Switch balance loss over MoE blocks (0 if none).
+    """
+    b, t = x_ids.shape
+    d = cfg.d_model
+    h = params["emb"][x_ids] * math.sqrt(d)
+    key, sub = jax.random.split(key)
+    h = layers.dropout(h, cfg.dropout, sub, train)
+
+    new_mems = []
+    balances = []
+    n_moe = 0
+    for l, option in enumerate(arch):
+        mem = mems[l]
+        new_mems.append(jax.lax.stop_gradient(
+            jnp.concatenate([mem, h], axis=1)[:, -cfg.mem_len:]))
+        key, sub = jax.random.split(key)
+        h, bal = layers.apply_block(option, params["blocks"][l], h, mem, cfg, sub, train)
+        if option["type"] == "moe":
+            balances.append(bal)
+            n_moe += 1
+
+    h = layers.layer_norm(params["ln_f"], h)
+    logits = h @ params["emb"].T + params["out_b"]
+    balance = (sum(balances) / n_moe) if n_moe else jnp.asarray(0.0, h.dtype)
+    return logits, jnp.stack(new_mems), balance
+
+
+def cross_entropy(logits, y_ids):
+    """Mean next-token CE in nats.  logits [B,T,V], y_ids [B,T]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y_ids[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def lr_schedule(step, cfg: ModelConfig, total_steps: int, warmup: int):
+    """Linear warmup + cosine decay (the NVIDIA TXL recipe)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum((step + 1.0) / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * jnp.maximum(cos, 0.01)

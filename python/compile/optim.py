@@ -1,0 +1,67 @@
+"""In-graph optimizers (Adam, LAMB) over parameter pytrees.
+
+The paper trains network weights with JITLamb (NVIDIA's fused LAMB) and
+architecture weights with Adam.  Both are implemented here as pure jnp
+updates so the entire training step — forward, backward, clip, update —
+lowers into a single HLO program the Rust coordinator executes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    """One Adam step.  step is the 1-based iteration (f32 scalar)."""
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** step)
+        vh = v2 / (1 - b2 ** step)
+        d = mh / (jnp.sqrt(vh) + eps) + weight_decay * p
+        return p - lr * d, m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    flat, tdef = jax.tree_util.tree_flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    ps = jax.tree_util.tree_unflatten(tdef, [t[0] for t in flat])
+    ms = jax.tree_util.tree_unflatten(tdef, [t[1] for t in flat])
+    vs = jax.tree_util.tree_unflatten(tdef, [t[2] for t in flat])
+    return ps, ms, vs
+
+
+def lamb_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-6,
+                weight_decay=0.0):
+    """One LAMB step (You et al.): Adam direction x per-tensor trust ratio."""
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** step)
+        vh = v2 / (1 - b2 ** step)
+        r = mh / (jnp.sqrt(vh) + eps) + weight_decay * p
+        wn = jnp.sqrt(jnp.sum(p.astype(jnp.float32) ** 2))
+        rn = jnp.sqrt(jnp.sum(r.astype(jnp.float32) ** 2))
+        trust = jnp.where(wn > 0, jnp.where(rn > 0, wn / rn, 1.0), 1.0)
+        return p - lr * trust * r, m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    flat, tdef = jax.tree_util.tree_flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    ps = jax.tree_util.tree_unflatten(tdef, [t[0] for t in flat])
+    ms = jax.tree_util.tree_unflatten(tdef, [t[1] for t in flat])
+    vs = jax.tree_util.tree_unflatten(tdef, [t[2] for t in flat])
+    return ps, ms, vs
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -1,0 +1,102 @@
+"""Phase-1 search network: super blocks + Gumbel-Softmax architecture weights.
+
+Every backbone slot becomes a Super Block holding *all* candidate options
+(paper Fig. 5/6).  The super-block output is Eq. (1):
+
+    out = sum_i P_i * Block_i(x),   P = GumbelSoftmax(alpha, temp)
+
+Soft sampling during architecture-weight steps, hard (straight-through)
+sampling during network-weight steps.  The same per-slot P vector feeds the
+Eq. (2) latency estimate so the Eq. (3) dynamic latency loss is differentiable
+w.r.t. alpha.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, model
+from .config import ModelConfig
+
+
+def init_search(key, cfg: ModelConfig, options: list[dict]):
+    """Returns (params, alphas [L, O]).  params['slots'][l][i] holds option
+    i's weights for slot l; embedding/final-LN are shared across options."""
+    l, o = cfg.n_slots, len(options)
+    ks = jax.random.split(key, l * o + 2)
+    params = {
+        "emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * cfg.init_std,
+        "out_b": jnp.zeros((cfg.vocab,)),
+        "ln_f": layers.init_ln(cfg.d_model),
+        "slots": [
+            [layers.init_block(ks[2 + sl * o + i], opt, cfg) for i, opt in enumerate(options)]
+            for sl in range(l)
+        ],
+    }
+    alphas = jnp.zeros((l, o))
+    return params, alphas
+
+
+def gumbel_softmax(alpha, temp, key, hard: bool):
+    """P = softmax((alpha + G)/temp); straight-through one-hot when hard."""
+    u = jax.random.uniform(key, alpha.shape, minval=1e-6, maxval=1.0 - 1e-6)
+    g = -jnp.log(-jnp.log(u))
+    p = jax.nn.softmax((alpha + g) / temp, axis=-1)
+    if hard:
+        idx = jnp.argmax(p, axis=-1)
+        oh = jax.nn.one_hot(idx, alpha.shape[-1], dtype=p.dtype)
+        p = oh + p - jax.lax.stop_gradient(p)
+    return p
+
+
+def forward(params, alphas, options, cfg: ModelConfig, x_ids, mems, key,
+            temp, train: bool, hard: bool, sample_key):
+    """Search-network forward.
+
+    Returns (logits, new_mems, P [L,O]) where P are the sampled per-slot
+    option probabilities (shared between the output mixture and the latency
+    estimate).  When `sample_key is None` P is the deterministic argmax
+    one-hot of alphas (phase-1 eval / phase-2 sampling preview).
+    """
+    import math
+    b, t = x_ids.shape
+    h = params["emb"][x_ids] * math.sqrt(cfg.d_model)
+    key, sub = jax.random.split(key)
+    h = layers.dropout(h, cfg.dropout, sub, train)
+
+    if sample_key is None:
+        idx = jnp.argmax(alphas, axis=-1)
+        p_all = jax.nn.one_hot(idx, alphas.shape[-1], dtype=h.dtype)
+    else:
+        p_all = gumbel_softmax(alphas, temp, sample_key, hard)
+
+    new_mems = []
+    for sl in range(cfg.n_slots):
+        mem = mems[sl]
+        new_mems.append(jax.lax.stop_gradient(
+            jnp.concatenate([mem, h], axis=1)[:, -cfg.mem_len:]))
+        outs = []
+        for i, opt in enumerate(options):
+            key, sub = jax.random.split(key)
+            y, _bal = layers.apply_block(opt, params["slots"][sl][i], h, mem,
+                                         cfg, sub, train)
+            outs.append(y)
+        stacked = jnp.stack(outs)                      # [O,B,T,D]
+        h = jnp.einsum("o,obtd->btd", p_all[sl], stacked)
+
+    h = layers.layer_norm(params["ln_f"], h)
+    logits = h @ params["emb"].T + params["out_b"]
+    return logits, jnp.stack(new_mems), p_all
+
+
+def estimated_latency(p_all, lat_table):
+    """Eq. (2): Lat = sum_b sum_i P_bi * Lat_i.  lat_table [O]."""
+    return jnp.sum(p_all @ lat_table)
+
+
+def latency_loss(p_all, lat_table, lat_baseline, target):
+    """Eq. (3): ratio = Lat / (Lat_base * Target); beta = 1 iff ratio > 1."""
+    est = estimated_latency(p_all, lat_table)
+    ratio = est / (lat_baseline * target)
+    beta = (ratio > 1.0).astype(ratio.dtype)
+    return beta * ratio, ratio, est

@@ -1,0 +1,6 @@
+"""Make `compile` importable whether pytest runs from repo root
+(`pytest python/tests/`) or from python/ (`pytest tests/`)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

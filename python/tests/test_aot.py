@@ -1,0 +1,138 @@
+"""AOT export tests: manifest consistency, HLO-text compatibility rules,
+group bookkeeping — the cross-layer ABI the Rust runtime relies on."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_structure(manifest):
+    for key in ["config", "options", "iso_options", "archs", "programs"]:
+        assert key in manifest
+    assert len(manifest["options"]) == 8
+    assert len(manifest["iso_options"]) == 7
+    assert "baseline" in manifest["archs"]
+
+
+def test_groups_partition_tensors(manifest):
+    for name, prog in manifest["programs"].items():
+        for side in ["in", "out"]:
+            n = len(prog[f"{side}puts"])
+            covered = [False] * n
+            for g, (a, b) in prog[f"{side}_groups"].items():
+                assert 0 <= a <= b <= n, f"{name} group {g} out of range"
+                for i in range(a, b):
+                    assert not covered[i], f"{name} overlapping group {g}"
+                    covered[i] = True
+            assert all(covered), f"{name} {side}put groups leave gaps"
+
+
+def test_state_threading_groups_align(manifest):
+    """For every program, any group present on both sides must have equal
+    length and matching per-tensor shapes (the Rust StateStore contract)."""
+    for name, prog in manifest["programs"].items():
+        for g, (ia, ib) in prog["in_groups"].items():
+            if g not in prog["out_groups"]:
+                continue
+            oa, ob = prog["out_groups"][g]
+            assert ib - ia == ob - oa, f"{name} group {g} length mismatch"
+            for k in range(ib - ia):
+                si = prog["inputs"][ia + k]["shape"]
+                so = prog["outputs"][oa + k]["shape"]
+                assert si == so, f"{name} group {g}[{k}] shape {si} != {so}"
+
+
+def test_train_programs_thread_full_state(manifest):
+    for name, prog in manifest["programs"].items():
+        if not name.startswith("train_"):
+            continue
+        for g in ["params", "m", "v", "mems"]:
+            assert g in prog["in_groups"], f"{name} missing input group {g}"
+            assert g in prog["out_groups"], f"{name} missing output group {g}"
+        for g in ["x", "y", "seed", "step", "bal_coef"]:
+            assert g in prog["in_groups"], f"{name} missing {g}"
+
+
+def test_search_programs_expose_latency_interface(manifest):
+    for prefix, n_opts in [("search_", 8), ("searchiso_", 7)]:
+        prog = manifest["programs"].get(f"{prefix}arch_step")
+        assert prog, f"{prefix}arch_step missing"
+        la, lb = prog["in_groups"]["lat_table"]
+        assert lb - la == 1
+        assert prog["inputs"][la]["shape"] == [n_opts]
+        al_in = prog["in_groups"]["alphas"]
+        al_out = prog["out_groups"]["alphas"]
+        assert al_in[1] - al_in[0] == al_out[1] - al_out[0] == 1
+        cfg = manifest["config"]
+        assert prog["inputs"][al_in[0]]["shape"] == [cfg["n_slots"], n_opts]
+
+
+def test_hlo_text_has_no_unparseable_ops(manifest):
+    """xla_extension 0.5.1's HLO text parser rejects `topk` (and some newer
+    attrs).  Guard the whole artifact set — this catches regressions like
+    jax.lax.top_k sneaking back into the lowering."""
+    bad = []
+    for name, prog in manifest["programs"].items():
+        path = os.path.join(ART, prog["hlo"])
+        with open(path) as f:
+            text = f.read()
+        if " topk(" in text or " largest=" in text:
+            bad.append(name)
+    assert not bad, f"programs with unparseable topk op: {bad}"
+
+
+def test_dtypes_limited_to_supported_set(manifest):
+    ok = {"float32", "int32", "uint32"}
+    for name, prog in manifest["programs"].items():
+        for t in prog["inputs"] + prog["outputs"]:
+            assert t["dtype"] in ok, f"{name}: {t['name']} has dtype {t['dtype']}"
+
+
+def test_bench_programs_cover_search_options(manifest):
+    opts = set(manifest["options"]) - {"skip"}
+    batches = {k.rsplit("_b", 1)[1] for k in manifest["programs"] if k.startswith("bench_")}
+    assert batches, "no bench programs"
+    for o in opts:
+        for b in batches:
+            assert f"bench_{o}_b{b}" in manifest["programs"], f"missing bench_{o}_b{b}"
+
+
+def test_merge_preserves_existing_programs(tmp_path):
+    """--merge must extend, not clobber, an existing manifest (used by
+    `planer compile` for searched archs)."""
+    out = tmp_path / "art"
+    out.mkdir()
+    env = dict(os.environ)
+    cwd = os.path.join(os.path.dirname(__file__), "..")
+    run = lambda extra: subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--config", "tiny",
+         "--no-search", "--no-bench"] + extra,
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=600)
+    r1 = run(["--archs", "baseline"])
+    assert r1.returncode == 0, r1.stderr
+    m1 = json.load(open(out / "manifest.json"))
+    assert "train_baseline" in m1["programs"]
+
+    # write an arch json and merge it in
+    arch = [{"type": "ffl"} for _ in range(m1["config"]["n_slots"])]
+    arch_file = tmp_path / "all_ffl.json"
+    arch_file.write_text(json.dumps(arch))
+    r2 = run(["--archs", "none", "--merge", "--arch", f"allffl={arch_file}"])
+    assert r2.returncode == 0, r2.stderr
+    m2 = json.load(open(out / "manifest.json"))
+    assert "train_baseline" in m2["programs"], "merge clobbered existing programs"
+    assert "train_allffl" in m2["programs"]
+    assert "allffl" in m2["archs"]

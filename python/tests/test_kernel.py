@@ -1,0 +1,258 @@
+"""pytest: Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/dtypes; every property the Rust layer relies on
+(dispatch one-hot-ness, capacity bounds, drop semantics) is asserted here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ffl, moe, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=0.1):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- FFL
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 64, 96]),
+    d=st.sampled_from([16, 32, 64]),
+    h=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffl_matches_ref(n, d, h, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = rand(ks[0], (n, d), scale=1.0)
+    w1, b1 = rand(ks[1], (d, h)), rand(ks[2], (h,))
+    w2, b2 = rand(ks[3], (h, d)), rand(ks[4], (d,))
+    got = ffl.ffl(x, w1, b1, w2, b2)
+    want = ref.ffl_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 8, 64])
+def test_ffl_tile_invariance(tile):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = rand(ks[0], (64, 16), scale=1.0)
+    w1, b1 = rand(ks[1], (16, 32)), rand(ks[2], (32,))
+    w2, b2 = rand(ks[3], (32, 16)), rand(ks[4], (16,))
+    want = ref.ffl_ref(x, w1, b1, w2, b2)
+    got = ffl.ffl_fwd_only(x, w1, b1, w2, b2, tile_n=tile)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_ffl_bf16_runs():
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = rand(ks[0], (16, 8), jnp.bfloat16, scale=1.0)
+    w1, b1 = rand(ks[1], (8, 16), jnp.bfloat16), rand(ks[2], (16,), jnp.bfloat16)
+    w2, b2 = rand(ks[3], (16, 8), jnp.bfloat16), rand(ks[4], (8,), jnp.bfloat16)
+    got = ffl.ffl(x, w1, b1, w2, b2)
+    want = ref.ffl_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_ffl_pick_tile_divides():
+    for n in [1, 7, 64, 96, 100, 128, 129, 1000]:
+        t = ffl._pick_tile(n)
+        assert n % t == 0 and 1 <= t <= min(n, 128)
+
+
+# ---------------------------------------------------------------- MoE
+
+def make_moe(seed, n, d, h, e, k, cap):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = rand(ks[0], (n, d), scale=1.0)
+    gl = jax.random.normal(ks[1], (n, e))
+    disp, comb, probs, frac = moe.top_k_dispatch(gl, k, cap)
+    w1, b1 = rand(ks[2], (e, d, h)), rand(ks[3], (e, h))
+    w2, b2 = rand(ks[4], (e, h, d)), rand(ks[5], (e, d))
+    return x, gl, disp, comb, probs, frac, w1, b1, w2, b2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 128]),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_matches_ref(n, e, k, seed):
+    d, h = 16, 32
+    cap = max(1, (k * n) // e + 2)
+    x, _, disp, comb, _, _, w1, b1, w2, b2 = make_moe(seed, n, d, h, e, k, cap)
+    got = moe.moe(x, disp, comb, w1, b1, w2, b2)
+    want = ref.moe_ref(x, disp, comb, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 128]),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([1, 2]),
+    cap_slack=st.integers(-2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_invariants(n, e, k, cap_slack, seed):
+    k = min(k, e)
+    cap = max(1, (k * n) // e + cap_slack)
+    gl = jax.random.normal(jax.random.PRNGKey(seed), (n, e))
+    disp, comb, probs, frac = moe.top_k_dispatch(gl, k, cap)
+    disp = np.asarray(disp)
+    # one-hot-ness: entries in {0,1}
+    assert set(np.unique(disp)).issubset({0.0, 1.0})
+    # each capacity slot holds at most one token
+    assert (disp.sum(axis=2) <= 1 + 1e-6).all()
+    # each token occupies at most k slots total, at most 1 per expert
+    assert (disp.sum(axis=(0, 1)) <= k + 1e-6).all()
+    assert (disp.sum(axis=1) <= 1 + 1e-6).all()
+    # combine weight only where dispatched
+    comb = np.asarray(comb)
+    assert (comb[disp.sum(axis=2) == 0] == 0).all()
+    # probabilities are a distribution; fractions sum to 1
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(frac).sum(), 1.0, rtol=1e-5)
+
+
+def test_dispatch_no_drop_when_capacity_ample():
+    n, e, k = 32, 4, 2
+    gl = jax.random.normal(jax.random.PRNGKey(3), (n, e))
+    disp, comb, _, _ = moe.top_k_dispatch(gl, k, capacity=n)  # cap == n: nothing drops
+    assert np.asarray(disp).sum() == n * k
+    # combine weights per token sum to ~1 (renormalised top-k)
+    per_tok = np.einsum("ecn,ec->n", np.asarray(disp), np.asarray(comb))
+    np.testing.assert_allclose(per_tok, 1.0, rtol=1e-5)
+
+
+def test_dispatch_drops_overflow_deterministically():
+    n, e, k, cap = 16, 2, 1, 2
+    # all tokens prefer expert 0 -> only first `cap` admitted
+    gl = jnp.stack([jnp.full((n,), 5.0), jnp.full((n,), -5.0)], axis=1)
+    disp, _, _, _ = moe.top_k_dispatch(gl, k, cap)
+    disp = np.asarray(disp)
+    assert disp[0].sum() == cap
+    assert disp[1].sum() == 0
+    # admitted in index order
+    assert disp[0, 0, 0] == 1 and disp[0, 1, 1] == 1
+
+
+def test_moe_dropped_tokens_produce_zero():
+    n, d, h, e, k, cap = 16, 8, 16, 2, 1, 2
+    gl = jnp.stack([jnp.full((n,), 5.0), jnp.full((n,), -5.0)], axis=1)
+    disp, comb, _, _ = moe.top_k_dispatch(gl, k, cap)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    w1, b1 = rand(ks[0], (e, d, h)), rand(ks[1], (e, h))
+    w2, b2 = rand(ks[2], (e, h, d)), rand(ks[3], (e, d))
+    x = rand(jax.random.PRNGKey(9), (n, d), scale=1.0)
+    out = np.asarray(moe.moe(x, disp, comb, w1, b1, w2, b2))
+    assert np.abs(out[cap:]).max() == 0.0  # dropped tokens -> zero (residual passthrough upstream)
+    assert np.abs(out[:cap]).max() > 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moe_grads_match_ref(seed):
+    """NAS trains through the MoE: gradients of kernel == gradients of oracle."""
+    n, d, h, e, k, cap = 16, 8, 16, 2, 2, 16
+    x, _, disp, comb, _, _, w1, b1, w2, b2 = make_moe(seed, n, d, h, e, k, cap)
+
+    def loss_k(w1):
+        return jnp.sum(moe.moe(x, disp, comb, w1, b1, w2, b2) ** 2)
+
+    def loss_r(w1):
+        return jnp.sum(ref.moe_ref(x, disp, comb, w1, b1, w2, b2) ** 2)
+
+    gk = jax.grad(loss_k)(w1)
+    gr = jax.grad(loss_r)(w1)
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------- Attention
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    hh=st.sampled_from([1, 2, 4, 8]),
+    t=st.sampled_from([4, 16, 32]),
+    mem=st.sampled_from([0, 16, 32]),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, hh, t, mem, dh, seed):
+    s = t + mem
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(ks[0], (b, hh, t, dh), scale=1.0)
+    k = rand(ks[1], (b, hh, s, dh), scale=1.0)
+    v = rand(ks[2], (b, hh, s, dh), scale=1.0)
+    bd = rand(ks[3], (b, hh, t, s))
+    mask = jnp.where(jnp.arange(s)[None, :] > mem + jnp.arange(t)[:, None], -1e30, 0.0)
+    scale = 1.0 / np.sqrt(dh)
+    got = attention.rel_attention(q, k, v, bd, mask, scale)
+    want = ref.rel_attention_ref(q, k, v, bd, mask, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_causality():
+    """Future keys must not influence outputs: perturb key t+1, row t unchanged."""
+    b, hh, t, dh = 1, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (b, hh, t, dh), scale=1.0)
+    k = rand(ks[1], (b, hh, t, dh), scale=1.0)
+    v = rand(ks[2], (b, hh, t, dh), scale=1.0)
+    bd = jnp.zeros((b, hh, t, t))
+    mask = jnp.where(jnp.arange(t)[None, :] > jnp.arange(t)[:, None], -1e30, 0.0)
+    base = attention.rel_attention(q, k, v, bd, mask, 0.5)
+    k2 = k.at[:, :, 5, :].add(100.0)
+    v2 = v.at[:, :, 5, :].add(100.0)
+    pert = attention.rel_attention(q, k2, v2, bd, mask, 0.5)
+    np.testing.assert_allclose(base[:, :, :5], pert[:, :, :5], rtol=1e-5, atol=1e-6)
+    assert np.abs(np.asarray(base[:, :, 5:]) - np.asarray(pert[:, :, 5:])).max() > 1e-3
+
+
+def test_attention_softmax_rows_normalised():
+    """Uniform v ⇒ output equals v (softmax rows sum to one)."""
+    b, hh, t, dh = 1, 1, 8, 4
+    q = rand(jax.random.PRNGKey(0), (b, hh, t, dh), scale=1.0)
+    k = rand(jax.random.PRNGKey(1), (b, hh, t, dh), scale=1.0)
+    v = jnp.ones((b, hh, t, dh)) * 3.0
+    bd = jnp.zeros((b, hh, t, t))
+    mask = jnp.zeros((t, t))
+    out = attention.rel_attention(q, k, v, bd, mask, 0.5)
+    np.testing.assert_allclose(out, 3.0, rtol=1e-5)
+
+
+# ------------------------------------------------- custom_vjp backward paths
+
+def test_ffl_grads_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = rand(ks[0], (16, 8), scale=1.0)
+    w1, b1 = rand(ks[1], (8, 16)), rand(ks[2], (16,))
+    w2, b2 = rand(ks[3], (16, 8)), rand(ks[4], (8,))
+    args = (x, w1, b1, w2, b2)
+    for i in range(5):
+        gk = jax.grad(lambda *a: jnp.sum(ffl.ffl(*a) ** 2), argnums=i)(*args)
+        gr = jax.grad(lambda *a: jnp.sum(ref.ffl_ref(*a) ** 2), argnums=i)(*args)
+        np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_grads_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    q = rand(ks[0], (2, 2, 8, 4), scale=1.0)
+    k = rand(ks[1], (2, 2, 8, 4), scale=1.0)
+    v = rand(ks[2], (2, 2, 8, 4), scale=1.0)
+    bd = rand(ks[3], (2, 2, 8, 8))
+    mask = jnp.where(jnp.arange(8)[None, :] > jnp.arange(8)[:, None], -1e30, 0.0)
+    for i in range(4):
+        gk = jax.grad(lambda q, k, v, bd: jnp.sum(
+            attention.rel_attention(q, k, v, bd, mask, 0.5) ** 2), argnums=i)(q, k, v, bd)
+        gr = jax.grad(lambda q, k, v, bd: jnp.sum(
+            ref.rel_attention_ref(q, k, v, bd, mask, 0.5) ** 2), argnums=i)(q, k, v, bd)
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,52 @@
+//! Bench: per-block CPU latency tables (the measured side of paper Figs 4/9)
+//! + analytical-model agreement check.  Plain harness (criterion is not in
+//! the offline vendor set): median-of-N wall clock, printed as a table.
+//!
+//!     cargo bench --bench block_latency
+
+use planer::arch::SearchSpace;
+use planer::latency::{AnalyticalModel, Device, Profiler};
+use planer::metrics;
+use planer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let cfg = &engine.manifest.config;
+    let prof = Profiler::new(&engine);
+    let model = AnalyticalModel::new(Device::A100);
+
+    println!("== block latency: measured CPU vs analytical A100 (normalized to ffl) ==");
+    let opts = SearchSpace::Paper.options(cfg.n_heads_full);
+    let batches = prof.available_batches("ffl");
+    println!("batches with bench programs: {batches:?}");
+
+    for &batch in &batches {
+        println!("\n[batch {batch}]");
+        println!("{:10} {:>12} {:>12} {:>10} {:>10}", "block", "cpu-p50", "cpu-p95", "cpu/ffl", "a100/ffl");
+        let ffl_cpu = prof.measure_block("ffl", batch)?.stats;
+        let ffl_a = model.block_latency(&planer::runtime::manifest::Block::Ffl, cfg, batch);
+        let mut cpu_ratios = Vec::new();
+        let mut a100_ratios = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for b in &opts {
+            let name = b.name();
+            if name == "skip" || !seen.insert(name.clone()) {
+                continue;
+            }
+            let s = prof.measure_block(&name, batch)?.stats;
+            let a = model.block_latency(b, cfg, batch);
+            println!(
+                "{name:10} {:10.2}ms {:10.2}ms {:10.2} {:10.2}",
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.p50 / ffl_cpu.p50,
+                a / ffl_a
+            );
+            cpu_ratios.push(s.p50 / ffl_cpu.p50);
+            a100_ratios.push(a / ffl_a);
+        }
+        let r = metrics::pearson(&cpu_ratios, &a100_ratios);
+        println!("pearson(cpu ratios, analytical ratios) = {r:.3}");
+    }
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Bench: L3 hot-path micro-benchmarks — batcher, router, latency estimator,
+//! JSON parser, segment batcher.  Goal (§Perf): coordinator overhead per
+//! request orders of magnitude below one PJRT decode step.
+//!
+//!     cargo bench --bench coordinator
+
+use std::time::{Duration, Instant};
+
+use planer::arch::{Arch, SearchSpace};
+use planer::data::TxlBatcher;
+use planer::latency::LatencyTable;
+use planer::serve::{Request, Router, RouterPolicy, VariantInfo, WaveBatcher};
+use planer::util::json::Json;
+use planer::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per < 1e-6 {
+        format!("{:8.1}ns", per * 1e9)
+    } else if per < 1e-3 {
+        format!("{:8.2}us", per * 1e6)
+    } else {
+        format!("{:8.2}ms", per * 1e3)
+    };
+    println!("{name:44} {unit}/op  ({:.2e} ops/s)", 1.0 / per);
+    per
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    // wave batcher submit+drain
+    bench("batcher: submit+drain 64 reqs", 2_000, || {
+        let mut b = WaveBatcher::new(8, Duration::ZERO);
+        for id in 0..64u64 {
+            b.submit(Request { id, prompt: vec![1, 2, 3], n_gen: 8, sla: 1.0 });
+        }
+        while b.next_wave(Instant::now()).is_some() {}
+    });
+
+    // router decision
+    let variants: Vec<VariantInfo> = (0..6)
+        .map(|i| VariantInfo {
+            name: format!("v{i}"),
+            token_latency: 0.001 * (i + 1) as f64,
+            quality: (6 - i) as f64,
+        })
+        .collect();
+    let router = Router::new(variants, RouterPolicy::QualityWithinSla);
+    let req = Request { id: 0, prompt: vec![0; 16], n_gen: 16, sla: 0.02 };
+    bench("router: route 1 request (6 variants)", 1_000_000, || {
+        std::hint::black_box(router.route(&req));
+    });
+
+    // Eq.(2) estimator
+    let opts = SearchSpace::Paper.options(8);
+    let lats: Vec<f64> = (0..opts.len()).map(|i| 0.1 * (i + 1) as f64).collect();
+    let table = LatencyTable::from_measured(&opts, lats).unwrap();
+    let arch = Arch::new((0..32).map(|i| opts[i % opts.len()].clone()).collect());
+    bench("latency table: estimate 32-slot arch", 1_000_000, || {
+        std::hint::black_box(table.estimate(&arch));
+    });
+
+    // soft estimate (the per-arch-step path)
+    let p: Vec<Vec<f64>> = (0..32)
+        .map(|_| (0..opts.len()).map(|_| rng.f64()).collect())
+        .collect();
+    bench("latency table: soft estimate [32x8]", 500_000, || {
+        std::hint::black_box(table.estimate_soft(&p));
+    });
+
+    // JSON manifest-scale parse
+    let manifest_like = {
+        let progs: Vec<Json> = (0..64)
+            .map(|i| {
+                Json::obj(vec![
+                    ("name", Json::Str(format!("prog{i}"))),
+                    ("shape", Json::arr_f64(&[4.0, 16.0, 32.0])),
+                    ("dtype", Json::Str("float32".into())),
+                ])
+            })
+            .collect();
+        Json::Arr(progs).to_string()
+    };
+    bench("json: parse 64-entry program list", 20_000, || {
+        std::hint::black_box(Json::parse(&manifest_like).unwrap());
+    });
+
+    // TXL segment batcher
+    let stream: Vec<i32> = (0..100_000).collect();
+    let mut batcher = TxlBatcher::new(&stream, 16, 64);
+    bench("data: next TXL segment [16x64]", 200_000, || {
+        std::hint::black_box(batcher.next());
+    });
+
+    println!("\nreference: one tiny-model PJRT decode step is ~1-10ms; every");
+    println!("coordinator operation above must stay (and is) well under that.");
+}

@@ -1,0 +1,105 @@
+//! Bench: end-to-end per-step latency of every exported program class —
+//! train / eval / infer / decode — for every arch preset (the numbers behind
+//! Fig 8's measured column and EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench end_to_end
+
+use planer::latency::Profiler;
+use planer::runtime::{literal, Engine, StateStore};
+use planer::util::timer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let cfg = &engine.manifest.config;
+    let prof = Profiler::new(&engine);
+
+    println!("== end-to-end program latency (CPU PJRT, tiny config) ==");
+    println!(
+        "model: d={} slots={} batch={} seq={}",
+        cfg.d_model, cfg.n_slots, cfg.batch, cfg.seq_len
+    );
+
+    let archs: Vec<String> = engine.manifest.arch_names().iter().map(|s| s.to_string()).collect();
+    println!("\n{:12} {:>12} {:>12} {:>12} {:>12}", "arch", "train-step", "eval-step", "infer", "decode-tok");
+    for a in &archs {
+        let train = bench_threaded(&engine, &format!("train_{a}"), &format!("init_{a}"))?;
+        let eval = prof
+            .measure_network(a, cfg.batch)
+            .map(|p| p.stats.p50)
+            .unwrap_or(f64::NAN);
+        let evals = bench_zeros(&engine, &format!("eval_{a}"))?;
+        let decode = bench_zeros(&engine, &format!("gen_{a}"))?;
+        println!(
+            "{a:12} {:10.2}ms {:10.2}ms {:10.2}ms {:10.2}ms",
+            train * 1e3,
+            evals * 1e3,
+            eval * 1e3,
+            decode * 1e3
+        );
+    }
+
+    println!("\ntrain throughput (tokens/s) at batch {}:", cfg.batch);
+    for a in &archs {
+        let t = bench_threaded(&engine, &format!("train_{a}"), &format!("init_{a}"))?;
+        println!("  {a:12} {:9.0} tok/s", cfg.batch as f64 * cfg.seq_len as f64 / t);
+    }
+    println!("\nXLA compile total: {:.1}s", engine.compile_seconds());
+    Ok(())
+}
+
+/// Train-step timing with real threaded state (not zeros), as the search
+/// loop runs it.
+fn bench_threaded(engine: &Engine, train: &str, init: &str) -> anyhow::Result<f64> {
+    if !engine.has_program(train) {
+        return Ok(f64::NAN);
+    }
+    let initp = engine.program(init)?;
+    let trainp = engine.program(train)?;
+    let mut st = StateStore::new();
+    st.set_single("seed", literal::scalar_i32(&initp.spec.inputs[0], 0)?);
+    st.run(&initp, &[])?;
+    st.zero_group(&trainp, "m")?;
+    st.zero_group(&trainp, "v")?;
+    st.zero_group(&trainp, "mems")?;
+    let (xa, _) = trainp.spec.in_group("x").unwrap();
+    let n = trainp.spec.inputs[xa].element_count();
+    st.set_single(
+        "x",
+        literal::literal_from_value(&trainp.spec.inputs[xa], &literal::TensorValue::I32(vec![1; n]))?,
+    );
+    let (ya, _) = trainp.spec.in_group("y").unwrap();
+    st.set_single(
+        "y",
+        literal::literal_from_value(&trainp.spec.inputs[ya], &literal::TensorValue::I32(vec![2; n]))?,
+    );
+    let (ba, _) = trainp.spec.in_group("bal_coef").unwrap();
+    st.set_single("bal_coef", literal::scalar_f32(&trainp.spec.inputs[ba], 0.01)?);
+    let (sa, _) = trainp.spec.in_group("seed").unwrap();
+    st.set_single("seed", literal::scalar_i32(&trainp.spec.inputs[sa], 0)?);
+    let (pa, _) = trainp.spec.in_group("step").unwrap();
+    st.set_single("step", literal::scalar_i32(&trainp.spec.inputs[pa], 1)?);
+    let times = timer::time_iters(
+        || {
+            st.run(&trainp, &[]).unwrap();
+        },
+        2,
+        8,
+    );
+    Ok(timer::stats(&times).p50)
+}
+
+fn bench_zeros(engine: &Engine, name: &str) -> anyhow::Result<f64> {
+    if !engine.has_program(name) {
+        return Ok(f64::NAN);
+    }
+    let prog = engine.program(name)?;
+    let inputs: Vec<xla::Literal> = prog.spec.inputs.iter().map(literal::zeros).collect();
+    let times = timer::time_iters(
+        || {
+            prog.execute(&inputs).unwrap();
+        },
+        2,
+        8,
+    );
+    Ok(timer::stats(&times).p50)
+}

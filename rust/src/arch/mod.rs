@@ -1,0 +1,115 @@
+//! Architecture specs, the search space, and rendering (paper Figs 13-16).
+
+pub mod render;
+pub mod space;
+
+pub use space::{SearchSpace, DEFAULT_TARGETS};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::runtime::manifest::Block;
+use crate::util::json::Json;
+
+/// A concrete architecture: one block per backbone slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub blocks: Vec<Block>,
+}
+
+impl Arch {
+    pub fn new(blocks: Vec<Block>) -> Arch {
+        Arch { blocks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn n_attention(&self) -> usize {
+        self.blocks.iter().filter(|b| matches!(b, Block::Mha { .. })).count()
+    }
+
+    pub fn n_moe(&self) -> usize {
+        self.blocks.iter().filter(|b| matches!(b, Block::Moe { .. })).count()
+    }
+
+    pub fn total_heads(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| if let Block::Mha { heads } = b { *heads } else { 0 })
+            .sum()
+    }
+
+    /// Compact string form, e.g. "mha4-ffl-moe_t2-skip".
+    pub fn signature(&self) -> String {
+        self.blocks
+            .iter()
+            .map(|b| b.name())
+            .collect::<Vec<_>>()
+            .join("-")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.blocks.iter().map(Block::to_json).collect())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Arch> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let blocks = j
+            .as_arr()
+            .context("arch json must be an array")?
+            .iter()
+            .map(Block::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Arch { blocks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Arch {
+        Arch::new(vec![
+            Block::Mha { heads: 4 },
+            Block::Ffl,
+            Block::Moe { top_k: 2 },
+            Block::Skip,
+        ])
+    }
+
+    #[test]
+    fn counts() {
+        let a = sample();
+        assert_eq!(a.n_attention(), 1);
+        assert_eq!(a.n_moe(), 1);
+        assert_eq!(a.total_heads(), 4);
+        assert_eq!(a.signature(), "mha4-ffl-moe_t2-skip");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let a = sample();
+        let j = a.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        let blocks: Vec<Block> = parsed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| Block::from_json(b).unwrap())
+            .collect();
+        assert_eq!(Arch::new(blocks), a);
+    }
+}

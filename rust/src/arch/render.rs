@@ -1,0 +1,60 @@
+//! ASCII architecture rendering — the repo's answer to paper Figs 13-16.
+
+use crate::runtime::manifest::Block;
+
+use super::Arch;
+
+/// One-line glyph per block: A8/A4/.. attention, F ffl, S scaled ffl,
+/// M1/M2 MoE, -- skip.
+pub fn glyph(b: &Block) -> String {
+    match b {
+        Block::Skip => "--".into(),
+        Block::Mha { heads } => format!("A{heads}"),
+        Block::Ffl => " F".into(),
+        Block::SFfl => " S".into(),
+        Block::Moe { top_k } => format!("M{top_k}"),
+    }
+}
+
+/// Multi-arch comparison table like Appendix A's figures.
+pub fn render_table(named: &[(&str, &Arch)]) -> String {
+    let mut out = String::new();
+    let width = named.iter().map(|(n, _)| n.len()).max().unwrap_or(8).max(8);
+    let slots = named.iter().map(|(_, a)| a.len()).max().unwrap_or(0);
+    out.push_str(&format!("{:width$}  ", "arch"));
+    for i in 0..slots {
+        out.push_str(&format!("{i:>3}"));
+    }
+    out.push_str("   heads moe\n");
+    for (name, a) in named {
+        out.push_str(&format!("{name:width$}  "));
+        for b in &a.blocks {
+            out.push_str(&format!("{:>3}", glyph(b)));
+        }
+        for _ in a.len()..slots {
+            out.push_str("   ");
+        }
+        out.push_str(&format!("   {:>5} {:>3}\n", a.total_heads(), a.n_moe()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_every_block_kind() {
+        let a = Arch::new(vec![
+            Block::Mha { heads: 8 },
+            Block::Ffl,
+            Block::SFfl,
+            Block::Moe { top_k: 1 },
+            Block::Skip,
+        ]);
+        let t = render_table(&[("x", &a)]);
+        for g in ["A8", " F", " S", "M1", "--"] {
+            assert!(t.contains(g), "missing {g} in:\n{t}");
+        }
+    }
+}

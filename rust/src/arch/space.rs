@@ -1,0 +1,218 @@
+//! The PLANER search space (paper §4.1) mirrored on the Rust side.
+//!
+//! Option order is the cross-layer ABI shared with the exported search
+//! programs: alpha column i of the search net corresponds to `options()[i]`,
+//! and latency tables are indexed the same way.
+
+use crate::runtime::manifest::Block;
+
+use super::Arch;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchSpace {
+    /// Skip, MHA x {1,2,4,8} heads, FFL, MoE x {top1, top2}.
+    Paper,
+    /// §4.3 ablation: MoE options replaced by the iso-parameter scaled FFL.
+    IsoParam,
+}
+
+/// Latency-target sweep used across the paper's figures (50%..95%).
+pub const DEFAULT_TARGETS: [f64; 4] = [0.50, 0.65, 0.80, 0.95];
+
+impl SearchSpace {
+    /// The option list, clamped to the model's max head count (mirrors
+    /// archspec.clamp_heads: tiny configs can't host 8 heads).
+    pub fn options(&self, n_heads_full: usize) -> Vec<Block> {
+        let h = |x: usize| Block::Mha { heads: x.min(n_heads_full) };
+        match self {
+            SearchSpace::Paper => vec![
+                Block::Skip,
+                h(1),
+                h(2),
+                h(4),
+                h(8),
+                Block::Ffl,
+                Block::Moe { top_k: 1 },
+                Block::Moe { top_k: 2 },
+            ],
+            SearchSpace::IsoParam => vec![
+                Block::Skip,
+                h(1),
+                h(2),
+                h(4),
+                h(8),
+                Block::Ffl,
+                Block::SFfl,
+            ],
+        }
+    }
+
+    /// Program-name prefix in the artifact manifest.
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            SearchSpace::Paper => "search_",
+            SearchSpace::IsoParam => "searchiso_",
+        }
+    }
+
+    /// Total number of candidate architectures: |options|^n_slots
+    /// (the paper quotes >68e9 for TXL on enwik8).
+    pub fn cardinality(&self, n_heads_full: usize, n_slots: usize) -> f64 {
+        (self.options(n_heads_full).len() as f64).powi(n_slots as i32)
+    }
+
+    /// Decode per-slot argmax alphas into a concrete Arch.
+    pub fn decode(&self, n_heads_full: usize, argmax_per_slot: &[usize]) -> Arch {
+        let opts = self.options(n_heads_full);
+        Arch::new(
+            argmax_per_slot
+                .iter()
+                .map(|&i| opts[i.min(opts.len() - 1)].clone())
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_space_has_8_options() {
+        assert_eq!(SearchSpace::Paper.options(8).len(), 8);
+        assert_eq!(SearchSpace::IsoParam.options(8).len(), 7);
+    }
+
+    #[test]
+    fn clamping_respects_model_width() {
+        let opts = SearchSpace::Paper.options(4);
+        let max_heads = opts
+            .iter()
+            .filter_map(|b| if let Block::Mha { heads } = b { Some(*heads) } else { None })
+            .max()
+            .unwrap();
+        assert_eq!(max_heads, 4);
+    }
+
+    #[test]
+    fn cardinality_matches_paper_scale() {
+        // paper: 24 slots, 8 options -> 8^24 ≈ 4.7e21... they report 68e9 for
+        // their constrained variant; our formula is the raw product.
+        let c = SearchSpace::Paper.cardinality(8, 12);
+        assert!(c > 6.8e10);
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let a = SearchSpace::Paper.decode(8, &[0, 5, 7, 4]);
+        assert_eq!(a.signature(), "skip-ffl-moe_t2-mha8");
+    }
+}
+
+/// Paper arch presets at an arbitrary scale, mirroring
+/// python/compile/archspec.py (used by the analytical figures at paper
+/// scale; the tiny-scale versions live in the artifact manifest).
+pub fn presets(cfg: &crate::runtime::manifest::ModelConfig) -> Vec<(String, Vec<Block>)> {
+    let n = cfg.n_slots;
+    let h = cfg.n_heads_full;
+    let mha = |heads: usize| Block::Mha { heads: heads.max(1).min(h) };
+
+    let baseline: Vec<Block> = (0..n)
+        .map(|i| if i % 2 == 0 { mha(h) } else { Block::Ffl })
+        .collect();
+
+    // sandwich: attention-heavy head, FFL-heavy tail (Press et al. 2019)
+    let k = (n / 6).max(1);
+    let n_mha = n / 2;
+    let mut sandwich = vec![mha(h); k];
+    let (mut rem_m, mut rem_f) = (n_mha - k, (n - n_mha) - k);
+    while rem_m + rem_f > 0 {
+        if rem_m > 0 && (sandwich.len() % 2 == 0 || rem_f == 0) {
+            sandwich.push(mha(h));
+            rem_m -= 1;
+        } else {
+            sandwich.push(Block::Ffl);
+            rem_f -= 1;
+        }
+    }
+    sandwich.extend(vec![Block::Ffl; k]);
+
+    // PAR: ~1/3 the attention, placed early (Mandava et al. 2020)
+    let n_mha_par = ((n / 2) / 3).max(1);
+    let par: Vec<Block> = (0..n)
+        .map(|i| if i % 2 == 0 && i / 2 < n_mha_par { mha(h) } else { Block::Ffl })
+        .collect();
+
+    // PLANER-style variants per Appendix A: sparse narrow attention,
+    // MoE concentrated toward the end
+    let planer = |target: f64| -> Vec<Block> {
+        let (heads, n_mha_p) = if target >= 0.9 {
+            (vec![h, h / 2], (n / 3).max(2))
+        } else if target >= 0.8 {
+            (vec![h / 2, h / 2], (n / 3).max(2))
+        } else if target >= 0.65 {
+            (vec![h / 2, h / 4], (n / 4).max(2))
+        } else {
+            (vec![h / 4, h / 8], (n / 6).max(1))
+        };
+        let n_moe = (n / 6).max(1);
+        let mha_pos: Vec<usize> = (0..n_mha_p)
+            .map(|i| (i as f64 * (n as f64 * 0.7) / n_mha_p as f64).round() as usize)
+            .collect();
+        let moe_pos: Vec<usize> = (0..n_moe).map(|i| n - 2 * n_moe + 2 * i).collect();
+        let mut hi = 0;
+        (0..n)
+            .map(|i| {
+                if mha_pos.contains(&i) {
+                    let b = mha(heads[hi % heads.len()]);
+                    hi += 1;
+                    b
+                } else if moe_pos.contains(&i) {
+                    Block::Moe { top_k: 2 }
+                } else if target < 0.65 && i % 3 == 2 {
+                    Block::Skip
+                } else {
+                    Block::Ffl
+                }
+            })
+            .collect()
+    };
+
+    vec![
+        ("baseline".into(), baseline),
+        ("sandwich".into(), sandwich),
+        ("par".into(), par),
+        ("planer50".into(), planer(0.50)),
+        ("planer65".into(), planer(0.65)),
+        ("planer80".into(), planer(0.80)),
+        ("planer95".into(), planer(0.95)),
+    ]
+}
+
+#[cfg(test)]
+mod preset_tests {
+    use super::*;
+    use crate::latency::analytical::paper_config;
+
+    #[test]
+    fn presets_at_paper_scale_are_well_formed() {
+        let cfg = paper_config();
+        for (name, blocks) in presets(&cfg) {
+            assert_eq!(blocks.len(), cfg.n_slots, "{name}");
+        }
+    }
+
+    #[test]
+    fn planer_presets_prune_attention_vs_baseline() {
+        let cfg = paper_config();
+        let ps = presets(&cfg);
+        let heads = |blocks: &[Block]| -> usize {
+            blocks.iter().map(|b| if let Block::Mha { heads } = b { *heads } else { 0 }).sum()
+        };
+        let base = heads(&ps[0].1);
+        for (name, blocks) in &ps[3..] {
+            assert!(heads(blocks) < base, "{name} should prune heads");
+            assert!(blocks.iter().any(|b| matches!(b, Block::Moe { .. })), "{name} has MoE");
+        }
+    }
+}

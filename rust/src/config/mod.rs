@@ -1,0 +1,168 @@
+//! Run settings: CLI-level configuration for the `planer` binary and the
+//! pipeline coordinator.  (Model shapes live in the artifact manifest.)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Which corpus to run on (DESIGN.md §3 substitutions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CorpusSpec {
+    /// enwik8 substitute: synthetic char corpus of `chars` characters.
+    SynthChar { chars: usize },
+    /// WikiText-103 substitute: synthetic word corpus of `words` words.
+    SynthWord { words: usize },
+    /// Local text file (char- or word-level per `word_level`).
+    File { path: PathBuf, word_level: bool },
+}
+
+impl CorpusSpec {
+    pub fn parse(s: &str) -> Result<CorpusSpec> {
+        if let Some(rest) = s.strip_prefix("char:") {
+            return Ok(CorpusSpec::SynthChar { chars: rest.parse()? });
+        }
+        if let Some(rest) = s.strip_prefix("word:") {
+            return Ok(CorpusSpec::SynthWord { words: rest.parse()? });
+        }
+        if let Some(rest) = s.strip_prefix("file:") {
+            return Ok(CorpusSpec::File { path: rest.into(), word_level: false });
+        }
+        if let Some(rest) = s.strip_prefix("wordfile:") {
+            return Ok(CorpusSpec::File { path: rest.into(), word_level: true });
+        }
+        bail!("corpus spec '{s}' (use char:N | word:N | file:PATH | wordfile:PATH)")
+    }
+}
+
+/// Global settings for one `planer` invocation.
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub artifacts: PathBuf,
+    pub corpus: CorpusSpec,
+    pub seed: i64,
+    pub out_dir: PathBuf,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            artifacts: "artifacts".into(),
+            corpus: CorpusSpec::SynthChar { chars: 200_000 },
+            seed: 0,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+/// Tiny hand-rolled flag parser: `--key value` pairs + positionals.
+/// (clap is not in the offline vendor set.)
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, String)>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare switch
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.push((k.to_string(), v.to_string()));
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.push((name.to_string(), argv[i + 1].clone()));
+                    i += 1;
+                } else {
+                    a.switches.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_i32(&self, key: &str, default: i32) -> Result<i32> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = Args::parse(&argv("search --target 0.65 --iso --epochs=12 extra"));
+        assert_eq!(a.positional, vec!["search", "extra"]);
+        assert_eq!(a.get("target"), Some("0.65"));
+        assert_eq!(a.get("epochs"), Some("12"));
+        assert!(a.has("iso"));
+    }
+
+    #[test]
+    fn later_flags_win() {
+        let a = Args::parse(&argv("--x 1 --x 2"));
+        assert_eq!(a.get("x"), Some("2"));
+    }
+
+    #[test]
+    fn typed_getters_default() {
+        let a = Args::parse(&argv("--n 5"));
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(a.get_f64("n", 0.0).unwrap() == 5.0);
+    }
+
+    #[test]
+    fn corpus_spec_parsing() {
+        assert_eq!(
+            CorpusSpec::parse("char:1000").unwrap(),
+            CorpusSpec::SynthChar { chars: 1000 }
+        );
+        assert!(matches!(CorpusSpec::parse("word:99").unwrap(), CorpusSpec::SynthWord { words: 99 }));
+        assert!(CorpusSpec::parse("bogus").is_err());
+    }
+}

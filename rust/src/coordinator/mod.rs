@@ -1,0 +1,9 @@
+//! Top-level pipeline coordinator: search → sample → (compile) → retrain →
+//! profile → report.  This is the `planer` binary's engine room and the
+//! programmatic API the examples use.
+
+pub mod experiments;
+pub mod figures;
+pub mod pipeline;
+
+pub use pipeline::{Pipeline, PipelineReport};

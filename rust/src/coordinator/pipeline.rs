@@ -1,0 +1,151 @@
+//! The two-phase PLANER pipeline over a corpus + artifact set.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::{Arch, SearchSpace};
+use crate::data::Corpus;
+use crate::latency::{AnalyticalModel, Device, LatencyTable, MoeImpl};
+use crate::runtime::Engine;
+use crate::search::{SearchConfig, SearchOrchestrator, SearchReport};
+use crate::train::{TrainConfig, TrainReport, Trainer};
+use crate::util::json::Json;
+
+pub struct Pipeline<'a> {
+    pub engine: &'a Engine,
+    pub corpus: &'a Corpus,
+    pub device: Device,
+}
+
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub search: SearchReport,
+    pub train: Option<TrainReport>,
+    pub arch_file: PathBuf,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(engine: &'a Engine, corpus: &'a Corpus) -> Self {
+        Pipeline { engine, corpus, device: Device::A100 }
+    }
+
+    /// The Eq. (2) lookup table + baseline latency for the search, from the
+    /// analytical device model at the manifest's batch size.
+    pub fn analytical_table(&self, space: SearchSpace) -> (LatencyTable, f64) {
+        let cfg = &self.engine.manifest.config;
+        let model = AnalyticalModel::new(self.device);
+        let options = space.options(cfg.n_heads_full);
+        let table = LatencyTable::from_analytical(
+            &options,
+            &model,
+            cfg,
+            cfg.batch,
+            MoeImpl::Sequential { imbalance: 1.0 },
+        );
+        let baseline = self
+            .engine
+            .manifest
+            .archs
+            .get("baseline")
+            .map(|b| {
+                b.iter()
+                    .map(|blk| model.block_latency(blk, cfg, cfg.batch))
+                    .sum()
+            })
+            .unwrap_or_else(|| table.latencies.iter().sum::<f64>());
+        (table, baseline)
+    }
+
+    /// Phase 1: run the NAS for one latency target.
+    pub fn search(&self, sc: SearchConfig) -> Result<SearchReport> {
+        let (table, baseline) = self.analytical_table(sc.space);
+        let orch = SearchOrchestrator::new(self.engine, sc, table, baseline);
+        orch.run(&self.corpus.train)
+    }
+
+    /// Persist a found architecture spec for `planer compile`.
+    pub fn save_arch(&self, arch: &Arch, name: &str, out_dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = out_dir.join(format!("{name}.arch.json"));
+        arch.save(&path)?;
+        Ok(path)
+    }
+
+    /// Phase 1.5 (explicit BUILD step, never on the serve path): invoke
+    /// aot.py to compile train/eval/infer programs for a searched arch and
+    /// merge them into the manifest.  Requires python in PATH.
+    pub fn compile_arch(&self, name: &str, arch_json: &Path, config: &str) -> Result<()> {
+        let repo = self
+            .engine
+            .manifest
+            .dir
+            .parent()
+            .context("artifact dir has no parent")?;
+        let status = Command::new("python")
+            .current_dir(repo.join("python"))
+            .args([
+                "-m",
+                "compile.aot",
+                "--out",
+                &self.engine.manifest.dir.display().to_string(),
+                "--config",
+                config,
+                "--archs",
+                "none",
+                "--no-search",
+                "--no-bench",
+                "--merge",
+                "--arch",
+                &format!("{}={}", name, arch_json.display()),
+            ])
+            .status()
+            .context("spawning python aot (build step)")?;
+        if !status.success() {
+            bail!("aot compile failed for arch {name}");
+        }
+        Ok(())
+    }
+
+    /// Phase 2: retrain a named architecture from scratch with balance loss.
+    pub fn retrain(&self, arch_name: &str, tc: TrainConfig) -> Result<TrainReport> {
+        let trainer = Trainer::new(self.engine, arch_name);
+        trainer.run(
+            &tc,
+            &self.corpus.train,
+            Some(&self.corpus.valid),
+            Some(&self.corpus.test),
+        )
+    }
+
+    /// Serialise a search report for EXPERIMENTS.md / the figure benches.
+    pub fn report_json(&self, r: &SearchReport) -> Json {
+        Json::obj(vec![
+            ("target", Json::Num(r.target)),
+            ("arch", r.arch.to_json()),
+            ("signature", Json::Str(r.arch.signature())),
+            ("estimated_latency", Json::Num(r.estimated_latency)),
+            ("baseline_latency", Json::Num(r.baseline_latency)),
+            ("achieved_ratio", Json::Num(r.achieved_ratio())),
+            (
+                "trace",
+                Json::Arr(
+                    r.traces
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("epoch", Json::Num(t.epoch as f64)),
+                                ("temp", Json::Num(t.temperature)),
+                                ("weight_ce", Json::Num(t.weight_ce)),
+                                ("arch_ce", t.arch_ce.map(Json::Num).unwrap_or(Json::Null)),
+                                ("lat_ratio", t.lat_ratio.map(Json::Num).unwrap_or(Json::Null)),
+                                ("est_lat", t.est_latency.map(Json::Num).unwrap_or(Json::Null)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}

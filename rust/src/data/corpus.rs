@@ -1,0 +1,85 @@
+//! A tokenised corpus split into train/valid/test streams.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::synth;
+use super::tokenizer::{ByteTokenizer, Tokenizer, WordTokenizer};
+
+pub struct Corpus {
+    pub name: String,
+    pub tokenizer: Arc<dyn Tokenizer>,
+    pub train: Vec<i32>,
+    pub valid: Vec<i32>,
+    pub test: Vec<i32>,
+}
+
+impl Corpus {
+    /// enwik8 substitute: synthetic char-level corpus at `n_chars`.
+    pub fn synth_char(n_chars: usize, vocab: usize, seed: u64) -> Corpus {
+        let text = synth::char_corpus(n_chars, seed);
+        let tok = Arc::new(ByteTokenizer::new(vocab));
+        Self::from_text("enwik8-synth", tok, &text)
+    }
+
+    /// WikiText-103 substitute: synthetic word-level corpus.
+    pub fn synth_word(n_words: usize, vocab: usize, seed: u64) -> Corpus {
+        let text = synth::word_corpus(n_words, vocab * 2, 8, seed);
+        let tok = Arc::new(WordTokenizer::fit(&text, vocab));
+        Self::from_text("wt103-synth", tok, &text)
+    }
+
+    /// Any local text file, char- or word-level.
+    pub fn from_file(path: &Path, vocab: usize, word_level: bool) -> Result<Corpus> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading corpus {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "corpus".into());
+        let tok: Arc<dyn Tokenizer> = if word_level {
+            Arc::new(WordTokenizer::fit(&text, vocab))
+        } else {
+            Arc::new(ByteTokenizer::new(vocab))
+        };
+        Ok(Self::from_text(&name, tok, &text))
+    }
+
+    /// 90/5/5 split along the token stream (contiguous, like the real sets).
+    pub fn from_text(name: &str, tokenizer: Arc<dyn Tokenizer>, text: &str) -> Corpus {
+        let ids = tokenizer.encode(text);
+        let n = ids.len();
+        let a = n * 90 / 100;
+        let b = n * 95 / 100;
+        Corpus {
+            name: name.to_string(),
+            tokenizer,
+            train: ids[..a].to_vec(),
+            valid: ids[a..b].to_vec(),
+            test: ids[b..].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_partition_stream() {
+        let c = Corpus::synth_char(10_000, 97, 1);
+        let total = c.train.len() + c.valid.len() + c.test.len();
+        assert_eq!(total, 10_000);
+        assert!(c.train.len() > 8 * c.valid.len());
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let c = Corpus::synth_word(5_000, 500, 2);
+        let v = c.tokenizer.vocab_size() as i32;
+        assert!(c.train.iter().all(|&t| t >= 0 && t < v));
+        assert!(v <= 500);
+    }
+}

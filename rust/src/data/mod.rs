@@ -1,0 +1,16 @@
+//! Data pipeline: corpora, tokenizers and the Transformer-XL segment batcher.
+//!
+//! The paper trains on WikiText-103 (word-level, PPL) and enwik8 (char-level,
+//! BPC).  Neither ships with this image, so `synth` generates statistically
+//! comparable stand-ins (documented in DESIGN.md §3); any local text file can
+//! be substituted via `Corpus::from_file`.
+
+pub mod batcher;
+pub mod stats;
+pub mod corpus;
+pub mod synth;
+pub mod tokenizer;
+
+pub use batcher::{Batch, TxlBatcher};
+pub use corpus::Corpus;
+pub use tokenizer::{ByteTokenizer, Tokenizer, WordTokenizer};

@@ -1,0 +1,129 @@
+//! Corpus statistics: the checks that justify the DESIGN.md §3 substitutions
+//! (synthetic corpora must share the statistical properties the paper's
+//! datasets contribute: skewed unigrams, local predictability, long tails).
+
+use std::collections::HashMap;
+
+/// Shannon entropy (bits/symbol) of the unigram distribution.
+pub fn unigram_entropy(tokens: &[i32]) -> f64 {
+    if tokens.is_empty() {
+        return 0.0;
+    }
+    let mut counts: HashMap<i32, usize> = HashMap::new();
+    for &t in tokens {
+        *counts.entry(t).or_default() += 1;
+    }
+    let n = tokens.len() as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Conditional (bigram) entropy H(X_t | X_{t-1}) in bits — local
+/// predictability; char corpora with Markov structure have
+/// bigram entropy clearly below unigram entropy.
+pub fn bigram_entropy(tokens: &[i32]) -> f64 {
+    if tokens.len() < 2 {
+        return 0.0;
+    }
+    let mut ctx: HashMap<i32, HashMap<i32, usize>> = HashMap::new();
+    for w in tokens.windows(2) {
+        *ctx.entry(w[0]).or_default().entry(w[1]).or_default() += 1;
+    }
+    let n = (tokens.len() - 1) as f64;
+    let mut h = 0.0;
+    for (_, next) in ctx {
+        let total: usize = next.values().sum();
+        let pc = total as f64 / n;
+        let hc: f64 = next
+            .values()
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        h += pc * hc;
+    }
+    h
+}
+
+/// Least-squares Zipf exponent fit on the top `k` ranked frequencies:
+/// log f_r ~ -s log r + c.  WikiText-style corpora have s in ~[0.9, 1.3].
+pub fn zipf_exponent(tokens: &[i32], k: usize) -> f64 {
+    let mut counts: HashMap<i32, usize> = HashMap::new();
+    for &t in tokens {
+        *counts.entry(t).or_default() += 1;
+    }
+    let mut freqs: Vec<usize> = counts.into_values().collect();
+    freqs.sort_unstable_by(|a, b| b.cmp(a));
+    let pts: Vec<(f64, f64)> = freqs
+        .iter()
+        .take(k)
+        .enumerate()
+        .map(|(i, &f)| (((i + 1) as f64).ln(), (f as f64).ln()))
+        .collect();
+    if pts.len() < 3 {
+        return f64::NAN;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    -slope
+}
+
+/// Type-token ratio over a window — long-tail vocabulary indicator.
+pub fn type_token_ratio(tokens: &[i32]) -> f64 {
+    if tokens.is_empty() {
+        return 0.0;
+    }
+    let uniq: std::collections::HashSet<i32> = tokens.iter().copied().collect();
+    uniq.len() as f64 / tokens.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+
+    #[test]
+    fn entropy_of_uniform_and_constant() {
+        let uni: Vec<i32> = (0..4096).map(|i| i % 16).collect();
+        assert!((unigram_entropy(&uni) - 4.0).abs() < 0.01);
+        let cst = vec![3i32; 1000];
+        assert_eq!(unigram_entropy(&cst), 0.0);
+    }
+
+    #[test]
+    fn bigram_entropy_detects_markov_structure() {
+        // deterministic cycle: H(X_t | X_{t-1}) = 0 despite uniform unigrams
+        let cyc: Vec<i32> = (0..3000).map(|i| i % 7).collect();
+        assert!(unigram_entropy(&cyc) > 2.0);
+        assert!(bigram_entropy(&cyc) < 0.01);
+    }
+
+    #[test]
+    fn synth_char_corpus_is_learnable_but_not_trivial() {
+        let c = Corpus::synth_char(60_000, 97, 0);
+        let h1 = unigram_entropy(&c.train);
+        let h2 = bigram_entropy(&c.train);
+        // mid-range entropy (enwik8 is ~4.5-5 bits unigram over bytes)
+        assert!(h1 > 2.0 && h1 < 6.0, "unigram {h1}");
+        // local structure: bigram entropy must be meaningfully lower
+        assert!(h2 < h1 - 0.2, "unigram {h1} bigram {h2}");
+    }
+
+    #[test]
+    fn synth_word_corpus_is_zipfian() {
+        let c = Corpus::synth_word(40_000, 2000, 1);
+        let s = zipf_exponent(&c.train, 200);
+        assert!((0.6..1.8).contains(&s), "zipf exponent {s}");
+        assert!(type_token_ratio(&c.train) < 0.2);
+    }
+}

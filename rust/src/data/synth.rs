@@ -1,0 +1,148 @@
+//! Synthetic corpora standing in for enwik8 and WikiText-103 (DESIGN.md §3).
+//!
+//! - `char_corpus`: a second-order Markov chain over a letter alphabet with
+//!   nested wiki-style markup, matching enwik8's mid-range entropy and the
+//!   local dependencies TXL memory exploits.
+//! - `word_corpus`: Zipf-distributed vocabulary with topic drift (mixture of
+//!   topic-conditional unigram models + bigram smoothing), matching the
+//!   long-tail unigram statistics of WikiText.
+//!
+//! Both are deterministic in the seed — the §4.5 repeatability experiment
+//! and every test rely on that.
+
+use crate::util::rng::Rng;
+
+/// Character-level corpus (enwik8 substitute).  Returns ASCII text.
+pub fn char_corpus(n_chars: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let letters: Vec<char> = "abcdefghijklmnopqrstuvwxyz ".chars().collect();
+    let k = letters.len();
+
+    // Random sparse 2nd-order transition table: each (a, b) context prefers a
+    // handful of successors — gives compressible, learnable structure.
+    // sparse successor sets: near-uniform unigrams with strong local
+    // structure — the enwik8-like profile (data::stats tests assert both).
+    // first-order table (4 successors per char) dominates; a second-order
+    // table adds the longer dependencies TXL memory exploits.
+    let mut table1 = vec![0u8; k * 4];
+    for t in table1.iter_mut() {
+        *t = rng.below(k) as u8;
+    }
+    let mut table2 = vec![0u8; k * k * 4];
+    for t in table2.iter_mut() {
+        *t = rng.below(k) as u8;
+    }
+
+    let mut out = String::with_capacity(n_chars + 64);
+    let (mut a, mut b) = (0usize, 1usize);
+    let mut depth = 0usize;
+    while out.len() < n_chars {
+        // occasional wiki-ish markup, nested up to 2 deep
+        let r = rng.f64();
+        if r < 0.002 && depth < 2 {
+            out.push_str("[[");
+            depth += 1;
+        } else if r < 0.004 && depth > 0 {
+            out.push_str("]]");
+            depth -= 1;
+        } else if r < 0.02 {
+            out.push('\n');
+        }
+        if rng.f64() < 0.12 {
+            out.push(' ');
+        }
+        // second-order structure dominates on purpose: a position-wise FFL
+        // (which sees only the current token) can model first-order
+        // transitions, but needs attention over the previous token(s) for
+        // the rest — giving the NAS a real reason to keep MHA blocks.
+        let r2 = rng.f64();
+        let slot = rng.below(4);
+        let c = if r2 < 0.25 {
+            table1[b * 4 + slot] as usize // first-order structure
+        } else if r2 < 0.88 {
+            table2[(a * k + b) * 4 + slot] as usize // second-order structure
+        } else {
+            rng.below(k)
+        };
+        out.push(letters[c]);
+        a = b;
+        b = c;
+    }
+    out.truncate(n_chars);
+    out
+}
+
+/// Word-level corpus (WikiText substitute): `n_words` words over a `vocab`
+/// sized Zipf vocabulary with `topics` drifting topic mixtures.
+pub fn word_corpus(n_words: usize, vocab: usize, topics: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    // Zipf weights w_i ~ 1/(i+1)^s
+    let s = 1.05;
+    let base: Vec<f64> = (0..vocab).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+
+    // Each topic boosts a random subset of the vocabulary.
+    let topic_boost: Vec<Vec<usize>> = (0..topics)
+        .map(|_| (0..vocab / 10).map(|_| rng.below(vocab)).collect())
+        .collect();
+
+    let mut out = String::with_capacity(n_words * 6);
+    let mut topic = 0usize;
+    let mut weights = base.clone();
+    let mut since_switch = 0usize;
+    for w in 0..n_words {
+        if since_switch > 200 && rng.f64() < 0.02 {
+            topic = rng.below(topics);
+            weights.copy_from_slice(&base);
+            for &i in &topic_boost[topic] {
+                weights[i] *= 8.0;
+            }
+            since_switch = 0;
+        }
+        since_switch += 1;
+        let id = rng.weighted(&weights);
+        out.push_str("w");
+        out.push_str(&id.to_string());
+        if w % 17 == 16 {
+            out.push_str(" .\n");
+        } else {
+            out.push(' ');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_corpus_deterministic_and_sized() {
+        let a = char_corpus(10_000, 7);
+        let b = char_corpus(10_000, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10_000);
+        assert_ne!(a, char_corpus(10_000, 8));
+    }
+
+    #[test]
+    fn char_corpus_is_not_uniform() {
+        // Markov structure => unigram distribution far from uniform
+        let text = char_corpus(50_000, 3);
+        let mut counts = [0usize; 128];
+        for b in text.bytes() {
+            counts[b as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero > 10);
+        assert!(max / text.len() as f64 > 0.05, "space injection should skew unigrams");
+    }
+
+    #[test]
+    fn word_corpus_zipf_head_dominates() {
+        let text = word_corpus(20_000, 1000, 4, 5);
+        let w0 = text.matches("w0 ").count();
+        let w500 = text.matches("w500 ").count();
+        assert!(w0 > 20 * w500.max(1) / 2, "w0={w0} w500={w500}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Tokenizers: byte-level (enwik8-style, BPC) and word-level with a capped
+//! vocabulary (WikiText-style, PPL).
+
+use std::collections::HashMap;
+
+/// Common interface consumed by the corpus/batcher layers.
+pub trait Tokenizer: Send + Sync {
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, ids: &[i32]) -> String;
+    fn vocab_size(&self) -> usize;
+}
+
+/// Byte-level tokenizer clamped to a model vocabulary.  Printable ASCII is
+/// remapped to ids 0..94 (b - 32) so letters stay distinct even under tiny
+/// vocabularies (e.g. 97); newline gets its own id; everything else folds
+/// into the final <unk>-like bucket.
+pub struct ByteTokenizer {
+    vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 2);
+        ByteTokenizer { vocab }
+    }
+
+    fn newline_id(&self) -> i32 {
+        (self.vocab - 2).min(95) as i32
+    }
+}
+
+impl Tokenizer for ByteTokenizer {
+    fn encode(&self, text: &str) -> Vec<i32> {
+        let unk = (self.vocab - 1) as i32;
+        text.bytes()
+            .map(|b| match b {
+                b'\n' => self.newline_id(),
+                32..=126 => ((b - 32) as i32).min(unk),
+                _ => unk,
+            })
+            .collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                if i == self.newline_id() {
+                    '\n'
+                } else if (0..95).contains(&i) {
+                    (i as u8 + 32) as char
+                } else {
+                    '\u{fffd}'
+                }
+            })
+            .collect()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+}
+
+/// Word-level tokenizer: whitespace split, frequency-capped vocab,
+/// id 0 = <unk>, id 1 = <eos> (appended per line on encode_lines).
+pub struct WordTokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+pub const UNK: i32 = 0;
+pub const EOS: i32 = 1;
+
+impl WordTokenizer {
+    /// Build from a training corpus, keeping the `max_vocab - 2` most
+    /// frequent words (ties broken lexicographically for determinism).
+    pub fn fit(text: &str, max_vocab: usize) -> Self {
+        assert!(max_vocab >= 3);
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w).or_default() += 1;
+        }
+        let mut by_freq: Vec<(&str, usize)> = counts.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut vocab = vec!["<unk>".to_string(), "<eos>".to_string()];
+        vocab.extend(
+            by_freq
+                .into_iter()
+                .take(max_vocab - 2)
+                .map(|(w, _)| w.to_string()),
+        );
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        WordTokenizer { vocab, index }
+    }
+}
+
+impl Tokenizer for WordTokenizer {
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| self.index.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.vocab
+                    .get(i.max(0) as usize)
+                    .map(String::as_str)
+                    .unwrap_or("<unk>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_tokenizer_roundtrips_ascii() {
+        let t = ByteTokenizer::new(256);
+        let ids = t.encode("hello world");
+        assert_eq!(t.decode(&ids), "hello world");
+    }
+
+    #[test]
+    fn byte_tokenizer_clamps_to_vocab() {
+        let t = ByteTokenizer::new(97);
+        for id in t.encode("~\u{00ff}\nhello WORLD [123]") {
+            assert!((0..97).contains(&id));
+        }
+        // letters must stay distinct under vocab 97
+        let ids = t.encode("abc");
+        assert_eq!(ids.len(), 3);
+        assert!(ids[0] != ids[1] && ids[1] != ids[2]);
+    }
+
+    #[test]
+    fn word_tokenizer_caps_vocab_by_frequency() {
+        let text = "a a a b b c";
+        let t = WordTokenizer::fit(text, 4); // unk, eos, a, b
+        assert_eq!(t.vocab_size(), 4);
+        assert_eq!(t.encode("a b c"), vec![2, 3, UNK]);
+    }
+
+    #[test]
+    fn word_tokenizer_deterministic_ties() {
+        let t1 = WordTokenizer::fit("x y z", 5);
+        let t2 = WordTokenizer::fit("x y z", 5);
+        assert_eq!(t1.encode("x y z"), t2.encode("x y z"));
+    }
+}

@@ -1,0 +1,337 @@
+//! Analytical GPU latency model (roofline + launch overhead + eager-mode
+//! pass counts), calibrated against the paper's published ratios:
+//!
+//! - Fig. 1: attention >= 80% of TXL inference time on V100/A100;
+//! - Fig. 4: MHA-8 ~ 6.2x FFL-2048 at d=512, ~linear scaling in heads;
+//! - Fig. 9: sequential MoE ~7x FFL at small batch, < 3x at large batch;
+//!   oracle MoE(top-2) ~ 2x FFL.
+//!
+//! The linear-in-heads behaviour is modelled the way it arises physically:
+//! per-head attention GEMMs have dh = d/h inner dimension, so tensor-core
+//! tile utilisation scales like dh/tile — per-head time is roughly constant
+//! and total score time is proportional to the head count.  The sequential
+//! MoE penalty arises from per-expert launches and small-chunk GEMM
+//! inefficiency, exactly the paper's §4.2 explanation.
+
+use crate::runtime::manifest::{Block, ModelConfig};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    V100,
+    A100,
+}
+
+impl Device {
+    /// (peak half-precision FLOP/s, HBM bytes/s, kernel launch seconds)
+    fn params(&self) -> (f64, f64, f64) {
+        match self {
+            Device::V100 => (112e12, 0.90e12, 6.0e-6),
+            Device::A100 => (312e12, 1.555e12, 5.0e-6),
+        }
+    }
+}
+
+/// Which MoE realisation to model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MoeImpl {
+    /// Paper's implementation: experts processed sequentially, each expert
+    /// padded to the max per-expert load (imbalance >= 1.0 multiplies it).
+    Sequential { imbalance: f64 },
+    /// Paper's dashed "oracle": a dense FFL over top_k * N tokens, no gate
+    /// or dispatch overhead.
+    Oracle,
+    /// This repo's Pallas kernel: capacity-bucketed batched GEMMs — one
+    /// launch, MXU-shaped chunks, balance-insensitive by construction.
+    CapacityKernel,
+}
+
+/// GEMM efficiency as a function of the M dimension (tokens in the chunk):
+/// small chunks can't fill tensor-core tiles.
+fn gemm_eff(tokens: f64) -> f64 {
+    // A100/V100 GEMMs saturate once the token (M) dimension covers a few
+    // tensor-core tiles; below that, utilisation falls off linearly.
+    let base = 0.45;
+    base * (tokens / 256.0).clamp(0.05, 1.0)
+}
+
+pub struct AnalyticalModel {
+    pub device: Device,
+    /// Elementwise kernel passes over the [B,h,T,S] score tensor in an
+    /// eager-mode rel-attention (scale, bias add x2, rel-shift copy, mask,
+    /// softmax x3, dropout x2, transposes x4...).  14 matches the NVIDIA
+    /// PyTorch TXL the paper profiles.
+    pub attn_passes: f64,
+}
+
+impl AnalyticalModel {
+    pub fn new(device: Device) -> Self {
+        AnalyticalModel { device, attn_passes: 14.0 }
+    }
+
+    /// Forward latency (seconds) for one block at the given batch size.
+    pub fn block_latency(&self, b: &Block, cfg: &ModelConfig, batch: usize) -> f64 {
+        self.block_latency_moe(b, cfg, batch, MoeImpl::Sequential { imbalance: 1.0 })
+    }
+
+    pub fn block_latency_moe(
+        &self,
+        block: &Block,
+        cfg: &ModelConfig,
+        batch: usize,
+        moe_impl: MoeImpl,
+    ) -> f64 {
+        let (peak, bw, launch) = self.device.params();
+        let d = cfg.d_model as f64;
+        let t = cfg.seq_len as f64;
+        let s = (cfg.mem_len + cfg.seq_len) as f64;
+        let n = batch as f64 * t;
+        let bytes_per = 2.0; // half precision
+
+        match block {
+            Block::Skip => 0.0,
+
+            Block::Ffl => self.ffl_latency(n, d, cfg.d_inner as f64),
+            Block::SFfl => self.ffl_latency(n, d, cfg.sffl_inner as f64),
+
+            Block::Mha { heads } => {
+                let h = *heads as f64;
+                // q,k,v,o,r projections: 5 GEMMs of d x d over n tokens
+                let proj_flops = 2.0 * n * d * d * 5.0;
+                let proj = proj_flops / (peak * gemm_eff(n)) + 5.0 * launch;
+                // per-head score GEMMs (QK^T, BD, PV): utilisation ∝ dh/64
+                let dh = d / h;
+                // batched per-head GEMMs: tile utilisation ∝ dh, and the
+                // strided [B,h,T,dh] layouts keep them below dense-GEMM eff
+                let eff_head = 0.25 * (dh / 64.0).clamp(0.05, 1.0);
+                let score_flops_per_head = 2.0 * n * s * dh * 3.0;
+                let scores = h
+                    * (score_flops_per_head / (peak * eff_head)
+                        + 3.0 * launch);
+                // eager elementwise passes over [B,h,T,S]; NVIDIA's TXL
+                // computes scores/softmax in fp32 (4 bytes)
+                let score_elems = batch as f64 * h * t * s;
+                let elementwise = self.attn_passes * score_elems * 4.0 / bw
+                    + self.attn_passes * launch;
+                let _ = bytes_per;
+                proj + scores + elementwise
+            }
+
+            Block::Moe { top_k } => {
+                let k = *top_k as f64;
+                let inner = cfg.d_inner as f64;
+                let e = cfg.n_experts as f64;
+                match moe_impl {
+                    MoeImpl::Oracle => self.ffl_latency(k * n, d, inner),
+                    MoeImpl::Sequential { imbalance } => {
+                        // gate + dispatch traffic
+                        let gate = 2.0 * n * d * e / (peak * gemm_eff(n)) + launch;
+                        let traffic = 4.0 * k * n * d * bytes_per / bw + 4.0 * launch;
+                        // per-expert chunk, padded to the max-loaded expert
+                        let chunk = (k * n / e) * imbalance.max(1.0);
+                        let per_expert_flops = 4.0 * chunk * d * inner;
+                        // 12us/expert framework overhead: the paper's
+                        // eager-mode mini-batch slicing + index select per
+                        // expert (§4.2 "sequential implementation") — the
+                        // reason its MoE underutilises small batches
+                        let dispatch_overhead = 12.0e-6;
+                        let per_expert = per_expert_flops / (peak * gemm_eff(chunk))
+                            + 2.0 * launch
+                            + dispatch_overhead;
+                        gate + traffic + e * per_expert
+                    }
+                    MoeImpl::CapacityKernel => {
+                        // one fused launch; chunks are capacity-shaped
+                        let cap = (cfg.capacity_factor * k * n / e).max(4.0);
+                        let flops = e * 4.0 * cap * d * inner
+                            + 2.0 * n * d * e // gate
+                            + 2.0 * e * cap * n * d / 128.0; // one-hot dispatch GEMMs (sparse-friendly)
+                        let traffic = 4.0 * k * n * d * bytes_per / bw;
+                        flops / (peak * gemm_eff(e * cap)) + traffic + 3.0 * launch
+                    }
+                }
+            }
+        }
+    }
+
+    fn ffl_latency(&self, n: f64, d: f64, inner: f64) -> f64 {
+        let (peak, bw, launch) = self.device.params();
+        let flops = 4.0 * n * d * inner;
+        let bytes = 2.0 * (2.0 * n * d + n * inner + 2.0 * d * inner);
+        (flops / (peak * gemm_eff(n))).max(bytes / bw) + 2.0 * launch
+    }
+
+    /// Embedding (input lookup + tied output projection) — only used for the
+    /// Fig. 1 latency-share breakdown.
+    pub fn embedding_latency(&self, cfg: &ModelConfig, batch: usize) -> f64 {
+        let (peak, bw, launch) = self.device.params();
+        let n = (batch * cfg.seq_len) as f64;
+        let d = cfg.d_model as f64;
+        // adaptive softmax (the NVIDIA TXL recipe the paper trains with)
+        // amortises the output projection to a small effective vocabulary
+        let v = (cfg.vocab as f64).min(8192.0);
+        let proj = 2.0 * n * d * v / (peak * gemm_eff(n));
+        let lookup = n * d * 2.0 / bw;
+        proj + lookup + 2.0 * launch
+    }
+
+    /// Whole-network forward latency under Eq. (2) additivity.
+    pub fn network_latency(&self, blocks: &[Block], cfg: &ModelConfig, batch: usize) -> f64 {
+        blocks
+            .iter()
+            .map(|b| self.block_latency(b, cfg, batch))
+            .sum::<f64>()
+            + self.embedding_latency(cfg, batch)
+    }
+}
+
+/// Paper-scale config (TXL Base on WT103: d=512, 32 MHA/FFL blocks, 8-expert
+/// MoE with 16384-inner iso-param FFL; profiled at batch 64, L=192).  The
+/// analytical figures (Figs 1/4/7b/8/9) are generated at this scale — it is
+/// what the roofline model is calibrated against; measured-CPU columns use
+/// the artifact manifest's (tiny) scale instead.
+pub fn paper_config() -> ModelConfig {
+    ModelConfig {
+        vocab: 267_735,
+        d_model: 512,
+        n_slots: 32,
+        d_inner: 2048,
+        n_heads_full: 8,
+        seq_len: 192,
+        mem_len: 192,
+        batch: 64,
+        n_experts: 8,
+        sffl_inner: 16384,
+        capacity_factor: 1.25,
+        train_steps: 40000,
+        warmup_steps: 4000,
+        balance_coef: 0.01,
+        metric: "ppl".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_cfg() -> ModelConfig {
+        paper_config()
+    }
+
+    #[test]
+    fn fig4_mha8_vs_ffl_ratio() {
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let ffl = m.block_latency(&Block::Ffl, &cfg, 64);
+        let mha8 = m.block_latency(&Block::Mha { heads: 8 }, &cfg, 64);
+        let ratio = mha8 / ffl;
+        assert!(
+            (4.5..8.0).contains(&ratio),
+            "paper reports 6.2x, model gives {ratio:.2}x"
+        );
+    }
+
+    #[test]
+    fn fig4_head_scaling_roughly_linear() {
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let l1 = m.block_latency(&Block::Mha { heads: 1 }, &cfg, 64);
+        let l2 = m.block_latency(&Block::Mha { heads: 2 }, &cfg, 64);
+        let l4 = m.block_latency(&Block::Mha { heads: 4 }, &cfg, 64);
+        let l8 = m.block_latency(&Block::Mha { heads: 8 }, &cfg, 64);
+        assert!(l1 < l2 && l2 < l4 && l4 < l8);
+        // halving heads should save a noticeable fraction
+        assert!(l8 / l1 > 1.6, "l8/l1 = {}", l8 / l1);
+    }
+
+    #[test]
+    fn fig1_attention_dominates_inference() {
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let mut attn = 0.0;
+        let mut rest = m.embedding_latency(&cfg, 64);
+        for i in 0..cfg.n_slots {
+            if i % 2 == 0 {
+                attn += m.block_latency(&Block::Mha { heads: 8 }, &cfg, 64);
+            } else {
+                rest += m.block_latency(&Block::Ffl, &cfg, 64);
+            }
+        }
+        let share = attn / (attn + rest);
+        assert!(share > 0.70, "attention share {share:.2} (paper: >0.8)");
+        let mv = AnalyticalModel::new(Device::V100);
+        let a = mv.block_latency(&Block::Mha { heads: 8 }, &cfg, 64);
+        let f = mv.block_latency(&Block::Ffl, &cfg, 64);
+        assert!(a / f > 3.0, "V100 keeps the same shape");
+    }
+
+    #[test]
+    fn fig9_moe_overhead_shrinks_with_batch() {
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let seq = MoeImpl::Sequential { imbalance: 1.0 };
+        let over = |batch: usize| {
+            let moe = m.block_latency_moe(&Block::Moe { top_k: 2 }, &cfg, batch, seq);
+            let ffl = m.block_latency(&Block::Ffl, &cfg, batch);
+            moe / ffl
+        };
+        let low = over(2);
+        let high = over(256);
+        assert!(low > 4.0, "low-batch overhead {low:.2} (paper ~7x)");
+        assert!(high < 3.2, "high-batch overhead {high:.2} (paper <3x)");
+        assert!(low > high);
+    }
+
+    #[test]
+    fn fig9_oracle_is_topk_times_ffl() {
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let ffl = m.block_latency(&Block::Ffl, &cfg, 64);
+        let oracle =
+            m.block_latency_moe(&Block::Moe { top_k: 2 }, &cfg, 64, MoeImpl::Oracle);
+        let r = oracle / ffl;
+        assert!((1.6..2.4).contains(&r), "oracle/ffl = {r:.2} (paper ~2x)");
+    }
+
+    #[test]
+    fn fig7b_balance_improves_sequential_moe() {
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let bal = m.block_latency_moe(
+            &Block::Moe { top_k: 2 }, &cfg, 64,
+            MoeImpl::Sequential { imbalance: 1.0 });
+        let skew = m.block_latency_moe(
+            &Block::Moe { top_k: 2 }, &cfg, 64,
+            MoeImpl::Sequential { imbalance: 1.35 });
+        let speedup = skew / bal;
+        assert!(
+            (1.05..1.45).contains(&speedup),
+            "balancing speedup {speedup:.2} (paper: up to 1.16x)"
+        );
+    }
+
+    #[test]
+    fn sffl_slower_than_moe_approaches_mha8() {
+        // §4.3: scaled FFL at least 2x slower than (sequential) MoE and
+        // approaches MHA-8 runtime.
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let sffl = m.block_latency(&Block::SFfl, &cfg, 64);
+        let moe = m.block_latency(&Block::Moe { top_k: 2 }, &cfg, 64);
+        let mha8 = m.block_latency(&Block::Mha { heads: 8 }, &cfg, 64);
+        assert!(sffl > 2.0 * moe, "sffl {sffl:.2e} vs moe {moe:.2e}");
+        assert!(sffl > 0.4 * mha8);
+    }
+
+    #[test]
+    fn capacity_kernel_beats_sequential_at_small_batch() {
+        // our Pallas design motivation: batch-independent utilisation
+        let m = AnalyticalModel::new(Device::A100);
+        let cfg = paper_cfg();
+        let seq = m.block_latency_moe(
+            &Block::Moe { top_k: 2 }, &cfg, 4,
+            MoeImpl::Sequential { imbalance: 1.0 });
+        let cap = m.block_latency_moe(
+            &Block::Moe { top_k: 2 }, &cfg, 4, MoeImpl::CapacityKernel);
+        assert!(cap < seq);
+    }
+}

@@ -1,0 +1,18 @@
+//! Latency modelling: the lookup tables PLANER's Eq. (2) estimator consumes.
+//!
+//! Two interchangeable sources (DESIGN.md §3):
+//! - `analytical`: a V100/A100 roofline simulator calibrated to the ratios
+//!   the paper reports (Fig. 1/4/9) — used to regenerate the paper-shaped
+//!   curves on hardware we don't have.
+//! - `profiler`: real wall-clock latencies of the per-block HLO executables
+//!   on the CPU PJRT client — used for the end-to-end correlation study
+//!   (Fig. 11) on hardware we do have.
+
+pub mod analytical;
+pub mod roofline;
+pub mod profiler;
+pub mod table;
+
+pub use analytical::{AnalyticalModel, Device, MoeImpl};
+pub use profiler::Profiler;
+pub use table::LatencyTable;

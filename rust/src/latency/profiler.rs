@@ -1,0 +1,103 @@
+//! Measured latency tables: wall-clock timing of the per-block bench
+//! programs (`bench_<option>_b<batch>`) on the CPU PJRT client.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal, Engine};
+use crate::util::timer::{self, Stats};
+
+pub struct Profiler<'a> {
+    pub engine: &'a Engine,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+/// One profiled block: stats in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockProfile {
+    pub stats: Stats,
+}
+
+impl<'a> Profiler<'a> {
+    pub fn new(engine: &'a Engine) -> Self {
+        Profiler { engine, warmup: 2, iters: 10 }
+    }
+
+    /// Measure `bench_<option>_b<batch>`; inputs are zero literals (timing
+    /// is shape-dependent only for these blocks — capacity-padded MoE
+    /// included, see kernels/moe.py).
+    pub fn measure_block(&self, option: &str, batch: usize) -> Result<BlockProfile> {
+        let name = format!("bench_{option}_b{batch}");
+        let prog = self
+            .engine
+            .program(&name)
+            .with_context(|| format!("bench program {name}"))?;
+        let inputs: Vec<xla::Literal> =
+            prog.spec.inputs.iter().map(literal::zeros).collect();
+        let times = timer::time_iters(
+            || {
+                prog.execute(&inputs).expect("bench execute");
+            },
+            self.warmup,
+            self.iters,
+        );
+        Ok(BlockProfile { stats: timer::stats(&times) })
+    }
+
+    /// Measure every option of the manifest's search space at `batch`,
+    /// returning mean seconds per option (the Eq. 2 lookup table).
+    pub fn measure_options(&self, options: &[String], batch: usize) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(options.len());
+        for o in options {
+            if o == "skip" {
+                out.push(0.0);
+                continue;
+            }
+            out.push(self.measure_block(o, batch)?.stats.p50);
+        }
+        Ok(out)
+    }
+
+    /// Measure end-to-end network latency via `infer_<arch>_b<batch>`.
+    pub fn measure_network(&self, arch: &str, batch: usize) -> Result<BlockProfile> {
+        let name = format!("infer_{arch}_b{batch}");
+        let prog = self.engine.program(&name)?;
+        let inputs: Vec<xla::Literal> =
+            prog.spec.inputs.iter().map(literal::zeros).collect();
+        let times = timer::time_iters(
+            || {
+                prog.execute(&inputs).expect("infer execute");
+            },
+            self.warmup,
+            self.iters,
+        );
+        Ok(BlockProfile { stats: timer::stats(&times) })
+    }
+
+    /// All available bench batches for an option, from the manifest.
+    pub fn available_batches(&self, option: &str) -> Vec<usize> {
+        let prefix = format!("bench_{option}_b");
+        let mut v: Vec<usize> = self
+            .engine
+            .manifest
+            .programs
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix).and_then(|b| b.parse().ok()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn profiles(&self, options: &[String], batch: usize) -> Result<BTreeMap<String, BlockProfile>> {
+        let mut m = BTreeMap::new();
+        for o in options {
+            if o == "skip" {
+                continue;
+            }
+            m.insert(o.clone(), self.measure_block(o, batch)?);
+        }
+        Ok(m)
+    }
+}

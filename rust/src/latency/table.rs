@@ -1,0 +1,116 @@
+//! The Eq. (2) latency lookup table: per-option latencies + estimator.
+
+use anyhow::Result;
+
+use crate::arch::Arch;
+use crate::runtime::manifest::{Block, ModelConfig};
+
+use super::analytical::{AnalyticalModel, MoeImpl};
+
+/// Per-option latency table, indexed in search-space option order.
+#[derive(Debug, Clone)]
+pub struct LatencyTable {
+    pub options: Vec<Block>,
+    pub latencies: Vec<f64>,
+}
+
+impl LatencyTable {
+    pub fn from_analytical(
+        options: &[Block],
+        model: &AnalyticalModel,
+        cfg: &ModelConfig,
+        batch: usize,
+        moe_impl: MoeImpl,
+    ) -> LatencyTable {
+        let latencies = options
+            .iter()
+            .map(|b| model.block_latency_moe(b, cfg, batch, moe_impl))
+            .collect();
+        LatencyTable { options: options.to_vec(), latencies }
+    }
+
+    pub fn from_measured(options: &[Block], latencies: Vec<f64>) -> Result<LatencyTable> {
+        anyhow::ensure!(
+            options.len() == latencies.len(),
+            "option/latency length mismatch"
+        );
+        Ok(LatencyTable { options: options.to_vec(), latencies })
+    }
+
+    pub fn latency_of(&self, b: &Block) -> f64 {
+        self.options
+            .iter()
+            .position(|o| o == b)
+            .map(|i| self.latencies[i])
+            .unwrap_or_else(|| {
+                // block not in the table (e.g. arch with heads clamped
+                // differently): fall back to nearest by name class
+                match b {
+                    Block::Skip => 0.0,
+                    _ => self
+                        .options
+                        .iter()
+                        .zip(&self.latencies)
+                        .filter(|(o, _)| std::mem::discriminant(*o) == std::mem::discriminant(b))
+                        .map(|(_, &l)| l)
+                        .fold(f64::NAN, f64::max),
+                }
+            })
+    }
+
+    /// Eq. (2) for a concrete architecture (a one-hot P matrix).
+    pub fn estimate(&self, arch: &Arch) -> f64 {
+        arch.blocks.iter().map(|b| self.latency_of(b)).sum()
+    }
+
+    /// Eq. (2) for a soft P matrix [n_slots][n_options].
+    pub fn estimate_soft(&self, p: &[Vec<f64>]) -> f64 {
+        p.iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&self.latencies)
+                    .map(|(pi, li)| pi * li)
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        LatencyTable {
+            options: vec![
+                Block::Skip,
+                Block::Mha { heads: 2 },
+                Block::Ffl,
+                Block::Moe { top_k: 2 },
+            ],
+            latencies: vec![0.0, 6.0, 1.0, 2.5],
+        }
+    }
+
+    #[test]
+    fn estimate_sums_block_latencies() {
+        let t = table();
+        let a = Arch::new(vec![Block::Mha { heads: 2 }, Block::Ffl, Block::Skip]);
+        assert_eq!(t.estimate(&a), 7.0);
+    }
+
+    #[test]
+    fn soft_estimate_matches_hard_at_onehot() {
+        let t = table();
+        let p = vec![vec![0.0, 1.0, 0.0, 0.0], vec![0.0, 0.0, 1.0, 0.0]];
+        let a = Arch::new(vec![Block::Mha { heads: 2 }, Block::Ffl]);
+        assert!((t.estimate_soft(&p) - t.estimate(&a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn soft_estimate_interpolates() {
+        let t = table();
+        let p = vec![vec![0.5, 0.0, 0.5, 0.0]];
+        assert!((t.estimate_soft(&p) - 0.5).abs() < 1e-12);
+    }
+}

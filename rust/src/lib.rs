@@ -1,0 +1,24 @@
+//! PLANER: latency-aware sparsely-activated Transformers.
+//!
+//! Rust reproduction of *Efficient Sparsely Activated Transformers*
+//! (Latifi, Muralidharan, Garland, 2022) as a three-layer stack:
+//! Pallas kernels (L1) and the JAX Transformer-XL + NAS search network (L2)
+//! are AOT-lowered to HLO by `python/compile/aot.py`; this crate (L3) owns
+//! everything at runtime — the two-phase NAS orchestrator, training and
+//! serving engines, latency models and the benchmark harness — executing the
+//! HLO artifacts through the PJRT CPU client (`xla` crate).
+//!
+//! Python never runs on the request path.
+
+pub mod arch;
+pub mod util;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod latency;
+pub mod metrics;
+pub mod runtime;
+pub mod search;
+pub mod serve;
+pub mod train;
+

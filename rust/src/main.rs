@@ -1,0 +1,410 @@
+//! `planer` — latency-aware sparsely-activated Transformer toolkit.
+//!
+//! Subcommands:
+//!   search   phase-1 NAS for one latency target
+//!   train    phase-2 retraining of a named arch (+ eval)
+//!   serve    SLA-routed batched decoding demo
+//!   profile  per-block + end-to-end CPU latency tables
+//!   compile  BUILD step: AOT-compile a searched arch via python
+//!   archs    render every arch in the manifest (Appendix A style)
+//!   bench    paper harnesses: fig1 fig2 fig4 fig7a fig7b fig8 fig9
+//!            fig10 fig11 fig12 table1 | all-static
+//!
+//! Global flags: --artifacts DIR  --corpus char:N|word:N|file:P  --seed N
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use planer::arch::SearchSpace;
+use planer::config::{Args, CorpusSpec};
+use planer::coordinator::{experiments, figures, Pipeline};
+use planer::coordinator::experiments::ExperimentBudget;
+use planer::data::Corpus;
+use planer::latency::Profiler;
+use planer::runtime::Engine;
+use planer::search::SearchConfig;
+use planer::serve::{DecodeEngine, Request, Router, RouterPolicy, ServeMetrics, VariantInfo, WaveBatcher};
+use planer::train::TrainConfig;
+use planer::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_corpus(args: &Args, vocab: usize, seed: u64) -> Result<Corpus> {
+    let spec = CorpusSpec::parse(&args.get_or("corpus", "char:200000"))?;
+    Ok(match spec {
+        CorpusSpec::SynthChar { chars } => Corpus::synth_char(chars, vocab, seed),
+        CorpusSpec::SynthWord { words } => Corpus::synth_word(words, vocab, seed),
+        CorpusSpec::File { path, word_level } => Corpus::from_file(&path, vocab, word_level)?,
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+
+    if cmd == "help" {
+        println!("{}", HELP);
+        return Ok(());
+    }
+
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let engine = Engine::new(&artifacts)
+        .context("loading artifacts (run `make artifacts` first)")?;
+    let vocab = engine.manifest.config.vocab;
+    let seed = args.get_i32("seed", 0)?;
+    let corpus = load_corpus(&args, vocab, seed as u64)?;
+    let pipeline = Pipeline::new(&engine, &corpus);
+    let out_dir = PathBuf::from(args.get_or("out", "runs"));
+
+    match cmd {
+        "search" => {
+            let target = args.get_f64("target", 0.65)?;
+            let sc = SearchConfig {
+                space: if args.has("iso") { SearchSpace::IsoParam } else { SearchSpace::Paper },
+                target,
+                epochs: args.get_usize("epochs", 10)?,
+                steps_per_epoch: args.get_usize("steps", 20)?,
+                arch_step_frac: args.get_f64("arch-frac", 0.2)?,
+                anneal_rate: args.get_f64("anneal", 0.7)?,
+                seed,
+            };
+            println!(
+                "search space cardinality: {:.2e} archs",
+                sc.space.cardinality(
+                    engine.manifest.config.n_heads_full,
+                    engine.manifest.config.n_slots
+                )
+            );
+            let rep = pipeline.search(sc)?;
+            println!("found: {}", rep.arch.signature());
+            println!(
+                "estimated latency ratio {:4.2} (target {:4.2})",
+                rep.achieved_ratio(),
+                target
+            );
+            for t in &rep.traces {
+                println!(
+                    "epoch {:2} temp {:4.2} wce {:5.3} ace {:>7} ratio {:>7}",
+                    t.epoch,
+                    t.temperature,
+                    t.weight_ce,
+                    t.arch_ce.map(|x| format!("{x:5.3}")).unwrap_or_else(|| "-".into()),
+                    t.lat_ratio.map(|x| format!("{x:5.3}")).unwrap_or_else(|| "-".into()),
+                );
+            }
+            let name = args.get_or("name", "found");
+            let path = pipeline.save_arch(&rep.arch, &name, &out_dir)?;
+            std::fs::write(
+                out_dir.join(format!("{name}.report.json")),
+                pipeline.report_json(&rep).to_string_pretty(),
+            )?;
+            println!("saved arch to {}", path.display());
+        }
+
+        "train" => {
+            let arch = args.get_or("arch", "baseline");
+            let tc = TrainConfig {
+                steps: args.get_usize("steps", 200)?,
+                seed,
+                balance_coef: args.get_f64("balance", engine.manifest.config.balance_coef)? as f32,
+                eval_every: usize::MAX,
+            };
+            let steps = tc.steps;
+            let rep = pipeline.retrain(&arch, tc)?;
+            let m = &engine.manifest.config.metric;
+            println!(
+                "{arch}: train-ce {:5.3} valid-{m} {:6.3} test-{m} {:6.3}",
+                rep.final_train_ce,
+                rep.valid_metric.unwrap_or(f64::NAN),
+                rep.test_metric.unwrap_or(f64::NAN)
+            );
+            for r in rep.curve.iter().step_by((steps / 10).max(1)) {
+                println!("  step {:4} ce {:6.3} bal {:5.2} lr {:8.5}", r.step, r.ce, r.balance, r.lr);
+            }
+        }
+
+        "serve" => {
+            let n_req = args.get_usize("requests", 12)?;
+            let arch_flag = args.get_or("arch", "auto");
+            serve_demo(&engine, &corpus, n_req, &arch_flag, seed as u64)?;
+        }
+
+        "profile" => {
+            let prof = Profiler::new(&engine);
+            let cfg = &engine.manifest.config;
+            println!("per-block CPU latency (batch {}):", cfg.batch);
+            for o in SearchSpace::Paper.options(cfg.n_heads_full) {
+                let name = o.name();
+                if name == "skip" {
+                    continue;
+                }
+                let s = prof.measure_block(&name, cfg.batch)?.stats;
+                println!("  {name:8} p50 {:8.2}ms p95 {:8.2}ms", s.p50 * 1e3, s.p95 * 1e3);
+            }
+            for a in engine.manifest.arch_names() {
+                let pname = format!("infer_{a}_b{}", cfg.batch);
+                if engine.has_program(&pname) {
+                    let s = prof.measure_network(a, cfg.batch)?.stats;
+                    println!("  e2e {a:10} p50 {:8.2}ms", s.p50 * 1e3);
+                }
+            }
+            println!("XLA compile time so far: {:.1}s", engine.compile_seconds());
+        }
+
+        "compile" => {
+            let name = args.get("name").context("--name required")?;
+            let json = PathBuf::from(args.get("arch-json").context("--arch-json required")?);
+            let config = args.get_or("config", "tiny");
+            pipeline.compile_arch(name, &json, &config)?;
+            println!("compiled arch {name}; manifest updated");
+        }
+
+        "archs" => print!("{}", figures::archs(&engine)),
+
+        "roofline" => {
+            use planer::latency::analytical::paper_config;
+            use planer::latency::roofline;
+            let cfg = paper_config();
+            println!("L1 kernel structure at paper scale (batch {}):", args.get_usize("batch", 8)?);
+            let r = roofline::report(&cfg, args.get_usize("batch", 8)?);
+            print!("{}", roofline::render(&r));
+            println!("\ntiny (artifact) scale:");
+            let r = roofline::report(&engine.manifest.config, engine.manifest.config.batch);
+            print!("{}", roofline::render(&r));
+        }
+
+        "ablation" => {
+            // differentiable NAS vs random-mutation hill climbing over the
+            // same Eq.(2) landscape (the cheap evolutionary stand-in)
+            use planer::search::analysis::HillClimber;
+            let (table, base) = pipeline.analytical_table(SearchSpace::Paper);
+            let cfg = &engine.manifest.config;
+            println!("hill-climb baseline over Eq.(2) (no CE signal):");
+            for target in [0.50, 0.65, 0.80, 0.95] {
+                let hc = HillClimber {
+                    space: SearchSpace::Paper,
+                    table: &table,
+                    n_heads_full: cfg.n_heads_full,
+                    baseline_latency: base,
+                    target,
+                };
+                let (arch, score) = hc.run(cfg.n_slots, 5000, seed as u64);
+                println!(
+                    "  target {:4.2}: ratio {:4.2} score {:7.2} {}",
+                    target,
+                    table.estimate(&arch) / (base * target),
+                    score,
+                    arch.signature()
+                );
+            }
+        }
+
+        "serve-trace" => {
+            use planer::serve::{Cluster, WorkloadGen};
+            let n = args.get_usize("requests", 16)?;
+            let names: Vec<String> = engine
+                .manifest
+                .arch_names()
+                .into_iter()
+                .filter(|a| engine.has_program(&format!("gen_{a}")))
+                .map(String::from)
+                .take(args.get_usize("variants", 3)?)
+                .collect();
+            let mut cluster = Cluster::new(&engine, &names, seed)?;
+            let gen = WorkloadGen::new(engine.manifest.config.vocab);
+            let trace = gen.generate(n, seed as u64);
+            let t0 = std::time::Instant::now();
+            let responses = cluster.replay(&trace, false)?;
+            println!("{} responses in {:.2}s", responses.len(), t0.elapsed().as_secs_f64());
+            print!("{}", cluster.report());
+        }
+
+        "bench" => {
+            let id = args.positional.get(1).map(String::as_str).unwrap_or("all-static");
+            let budget = ExperimentBudget {
+                search_epochs: args.get_usize("epochs", 8)?,
+                steps_per_epoch: args.get_usize("steps", 12)?,
+                train_steps: args.get_usize("train-steps", 120)?,
+                seed,
+            };
+            let run = |id: &str| -> Result<String> {
+                Ok(match id {
+                    "fig1" => figures::fig1(&engine),
+                    "fig4" => figures::fig4(&engine)?,
+                    "fig7b" => figures::fig7b(&engine),
+                    "fig8" => figures::fig8(&engine)?,
+                    "fig9" => figures::fig9(&engine),
+                    "fig2" => experiments::fig2(&pipeline, &budget, &out_dir)?,
+                    "fig7a" => {
+                        let arch = args.get_or("arch", "planer50");
+                        experiments::fig7a(&pipeline, &budget, &arch)?
+                    }
+                    "fig10" => experiments::fig10(&pipeline, &budget, &out_dir)?,
+                    "fig11" => experiments::fig11(&pipeline, &budget)?,
+                    "fig12" => experiments::fig12(&pipeline, &budget, &out_dir)?,
+                    "table1" => experiments::table1(&pipeline, &budget)?,
+                    other => bail!("unknown bench id '{other}'"),
+                })
+            };
+            if id == "all-static" {
+                for id in ["fig1", "fig4", "fig7b", "fig9", "fig8"] {
+                    let text = run(id)?;
+                    println!("{text}");
+                    experiments::record(&out_dir, id, &text)?;
+                }
+            } else {
+                let text = run(id)?;
+                println!("{text}");
+                experiments::record(&out_dir, id, &text)?;
+            }
+        }
+
+        other => bail!("unknown command '{other}' (try `planer help`)"),
+    }
+    Ok(())
+}
+
+/// Serving demo: Poisson arrivals, SLA-aware routing across every arch that
+/// has a gen program, wave batching, latency/throughput report.
+fn serve_demo(
+    engine: &Engine,
+    _corpus: &Corpus,
+    n_req: usize,
+    arch_flag: &str,
+    seed: u64,
+) -> Result<()> {
+    let cfg = &engine.manifest.config;
+    let prof = Profiler::new(engine);
+
+    // variant pool: every preset arch with a gen program (or the one forced
+    // via --arch), profiled for routing
+    let names: Vec<String> = if arch_flag == "auto" {
+        engine
+            .manifest
+            .arch_names()
+            .into_iter()
+            .filter(|a| engine.has_program(&format!("gen_{a}")))
+            .map(String::from)
+            .collect()
+    } else {
+        vec![arch_flag.to_string()]
+    };
+    anyhow::ensure!(!names.is_empty(), "no gen programs in manifest");
+
+    let mut variants = Vec::new();
+    for (q, name) in names.iter().enumerate() {
+        // token latency: measured one decode step / batch width
+        let de = DecodeEngine::new(engine, name)?;
+        let mut st = de.init_state(seed as i32)?;
+        let wave = WaveBatcher::new(de.width, Duration::from_millis(0));
+        let _ = (st.has_group("params"), wave.pending());
+        let gen = engine.program(&format!("gen_{name}"))?;
+        let t = planer::util::timer::time_iters(
+            || {
+                let inputs: Vec<xla::Literal> =
+                    gen.spec.inputs.iter().map(planer::runtime::literal::zeros).collect();
+                gen.execute(&inputs).unwrap();
+            },
+            1,
+            3,
+        );
+        let tok_lat = planer::util::timer::stats(&t).p50;
+        variants.push(VariantInfo {
+            name: name.clone(),
+            token_latency: tok_lat,
+            quality: names.len() as f64 - q as f64,
+        });
+        println!("variant {name}: token latency {:6.2}ms", tok_lat * 1e3);
+    }
+    let router = Router::new(variants.clone(), RouterPolicy::QualityWithinSla);
+
+    // synthetic request stream
+    let mut rng = Rng::new(seed);
+    let mut batchers: std::collections::HashMap<String, WaveBatcher> = names
+        .iter()
+        .map(|n| (n.clone(), WaveBatcher::new(cfg.batch, Duration::from_millis(5))))
+        .collect();
+    for id in 0..n_req as u64 {
+        let len = 2 + rng.below(6);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let slow = variants.iter().map(|v| v.token_latency).fold(0.0, f64::max);
+        let sla = if rng.f64() < 0.5 {
+            slow * 6.0 // tight: forces a cheap variant
+        } else {
+            f64::INFINITY
+        };
+        let req = Request { id, prompt, n_gen: 4, sla };
+        let variant = router.route(&req).to_string();
+        batchers.get_mut(&variant).unwrap().submit(req);
+    }
+
+    // drain every queue in waves
+    let mut total = ServeMetrics::default();
+    for name in &names {
+        let de = DecodeEngine::new(engine, name)?;
+        let mut st = de.init_state(seed as i32)?;
+        let b = batchers.get_mut(name).unwrap();
+        let mut metrics = ServeMetrics::default();
+        while let Some(wave) = b.next_wave(std::time::Instant::now()) {
+            let rs = de.decode_wave(&mut st, &wave, &mut metrics)?;
+            for r in rs {
+                println!(
+                    "  req {:3} via {:10} {:3} tokens in {:7.1}ms",
+                    r.id,
+                    r.variant,
+                    r.tokens.len(),
+                    r.latency * 1e3
+                );
+            }
+        }
+        if metrics.requests > 0 {
+            println!(
+                "[{name}] {} reqs {} waves occupancy {:4.2} p50 {:6.1}ms p95 {:6.1}ms {:6.1} tok/s",
+                metrics.requests,
+                metrics.waves,
+                metrics.occupancy,
+                metrics.p50() * 1e3,
+                metrics.p95() * 1e3,
+                metrics.throughput_tok_s()
+            );
+        }
+        total.requests += metrics.requests;
+        total.tokens_out += metrics.tokens_out;
+        total.busy_secs += metrics.busy_secs;
+    }
+    println!(
+        "total: {} requests, {:.1} tok/s aggregate",
+        total.requests,
+        total.throughput_tok_s()
+    );
+    Ok(())
+}
+
+const HELP: &str = "\
+planer — latency-aware sparsely-activated Transformers (PLANER reproduction)
+
+USAGE: planer <cmd> [flags]
+
+  search   --target 0.65 --epochs 10 --steps 20 [--iso] [--name found]
+  train    --arch baseline --steps 200 [--balance 0.01]
+  serve    --requests 12 [--arch auto]
+  profile
+  compile  --name <arch> --arch-json <path> [--config tiny]
+  archs
+  bench    fig1|fig2|fig4|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|table1|all-static
+  roofline | ablation | serve-trace --requests 16
+
+global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
+";

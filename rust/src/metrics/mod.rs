@@ -1,0 +1,99 @@
+//! Metrics: LM quality (PPL/BPC), latency statistics and correlation.
+
+/// Perplexity from mean CE (nats) — WikiText-style metric.
+pub fn ppl(ce_nats: f64) -> f64 {
+    ce_nats.exp()
+}
+
+/// Bits-per-character from mean CE (nats) — enwik8-style metric.
+pub fn bpc(ce_nats: f64) -> f64 {
+    ce_nats / std::f64::consts::LN_2
+}
+
+pub fn metric(name: &str, ce_nats: f64) -> f64 {
+    match name {
+        "ppl" => ppl(ce_nats),
+        _ => bpc(ce_nats),
+    }
+}
+
+/// Pearson correlation — Fig. 11's target/estimated/measured study.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    cov / (vx.sqrt() * vy.sqrt() + 1e-30)
+}
+
+/// Simple exponential moving average for loss curves.
+pub struct Ema {
+    pub value: f64,
+    alpha: f64,
+    initialised: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { value: 0.0, alpha, initialised: false }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        if !self.initialised {
+            self.value = x;
+            self.initialised = true;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_bpc_of_uniform() {
+        let ce = (256f64).ln();
+        assert!((ppl(ce) - 256.0).abs() < 1e-9);
+        assert!((bpc(ce) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+        let inv = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &inv) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_is_small() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 0.7368).sin()).collect();
+        let ys: Vec<f64> = (0..1000).map(|i| (i as f64 * 1.9173 + 2.0).cos()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.1);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.update(0.0);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.value - 10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,222 @@
+//! Checkpointing: persist StateStore groups (params, optimizer state,
+//! alphas) to a simple self-describing binary format, so phase-2 training
+//! and the serving engine can resume without retraining.
+//!
+//! Format (little-endian):
+//!   magic "PLNRCKPT" | u32 version | u32 n_groups
+//!   per group: u32 name_len | name | u32 n_tensors
+//!     per tensor: u32 dtype (0=f32,1=i32,2=u32) | u32 ndims | u64 dims[]
+//!                 | u64 byte_len | data
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::literal::DType;
+use super::state::StateStore;
+
+const MAGIC: &[u8; 8] = b"PLNRCKPT";
+const VERSION: u32 = 1;
+
+fn dtype_code(d: DType) -> u32 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::U32 => 2,
+    }
+}
+
+fn code_dtype(c: u32) -> Result<DType> {
+    Ok(match c {
+        0 => DType::F32,
+        1 => DType::I32,
+        2 => DType::U32,
+        _ => bail!("bad dtype code {c}"),
+    })
+}
+
+fn literal_dims(lit: &Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape().context("checkpoint: non-array literal")?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+fn literal_dtype(lit: &Literal) -> Result<DType> {
+    use xla::ElementType as E;
+    Ok(match lit.ty().context("literal dtype")? {
+        E::F32 => DType::F32,
+        E::S32 => DType::I32,
+        E::U32 => DType::U32,
+        other => bail!("unsupported checkpoint dtype {other:?}"),
+    })
+}
+
+/// Save the named groups of `store` to `path`.
+pub fn save(store: &StateStore, groups: &[&str], path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(groups.len() as u32).to_le_bytes())?;
+    for g in groups {
+        let lits = store
+            .get_group(g)
+            .with_context(|| format!("checkpoint: group '{g}' missing"))?;
+        f.write_all(&(g.len() as u32).to_le_bytes())?;
+        f.write_all(g.as_bytes())?;
+        f.write_all(&(lits.len() as u32).to_le_bytes())?;
+        for lit in lits {
+            let dt = literal_dtype(lit)?;
+            let dims = literal_dims(lit)?;
+            f.write_all(&dtype_code(dt).to_le_bytes())?;
+            f.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for d in &dims {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            let bytes: Vec<u8> = match dt {
+                DType::F32 => lit
+                    .to_vec::<f32>()?
+                    .iter()
+                    .flat_map(|x| x.to_le_bytes())
+                    .collect(),
+                DType::I32 => lit
+                    .to_vec::<i32>()?
+                    .iter()
+                    .flat_map(|x| x.to_le_bytes())
+                    .collect(),
+                DType::U32 => lit
+                    .to_vec::<u32>()?
+                    .iter()
+                    .flat_map(|x| x.to_le_bytes())
+                    .collect(),
+            };
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+            f.write_all(&bytes)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load every group in the checkpoint into `store` (overwriting).
+pub fn load(store: &mut StateStore, path: &Path) -> Result<Vec<String>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a planer checkpoint");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let n_groups = read_u32(&mut f)? as usize;
+    let mut names = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("group name utf8")?;
+        let n_tensors = read_u32(&mut f)? as usize;
+        let mut lits = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let dt = code_dtype(read_u32(&mut f)?)?;
+            let ndims = read_u32(&mut f)? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(read_u64(&mut f)? as i64);
+            }
+            let byte_len = read_u64(&mut f)? as usize;
+            let mut data = vec![0u8; byte_len];
+            f.read_exact(&mut data)?;
+            let lit = match dt {
+                DType::F32 => {
+                    let v: Vec<f32> = data
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Literal::vec1(&v).reshape(&dims)?
+                }
+                DType::I32 => {
+                    let v: Vec<i32> = data
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Literal::vec1(&v).reshape(&dims)?
+                }
+                DType::U32 => {
+                    let v: Vec<u32> = data
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Literal::vec1(&v).reshape(&dims)?
+                }
+            };
+            lits.push(lit);
+        }
+        store.set_group(&name, lits);
+        names.push(name);
+    }
+    Ok(names)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_multi_group() {
+        let dir = std::env::temp_dir().join("planer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+
+        let mut st = StateStore::new();
+        st.set_group(
+            "params",
+            vec![
+                Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap(),
+                Literal::vec1(&[5.0f32]).reshape(&[1]).unwrap(),
+            ],
+        );
+        st.set_single("step", Literal::vec1(&[7i32]).reshape(&[1]).unwrap());
+        save(&st, &["params", "step"], &path).unwrap();
+
+        let mut st2 = StateStore::new();
+        let names = load(&mut st2, &path).unwrap();
+        assert_eq!(names, vec!["params", "step"]);
+        let p = st2.get_group("params").unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let dims = literal_dims(&p[0]).unwrap();
+        assert_eq!(dims, vec![2, 2]);
+        let s = st2.get_group("step").unwrap();
+        assert_eq!(s[0].to_vec::<i32>().unwrap(), vec![7]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("planer_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let mut st = StateStore::new();
+        assert!(load(&mut st, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,77 @@
+//! The PJRT engine: one client + a compile-once program cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::program::Program;
+
+/// Owns the PJRT client, the artifact manifest, and the cache of compiled
+/// executables.  Cloneable and thread-safe: the serving engine shares one
+/// Engine across worker threads.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Program>>>,
+    /// Cumulative XLA compile seconds (reported by `planer profile`).
+    compile_secs: Mutex<f64>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        // The stock XLA-CPU pipeline spends minutes on the large fused
+        // search-network programs; the expensive LLVM passes buy <10% step
+        // time here (measured in EXPERIMENTS.md §Perf).  Respect any
+        // user-provided XLA_FLAGS.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var(
+                "XLA_FLAGS",
+                "--xla_backend_optimization_level=0                  --xla_llvm_disable_expensive_passes=true",
+            );
+        }
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_secs: Mutex::new(0.0),
+        })
+    }
+
+    /// Fetch (compiling on first use) the named program.
+    pub fn program(&self, name: &str) -> Result<Arc<Program>> {
+        if let Some(p) = self.cache.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest.program(name)?.clone();
+        let t = Instant::now();
+        let prog = Arc::new(Program::compile(&self.client, spec)?);
+        *self.compile_secs.lock().unwrap() += t.elapsed().as_secs_f64();
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    pub fn has_program(&self, name: &str) -> bool {
+        self.manifest.programs.contains_key(name)
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_secs.lock().unwrap()
+    }
+
+    /// Warm the cache for a set of programs (serving startup).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.program(n)?;
+        }
+        Ok(())
+    }
+}

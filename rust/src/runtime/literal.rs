@@ -1,0 +1,141 @@
+//! Literal <-> host-value conversion helpers around `xla::Literal`.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::manifest::TensorSpec;
+
+/// The three dtypes the exported programs use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            "uint32" | "u32" => DType::U32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn primitive(&self) -> xla::PrimitiveType {
+        match self {
+            DType::F32 => xla::PrimitiveType::F32,
+            DType::I32 => xla::PrimitiveType::S32,
+            DType::U32 => xla::PrimitiveType::U32,
+        }
+    }
+}
+
+/// Host-side tensor value (shape implied by the TensorSpec it pairs with).
+#[derive(Debug, Clone)]
+pub enum TensorValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl TensorValue {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(v) => v.len(),
+            TensorValue::I32(v) => v.len(),
+            TensorValue::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+/// Build a literal of `spec`'s shape from a host value (checks size/dtype).
+pub fn literal_from_value(spec: &TensorSpec, value: &TensorValue) -> Result<Literal> {
+    if value.len() != spec.element_count() {
+        bail!(
+            "tensor '{}' expects {} elements, got {}",
+            spec.name,
+            spec.element_count(),
+            value.len()
+        );
+    }
+    let dims = dims_i64(&spec.shape);
+    let lit = match (spec.dtype, value) {
+        (DType::F32, TensorValue::F32(v)) => Literal::vec1(v).reshape(&dims)?,
+        (DType::I32, TensorValue::I32(v)) => Literal::vec1(v).reshape(&dims)?,
+        (DType::U32, TensorValue::U32(v)) => Literal::vec1(v).reshape(&dims)?,
+        _ => bail!("dtype mismatch for tensor '{}'", spec.name),
+    };
+    Ok(lit)
+}
+
+/// Zero-initialised literal for `spec` (optimizer state, empty memories).
+pub fn zeros(spec: &TensorSpec) -> Literal {
+    Literal::create_from_shape(spec.dtype.primitive(), &spec.shape)
+}
+
+/// Scalar-ish convenience constructors used by the coordinator.
+pub fn scalar_i32(spec: &TensorSpec, v: i32) -> Result<Literal> {
+    literal_from_value(spec, &TensorValue::I32(vec![v; spec.element_count()]))
+}
+
+pub fn scalar_f32(spec: &TensorSpec, v: f32) -> Result<Literal> {
+    literal_from_value(spec, &TensorValue::F32(vec![v; spec.element_count()]))
+}
+
+/// Read a literal back as f32s (the only host-read type the coordinator
+/// needs: losses, logits, latencies, alphas).
+pub fn to_f32s(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>().context("literal to f32 vec")?)
+}
+
+pub fn first_f32(lit: &Literal) -> Result<f32> {
+    let v = to_f32s(lit)?;
+    v.first().copied().context("empty literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: "t".into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let s = spec(&[2, 3], DType::F32);
+        let v = TensorValue::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = literal_from_value(&s, &v).unwrap();
+        assert_eq!(to_f32s(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn zeros_have_right_count() {
+        let s = spec(&[4, 5], DType::F32);
+        let lit = zeros(&s);
+        assert_eq!(lit.element_count(), 20);
+        assert_eq!(to_f32s(&lit).unwrap(), vec![0.0; 20]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let s = spec(&[2, 2], DType::F32);
+        assert!(literal_from_value(&s, &TensorValue::F32(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let s = spec(&[1], DType::I32);
+        assert!(literal_from_value(&s, &TensorValue::F32(vec![1.0])).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! Artifact manifest: the contract between `aot.py` and this crate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::literal::DType;
+
+/// One flat input or output tensor of a program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.req("name")?.as_str().context("spec name")?.to_string();
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("spec shape")?
+            .iter()
+            .map(|v| v.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.req("dtype")?.as_str().context("dtype")?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Named contiguous index range into a program's flat input/output list.
+pub type Groups = BTreeMap<String, (usize, usize)>;
+
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub hlo_file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub in_groups: Groups,
+    pub out_groups: Groups,
+}
+
+impl ProgramSpec {
+    pub fn in_group(&self, g: &str) -> Option<(usize, usize)> {
+        self.in_groups.get(g).copied()
+    }
+    pub fn out_group(&self, g: &str) -> Option<(usize, usize)> {
+        self.out_groups.get(g).copied()
+    }
+    /// Input groups, in flat order (the assembly order for execute()).
+    pub fn in_group_order(&self) -> Vec<(&str, usize, usize)> {
+        let mut v: Vec<_> = self
+            .in_groups
+            .iter()
+            .map(|(k, &(a, b))| (k.as_str(), a, b))
+            .collect();
+        v.sort_by_key(|&(_, a, _)| a);
+        v
+    }
+}
+
+fn groups_from_json(j: &Json) -> Result<Groups> {
+    let mut g = Groups::new();
+    if let Json::Obj(o) = j {
+        for (k, v) in o {
+            let a = v.as_arr().context("group range")?;
+            if a.len() != 2 {
+                bail!("group range must be [start, end]");
+            }
+            g.insert(
+                k.clone(),
+                (a[0].as_usize().context("start")?, a[1].as_usize().context("end")?),
+            );
+        }
+    }
+    Ok(g)
+}
+
+/// Architecture block spec mirrored from python/compile/archspec.py.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Block {
+    Skip,
+    Mha { heads: usize },
+    Ffl,
+    SFfl,
+    Moe { top_k: usize },
+}
+
+impl Block {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let t = j.req("type")?.as_str().context("block type")?;
+        Ok(match t {
+            "skip" => Block::Skip,
+            "mha" => Block::Mha { heads: j.req("heads")?.as_usize().context("heads")? },
+            "ffl" => Block::Ffl,
+            "sffl" => Block::SFfl,
+            "moe" => Block::Moe { top_k: j.req("top_k")?.as_usize().context("top_k")? },
+            other => bail!("unknown block type {other}"),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Block::Skip => Json::obj(vec![("type", Json::Str("skip".into()))]),
+            Block::Mha { heads } => Json::obj(vec![
+                ("type", Json::Str("mha".into())),
+                ("heads", Json::Num(*heads as f64)),
+            ]),
+            Block::Ffl => Json::obj(vec![("type", Json::Str("ffl".into()))]),
+            Block::SFfl => Json::obj(vec![("type", Json::Str("sffl".into()))]),
+            Block::Moe { top_k } => Json::obj(vec![
+                ("type", Json::Str("moe".into())),
+                ("top_k", Json::Num(*top_k as f64)),
+            ]),
+        }
+    }
+
+    /// Canonical short name; matches archspec.option_name.
+    pub fn name(&self) -> String {
+        match self {
+            Block::Skip => "skip".into(),
+            Block::Mha { heads } => format!("mha{heads}"),
+            Block::Ffl => "ffl".into(),
+            Block::SFfl => "sffl".into(),
+            Block::Moe { top_k } => format!("moe_t{top_k}"),
+        }
+    }
+}
+
+/// Model configuration mirrored from python/compile/config.py.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_slots: usize,
+    pub d_inner: usize,
+    pub n_heads_full: usize,
+    pub seq_len: usize,
+    pub mem_len: usize,
+    pub batch: usize,
+    pub n_experts: usize,
+    pub sffl_inner: usize,
+    pub capacity_factor: f64,
+    pub train_steps: usize,
+    pub warmup_steps: usize,
+    pub balance_coef: f64,
+    pub metric: String,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> { Ok(j.req(k)?.as_usize().context(k.to_string())?) };
+        let f = |k: &str| -> Result<f64> { Ok(j.req(k)?.as_f64().context(k.to_string())?) };
+        Ok(ModelConfig {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_slots: u("n_slots")?,
+            d_inner: u("d_inner")?,
+            n_heads_full: u("n_heads_full")?,
+            seq_len: u("seq_len")?,
+            mem_len: u("mem_len")?,
+            batch: u("batch")?,
+            n_experts: u("n_experts")?,
+            sffl_inner: u("sffl_inner")?,
+            capacity_factor: f("capacity_factor")?,
+            train_steps: u("train_steps")?,
+            warmup_steps: u("warmup_steps")?,
+            balance_coef: f("balance_coef")?,
+            metric: j.req("metric")?.as_str().context("metric")?.to_string(),
+        })
+    }
+}
+
+/// The whole artifact directory: config + option list + archs + programs.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    /// Search-option names, in alpha-column / latency-table order.
+    pub options: Vec<String>,
+    pub iso_options: Vec<String>,
+    pub archs: BTreeMap<String, Vec<Block>>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let config = ModelConfig::from_json(j.req("config")?)?;
+        let strs = |key: &str| -> Result<Vec<String>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .context("options array")?
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect())
+        };
+        let options = strs("options")?;
+        let iso_options = strs("iso_options")?;
+
+        let mut archs = BTreeMap::new();
+        if let Json::Obj(o) = j.req("archs")? {
+            for (name, spec) in o {
+                let blocks = spec
+                    .as_arr()
+                    .context("arch array")?
+                    .iter()
+                    .map(Block::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                archs.insert(name.clone(), blocks);
+            }
+        }
+
+        let mut programs = BTreeMap::new();
+        if let Json::Obj(o) = j.req("programs")? {
+            for (name, p) in o {
+                let spec = ProgramSpec {
+                    name: name.clone(),
+                    hlo_file: dir.join(p.req("hlo")?.as_str().context("hlo")?),
+                    inputs: p
+                        .req("inputs")?
+                        .as_arr()
+                        .context("inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: p
+                        .req("outputs")?
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    in_groups: groups_from_json(p.req("in_groups")?)?,
+                    out_groups: groups_from_json(p.req("out_groups")?)?,
+                };
+                programs.insert(name.clone(), spec);
+            }
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), config, options, iso_options, archs, programs })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .with_context(|| format!("program '{name}' not in manifest"))
+    }
+
+    /// Names of the arch presets that have train/eval/infer programs.
+    pub fn arch_names(&self) -> Vec<&str> {
+        self.archs.keys().map(String::as_str).collect()
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client.  Entirely manifest-driven — the
+//! Rust side never hard-codes a tensor layout.
+//!
+//! Key facts (verified against xla_extension 0.5.1):
+//! - interchange is HLO *text*; `HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id proto incompatibility.
+//! - multi-output programs return ONE tuple buffer per replica; we
+//!   `to_literal_sync().decompose_tuple()` on the way out (host round-trip,
+//!   measured in EXPERIMENTS.md §Perf).
+
+pub mod checkpoint;
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+pub mod program;
+pub mod state;
+
+pub use engine::Engine;
+pub use literal::{DType, TensorValue};
+pub use manifest::{Manifest, ProgramSpec, TensorSpec};
+pub use program::Program;
+pub use state::StateStore;

@@ -1,0 +1,58 @@
+//! A compiled program: PJRT executable + its manifest spec.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::manifest::ProgramSpec;
+
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    pub fn compile(client: &xla::PjRtClient, spec: ProgramSpec) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.hlo_file)
+            .with_context(|| format!("loading {}", spec.hlo_file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Program { spec, exe })
+    }
+
+    /// Execute with a full flat input list; returns the flat output list.
+    ///
+    /// aot.py lowers with return_tuple=True, so PJRT hands back one tuple
+    /// buffer; we decompose it into per-output literals.
+    pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let refs: Vec<&Literal> = inputs.iter().collect();
+        self.execute_refs(&refs)
+    }
+
+    /// Borrowing variant used by the StateStore hot loop (no clones).
+    pub fn execute_refs(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<&Literal>(inputs)?;
+        let mut tuple = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        let outs = tuple.decompose_tuple().context("decomposing result")?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "program {}: manifest declares {} outputs, runtime produced {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}

@@ -1,0 +1,110 @@
+//! StateStore: named tensor groups threaded across program invocations.
+//!
+//! Every exported program's manifest names its input/output index *groups*
+//! (params, m, v, alphas, mems, x, y, seed, ...).  The store holds the
+//! current literals for each group; running a program assembles its input
+//! list from the store (in manifest order), executes, and writes back every
+//! output group — so `train` steps thread params/opt-state/memories, and
+//! sibling programs (e.g. `search_weight_step` / `search_arch_step`) share
+//! state through their common group names.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::literal;
+use super::program::Program;
+
+#[derive(Default)]
+pub struct StateStore {
+    groups: HashMap<String, Vec<Literal>>,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a group's literals (e.g. params from an init program).
+    pub fn set_group(&mut self, name: &str, lits: Vec<Literal>) {
+        self.groups.insert(name.to_string(), lits);
+    }
+
+    /// Install a single-tensor group.
+    pub fn set_single(&mut self, name: &str, lit: Literal) {
+        self.groups.insert(name.to_string(), vec![lit]);
+    }
+
+    pub fn get_group(&self, name: &str) -> Option<&[Literal]> {
+        self.groups.get(name).map(Vec::as_slice)
+    }
+
+    pub fn has_group(&self, name: &str) -> bool {
+        self.groups.contains_key(name)
+    }
+
+    /// Zero-fill a group from a program's input specs (optimizer state,
+    /// initial memories).
+    pub fn zero_group(&mut self, prog: &Program, name: &str) -> Result<()> {
+        let (a, b) = prog
+            .spec
+            .in_group(name)
+            .with_context(|| format!("group '{name}' not in {}", prog.spec.name))?;
+        let lits = prog.spec.inputs[a..b].iter().map(literal::zeros).collect();
+        self.groups.insert(name.to_string(), lits);
+        Ok(())
+    }
+
+    /// Run `prog`, sourcing every input group from the store and writing
+    /// every output group back.  Returns the outputs of groups named in
+    /// `fetch` (read-only extracts, e.g. losses) as f32 vectors.
+    pub fn run(&mut self, prog: &Program, fetch: &[&str]) -> Result<HashMap<String, Vec<f32>>> {
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(prog.spec.inputs.len());
+        for (gname, a, b) in prog.spec.in_group_order() {
+            let lits = self
+                .groups
+                .get(gname)
+                .with_context(|| format!("missing group '{gname}' for {}", prog.spec.name))?;
+            if lits.len() != b - a {
+                bail!(
+                    "group '{gname}' holds {} tensors, program {} wants {}",
+                    lits.len(),
+                    prog.spec.name,
+                    b - a
+                );
+            }
+            inputs.extend(lits.iter());
+        }
+
+        let outs = prog.execute_refs(&inputs)?;
+
+        // distribute outputs into groups
+        let mut by_group: HashMap<String, Vec<Literal>> = HashMap::new();
+        let mut order: Vec<(&String, &(usize, usize))> = prog.spec.out_groups.iter().collect();
+        order.sort_by_key(|(_, &(a, _))| a);
+        let mut outs_iter = outs.into_iter();
+        for (gname, &(a, b)) in order {
+            let lits: Vec<Literal> = (&mut outs_iter).take(b - a).collect();
+            by_group.insert(gname.clone(), lits);
+        }
+
+        let mut fetched = HashMap::new();
+        for f in fetch {
+            let lits = by_group
+                .get(*f)
+                .with_context(|| format!("fetch group '{f}' not produced by {}", prog.spec.name))?;
+            let mut vals = Vec::new();
+            for l in lits {
+                vals.extend(literal::to_f32s(l)?);
+            }
+            fetched.insert(f.to_string(), vals);
+        }
+
+        // write back (after fetch so fetch sees this step's outputs)
+        for (g, lits) in by_group {
+            self.groups.insert(g, lits);
+        }
+        Ok(fetched)
+    }
+}

@@ -1,0 +1,56 @@
+//! Gumbel-Softmax temperature annealing (paper §3.1: initial temperature 5,
+//! geometric rate 0.6–0.7, held during the arch-disabled warmup epochs).
+
+#[derive(Debug, Clone, Copy)]
+pub struct TemperatureSchedule {
+    pub initial: f64,
+    pub rate: f64,
+    pub min_temp: f64,
+    /// Epochs at the start with architecture optimisation disabled
+    /// (paper: 10% of epochs) — temperature holds at `initial` there.
+    pub warmup_epochs: usize,
+}
+
+impl TemperatureSchedule {
+    pub fn paper(total_epochs: usize, rate: f64) -> Self {
+        TemperatureSchedule {
+            initial: 5.0,
+            rate,
+            min_temp: 0.1,
+            warmup_epochs: (total_epochs as f64 * 0.10).ceil() as usize,
+        }
+    }
+
+    pub fn arch_enabled(&self, epoch: usize) -> bool {
+        epoch >= self.warmup_epochs
+    }
+
+    pub fn temperature(&self, epoch: usize) -> f64 {
+        let steps = epoch.saturating_sub(self.warmup_epochs) as i32;
+        (self.initial * self.rate.powi(steps)).max(self.min_temp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn holds_during_warmup_then_decays() {
+        let s = TemperatureSchedule::paper(20, 0.6);
+        assert_eq!(s.warmup_epochs, 2);
+        assert!(!s.arch_enabled(0));
+        assert!(!s.arch_enabled(1));
+        assert!(s.arch_enabled(2));
+        assert_eq!(s.temperature(0), 5.0);
+        assert_eq!(s.temperature(2), 5.0);
+        assert!((s.temperature(3) - 3.0).abs() < 1e-9);
+        assert!(s.temperature(10) < s.temperature(5));
+    }
+
+    #[test]
+    fn respects_floor() {
+        let s = TemperatureSchedule { initial: 5.0, rate: 0.5, min_temp: 0.2, warmup_epochs: 0 };
+        assert_eq!(s.temperature(100), 0.2);
+    }
+}

@@ -1,0 +1,18 @@
+//! Phase-1 differentiable NAS orchestrator (paper §3.1–§3.2).
+//!
+//! Drives the exported search-network programs:
+//! - each *epoch* first trains network weights on 100% of the segment
+//!   stream (hard Gumbel sampling), then — once past the initial
+//!   `arch_disabled_frac` of epochs — trains architecture weights on a 20%
+//!   subsample (soft sampling) with the Eq. (3) dynamic latency loss;
+//! - the Gumbel temperature anneals geometrically per arch-training epoch
+//!   (paper: initial 5, rate 0.6/0.7);
+//! - the latency table (Eq. 2) comes from either the analytical GPU model
+//!   or measured CPU block latencies (see crate::latency).
+
+pub mod analysis;
+pub mod anneal;
+pub mod orchestrator;
+
+pub use anneal::TemperatureSchedule;
+pub use orchestrator::{SearchConfig, SearchOrchestrator, SearchReport};

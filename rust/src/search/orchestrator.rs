@@ -1,0 +1,263 @@
+//! The phase-1 search loop over the exported search-network programs.
+
+use anyhow::{Context, Result};
+
+use crate::arch::{Arch, SearchSpace};
+use crate::data::TxlBatcher;
+use crate::latency::LatencyTable;
+use crate::runtime::{literal, Engine, StateStore};
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub space: SearchSpace,
+    /// Target latency as a fraction of baseline latency (paper: 0.50–0.95).
+    pub target: f64,
+    pub epochs: usize,
+    /// Network-weight steps per epoch (100% of the stream at full scale).
+    pub steps_per_epoch: usize,
+    /// Fraction of steps used for architecture training (paper: 0.2).
+    pub arch_step_frac: f64,
+    /// Geometric temperature annealing rate (paper: 0.6 wt103 / 0.7 enwik8).
+    pub anneal_rate: f64,
+    pub seed: i32,
+}
+
+impl SearchConfig {
+    pub fn quick(target: f64, seed: i32) -> Self {
+        SearchConfig {
+            space: SearchSpace::Paper,
+            target,
+            epochs: 10,
+            steps_per_epoch: 20,
+            arch_step_frac: 0.2,
+            anneal_rate: 0.7,
+            seed,
+        }
+    }
+}
+
+/// Per-epoch trace used by the figure benches (Figs 2, 11, 12).
+#[derive(Debug, Clone)]
+pub struct EpochTrace {
+    pub epoch: usize,
+    pub temperature: f64,
+    pub weight_ce: f64,
+    pub arch_ce: Option<f64>,
+    /// Eq. (3) ratio Lat/(Lat_base*Target) after the epoch's arch steps.
+    pub lat_ratio: Option<f64>,
+    pub est_latency: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    pub arch: Arch,
+    pub traces: Vec<EpochTrace>,
+    pub target: f64,
+    /// Eq. (2) estimate of the final arch under the search's latency table.
+    pub estimated_latency: f64,
+    pub baseline_latency: f64,
+    pub alphas: Vec<Vec<f32>>,
+}
+
+impl SearchReport {
+    pub fn achieved_ratio(&self) -> f64 {
+        self.estimated_latency / self.baseline_latency
+    }
+}
+
+pub struct SearchOrchestrator<'a> {
+    pub engine: &'a Engine,
+    pub config: SearchConfig,
+    /// Per-option latency table in search-space option order (Eq. 2).
+    pub table: LatencyTable,
+    /// Baseline-network estimated latency (denominator of Eq. 3).
+    pub baseline_latency: f64,
+}
+
+impl<'a> SearchOrchestrator<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        config: SearchConfig,
+        table: LatencyTable,
+        baseline_latency: f64,
+    ) -> Self {
+        SearchOrchestrator { engine, config, table, baseline_latency }
+    }
+
+    /// Run phase 1 end to end; `stream` is the training token stream.
+    pub fn run(&self, stream: &[i32]) -> Result<SearchReport> {
+        let cfg = &self.engine.manifest.config;
+        let prefix = self.config.space.prefix();
+        let init = self.engine.program(&format!("{prefix}init"))?;
+        let wstep = self.engine.program(&format!("{prefix}weight_step"))?;
+        let astep = self.engine.program(&format!("{prefix}arch_step"))?;
+
+        let sched = super::TemperatureSchedule::paper(self.config.epochs, self.config.anneal_rate);
+
+        let mut st = StateStore::new();
+        st.set_single(
+            "seed",
+            literal::scalar_i32(&init.spec.inputs[0], self.config.seed)?,
+        );
+        st.run(&init, &[])?;
+        st.zero_group(&wstep, "m")?;
+        st.zero_group(&wstep, "v")?;
+        st.zero_group(&wstep, "mems")?;
+        st.zero_group(&astep, "am")?;
+        st.zero_group(&astep, "av")?;
+
+        // static inputs for the arch step
+        let (la, _) = astep.spec.in_group("lat_table").context("lat_table group")?;
+        let lat_f32: Vec<f32> = self.table.latencies.iter().map(|&x| x as f32).collect();
+        st.set_single(
+            "lat_table",
+            literal::literal_from_value(
+                &astep.spec.inputs[la],
+                &literal::TensorValue::F32(lat_f32),
+            )?,
+        );
+        let (ba, _) = astep.spec.in_group("lat_base").context("lat_base group")?;
+        st.set_single(
+            "lat_base",
+            literal::scalar_f32(&astep.spec.inputs[ba], self.baseline_latency as f32)?,
+        );
+        let (ta, _) = astep.spec.in_group("target").context("target group")?;
+        st.set_single(
+            "target",
+            literal::scalar_f32(&astep.spec.inputs[ta], self.config.target as f32)?,
+        );
+
+        let mut batcher = TxlBatcher::new(stream, cfg.batch, cfg.seq_len);
+        let mut traces = Vec::new();
+        let mut global_step: i32 = 0;
+
+        for epoch in 0..self.config.epochs {
+            let temp = sched.temperature(epoch) as f32;
+
+            // ---- network-weight pass (hard sampling, 100% of steps)
+            let mut wce = 0.0;
+            for _ in 0..self.config.steps_per_epoch {
+                let (batch, wrapped) = batcher.next();
+                if wrapped {
+                    st.zero_group(&wstep, "mems")?;
+                }
+                self.set_batch(&mut st, &wstep, &batch.x, &batch.y)?;
+                self.set_step(&mut st, &wstep, global_step, temp)?;
+                let out = st.run(&wstep, &["ce"])?;
+                wce = out["ce"][0] as f64;
+                global_step += 1;
+            }
+
+            // ---- architecture pass (soft sampling, 20% subsample)
+            let mut arch_ce = None;
+            let mut ratio = None;
+            let mut est = None;
+            if sched.arch_enabled(epoch) {
+                let arch_steps = ((self.config.steps_per_epoch as f64
+                    * self.config.arch_step_frac)
+                    .ceil() as usize)
+                    .max(1);
+                for _ in 0..arch_steps {
+                    let (batch, wrapped) = batcher.next();
+                    if wrapped {
+                        st.zero_group(&wstep, "mems")?;
+                    }
+                    self.set_batch(&mut st, &astep, &batch.x, &batch.y)?;
+                    self.set_step(&mut st, &astep, global_step, temp)?;
+                    let out = st.run(&astep, &["ce", "lat_ratio", "est_lat"])?;
+                    arch_ce = Some(out["ce"][0] as f64);
+                    ratio = Some(out["lat_ratio"][0] as f64);
+                    est = Some(out["est_lat"][0] as f64);
+                    global_step += 1;
+                }
+            }
+
+            traces.push(EpochTrace {
+                epoch,
+                temperature: temp as f64,
+                weight_ce: wce,
+                arch_ce,
+                lat_ratio: ratio,
+                est_latency: est,
+            });
+        }
+
+        // ---- phase-2 sampling: argmax over alphas per slot (paper §3.3)
+        let alphas_flat = st
+            .get_group("alphas")
+            .context("alphas group missing after search")?;
+        let a = literal::to_f32s(&alphas_flat[0])?;
+        let n_opts = self.table.latencies.len();
+        let n_slots = cfg.n_slots;
+        anyhow::ensure!(a.len() == n_slots * n_opts, "alpha shape mismatch");
+        let mut alphas = Vec::with_capacity(n_slots);
+        let mut argmax = Vec::with_capacity(n_slots);
+        for s in 0..n_slots {
+            let row = &a[s * n_opts..(s + 1) * n_opts];
+            alphas.push(row.to_vec());
+            let best = row
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            argmax.push(best);
+        }
+        let arch = self.config.space.decode(cfg.n_heads_full, &argmax);
+        let estimated_latency = self.table.estimate(&arch);
+
+        Ok(SearchReport {
+            arch,
+            traces,
+            target: self.config.target,
+            estimated_latency,
+            baseline_latency: self.baseline_latency,
+            alphas,
+        })
+    }
+
+    fn set_batch(
+        &self,
+        st: &mut StateStore,
+        prog: &crate::runtime::Program,
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<()> {
+        let (xa, _) = prog.spec.in_group("x").context("x group")?;
+        st.set_single(
+            "x",
+            literal::literal_from_value(
+                &prog.spec.inputs[xa],
+                &literal::TensorValue::I32(x.to_vec()),
+            )?,
+        );
+        let (ya, _) = prog.spec.in_group("y").context("y group")?;
+        st.set_single(
+            "y",
+            literal::literal_from_value(
+                &prog.spec.inputs[ya],
+                &literal::TensorValue::I32(y.to_vec()),
+            )?,
+        );
+        Ok(())
+    }
+
+    fn set_step(
+        &self,
+        st: &mut StateStore,
+        prog: &crate::runtime::Program,
+        step: i32,
+        temp: f32,
+    ) -> Result<()> {
+        let (sa, _) = prog.spec.in_group("seed").context("seed group")?;
+        st.set_single(
+            "seed",
+            literal::scalar_i32(&prog.spec.inputs[sa], self.config.seed)?,
+        );
+        let (pa, _) = prog.spec.in_group("step").context("step group")?;
+        st.set_single("step", literal::scalar_i32(&prog.spec.inputs[pa], step)?);
+        let (ta, _) = prog.spec.in_group("temp").context("temp group")?;
+        st.set_single("temp", literal::scalar_f32(&prog.spec.inputs[ta], temp)?);
+        Ok(())
+    }
+}

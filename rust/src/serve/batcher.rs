@@ -1,0 +1,132 @@
+//! Dynamic wave batcher: groups queued requests into fixed-width waves.
+//!
+//! The AOT decode program has a fixed batch width B, so batching is
+//! wave-based: collect up to B requests (waiting at most `max_wait` after
+//! the first arrival), then decode the whole wave together.  Unused slots
+//! are padded.  Invariants (property-tested in rust/tests):
+//! - every submitted request appears in exactly one wave;
+//! - wave size never exceeds B;
+//! - FIFO order: a request never overtakes an earlier one into a later wave.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+#[derive(Debug)]
+pub struct BatchWave {
+    pub requests: Vec<(Request, Instant)>,
+}
+
+pub struct WaveBatcher {
+    queue: VecDeque<(Request, Instant)>,
+    pub width: usize,
+    pub max_wait: Duration,
+}
+
+impl WaveBatcher {
+    pub fn new(width: usize, max_wait: Duration) -> Self {
+        assert!(width > 0);
+        WaveBatcher { queue: VecDeque::new(), width, max_wait }
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        self.queue.push_back((r, Instant::now()));
+    }
+
+    pub fn submit_at(&mut self, r: Request, t: Instant) {
+        self.queue.push_back((r, t));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// A wave is ready when the queue can fill the width, or the oldest
+    /// request has waited max_wait.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.width {
+            return true;
+        }
+        match self.queue.front() {
+            Some((_, t)) => now.duration_since(*t) >= self.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop the next wave (up to `width` oldest requests), if ready.
+    pub fn next_wave(&mut self, now: Instant) -> Option<BatchWave> {
+        if !self.ready(now) {
+            return None;
+        }
+        self.force_wave()
+    }
+
+    /// Pop a wave regardless of readiness (shutdown / queue-drain path).
+    pub fn force_wave(&mut self) -> Option<BatchWave> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.width);
+        let requests = self.queue.drain(..n).collect();
+        Some(BatchWave { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1, 2], n_gen: 4, sla: f64::INFINITY }
+    }
+
+    #[test]
+    fn full_wave_fires_immediately() {
+        let mut b = WaveBatcher::new(2, Duration::from_secs(10));
+        b.submit(req(1));
+        assert!(!b.ready(Instant::now()));
+        b.submit(req(2));
+        let w = b.next_wave(Instant::now()).unwrap();
+        assert_eq!(w.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_wave_fires_after_timeout() {
+        let mut b = WaveBatcher::new(8, Duration::from_millis(0));
+        b.submit(req(1));
+        let w = b.next_wave(Instant::now()).unwrap();
+        assert_eq!(w.requests.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = WaveBatcher::new(2, Duration::from_secs(10));
+        for i in 0..5 {
+            b.submit(req(i));
+        }
+        let w1 = b.next_wave(Instant::now()).unwrap();
+        let w2 = b.next_wave(Instant::now()).unwrap();
+        let ids: Vec<u64> = w1
+            .requests
+            .iter()
+            .chain(w2.requests.iter())
+            .map(|(r, _)| r.id)
+            .collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn oversize_queue_never_exceeds_width() {
+        let mut b = WaveBatcher::new(3, Duration::from_secs(0));
+        for i in 0..10 {
+            b.submit(req(i));
+        }
+        while let Some(w) = b.next_wave(Instant::now()) {
+            assert!(w.requests.len() <= 3);
+        }
+        assert_eq!(b.pending(), 0);
+    }
+}

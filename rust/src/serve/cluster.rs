@@ -1,0 +1,151 @@
+//! Serving cluster: one decode engine per latency variant, SLA routing at
+//! admission, per-variant wave queues, timed trace replay.  The top of the
+//! serving stack — `planer serve` and the serve_batched example drive it.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, StateStore};
+
+use super::batcher::WaveBatcher;
+use super::engine::{DecodeEngine, ServeMetrics};
+use super::router::{Router, RouterPolicy, VariantInfo};
+use super::workload::TimedRequest;
+use super::Response;
+
+pub struct Cluster<'a> {
+    engine: &'a Engine,
+    router: Router,
+    engines: HashMap<String, DecodeEngine<'a>>,
+    states: HashMap<String, StateStore>,
+    queues: HashMap<String, WaveBatcher>,
+    pub metrics: HashMap<String, ServeMetrics>,
+}
+
+impl<'a> Cluster<'a> {
+    /// Build a cluster over every arch in `names`, profiling one decode step
+    /// each for the router's latency estimates.  Quality rank follows list
+    /// order (first = best quality).
+    pub fn new(engine: &'a Engine, names: &[String], seed: i32) -> Result<Cluster<'a>> {
+        let mut variants = Vec::new();
+        let mut engines = HashMap::new();
+        let mut states = HashMap::new();
+        let mut queues = HashMap::new();
+        for (i, name) in names.iter().enumerate() {
+            let de = DecodeEngine::new(engine, name)?;
+            let st = de.init_state(seed)?;
+            let gen = engine.program(&format!("gen_{name}"))?;
+            let inputs: Vec<xla::Literal> = gen
+                .spec
+                .inputs
+                .iter()
+                .map(crate::runtime::literal::zeros)
+                .collect();
+            let t = crate::util::timer::time_iters(
+                || {
+                    gen.execute(&inputs).unwrap();
+                },
+                1,
+                3,
+            );
+            let lat = crate::util::timer::stats(&t).p50;
+            variants.push(VariantInfo {
+                name: name.clone(),
+                token_latency: lat,
+                quality: (names.len() - i) as f64,
+            });
+            queues.insert(
+                name.clone(),
+                WaveBatcher::new(de.width, Duration::from_millis(2)),
+            );
+            engines.insert(name.clone(), de);
+            states.insert(name.clone(), st);
+        }
+        Ok(Cluster {
+            engine,
+            router: Router::new(variants, RouterPolicy::QualityWithinSla),
+            engines,
+            states,
+            queues,
+            metrics: names.iter().map(|n| (n.clone(), ServeMetrics::default())).collect(),
+        })
+    }
+
+    pub fn set_policy(&mut self, p: RouterPolicy) {
+        self.router.policy = p;
+    }
+
+    /// Replay a timed trace (arrival offsets are honoured relative to start
+    /// when `realtime`; otherwise requests are admitted immediately) and
+    /// drain all queues.  Returns every response.
+    pub fn replay(&mut self, trace: &[TimedRequest], realtime: bool) -> Result<Vec<Response>> {
+        let _ = self.engine;
+        let start = Instant::now();
+        let mut responses = Vec::new();
+        for tr in trace {
+            if realtime {
+                let due = start + Duration::from_secs_f64(tr.at);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+            }
+            let variant = self.router.route(&tr.request).to_string();
+            self.queues.get_mut(&variant).unwrap().submit(tr.request.clone());
+            // opportunistically serve full waves as they form
+            responses.extend(self.pump(&variant, false)?);
+        }
+        // drain leftovers (fire partial waves)
+        let names: Vec<String> = self.queues.keys().cloned().collect();
+        for n in names {
+            responses.extend(self.pump(&n, true)?);
+        }
+        Ok(responses)
+    }
+
+    fn pump(&mut self, variant: &str, force: bool) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        let de = &self.engines[variant];
+        let q = self.queues.get_mut(variant).unwrap();
+        let m = self.metrics.get_mut(variant).unwrap();
+        let st = self.states.get_mut(variant).unwrap();
+        loop {
+            let now = Instant::now();
+            let wave = if force {
+                q.force_wave()
+            } else if q.pending() >= de.width {
+                q.next_wave(now)
+            } else {
+                None
+            };
+            match wave {
+                Some(w) => out.extend(de.decode_wave(st, &w, m)?),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::from(
+            "variant      reqs waves  occup     p50      p95     tok/s\n",
+        );
+        for (name, m) in &self.metrics {
+            if m.requests == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{name:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1}\n",
+                m.requests,
+                m.waves,
+                m.occupancy,
+                m.p50() * 1e3,
+                m.p95() * 1e3,
+                m.throughput_tok_s()
+            ));
+        }
+        out
+    }
+}

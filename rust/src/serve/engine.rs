@@ -1,0 +1,206 @@
+//! Decode engine: runs fixed-width decode waves over `gen_<arch>`.
+//!
+//! Per wave: feed every prompt token through the single-token decode program
+//! (threading TXL memories), then greedy-decode `n_gen` tokens per slot.
+//! Unused slots are padded with token 0 and ignored.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal, Engine, StateStore};
+
+use super::batcher::BatchWave;
+use super::Response;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub waves: usize,
+    pub requests: usize,
+    pub tokens_out: usize,
+    pub busy_secs: f64,
+    /// Sorted per-request latencies (seconds).
+    pub latencies: Vec<f64>,
+    /// Mean slot occupancy across waves (batching efficiency).
+    pub occupancy: f64,
+}
+
+impl ServeMetrics {
+    pub fn p50(&self) -> f64 {
+        percentile(&self.latencies, 0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile(&self.latencies, 0.95)
+    }
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.busy_secs > 0.0 {
+            self.tokens_out as f64 / self.busy_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[i]
+}
+
+pub struct DecodeEngine<'a> {
+    pub engine: &'a Engine,
+    pub arch_name: String,
+    /// Wave width = the gen program's compiled batch dimension.
+    pub width: usize,
+    vocab: usize,
+}
+
+impl<'a> DecodeEngine<'a> {
+    pub fn new(engine: &'a Engine, arch_name: &str) -> Result<Self> {
+        let gen = engine.program(&format!("gen_{arch_name}"))?;
+        let (xa, _) = gen.spec.in_group("x").context("x group")?;
+        let width = gen.spec.inputs[xa].shape[0];
+        let vocab = engine.manifest.config.vocab;
+        Ok(DecodeEngine { engine, arch_name: arch_name.to_string(), width, vocab })
+    }
+
+    /// Load trained params into the decode state (from a StateStore that ran
+    /// init/train), or initialise fresh ones with `seed`.
+    pub fn init_state(&self, seed: i32) -> Result<StateStore> {
+        let init = self.engine.program(&format!("init_{}", self.arch_name))?;
+        let gen = self.engine.program(&format!("gen_{}", self.arch_name))?;
+        let mut st = StateStore::new();
+        st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], seed)?);
+        st.run(&init, &[])?;
+        st.zero_group(&gen, "mems")?;
+        Ok(st)
+    }
+
+    /// Decode one wave; returns responses in wave order.
+    pub fn decode_wave(
+        &self,
+        st: &mut StateStore,
+        wave: &BatchWave,
+        metrics: &mut ServeMetrics,
+    ) -> Result<Vec<Response>> {
+        let gen = self.engine.program(&format!("gen_{}", self.arch_name))?;
+        anyhow::ensure!(wave.requests.len() <= self.width, "wave too wide");
+        let t0 = Instant::now();
+
+        // fresh memories per wave (sequences are independent)
+        st.zero_group(&gen, "mems")?;
+
+        let max_prompt = wave
+            .requests
+            .iter()
+            .map(|(r, _)| r.prompt.len())
+            .max()
+            .unwrap_or(0);
+        let max_gen = wave
+            .requests
+            .iter()
+            .map(|(r, _)| r.n_gen)
+            .max()
+            .unwrap_or(0);
+
+        let (xa, _) = gen.spec.in_group("x").context("x group")?;
+        let xspec = gen.spec.inputs[xa].clone();
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); wave.requests.len()];
+        let mut last_logits: Vec<f32> = Vec::new();
+
+        // prompt phase: feed token t of every slot (right-aligned so all
+        // prompts end on the same step and decode starts together)
+        for t in 0..max_prompt {
+            let mut x = vec![0i32; self.width];
+            for (slot, (r, _)) in wave.requests.iter().enumerate() {
+                let offset = max_prompt - r.prompt.len();
+                if t >= offset {
+                    x[slot] = r.prompt[t - offset];
+                }
+            }
+            let lit = literal::literal_from_value(&xspec, &literal::TensorValue::I32(x))?;
+            st.set_single("x", lit);
+            let out = st.run(&gen, &["logits"])?;
+            last_logits = out["logits"].clone();
+        }
+
+        // decode phase: greedy argmax per live slot
+        for g in 0..max_gen {
+            let mut x = vec![0i32; self.width];
+            for (slot, (r, _)) in wave.requests.iter().enumerate() {
+                if g < r.n_gen && !last_logits.is_empty() {
+                    let row = &last_logits[slot * self.vocab..(slot + 1) * self.vocab];
+                    let tok = argmax(row);
+                    outputs[slot].push(tok);
+                    x[slot] = tok;
+                }
+            }
+            if g + 1 == max_gen {
+                break; // tokens already captured; skip the trailing step
+            }
+            let lit = literal::literal_from_value(&xspec, &literal::TensorValue::I32(x))?;
+            st.set_single("x", lit);
+            let out = st.run(&gen, &["logits"])?;
+            last_logits = out["logits"].clone();
+        }
+
+        let busy = t0.elapsed().as_secs_f64();
+        metrics.waves += 1;
+        metrics.requests += wave.requests.len();
+        metrics.busy_secs += busy;
+        metrics.occupancy = (metrics.occupancy * (metrics.waves - 1) as f64
+            + wave.requests.len() as f64 / self.width as f64)
+            / metrics.waves as f64;
+
+        let done = Instant::now();
+        let mut responses = Vec::with_capacity(wave.requests.len());
+        for (slot, (r, submitted)) in wave.requests.iter().enumerate() {
+            let toks = outputs[slot].clone();
+            metrics.tokens_out += toks.len().min(r.n_gen);
+            let mut t = toks;
+            t.truncate(r.n_gen);
+            let lat = done.duration_since(*submitted).as_secs_f64();
+            metrics.latencies.push(lat);
+            responses.push(Response {
+                id: r.id,
+                tokens: t,
+                latency: lat,
+                variant: self.arch_name.clone(),
+            });
+        }
+        metrics.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(responses)
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            bi = i;
+        }
+    }
+    bi as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.95), 4.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! Serving stack: SLA-aware router + dynamic wave batcher + decode engine.
+//!
+//! PLANER's product is a *set* of latency/quality variants of one model
+//! (50%–95% targets).  The serving layer exploits that: requests carry a
+//! latency budget; the router picks the cheapest variant whose profiled
+//! latency fits, and each variant's engine batches concurrent requests into
+//! fixed-width decode waves over the AOT `gen_<arch>` program.
+//!
+//! Python is never on this path — everything below executes pre-compiled
+//! HLO through PJRT.
+
+pub mod batcher;
+pub mod cluster;
+pub mod workload;
+pub mod engine;
+pub mod router;
+
+pub use batcher::{BatchWave, WaveBatcher};
+pub use cluster::Cluster;
+pub use workload::{Arrival, TimedRequest, WorkloadGen};
+pub use engine::{DecodeEngine, ServeMetrics};
+pub use router::{Router, RouterPolicy, VariantInfo};
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub n_gen: usize,
+    /// Latency budget in seconds (f64::INFINITY = best quality).
+    pub sla: f64,
+}
+
+/// A completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Seconds from submission to completion (queue + decode).
+    pub latency: f64,
+    /// Which arch variant served it.
+    pub variant: String,
+}

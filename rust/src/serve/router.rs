@@ -1,0 +1,117 @@
+//! SLA-aware router over PLANER's latency/quality variants.
+//!
+//! Each variant advertises its profiled per-wave decode latency; the router
+//! sends a request to the *highest quality* (slowest) variant whose latency
+//! fits the request's SLA — PLANER's whole point is that those cheap
+//! variants exist at iso-accuracy.
+
+use super::Request;
+
+/// A served architecture variant and its profile.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    /// Profiled per-token decode latency (seconds).
+    pub token_latency: f64,
+    /// Quality rank: higher = better LM quality (baseline highest).
+    pub quality: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Best quality that fits the SLA (default).
+    QualityWithinSla,
+    /// Always the fastest variant.
+    FastestAlways,
+}
+
+pub struct Router {
+    pub variants: Vec<VariantInfo>,
+    pub policy: RouterPolicy,
+}
+
+impl Router {
+    pub fn new(mut variants: Vec<VariantInfo>, policy: RouterPolicy) -> Router {
+        assert!(!variants.is_empty());
+        // sort by quality descending => first fit is best quality
+        variants.sort_by(|a, b| b.quality.partial_cmp(&a.quality).unwrap());
+        Router { variants, policy }
+    }
+
+    /// Estimated completion latency of `r` on variant `v`.
+    pub fn estimate(&self, v: &VariantInfo, r: &Request) -> f64 {
+        v.token_latency * (r.prompt.len() + r.n_gen) as f64
+    }
+
+    /// Pick a variant name for the request.
+    pub fn route(&self, r: &Request) -> &str {
+        match self.policy {
+            RouterPolicy::FastestAlways => {
+                &self
+                    .variants
+                    .iter()
+                    .min_by(|a, b| a.token_latency.partial_cmp(&b.token_latency).unwrap())
+                    .unwrap()
+                    .name
+            }
+            RouterPolicy::QualityWithinSla => {
+                for v in &self.variants {
+                    if self.estimate(v, r) <= r.sla {
+                        return &v.name;
+                    }
+                }
+                // nothing fits: degrade to the fastest
+                &self
+                    .variants
+                    .iter()
+                    .min_by(|a, b| a.token_latency.partial_cmp(&b.token_latency).unwrap())
+                    .unwrap()
+                    .name
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(
+            vec![
+                VariantInfo { name: "baseline".into(), token_latency: 4.0, quality: 3.0 },
+                VariantInfo { name: "planer80".into(), token_latency: 3.0, quality: 2.0 },
+                VariantInfo { name: "planer50".into(), token_latency: 2.0, quality: 1.0 },
+            ],
+            RouterPolicy::QualityWithinSla,
+        )
+    }
+
+    fn req(sla: f64) -> Request {
+        Request { id: 0, prompt: vec![1; 5], n_gen: 5, sla }
+    }
+
+    #[test]
+    fn generous_sla_gets_best_quality() {
+        assert_eq!(router().route(&req(1000.0)), "baseline");
+    }
+
+    #[test]
+    fn tight_sla_degrades_gracefully() {
+        // 10 tokens * 4.0 = 40 > 35; * 3.0 = 30 <= 35
+        assert_eq!(router().route(&req(35.0)), "planer80");
+        assert_eq!(router().route(&req(21.0)), "planer50");
+    }
+
+    #[test]
+    fn impossible_sla_falls_back_to_fastest() {
+        assert_eq!(router().route(&req(0.001)), "planer50");
+    }
+
+    #[test]
+    fn fastest_policy_ignores_sla() {
+        let mut r = router();
+        r.policy = RouterPolicy::FastestAlways;
+        assert_eq!(r.route(&req(1000.0)), "planer50");
+    }
+}

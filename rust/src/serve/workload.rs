@@ -1,0 +1,209 @@
+//! Workload generation for serving experiments: arrival processes, prompt
+//! length distributions and SLA mixes; plus trace record/replay so runs are
+//! exactly reproducible (the serving analogue of the paper's §4.5).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::Request;
+
+/// Arrival process for the open-loop serving benchmark.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson arrivals at `rps` requests/second.
+    Poisson { rps: f64 },
+    /// Fixed inter-arrival gap.
+    Uniform { gap_s: f64 },
+    /// Everything at t=0 (closed-loop batch).
+    Burst,
+}
+
+/// Prompt/generation length distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthDist {
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub gen_min: usize,
+    pub gen_max: usize,
+}
+
+impl Default for LengthDist {
+    fn default() -> Self {
+        LengthDist { prompt_min: 2, prompt_max: 12, gen_min: 2, gen_max: 8 }
+    }
+}
+
+/// A timed request: (arrival offset seconds, request).
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub at: f64,
+    pub request: Request,
+}
+
+pub struct WorkloadGen {
+    pub arrival: Arrival,
+    pub lengths: LengthDist,
+    /// Fraction of requests carrying a tight SLA (`sla_tight_s`); the rest
+    /// are best-quality (infinite budget).
+    pub tight_frac: f64,
+    pub sla_tight_s: f64,
+    pub vocab: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(vocab: usize) -> Self {
+        WorkloadGen {
+            arrival: Arrival::Burst,
+            lengths: LengthDist::default(),
+            tight_frac: 0.5,
+            sla_tight_s: 0.25,
+            vocab,
+        }
+    }
+
+    /// Generate `n` timed requests, deterministic in `seed`.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<TimedRequest> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..n as u64)
+            .map(|id| {
+                t += match self.arrival {
+                    Arrival::Poisson { rps } => rng.exponential(rps),
+                    Arrival::Uniform { gap_s } => gap_s,
+                    Arrival::Burst => 0.0,
+                };
+                let plen = self.lengths.prompt_min
+                    + rng.below(self.lengths.prompt_max - self.lengths.prompt_min + 1);
+                let glen = self.lengths.gen_min
+                    + rng.below(self.lengths.gen_max - self.lengths.gen_min + 1);
+                let prompt = (0..plen).map(|_| rng.below(self.vocab) as i32).collect();
+                let sla = if rng.f64() < self.tight_frac {
+                    self.sla_tight_s
+                } else {
+                    f64::INFINITY
+                };
+                TimedRequest { at: t, request: Request { id, prompt, n_gen: glen, sla } }
+            })
+            .collect()
+    }
+}
+
+/// Serialise a workload trace (replayable across runs / implementations).
+pub fn trace_to_json(trace: &[TimedRequest]) -> Json {
+    Json::Arr(
+        trace
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("at", Json::Num(t.at)),
+                    ("id", Json::Num(t.request.id as f64)),
+                    (
+                        "prompt",
+                        Json::Arr(t.request.prompt.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    ),
+                    ("n_gen", Json::Num(t.request.n_gen as f64)),
+                    (
+                        "sla",
+                        if t.request.sla.is_finite() {
+                            Json::Num(t.request.sla)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a trace back (inverse of `trace_to_json`).
+pub fn trace_from_json(j: &Json) -> Option<Vec<TimedRequest>> {
+    Some(
+        j.as_arr()?
+            .iter()
+            .map(|e| {
+                Some(TimedRequest {
+                    at: e.get("at")?.as_f64()?,
+                    request: Request {
+                        id: e.get("id")?.as_f64()? as u64,
+                        prompt: e
+                            .get("prompt")?
+                            .as_arr()?
+                            .iter()
+                            .map(|x| x.as_f64().map(|v| v as i32))
+                            .collect::<Option<Vec<_>>>()?,
+                        n_gen: e.get("n_gen")?.as_usize()?,
+                        sla: match e.get("sla")? {
+                            Json::Null => f64::INFINITY,
+                            v => v.as_f64()?,
+                        },
+                    },
+                })
+            })
+            .collect::<Option<Vec<_>>>()?,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = WorkloadGen::new(97);
+        let a = g.generate(20, 5);
+        let b = g.generate(20, 5);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.at, y.at);
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let mut g = WorkloadGen::new(97);
+        g.arrival = Arrival::Poisson { rps: 100.0 };
+        let t = g.generate(50, 1);
+        for w in t.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        assert!(t.last().unwrap().at > 0.0);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let g = WorkloadGen::new(97);
+        for tr in g.generate(100, 2) {
+            let p = tr.request.prompt.len();
+            assert!((g.lengths.prompt_min..=g.lengths.prompt_max).contains(&p));
+            assert!((g.lengths.gen_min..=g.lengths.gen_max).contains(&tr.request.n_gen));
+            assert!(tr.request.prompt.iter().all(|&t| (t as usize) < 97));
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let g = WorkloadGen::new(97);
+        let t = g.generate(10, 3);
+        let j = trace_to_json(&t);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let t2 = trace_from_json(&parsed).unwrap();
+        assert_eq!(t.len(), t2.len());
+        for (a, b) in t.iter().zip(&t2) {
+            assert_eq!(a.request.id, b.request.id);
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.request.sla.is_finite(), b.request.sla.is_finite());
+        }
+    }
+
+    #[test]
+    fn sla_mix_matches_fraction() {
+        let mut g = WorkloadGen::new(97);
+        g.tight_frac = 0.3;
+        let t = g.generate(2000, 4);
+        let tight = t.iter().filter(|r| r.request.sla.is_finite()).count();
+        let frac = tight as f64 / t.len() as f64;
+        assert!((frac - 0.3).abs() < 0.05, "tight frac {frac}");
+    }
+}

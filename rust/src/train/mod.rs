@@ -1,0 +1,167 @@
+//! Phase-2 retraining and evaluation of a concrete architecture
+//! (paper §3.3–§3.4: retrain from scratch with the Switch balance loss).
+
+use anyhow::{Context, Result};
+
+use crate::data::TxlBatcher;
+use crate::metrics;
+use crate::runtime::{literal, Engine, Program, StateStore};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub seed: i32,
+    /// Balance-loss coefficient; 0.0 = the paper's "relaxed" ablation
+    /// (Fig. 7a), manifest's balance_coef = "enforced".
+    pub balance_coef: f32,
+    pub eval_every: usize,
+}
+
+impl TrainConfig {
+    pub fn quick(steps: usize, seed: i32) -> Self {
+        TrainConfig { steps, seed, balance_coef: 0.01, eval_every: usize::MAX }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub ce: f64,
+    pub balance: f64,
+    pub lr: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub arch_name: String,
+    pub curve: Vec<StepRecord>,
+    pub final_train_ce: f64,
+    pub valid_ce: Option<f64>,
+    pub test_ce: Option<f64>,
+    /// "ppl" or "bpc" value of valid/test, per manifest metric.
+    pub valid_metric: Option<f64>,
+    pub test_metric: Option<f64>,
+}
+
+pub struct Trainer<'a> {
+    pub engine: &'a Engine,
+    pub arch_name: String,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(engine: &'a Engine, arch_name: &str) -> Self {
+        Trainer { engine, arch_name: arch_name.to_string() }
+    }
+
+    /// Train on `train_stream`, then (optionally) evaluate valid/test.
+    pub fn run(
+        &self,
+        cfg: &TrainConfig,
+        train_stream: &[i32],
+        valid_stream: Option<&[i32]>,
+        test_stream: Option<&[i32]>,
+    ) -> Result<TrainReport> {
+        let mcfg = &self.engine.manifest.config;
+        let init = self.engine.program(&format!("init_{}", self.arch_name))?;
+        let train = self.engine.program(&format!("train_{}", self.arch_name))?;
+
+        let mut st = StateStore::new();
+        st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], cfg.seed)?);
+        st.run(&init, &[])?;
+        st.zero_group(&train, "m")?;
+        st.zero_group(&train, "v")?;
+        st.zero_group(&train, "mems")?;
+        let (ba, _) = train.spec.in_group("bal_coef").context("bal_coef")?;
+        st.set_single(
+            "bal_coef",
+            literal::scalar_f32(&train.spec.inputs[ba], cfg.balance_coef)?,
+        );
+
+        let mut batcher = TxlBatcher::new(train_stream, mcfg.batch, mcfg.seq_len);
+        let mut curve = Vec::new();
+        let mut last_ce = f64::NAN;
+        for step in 0..cfg.steps {
+            let (batch, wrapped) = batcher.next();
+            if wrapped {
+                st.zero_group(&train, "mems")?;
+            }
+            set_batch(&mut st, &train, &batch.x, Some(&batch.y))?;
+            let (sa, _) = train.spec.in_group("seed").context("seed")?;
+            st.set_single("seed", literal::scalar_i32(&train.spec.inputs[sa], cfg.seed)?);
+            let (pa, _) = train.spec.in_group("step").context("step")?;
+            st.set_single("step", literal::scalar_i32(&train.spec.inputs[pa], step as i32)?);
+            let out = st.run(&train, &["ce", "bal", "lr"])?;
+            last_ce = out["ce"][0] as f64;
+            curve.push(StepRecord {
+                step,
+                ce: last_ce,
+                balance: out["bal"][0] as f64,
+                lr: out["lr"][0] as f64,
+            });
+        }
+
+        let valid_ce = match valid_stream {
+            Some(s) => Some(self.evaluate_with_state(&mut st, s)?),
+            None => None,
+        };
+        let test_ce = match test_stream {
+            Some(s) => Some(self.evaluate_with_state(&mut st, s)?),
+            None => None,
+        };
+
+        Ok(TrainReport {
+            arch_name: self.arch_name.clone(),
+            final_train_ce: last_ce,
+            valid_metric: valid_ce.map(|c| metrics::metric(&mcfg.metric, c)),
+            test_metric: test_ce.map(|c| metrics::metric(&mcfg.metric, c)),
+            valid_ce,
+            test_ce,
+            curve,
+        })
+    }
+
+    /// Mean CE over a held-out stream using the current params in `st`
+    /// (fresh memories, TXL-style sequential evaluation).
+    pub fn evaluate_with_state(&self, st: &mut StateStore, stream: &[i32]) -> Result<f64> {
+        let mcfg = &self.engine.manifest.config;
+        let evalp = self.engine.program(&format!("eval_{}", self.arch_name))?;
+        st.zero_group(&evalp, "mems")?;
+        let mut batcher = TxlBatcher::new(stream, mcfg.batch, mcfg.seq_len);
+        let n = batcher.batches_per_epoch().max(1);
+        let mut total = 0.0;
+        for _ in 0..n {
+            let (batch, _) = batcher.next();
+            set_batch(st, &evalp, &batch.x, Some(&batch.y))?;
+            let out = st.run(&evalp, &["ce"])?;
+            total += out["ce"][0] as f64;
+        }
+        Ok(total / n as f64)
+    }
+}
+
+pub(crate) fn set_batch(
+    st: &mut StateStore,
+    prog: &Program,
+    x: &[i32],
+    y: Option<&[i32]>,
+) -> Result<()> {
+    let (xa, _) = prog.spec.in_group("x").context("x group")?;
+    st.set_single(
+        "x",
+        literal::literal_from_value(
+            &prog.spec.inputs[xa],
+            &literal::TensorValue::I32(x.to_vec()),
+        )?,
+    );
+    if let Some(y) = y {
+        let (ya, _) = prog.spec.in_group("y").context("y group")?;
+        st.set_single(
+            "y",
+            literal::literal_from_value(
+                &prog.spec.inputs[ya],
+                &literal::TensorValue::I32(y.to_vec()),
+            )?,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Small self-contained substrates the offline image forces us to own:
+//! JSON parsing/serialisation, deterministic RNG, and timing helpers.
+
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,65 @@
+//! Wall-clock measurement helpers used by the profiler and bench harness.
+
+use std::time::Instant;
+
+/// Run `f` `iters` times, returning per-iteration seconds (after `warmup`
+/// discarded runs).  The returned vector is sorted ascending so callers can
+/// take p50/p95 directly.
+pub fn time_iters<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64());
+    }
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn stats(sorted: &[f64]) -> Stats {
+    if sorted.is_empty() {
+        return Stats::default();
+    }
+    let n = sorted.len();
+    Stats {
+        mean: sorted.iter().sum::<f64>() / n as f64,
+        p50: sorted[n / 2],
+        p95: sorted[((n as f64 * 0.95) as usize).min(n - 1)],
+        min: sorted[0],
+        max: sorted[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_series() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = stats(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, 51.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let v = time_iters(|| { std::hint::black_box(1 + 1); }, 2, 10);
+        assert_eq!(v.len(), 10);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

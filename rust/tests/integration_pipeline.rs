@@ -1,0 +1,250 @@
+//! Integration: the full PLANER pipeline over the tiny artifacts — phase-1
+//! search produces a valid arch whose estimate respects the dynamic loss,
+//! phase-2 training improves the metric, decode serving works end to end.
+//!
+//! These share one Engine (XLA compiles are cached per process).
+
+use std::path::Path;
+use std::time::Duration;
+
+use planer::arch::SearchSpace;
+use planer::coordinator::Pipeline;
+use planer::data::Corpus;
+use planer::runtime::Engine;
+use planer::search::SearchConfig;
+use planer::serve::{DecodeEngine, Request, ServeMetrics, WaveBatcher};
+use planer::train::TrainConfig;
+
+fn engine() -> Engine {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(&dir).expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn phase2_training_beats_untrained_eval() {
+    let eng = engine();
+    let corpus = Corpus::synth_char(80_000, eng.manifest.config.vocab, 3);
+    let p = Pipeline::new(&eng, &corpus);
+
+    // untrained reference: ~uniform CE
+    let uniform = (eng.manifest.config.vocab as f64).ln();
+    let rep = p
+        .retrain("baseline", TrainConfig::quick(60, 3))
+        .expect("train");
+    let valid = rep.valid_ce.unwrap();
+    assert!(
+        valid < uniform * 0.95,
+        "60 steps should beat uniform: valid {valid:.3} vs ln(V) {uniform:.3}"
+    );
+    // loss curve must be decreasing overall
+    let first = rep.curve[0].ce;
+    let last = rep.curve.last().unwrap().ce;
+    assert!(last < first, "curve should fall: {first} -> {last}");
+    // balance loss reported and ~ideal range for a non-MoE arch (0)
+    assert!(rep.curve.iter().all(|r| r.balance.abs() < 16.0));
+}
+
+#[test]
+fn moe_arch_trains_with_balance_loss() {
+    let eng = engine();
+    // find a preset with MoE blocks
+    let arch_name = eng
+        .manifest
+        .archs
+        .iter()
+        .find(|(_, blocks)| {
+            blocks.iter().any(|b| matches!(b, planer::runtime::manifest::Block::Moe { .. }))
+        })
+        .map(|(n, _)| n.clone())
+        .expect("no MoE preset in manifest");
+    let corpus = Corpus::synth_char(60_000, eng.manifest.config.vocab, 5);
+    let p = Pipeline::new(&eng, &corpus);
+    let rep = p
+        .retrain(
+            &arch_name,
+            TrainConfig { steps: 30, seed: 5, balance_coef: 0.01, eval_every: usize::MAX },
+        )
+        .expect("train moe arch");
+    // Switch balance loss should hover near its ideal value 1.0 under the
+    // enforced setting (uniform-ish routing)
+    let tail: Vec<f64> = rep.curve.iter().rev().take(5).map(|r| r.balance).collect();
+    let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+    assert!(
+        (0.8..2.0).contains(&mean),
+        "balance loss {mean:.3} should be near 1.0 (arch {arch_name})"
+    );
+}
+
+#[test]
+fn search_produces_arch_meeting_target_estimate() {
+    let eng = engine();
+    let corpus = Corpus::synth_char(60_000, eng.manifest.config.vocab, 1);
+    let p = Pipeline::new(&eng, &corpus);
+    let sc = SearchConfig {
+        space: SearchSpace::Paper,
+        target: 0.60,
+        epochs: 3,
+        steps_per_epoch: 3,
+        arch_step_frac: 0.4,
+        anneal_rate: 0.7,
+        seed: 1,
+    };
+    let rep = p.search(sc).expect("search");
+    assert_eq!(rep.arch.len(), eng.manifest.config.n_slots);
+    assert!(rep.estimated_latency.is_finite() && rep.estimated_latency >= 0.0);
+    // traces exist and CE is finite everywhere
+    assert_eq!(rep.traces.len(), 3);
+    assert!(rep.traces.iter().all(|t| t.weight_ce.is_finite()));
+    // arch-phase epochs carry latency telemetry
+    assert!(rep.traces.last().unwrap().lat_ratio.is_some());
+    // alphas exported per slot
+    assert_eq!(rep.alphas.len(), eng.manifest.config.n_slots);
+}
+
+#[test]
+fn decode_serving_end_to_end() {
+    let eng = engine();
+    let de = DecodeEngine::new(&eng, "baseline").expect("decode engine");
+    let mut st = de.init_state(0).expect("init");
+    let mut batcher = WaveBatcher::new(de.width, Duration::ZERO);
+    for id in 0..3u64 {
+        batcher.submit(Request {
+            id,
+            prompt: vec![5, 6, 7],
+            n_gen: 4,
+            sla: f64::INFINITY,
+        });
+    }
+    let wave = batcher.next_wave(std::time::Instant::now()).unwrap();
+    let mut metrics = ServeMetrics::default();
+    let rs = de.decode_wave(&mut st, &wave, &mut metrics).expect("decode");
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert_eq!(r.tokens.len(), 4);
+        let v = eng.manifest.config.vocab as i32;
+        assert!(r.tokens.iter().all(|&t| t >= 0 && t < v));
+    }
+    // deterministic params + greedy decode + same prompt => same output
+    assert_eq!(rs[0].tokens, rs[1].tokens);
+    assert!(metrics.throughput_tok_s() > 0.0);
+    assert!((metrics.occupancy - 0.75).abs() < 1e-9); // 3 of 4 slots
+}
+
+#[test]
+fn checkpoint_roundtrip_through_decode_engine() {
+    use planer::runtime::{checkpoint, literal, StateStore};
+
+    let eng = engine();
+    let corpus = Corpus::synth_char(60_000, eng.manifest.config.vocab, 9);
+    let p = Pipeline::new(&eng, &corpus);
+
+    // brief training, then persist params
+    let _rep = p.retrain("baseline", TrainConfig::quick(15, 9)).unwrap();
+    // (Trainer owns its store; reproduce state: init + save path instead)
+    let init = eng.program("init_baseline").unwrap();
+    let mut st = StateStore::new();
+    st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], 9).unwrap());
+    st.run(&init, &[]).unwrap();
+
+    let dir = std::env::temp_dir().join("planer_int_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.ckpt");
+    checkpoint::save(&st, &["params"], &path).unwrap();
+
+    // load into a fresh store and decode with it
+    let de = DecodeEngine::new(&eng, "baseline").unwrap();
+    let mut st2 = de.init_state(1234).unwrap(); // different params initially
+    checkpoint::load(&mut st2, &path).unwrap();
+
+    let mut batcher = WaveBatcher::new(de.width, Duration::ZERO);
+    batcher.submit(Request { id: 0, prompt: vec![1, 2, 3], n_gen: 3, sla: f64::INFINITY });
+    let wave = batcher.next_wave(std::time::Instant::now()).unwrap();
+    let mut m = ServeMetrics::default();
+    let r1 = de.decode_wave(&mut st2, &wave, &mut m).unwrap();
+
+    // reference: decode with the original params directly
+    let mut st3 = de.init_state(9).unwrap();
+    let mut batcher2 = WaveBatcher::new(de.width, Duration::ZERO);
+    batcher2.submit(Request { id: 0, prompt: vec![1, 2, 3], n_gen: 3, sla: f64::INFINITY });
+    let wave2 = batcher2.next_wave(std::time::Instant::now()).unwrap();
+    let r2 = de.decode_wave(&mut st3, &wave2, &mut m).unwrap();
+    assert_eq!(r1[0].tokens, r2[0].tokens, "checkpointed params must decode identically");
+}
+
+#[test]
+fn iso_param_search_space_runs() {
+    let eng = engine();
+    let corpus = Corpus::synth_char(60_000, eng.manifest.config.vocab, 2);
+    let p = Pipeline::new(&eng, &corpus);
+    let sc = SearchConfig {
+        space: SearchSpace::IsoParam,
+        target: 0.70,
+        epochs: 2,
+        steps_per_epoch: 2,
+        arch_step_frac: 0.5,
+        anneal_rate: 0.7,
+        seed: 2,
+    };
+    let rep = p.search(sc).expect("iso search");
+    // iso space has no MoE options at all
+    assert_eq!(rep.arch.n_moe(), 0);
+    assert_eq!(rep.arch.len(), eng.manifest.config.n_slots);
+}
+
+#[test]
+fn trainer_relaxed_vs_enforced_balance_changes_loss_mix() {
+    let eng = engine();
+    // need a MoE arch
+    let arch_name = eng
+        .manifest
+        .archs
+        .iter()
+        .find(|(_, blocks)| {
+            blocks.iter().any(|b| matches!(b, planer::runtime::manifest::Block::Moe { .. }))
+        })
+        .map(|(n, _)| n.clone())
+        .expect("no MoE preset");
+    let corpus = Corpus::synth_char(60_000, eng.manifest.config.vocab, 11);
+    let p = Pipeline::new(&eng, &corpus);
+    let run = |coef: f32| {
+        p.retrain(
+            &arch_name,
+            TrainConfig { steps: 12, seed: 11, balance_coef: coef, eval_every: usize::MAX },
+        )
+        .unwrap()
+    };
+    let relaxed = run(0.0);
+    let enforced = run(0.05);
+    // same seed, same data: only the balance term differs; training must
+    // remain stable in both (paper Fig 7a: CE trends similar)
+    assert!(relaxed.final_train_ce.is_finite() && enforced.final_train_ce.is_finite());
+    let d = (relaxed.final_train_ce - enforced.final_train_ce).abs();
+    assert!(d < 1.0, "CE divergence {d} too large between balance settings");
+}
+
+#[test]
+fn cluster_replay_conserves_requests() {
+    use planer::serve::{Cluster, WorkloadGen};
+
+    let eng = engine();
+    let names: Vec<String> = eng
+        .manifest
+        .arch_names()
+        .into_iter()
+        .filter(|a| eng.has_program(&format!("gen_{a}")))
+        .map(String::from)
+        .take(2)
+        .collect();
+    let mut cluster = Cluster::new(&eng, &names, 0).unwrap();
+    let gen = WorkloadGen::new(eng.manifest.config.vocab);
+    let trace = gen.generate(11, 3); // deliberately not a multiple of width
+    let responses = cluster.replay(&trace, false).unwrap();
+    assert_eq!(responses.len(), trace.len(), "every request must be answered");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, (0..11).collect::<Vec<_>>());
+    for r in &responses {
+        assert!(!r.tokens.is_empty());
+        assert!(names.contains(&r.variant));
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration: the full python-AOT -> manifest -> PJRT execution bridge.
+//!
+//! Requires `make artifacts` (tiny config) to have populated ./artifacts.
+
+use std::path::Path;
+
+use planer::runtime::{literal, Engine, StateStore};
+
+fn engine() -> Engine {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(&dir).expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let eng = engine();
+    let m = &eng.manifest;
+    assert!(m.config.vocab > 0 && m.config.n_slots > 0);
+    assert_eq!(m.options.len(), 8, "paper search space has 8 options");
+    assert!(m.archs.contains_key("baseline"));
+    // every arch has matching program set
+    for a in m.arch_names() {
+        for p in ["init", "train", "eval", "gen"] {
+            assert!(
+                m.programs.contains_key(&format!("{p}_{a}")),
+                "missing {p}_{a}"
+            );
+        }
+    }
+    // group ranges partition the flat lists
+    for (name, p) in &m.programs {
+        let mut covered = vec![false; p.inputs.len()];
+        for &(a, b) in p.in_groups.values() {
+            for c in covered[a..b].iter_mut() {
+                assert!(!*c, "{name}: overlapping input groups");
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "{name}: input groups leave gaps");
+    }
+}
+
+#[test]
+fn init_then_train_steps_reduce_loss() {
+    let eng = engine();
+    let cfg = &eng.manifest.config;
+    let init = eng.program("init_baseline").unwrap();
+    let train = eng.program("train_baseline").unwrap();
+
+    let mut st = StateStore::new();
+    st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], 42).unwrap());
+    st.run(&init, &[]).unwrap();
+    assert!(st.has_group("params"));
+
+    st.zero_group(&train, "m").unwrap();
+    st.zero_group(&train, "v").unwrap();
+    st.zero_group(&train, "mems").unwrap();
+
+    // fixed batch: learn to predict a constant token — loss must fall fast
+    let (xa, xb) = train.spec.in_group("x").unwrap();
+    let xspec = &train.spec.inputs[xa];
+    assert_eq!(xb - xa, 1);
+    let n = xspec.element_count();
+    let x = literal::literal_from_value(
+        xspec,
+        &literal::TensorValue::I32(vec![7; n]),
+    )
+    .unwrap();
+    let (ya, _) = train.spec.in_group("y").unwrap();
+    let y = literal::literal_from_value(
+        &train.spec.inputs[ya],
+        &literal::TensorValue::I32(vec![7; n]),
+    )
+    .unwrap();
+    st.set_single("x", x);
+    st.set_single("y", y);
+    let (ba, _) = train.spec.in_group("bal_coef").unwrap();
+    st.set_single(
+        "bal_coef",
+        literal::scalar_f32(&train.spec.inputs[ba], 0.01).unwrap(),
+    );
+
+    let mut losses = Vec::new();
+    for step in 0..40 {
+        let (sa, _) = train.spec.in_group("step").unwrap();
+        st.set_single("step", literal::scalar_i32(&train.spec.inputs[sa], step).unwrap());
+        let out = st.run(&train, &["ce", "lr"]).unwrap();
+        losses.push(out["ce"][0]);
+        assert!(out["lr"][0] > 0.0);
+    }
+    assert!(
+        losses[39] < losses[0] - 0.4,
+        "loss should fall on constant data: {losses:?}"
+    );
+    // and it should be falling monotonically in trend (compare thirds)
+    let third = losses.len() / 3;
+    let first: f32 = losses[..third].iter().sum::<f32>() / third as f32;
+    let last: f32 = losses[losses.len() - third..].iter().sum::<f32>() / third as f32;
+    assert!(last < first);
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn eval_and_infer_agree_with_training_state() {
+    let eng = engine();
+    let init = eng.program("init_planer65").unwrap();
+    let evalp = eng.program("eval_planer65").unwrap();
+
+    let mut st = StateStore::new();
+    st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], 1).unwrap());
+    st.run(&init, &[]).unwrap();
+    st.zero_group(&evalp, "mems").unwrap();
+
+    let (xa, _) = evalp.spec.in_group("x").unwrap();
+    let spec = &evalp.spec.inputs[xa];
+    let n = spec.element_count();
+    let x = literal::literal_from_value(spec, &literal::TensorValue::I32(vec![3; n])).unwrap();
+    let (ya, _) = evalp.spec.in_group("y").unwrap();
+    let y = literal::literal_from_value(
+        &evalp.spec.inputs[ya],
+        &literal::TensorValue::I32(vec![3; n]),
+    )
+    .unwrap();
+    st.set_single("x", x);
+    st.set_single("y", y);
+
+    let out = st.run(&evalp, &["ce"]).unwrap();
+    let ce = out["ce"][0];
+    // untrained model ~ uniform: ce near ln(vocab)
+    let uniform = (eng.manifest.config.vocab as f32).ln();
+    assert!(
+        (ce - uniform).abs() < 1.0,
+        "untrained ce {ce} should be near ln(V)={uniform}"
+    );
+
+    // memory threading: second eval must differ (mems now non-zero)
+    let out2 = st.run(&evalp, &["ce"]).unwrap();
+    assert_ne!(out["ce"], out2["ce"]);
+}
+
+#[test]
+fn gen_program_threads_memory() {
+    let eng = engine();
+    let init = eng.program("init_baseline").unwrap();
+    let gen = eng.program("gen_baseline").unwrap();
+
+    let mut st = StateStore::new();
+    st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], 3).unwrap());
+    st.run(&init, &[]).unwrap();
+    st.zero_group(&gen, "mems").unwrap();
+
+    let (xa, _) = gen.spec.in_group("x").unwrap();
+    let spec = &gen.spec.inputs[xa];
+    let b = spec.shape[0];
+    let x = literal::literal_from_value(spec, &literal::TensorValue::I32(vec![5; b])).unwrap();
+    st.set_single("x", x);
+
+    let o1 = st.run(&gen, &["logits"]).unwrap();
+    let o2 = st.run(&gen, &["logits"]).unwrap();
+    assert_eq!(o1["logits"].len(), o2["logits"].len());
+    assert_ne!(o1["logits"], o2["logits"], "memory must alter decode logits");
+    let v = eng.manifest.config.vocab;
+    assert_eq!(o1["logits"].len(), b * v);
+}

@@ -1,0 +1,275 @@
+//! Property tests on coordinator invariants (routing, batching, latency
+//! estimation, arch decode, data pipeline).  The offline vendor set has no
+//! proptest crate, so this uses a small seeded-random harness: each property
+//! runs across many generated cases; failures print the case seed.
+
+use std::time::{Duration, Instant};
+
+use planer::arch::{Arch, SearchSpace};
+use planer::data::{Corpus, TxlBatcher};
+use planer::latency::LatencyTable;
+use planer::metrics;
+use planer::runtime::manifest::Block;
+use planer::serve::{Request, Router, RouterPolicy, VariantInfo, WaveBatcher};
+use planer::util::json::Json;
+use planer::util::rng::Rng;
+
+/// Mini property harness: run `prop` on `n` seeded cases.
+fn forall(n: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed);
+        // a panic inside prop identifies the failing seed in its message
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_arch(rng: &mut Rng, slots: usize) -> Arch {
+    let opts = SearchSpace::Paper.options(8);
+    Arch::new((0..slots).map(|_| opts[rng.below(opts.len())].clone()).collect())
+}
+
+// ---------------------------------------------------------------- batching
+
+#[test]
+fn prop_wave_batcher_conserves_requests() {
+    forall(200, |rng| {
+        let width = 1 + rng.below(8);
+        let n = rng.below(40);
+        let mut b = WaveBatcher::new(width, Duration::ZERO);
+        for id in 0..n as u64 {
+            b.submit(Request { id, prompt: vec![1], n_gen: 1, sla: f64::INFINITY });
+        }
+        let mut seen = Vec::new();
+        while let Some(w) = b.next_wave(Instant::now()) {
+            assert!(w.requests.len() <= width, "wave exceeds width");
+            assert!(!w.requests.is_empty());
+            seen.extend(w.requests.iter().map(|(r, _)| r.id));
+        }
+        // exactly once, in FIFO order
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+        assert_eq!(b.pending(), 0);
+    });
+}
+
+#[test]
+fn prop_wave_batcher_never_fires_incomplete_before_timeout() {
+    forall(100, |rng| {
+        let width = 2 + rng.below(8);
+        let n = 1 + rng.below(width - 1); // strictly fewer than width
+        let mut b = WaveBatcher::new(width, Duration::from_secs(3600));
+        let now = Instant::now();
+        for id in 0..n as u64 {
+            b.submit_at(Request { id, prompt: vec![1], n_gen: 1, sla: 1.0 }, now);
+        }
+        assert!(!b.ready(now), "partial wave must wait for timeout");
+        assert!(b.next_wave(now).is_none());
+    });
+}
+
+// ---------------------------------------------------------------- routing
+
+#[test]
+fn prop_router_respects_sla_when_feasible() {
+    forall(300, |rng| {
+        let k = 2 + rng.below(4);
+        let variants: Vec<VariantInfo> = (0..k)
+            .map(|i| VariantInfo {
+                name: format!("v{i}"),
+                token_latency: 0.001 * (1.0 + rng.f64() * 9.0),
+                quality: rng.f64() * 10.0,
+            })
+            .collect();
+        let router = Router::new(variants.clone(), RouterPolicy::QualityWithinSla);
+        let req = Request {
+            id: 0,
+            prompt: vec![0; 1 + rng.below(10)],
+            n_gen: 1 + rng.below(10),
+            sla: 0.001 * (1.0 + rng.f64() * 120.0),
+        };
+        let chosen = router.route(&req).to_string();
+        let chosen_v = variants.iter().find(|v| v.name == chosen).unwrap();
+        let feasible: Vec<&VariantInfo> = variants
+            .iter()
+            .filter(|v| router.estimate(v, &req) <= req.sla)
+            .collect();
+        if !feasible.is_empty() {
+            // must pick a feasible variant with maximal quality
+            let best_q = feasible.iter().map(|v| v.quality).fold(f64::MIN, f64::max);
+            assert!(router.estimate(chosen_v, &req) <= req.sla, "chose infeasible");
+            assert!(
+                chosen_v.quality >= best_q - 1e-12,
+                "chose {chosen}: quality {} < best feasible {best_q}",
+                chosen_v.quality
+            );
+        } else {
+            // infeasible: must fall back to the fastest
+            let fastest = variants
+                .iter()
+                .map(|v| v.token_latency)
+                .fold(f64::MAX, f64::min);
+            assert!((chosen_v.token_latency - fastest).abs() < 1e-15);
+        }
+    });
+}
+
+// ------------------------------------------------------------ latency table
+
+#[test]
+fn prop_estimate_soft_matches_hard_at_onehot() {
+    forall(300, |rng| {
+        let opts = SearchSpace::Paper.options(8);
+        let lats: Vec<f64> = opts.iter().map(|_| rng.f64() * 10.0).collect();
+        let table = LatencyTable::from_measured(&opts, lats).unwrap();
+        let slots = 1 + rng.below(12);
+        let arch = random_arch(rng, slots);
+        // build the one-hot P of this arch
+        let p: Vec<Vec<f64>> = arch
+            .blocks
+            .iter()
+            .map(|b| {
+                opts.iter()
+                    .map(|o| if o == b { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let hard = table.estimate(&arch);
+        let soft = table.estimate_soft(&p);
+        assert!((hard - soft).abs() < 1e-9, "hard {hard} soft {soft}");
+    });
+}
+
+#[test]
+fn prop_estimate_monotone_in_block_addition() {
+    forall(200, |rng| {
+        let opts = SearchSpace::Paper.options(8);
+        let lats: Vec<f64> = opts.iter().map(|_| rng.f64() * 10.0).collect();
+        let table = LatencyTable::from_measured(&opts, lats).unwrap();
+        let slots = 1 + rng.below(8);
+        let mut arch = random_arch(rng, slots);
+        let base = table.estimate(&arch);
+        arch.blocks.push(opts[rng.below(opts.len())].clone());
+        assert!(table.estimate(&arch) >= base - 1e-12);
+    });
+}
+
+// ------------------------------------------------------------- arch decode
+
+#[test]
+fn prop_space_decode_total_and_valid() {
+    forall(300, |rng| {
+        for space in [SearchSpace::Paper, SearchSpace::IsoParam] {
+            let opts = space.options(8);
+            let slots = 1 + rng.below(16);
+            let idx: Vec<usize> = (0..slots).map(|_| rng.below(opts.len() + 3)).collect();
+            let arch = space.decode(8, &idx);
+            assert_eq!(arch.len(), slots);
+            for b in &arch.blocks {
+                assert!(opts.contains(b), "decoded block outside space");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_arch_json_roundtrip() {
+    forall(200, |rng| {
+        let slots = 1 + rng.below(20);
+        let arch = random_arch(rng, slots);
+        let j = arch.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        let blocks: Vec<Block> = parsed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| Block::from_json(b).unwrap())
+            .collect();
+        assert_eq!(Arch::new(blocks), arch);
+    });
+}
+
+// ------------------------------------------------------------ data pipeline
+
+#[test]
+fn prop_batcher_yields_shifted_contiguous_windows() {
+    forall(60, |rng| {
+        let n = 600 + rng.below(3000);
+        let stream: Vec<i32> = (0..n as i32).collect();
+        let batch = 1 + rng.below(4);
+        let seq = 2 + rng.below(16);
+        if n / batch <= seq + 1 {
+            return;
+        }
+        let mut b = TxlBatcher::new(&stream, batch, seq);
+        let mut prev_end: Option<Vec<i32>> = None;
+        for _ in 0..b.batches_per_epoch().min(10) {
+            let (bt, wrapped) = b.next();
+            assert_eq!(bt.x.len(), batch * seq);
+            for r in 0..batch {
+                for i in 0..seq {
+                    assert_eq!(bt.y[r * seq + i], bt.x[r * seq + i] + 1);
+                }
+            }
+            if let (Some(pe), false) = (&prev_end, wrapped) {
+                for r in 0..batch {
+                    assert_eq!(bt.x[r * seq], pe[r] + 1, "segments must be contiguous");
+                }
+            }
+            prev_end = Some((0..batch).map(|r| bt.x[r * seq + seq - 1]).collect());
+        }
+    });
+}
+
+#[test]
+fn prop_corpus_tokens_in_vocab_any_seed() {
+    forall(20, |rng| {
+        let vocab = 30 + rng.below(200);
+        let c = Corpus::synth_char(5_000 + rng.below(5_000), vocab, rng.next_u64());
+        for split in [&c.train, &c.valid, &c.test] {
+            assert!(split.iter().all(|&t| t >= 0 && (t as usize) < vocab));
+        }
+    });
+}
+
+// ---------------------------------------------------------------- metrics
+
+#[test]
+fn prop_pearson_bounded_and_symmetric() {
+    forall(200, |rng| {
+        let n = 3 + rng.below(50);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let r = metrics::pearson(&xs, &ys);
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&r));
+        let r2 = metrics::pearson(&ys, &xs);
+        assert!((r - r2).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    forall(300, |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.f64() < 0.5),
+                2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+                3 => {
+                    let len = rng.below(12);
+                    Json::Str((0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+                }
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    });
+}
