@@ -1,13 +1,14 @@
-//! Serving example: SLA-aware routing over PLANER's latency variants with
-//! wave batching; reports per-variant latency percentiles and throughput.
+//! Serving example: concurrent multi-variant serving — SLA-aware routing
+//! over PLANER's latency variants, one deadline-aware decode worker per
+//! variant, graceful drain; reports per-variant latency percentiles and
+//! throughput, with a serial replay of the same trace for contrast.
 //!
 //!     cargo run --release --example serve_batched
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use planer::runtime::Engine;
-use planer::serve::{DecodeEngine, Request, Router, RouterPolicy, ServeMetrics, VariantInfo, WaveBatcher};
-use planer::util::rng::Rng;
+use planer::serve::{Cluster, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new(std::path::Path::new("artifacts"))?;
@@ -23,53 +24,46 @@ fn main() -> anyhow::Result<()> {
     }
     println!("serving variants: {names:?} (width {})", cfg.batch);
 
-    // profile a decode step per variant for the router
-    let mut variants = Vec::new();
-    for (i, n) in names.iter().enumerate() {
-        let gen = engine.program(&format!("gen_{n}"))?;
-        let inputs: Vec<xla::Literal> =
-            gen.spec.inputs.iter().map(planer::runtime::literal::zeros).collect();
-        let t = planer::util::timer::time_iters(|| { gen.execute(&inputs).unwrap(); }, 1, 5);
-        let lat = planer::util::timer::stats(&t).p50;
-        println!("  {n}: {:6.2}ms/decode-step", lat * 1e3);
-        variants.push(VariantInfo {
-            name: n.clone(),
-            token_latency: lat,
-            quality: (names.len() - i) as f64,
-        });
-    }
-    let router = Router::new(variants.clone(), RouterPolicy::QualityWithinSla);
+    // Cluster::new profiles one decode step per variant for the router and
+    // spins the per-variant decode state
+    let mut cluster = Cluster::new(&engine, &names, 0)?;
+    cluster.set_max_wait(Duration::from_millis(5));
 
-    // 20 requests with mixed SLAs
-    let mut rng = Rng::new(7);
-    let slow = variants.iter().map(|v| v.token_latency).fold(0.0, f64::max);
-    let mut queues: std::collections::HashMap<String, WaveBatcher> = names
-        .iter()
-        .map(|n| (n.clone(), WaveBatcher::new(cfg.batch, Duration::ZERO)))
-        .collect();
-    for id in 0..20u64 {
-        let prompt: Vec<i32> = (0..3 + rng.below(4)).map(|_| rng.below(cfg.vocab) as i32).collect();
-        let sla = if id % 2 == 0 { f64::INFINITY } else { slow * 5.0 };
-        let r = Request { id, prompt, n_gen: 5, sla };
-        let v = router.route(&r).to_string();
-        queues.get_mut(&v).unwrap().submit(r);
-    }
+    // bursty arrivals + bimodal SLAs: the mix that exercises both full
+    // waves (bursts) and the partial-wave deadline (quiet trickles) —
+    // replayed in realtime so the arrival gaps actually happen
+    let mut gen = WorkloadGen::bursty(cfg.vocab);
+    gen.arrival = planer::serve::Arrival::BurstyPoisson {
+        rps: 20.0,
+        burst_rps: 500.0,
+        mean_phase_s: 0.2, // compressed phases keep the demo under ~1s/replay
+    };
+    gen.sla_tight_s = 0.05;
+    gen.sla_loose_s = 2.0;
+    let trace = gen.generate(24, 7);
 
-    for n in &names {
-        let de = DecodeEngine::new(&engine, n)?;
-        let mut st = de.init_state(0)?;
-        let q = queues.get_mut(n).unwrap();
-        let mut m = ServeMetrics::default();
-        while let Some(w) = q.next_wave(std::time::Instant::now()) {
-            de.decode_wave(&mut st, &w, &mut m)?;
-        }
-        if m.requests > 0 {
-            println!(
-                "[{n}] {:2} reqs {:2} waves occ {:4.2} p50 {:7.1}ms p95 {:7.1}ms {:7.1} tok/s",
-                m.requests, m.waves, m.occupancy,
-                m.p50() * 1e3, m.p95() * 1e3, m.throughput_tok_s()
-            );
-        }
+    let t0 = Instant::now();
+    let serial = cluster.replay(&trace, true)?;
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let concurrent = cluster.replay_concurrent(&trace, true)?;
+    let t_concurrent = t0.elapsed().as_secs_f64();
+
+    for r in &concurrent {
+        println!(
+            "  req {:2} via {:10} {:2} tokens in {:7.1}ms",
+            r.id,
+            r.variant,
+            r.tokens.len(),
+            r.latency * 1e3
+        );
     }
+    print!("{}", cluster.report());
+    println!(
+        "wall-clock: serial {t_serial:.2}s vs concurrent {t_concurrent:.2}s \
+         ({} responses each)",
+        serial.len()
+    );
     Ok(())
 }

@@ -1,15 +1,23 @@
 //! Bench: L3 hot-path micro-benchmarks — batcher, router, latency estimator,
-//! JSON parser, segment batcher.  Goal (§Perf): coordinator overhead per
-//! request orders of magnitude below one PJRT decode step.
+//! JSON parser, segment batcher — plus a serial-vs-concurrent serving A/B
+//! over simulated decode workers (no artifacts needed).  Goal (§Perf):
+//! coordinator overhead per request orders of magnitude below one PJRT
+//! decode step, and concurrent wave serving beating the serial baseline on
+//! wall-clock and p95 for multi-variant traces.
 //!
 //!     cargo bench --bench coordinator
 
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use planer::arch::{Arch, SearchSpace};
 use planer::data::TxlBatcher;
 use planer::latency::LatencyTable;
-use planer::serve::{Request, Router, RouterPolicy, VariantInfo, WaveBatcher};
+use planer::serve::{
+    admit, percentile, BatchWave, Request, Response, Router, RouterPolicy, VariantInfo,
+    WaveBatcher, WorkerLane, WorkloadGen,
+};
 use planer::util::json::Json;
 use planer::util::rng::Rng;
 
@@ -103,4 +111,128 @@ fn main() {
 
     println!("\nreference: one tiny-model PJRT decode step is ~1-10ms; every");
     println!("coordinator operation above must stay (and is) well under that.");
+
+    serve_ab();
+}
+
+/// Serial-vs-concurrent serving A/B over simulated decode workers: three
+/// variants whose `WaveExecutor` sleeps a fixed per-wave service time
+/// (standing in for one PJRT decode wave), Poisson arrivals, bimodal SLAs.
+/// Serial replays waves inline on the admission thread (so decode blocks
+/// admission and variants never overlap); concurrent runs the real
+/// WorkerLane pump.  Both wall-clock and p95 should drop with concurrency.
+fn serve_ab() {
+    // (name, quality-ordered token latency for routing, per-wave service)
+    let sim: [(&str, f64, Duration); 3] = [
+        ("base", 1e-3, Duration::from_millis(20)),
+        ("mid", 5e-4, Duration::from_millis(10)),
+        ("fast", 1e-4, Duration::from_millis(5)),
+    ];
+    let width = 8;
+    let max_wait = Duration::from_millis(2);
+    let router = Router::new(
+        sim.iter()
+            .enumerate()
+            .map(|(i, (n, lat, _))| VariantInfo {
+                name: n.to_string(),
+                token_latency: *lat,
+                quality: (sim.len() - i) as f64,
+            })
+            .collect(),
+        RouterPolicy::QualityWithinSla,
+    );
+
+    let mut gen = WorkloadGen::bimodal_sla(256, 0.004, 2.0);
+    gen.arrival = planer::serve::Arrival::Poisson { rps: 400.0 };
+    let trace = gen.generate(96, 42);
+
+    let executor = |name: &'static str, service: Duration| {
+        move |wave: &BatchWave| -> anyhow::Result<Vec<Response>> {
+            std::thread::sleep(service); // one simulated decode wave
+            let done = Instant::now();
+            Ok(wave
+                .requests
+                .iter()
+                .map(|(r, t)| Response {
+                    id: r.id,
+                    tokens: vec![0; r.n_gen],
+                    latency: done.duration_since(*t).as_secs_f64(),
+                    variant: name.to_string(),
+                })
+                .collect())
+        }
+    };
+
+    // -- serial baseline: decode inline on the admission thread
+    let t0 = Instant::now();
+    let mut queues: HashMap<&str, WaveBatcher> = sim
+        .iter()
+        .map(|(n, _, _)| (*n, WaveBatcher::new(width, max_wait)))
+        .collect();
+    let mut execs: HashMap<&str, _> = sim
+        .iter()
+        .map(|(n, _, s)| (*n, executor(*n, *s)))
+        .collect();
+    let mut serial: Vec<Response> = Vec::new();
+    let start = Instant::now();
+    for tr in &trace {
+        let due = start + Duration::from_secs_f64(tr.at);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let v = router.route(&tr.request);
+        queues.get_mut(v).unwrap().submit(tr.request.clone());
+        for (n, q) in queues.iter_mut() {
+            while let Some(w) = q.next_wave(Instant::now()) {
+                serial.extend(execs.get_mut(n).unwrap()(&w).unwrap());
+            }
+        }
+    }
+    for (n, q) in queues.iter_mut() {
+        while let Some(w) = q.force_wave() {
+            serial.extend(execs.get_mut(n).unwrap()(&w).unwrap());
+        }
+    }
+    let serial_wall = t0.elapsed().as_secs_f64();
+
+    // -- concurrent: one deadline-aware worker per variant
+    let t0 = Instant::now();
+    let mut senders = HashMap::new();
+    let mut handles = Vec::new();
+    for (n, _, s) in &sim {
+        let (tx, rx) = channel();
+        senders.insert(n.to_string(), tx);
+        let lane = WorkerLane::new(*n, WaveBatcher::new(width, max_wait), executor(*n, *s));
+        handles.push(std::thread::spawn(move || lane.run(rx).unwrap()));
+    }
+    admit(&trace, &router, &senders, true);
+    drop(senders);
+    let mut concurrent: Vec<Response> = Vec::new();
+    for h in handles {
+        concurrent.extend(h.join().unwrap().0);
+    }
+    let concurrent_wall = t0.elapsed().as_secs_f64();
+
+    let p95 = |rs: &[Response]| {
+        let l: Vec<f64> = rs.iter().map(|r| r.latency).collect();
+        percentile(&l, 0.95)
+    };
+    println!(
+        "\nserve A/B (3 simulated variants, {} reqs, Poisson 400rps, bimodal SLA):",
+        trace.len()
+    );
+    println!(
+        "  serial:     wall {:7.1}ms  p95 {:6.1}ms  ({} responses)",
+        serial_wall * 1e3,
+        p95(&serial) * 1e3,
+        serial.len()
+    );
+    println!(
+        "  concurrent: wall {:7.1}ms  p95 {:6.1}ms  ({} responses)",
+        concurrent_wall * 1e3,
+        p95(&concurrent) * 1e3,
+        concurrent.len()
+    );
+    assert_eq!(serial.len(), concurrent.len(), "both paths must answer everything");
 }

@@ -1,11 +1,15 @@
 //! Bench: end-to-end per-step latency of every exported program class —
 //! train / eval / infer / decode — for every arch preset (the numbers behind
-//! Fig 8's measured column and EXPERIMENTS.md §Perf).
+//! Fig 8's measured column and EXPERIMENTS.md §Perf), plus a serial-vs-
+//! concurrent serving A/B over the real decode engines.
 //!
 //!     cargo bench --bench end_to_end
 
+use std::time::{Duration, Instant};
+
 use planer::latency::Profiler;
 use planer::runtime::{literal, Engine, StateStore};
+use planer::serve::{percentile, Cluster, Response, WorkloadGen};
 use planer::util::timer;
 
 fn main() -> anyhow::Result<()> {
@@ -43,7 +47,61 @@ fn main() -> anyhow::Result<()> {
         let t = bench_threaded(&engine, &format!("train_{a}"), &format!("init_{a}"))?;
         println!("  {a:12} {:9.0} tok/s", cfg.batch as f64 * cfg.seq_len as f64 / t);
     }
+
+    serve_ab(&engine)?;
+
     println!("\nXLA compile total: {:.1}s", engine.compile_seconds());
+    Ok(())
+}
+
+/// Serial-vs-concurrent serving A/B over the real decode engines: the same
+/// bimodal-SLA trace replayed once on the single-threaded baseline and once
+/// with one deadline-aware worker per variant.  Concurrency overlaps the
+/// variants' decode waves, so wall-clock and p95 should both drop on any
+/// ≥2-variant trace.
+fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
+    let names: Vec<String> = engine
+        .manifest
+        .arch_names()
+        .into_iter()
+        .filter(|a| engine.has_program(&format!("gen_{a}")))
+        .map(String::from)
+        .take(3)
+        .collect();
+    if names.len() < 2 {
+        println!("\nserve A/B skipped: needs >=2 gen programs, found {}", names.len());
+        return Ok(());
+    }
+    let mut cluster = Cluster::new(engine, &names, 0)?;
+    cluster.set_max_wait(Duration::from_millis(2));
+    let gen = WorkloadGen::bimodal_sla(engine.manifest.config.vocab, 0.05, 10.0);
+    let trace = gen.generate(32, 1);
+
+    let p95 = |rs: &[Response]| {
+        let l: Vec<f64> = rs.iter().map(|r| r.latency).collect();
+        percentile(&l, 0.95)
+    };
+
+    let t0 = Instant::now();
+    let serial = cluster.replay(&trace, false)?;
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let concurrent = cluster.replay_concurrent(&trace, false)?;
+    let concurrent_wall = t0.elapsed().as_secs_f64();
+
+    println!("\nserve A/B ({} variants, {} reqs, bimodal SLA):", names.len(), trace.len());
+    println!(
+        "  serial:     wall {:7.1}ms  p95 {:7.1}ms",
+        serial_wall * 1e3,
+        p95(&serial) * 1e3
+    );
+    println!(
+        "  concurrent: wall {:7.1}ms  p95 {:7.1}ms  ({:.2}x wall)",
+        concurrent_wall * 1e3,
+        p95(&concurrent) * 1e3,
+        serial_wall / concurrent_wall
+    );
+    anyhow::ensure!(serial.len() == concurrent.len(), "A/B answered different request counts");
     Ok(())
 }
 

@@ -25,9 +25,7 @@ use planer::data::Corpus;
 use planer::latency::Profiler;
 use planer::runtime::Engine;
 use planer::search::SearchConfig;
-use planer::serve::{DecodeEngine, Request, Router, RouterPolicy, ServeMetrics, VariantInfo, WaveBatcher};
 use planer::train::TrainConfig;
-use planer::util::rng::Rng;
 
 fn main() {
     if let Err(e) = run() {
@@ -138,7 +136,14 @@ fn run() -> Result<()> {
         "serve" => {
             let n_req = args.get_usize("requests", 12)?;
             let arch_flag = args.get_or("arch", "auto");
-            serve_demo(&engine, &corpus, n_req, &arch_flag, seed as u64)?;
+            let opts = ServeOpts {
+                workers: args.get_usize("workers", 0)?,
+                max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
+                mode: args.get_or("mode", "concurrent"),
+                realtime: args.has("realtime"),
+                rps: args.get_f64("rps", 0.0)?,
+            };
+            serve_demo(&engine, n_req, &arch_flag, seed, &opts)?;
         }
 
         "profile" => {
@@ -212,7 +217,7 @@ fn run() -> Result<()> {
         }
 
         "serve-trace" => {
-            use planer::serve::{Cluster, WorkloadGen};
+            use planer::serve::{Arrival, Cluster, WorkloadGen};
             let n = args.get_usize("requests", 16)?;
             let names: Vec<String> = engine
                 .manifest
@@ -223,12 +228,42 @@ fn run() -> Result<()> {
                 .take(args.get_usize("variants", 3)?)
                 .collect();
             let mut cluster = Cluster::new(&engine, &names, seed)?;
-            let gen = WorkloadGen::new(engine.manifest.config.vocab);
+            cluster.set_max_wait(Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64));
+            let mut gen = match args.get_or("trace", "burst").as_str() {
+                "burst" => WorkloadGen::new(engine.manifest.config.vocab),
+                "bursty" => WorkloadGen::bursty(engine.manifest.config.vocab),
+                "bimodal" => WorkloadGen::bimodal_sla(engine.manifest.config.vocab, 0.05, 2.0),
+                other => bail!("unknown trace shape '{other}' (burst|bursty|bimodal)"),
+            };
+            if let Some(rps) = args.get("rps") {
+                gen.arrival = Arrival::Poisson { rps: rps.parse()? };
+            }
             let trace = gen.generate(n, seed as u64);
-            let t0 = std::time::Instant::now();
-            let responses = cluster.replay(&trace, false)?;
-            println!("{} responses in {:.2}s", responses.len(), t0.elapsed().as_secs_f64());
-            print!("{}", cluster.report());
+            let realtime = args.has("realtime");
+            let mode = args.get_or("mode", "concurrent");
+            if mode == "serial" || mode == "ab" {
+                let t0 = std::time::Instant::now();
+                let responses = cluster.replay(&trace, realtime)?;
+                println!(
+                    "serial:     {} responses in {:.2}s",
+                    responses.len(),
+                    t0.elapsed().as_secs_f64()
+                );
+                print!("{}", cluster.report());
+            }
+            if mode == "concurrent" || mode == "ab" {
+                let t0 = std::time::Instant::now();
+                let responses = cluster.replay_concurrent(&trace, realtime)?;
+                println!(
+                    "concurrent: {} responses in {:.2}s",
+                    responses.len(),
+                    t0.elapsed().as_secs_f64()
+                );
+                print!("{}", cluster.report());
+            }
+            if !["serial", "concurrent", "ab"].contains(&mode.as_str()) {
+                bail!("unknown mode '{mode}' (serial|concurrent|ab)");
+            }
         }
 
         "bench" => {
@@ -276,21 +311,36 @@ fn run() -> Result<()> {
     Ok(())
 }
 
-/// Serving demo: Poisson arrivals, SLA-aware routing across every arch that
-/// has a gen program, wave batching, latency/throughput report.
+/// `planer serve` options (see HELP).
+struct ServeOpts {
+    /// Cap on decode workers = variants served (0 = one per gen program).
+    workers: usize,
+    /// Partial-wave deadline.
+    max_wait: Duration,
+    /// "concurrent" (default), "serial", or "ab" (run both, compare).
+    mode: String,
+    /// Honour arrival offsets in wall-clock time.
+    realtime: bool,
+    /// Poisson arrival rate (0 = closed-loop burst).
+    rps: f64,
+}
+
+/// Serving demo: SLA-aware routing across every arch that has a gen
+/// program, one deadline-aware decode worker per variant, wave batching,
+/// latency/throughput report.  `--mode ab` replays the same trace serially
+/// and concurrently to show the overlap win.
 fn serve_demo(
     engine: &Engine,
-    _corpus: &Corpus,
     n_req: usize,
     arch_flag: &str,
-    seed: u64,
+    seed: i32,
+    opts: &ServeOpts,
 ) -> Result<()> {
-    let cfg = &engine.manifest.config;
-    let prof = Profiler::new(engine);
+    use planer::serve::{Arrival, Cluster, WorkloadGen};
 
     // variant pool: every preset arch with a gen program (or the one forced
-    // via --arch), profiled for routing
-    let names: Vec<String> = if arch_flag == "auto" {
+    // via --arch), capped by --workers
+    let mut names: Vec<String> = if arch_flag == "auto" {
         engine
             .manifest
             .arch_names()
@@ -301,94 +351,58 @@ fn serve_demo(
     } else {
         vec![arch_flag.to_string()]
     };
+    if opts.workers > 0 {
+        names.truncate(opts.workers);
+    }
     anyhow::ensure!(!names.is_empty(), "no gen programs in manifest");
+    println!("{} decode workers (one per variant): {names:?}", names.len());
 
-    let mut variants = Vec::new();
-    for (q, name) in names.iter().enumerate() {
-        // token latency: measured one decode step / batch width
-        let de = DecodeEngine::new(engine, name)?;
-        let mut st = de.init_state(seed as i32)?;
-        let wave = WaveBatcher::new(de.width, Duration::from_millis(0));
-        let _ = (st.has_group("params"), wave.pending());
-        let gen = engine.program(&format!("gen_{name}"))?;
-        let t = planer::util::timer::time_iters(
-            || {
-                let inputs: Vec<xla::Literal> =
-                    gen.spec.inputs.iter().map(planer::runtime::literal::zeros).collect();
-                gen.execute(&inputs).unwrap();
-            },
-            1,
-            3,
-        );
-        let tok_lat = planer::util::timer::stats(&t).p50;
-        variants.push(VariantInfo {
-            name: name.clone(),
-            token_latency: tok_lat,
-            quality: names.len() as f64 - q as f64,
-        });
-        println!("variant {name}: token latency {:6.2}ms", tok_lat * 1e3);
+    let mut cluster = Cluster::new(engine, &names, seed)?;
+    cluster.set_max_wait(opts.max_wait);
+
+    // bimodal-SLA workload so the router actually spreads traffic
+    let mut gen = WorkloadGen::bimodal_sla(engine.manifest.config.vocab, 0.05, 2.0);
+    if opts.rps > 0.0 {
+        gen.arrival = Arrival::Poisson { rps: opts.rps };
     }
-    let router = Router::new(variants.clone(), RouterPolicy::QualityWithinSla);
+    let trace = gen.generate(n_req, seed as u64);
 
-    // synthetic request stream
-    let mut rng = Rng::new(seed);
-    let mut batchers: std::collections::HashMap<String, WaveBatcher> = names
-        .iter()
-        .map(|n| (n.clone(), WaveBatcher::new(cfg.batch, Duration::from_millis(5))))
-        .collect();
-    for id in 0..n_req as u64 {
-        let len = 2 + rng.below(6);
-        let prompt: Vec<i32> = (0..len).map(|_| rng.below(cfg.vocab) as i32).collect();
-        let slow = variants.iter().map(|v| v.token_latency).fold(0.0, f64::max);
-        let sla = if rng.f64() < 0.5 {
-            slow * 6.0 // tight: forces a cheap variant
+    let mut run = |label: &str, concurrent: bool| -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let responses = if concurrent {
+            cluster.replay_concurrent(&trace, opts.realtime)?
         } else {
-            f64::INFINITY
+            cluster.replay(&trace, opts.realtime)?
         };
-        let req = Request { id, prompt, n_gen: 4, sla };
-        let variant = router.route(&req).to_string();
-        batchers.get_mut(&variant).unwrap().submit(req);
-    }
-
-    // drain every queue in waves
-    let mut total = ServeMetrics::default();
-    for name in &names {
-        let de = DecodeEngine::new(engine, name)?;
-        let mut st = de.init_state(seed as i32)?;
-        let b = batchers.get_mut(name).unwrap();
-        let mut metrics = ServeMetrics::default();
-        while let Some(wave) = b.next_wave(std::time::Instant::now()) {
-            let rs = de.decode_wave(&mut st, &wave, &mut metrics)?;
-            for r in rs {
-                println!(
-                    "  req {:3} via {:10} {:3} tokens in {:7.1}ms",
-                    r.id,
-                    r.variant,
-                    r.tokens.len(),
-                    r.latency * 1e3
-                );
-            }
-        }
-        if metrics.requests > 0 {
+        let wall = t0.elapsed().as_secs_f64();
+        for r in &responses {
             println!(
-                "[{name}] {} reqs {} waves occupancy {:4.2} p50 {:6.1}ms p95 {:6.1}ms {:6.1} tok/s",
-                metrics.requests,
-                metrics.waves,
-                metrics.occupancy,
-                metrics.p50() * 1e3,
-                metrics.p95() * 1e3,
-                metrics.throughput_tok_s()
+                "  req {:3} via {:10} {:3} tokens in {:7.1}ms",
+                r.id,
+                r.variant,
+                r.tokens.len(),
+                r.latency * 1e3
             );
         }
-        total.requests += metrics.requests;
-        total.tokens_out += metrics.tokens_out;
-        total.busy_secs += metrics.busy_secs;
+        println!("{label}: {} responses in {wall:.2}s", responses.len());
+        print!("{}", cluster.report());
+        Ok(wall)
+    };
+
+    match opts.mode.as_str() {
+        "concurrent" => {
+            run("concurrent", true)?;
+        }
+        "serial" => {
+            run("serial", false)?;
+        }
+        "ab" => {
+            let s = run("serial", false)?;
+            let c = run("concurrent", true)?;
+            println!("A/B wall-clock: serial {s:.2}s vs concurrent {c:.2}s ({:.2}x)", s / c);
+        }
+        other => bail!("unknown serve mode '{other}' (concurrent|serial|ab)"),
     }
-    println!(
-        "total: {} requests, {:.1} tok/s aggregate",
-        total.requests,
-        total.throughput_tok_s()
-    );
     Ok(())
 }
 
@@ -399,12 +413,17 @@ USAGE: planer <cmd> [flags]
 
   search   --target 0.65 --epochs 10 --steps 20 [--iso] [--name found]
   train    --arch baseline --steps 200 [--balance 0.01]
-  serve    --requests 12 [--arch auto]
+  serve    --requests 12 [--arch auto] [--workers N] [--max-wait-ms 5]
+           [--mode concurrent|serial|ab] [--rps R] [--realtime]
+           (one deadline-aware decode worker per variant; --mode ab replays
+            the same trace serially then concurrently and compares)
   profile
   compile  --name <arch> --arch-json <path> [--config tiny]
   archs
   bench    fig1|fig2|fig4|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|table1|all-static
-  roofline | ablation | serve-trace --requests 16
+  roofline | ablation
+  serve-trace --requests 16 [--variants 3] [--trace burst|bursty|bimodal]
+              [--mode concurrent|serial|ab] [--max-wait-ms 2] [--rps R] [--realtime]
 
 global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
 ";

@@ -42,6 +42,14 @@ impl WaveBatcher {
         self.queue.len()
     }
 
+    /// Instant at which the oldest pending request's `max_wait` expires —
+    /// the moment a partial wave must fire.  None when the queue is empty.
+    /// Decode workers sleep until exactly this deadline (or the next
+    /// admission, whichever comes first).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|(_, t)| *t + self.max_wait)
+    }
+
     /// A wave is ready when the queue can fill the width, or the oldest
     /// request has waited max_wait.
     pub fn ready(&self, now: Instant) -> bool {
@@ -116,6 +124,34 @@ mod tests {
             .collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_request() {
+        let mut b = WaveBatcher::new(4, Duration::from_millis(50));
+        assert!(b.deadline().is_none());
+        let t0 = Instant::now();
+        b.submit_at(req(1), t0);
+        b.submit_at(req(2), t0 + Duration::from_millis(30));
+        // deadline follows the *oldest* request
+        assert_eq!(b.deadline(), Some(t0 + Duration::from_millis(50)));
+        // once that wave pops, the next oldest defines the new deadline
+        let _ = b.force_wave();
+        assert!(b.deadline().is_none());
+    }
+
+    #[test]
+    fn partial_wave_fires_once_real_max_wait_elapses() {
+        // wall-clock version of the deadline contract: not ready before
+        // max_wait, ready (and poppable) after
+        let mut b = WaveBatcher::new(8, Duration::from_millis(10));
+        b.submit(req(1));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.next_wave(Instant::now()).is_none());
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.ready(Instant::now()));
+        let w = b.next_wave(Instant::now()).unwrap();
+        assert_eq!(w.requests.len(), 1);
     }
 
     #[test]

@@ -1,27 +1,98 @@
-//! Serving cluster: one decode engine per latency variant, SLA routing at
-//! admission, per-variant wave queues, timed trace replay.  The top of the
-//! serving stack — `planer serve` and the serve_batched example drive it.
+//! Serving cluster: concurrent multi-variant decode.
+//!
+//! Architecture (one `replay_concurrent` run):
+//!
+//! ```text
+//!   admission thread (caller)          decode workers (scoped, 1/variant)
+//!   ------------------------          --------------------------------
+//!   trace ──▶ Router ──▶ mpsc ──▶ [lane: WaveBatcher + DecodeEngine
+//!             (SLA fit)   per         + StateStore]  — fires full waves
+//!                         lane        immediately, partial waves when the
+//!                                     oldest request's max_wait expires
+//! ```
+//!
+//! Each variant gets its own worker thread owning that variant's
+//! `DecodeEngine`, `StateStore` and `WaveBatcher`; the admission loop (the
+//! calling thread) routes each request to the cheapest variant that fits
+//! its SLA and sends it down the lane's channel.  Workers overlap decode
+//! across variants — the serial baseline (`replay`) decodes them one at a
+//! time — and the deadline-aware pump keeps tail latency bounded under
+//! trickle arrivals: a partial wave never waits past `max_wait`.
+//!
+//! Shutdown is a graceful drain: when the trace ends the admission side
+//! drops its senders, each worker force-fires whatever is still queued,
+//! and the cluster joins all workers before reporting.  Per-variant
+//! `ServeMetrics` are published to a shared `Mutex` map after every wave,
+//! so `report()` is accurate whichever path (serial/concurrent) ran.
 
 use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::runtime::{Engine, StateStore};
 
-use super::batcher::WaveBatcher;
+use super::batcher::{BatchWave, WaveBatcher};
 use super::engine::{DecodeEngine, ServeMetrics};
 use super::router::{Router, RouterPolicy, VariantInfo};
+use super::worker::{admit, WaveExecutor, WorkerLane};
 use super::workload::TimedRequest;
-use super::Response;
+use super::{Request, Response};
+
+/// Default partial-wave deadline (overridable via `set_max_wait` /
+/// `planer serve --max-wait-ms`).
+pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
+
+/// One variant's decode resources.  Owned by the cluster between runs and
+/// lent to a worker thread during `replay_concurrent`.
+struct Lane<'a> {
+    name: String,
+    engine: DecodeEngine<'a>,
+    state: StateStore,
+    metrics: ServeMetrics,
+}
+
+impl<'a> Lane<'a> {
+    fn execute(
+        &mut self,
+        wave: &BatchWave,
+        shared: &Mutex<HashMap<String, ServeMetrics>>,
+    ) -> Result<Vec<Response>> {
+        // Publishing a snapshot per wave costs a lock + metrics clone; it
+        // buys a map that is always current, so report() can run from any
+        // thread mid-serve (live dashboards) — decode dominates the clone
+        // by orders of magnitude at realistic trace sizes.
+        let rs = self.engine.decode_wave(&mut self.state, wave, &mut self.metrics)?;
+        shared
+            .lock()
+            .unwrap()
+            .insert(self.name.clone(), self.metrics.clone());
+        Ok(rs)
+    }
+}
+
+/// Adapter lending one lane to the generic worker loop for the duration of
+/// a concurrent replay.
+struct LaneExecutor<'l, 'a> {
+    lane: &'l mut Lane<'a>,
+    shared: Arc<Mutex<HashMap<String, ServeMetrics>>>,
+}
+
+impl WaveExecutor for LaneExecutor<'_, '_> {
+    fn execute_wave(&mut self, wave: &BatchWave) -> Result<Vec<Response>> {
+        self.lane.execute(wave, &self.shared)
+    }
+}
 
 pub struct Cluster<'a> {
-    engine: &'a Engine,
     router: Router,
-    engines: HashMap<String, DecodeEngine<'a>>,
-    states: HashMap<String, StateStore>,
-    queues: HashMap<String, WaveBatcher>,
-    pub metrics: HashMap<String, ServeMetrics>,
+    lanes: Vec<Lane<'a>>,
+    /// Latest per-variant metrics, published after every wave (shared with
+    /// worker threads during concurrent replays).
+    metrics: Arc<Mutex<HashMap<String, ServeMetrics>>>,
+    max_wait: Duration,
 }
 
 impl<'a> Cluster<'a> {
@@ -30,9 +101,7 @@ impl<'a> Cluster<'a> {
     /// order (first = best quality).
     pub fn new(engine: &'a Engine, names: &[String], seed: i32) -> Result<Cluster<'a>> {
         let mut variants = Vec::new();
-        let mut engines = HashMap::new();
-        let mut states = HashMap::new();
-        let mut queues = HashMap::new();
+        let mut lanes = Vec::new();
         for (i, name) in names.iter().enumerate() {
             let de = DecodeEngine::new(engine, name)?;
             let st = de.init_state(seed)?;
@@ -56,20 +125,20 @@ impl<'a> Cluster<'a> {
                 token_latency: lat,
                 quality: (names.len() - i) as f64,
             });
-            queues.insert(
-                name.clone(),
-                WaveBatcher::new(de.width, Duration::from_millis(2)),
-            );
-            engines.insert(name.clone(), de);
-            states.insert(name.clone(), st);
+            lanes.push(Lane {
+                name: name.clone(),
+                engine: de,
+                state: st,
+                metrics: ServeMetrics::default(),
+            });
         }
         Ok(Cluster {
-            engine,
             router: Router::new(variants, RouterPolicy::QualityWithinSla),
-            engines,
-            states,
-            queues,
-            metrics: names.iter().map(|n| (n.clone(), ServeMetrics::default())).collect(),
+            lanes,
+            metrics: Arc::new(Mutex::new(
+                names.iter().map(|n| (n.clone(), ServeMetrics::default())).collect(),
+            )),
+            max_wait: DEFAULT_MAX_WAIT,
         })
     }
 
@@ -77,11 +146,43 @@ impl<'a> Cluster<'a> {
         self.router.policy = p;
     }
 
-    /// Replay a timed trace (arrival offsets are honoured relative to start
-    /// when `realtime`; otherwise requests are admitted immediately) and
-    /// drain all queues.  Returns every response.
+    /// Partial-wave deadline applied to every lane on the next replay.
+    pub fn set_max_wait(&mut self, d: Duration) {
+        self.max_wait = d;
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        self.lanes.iter().map(|l| l.name.clone()).collect()
+    }
+
+    /// Snapshot of the per-variant metrics map.
+    pub fn metrics_snapshot(&self) -> HashMap<String, ServeMetrics> {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    fn reset_metrics(&mut self) {
+        for lane in &mut self.lanes {
+            lane.metrics = ServeMetrics::default();
+        }
+        let mut m = self.metrics.lock().unwrap();
+        for lane in &self.lanes {
+            m.insert(lane.name.clone(), ServeMetrics::default());
+        }
+    }
+
+    /// Serial replay: the single-threaded baseline the A/B bench compares
+    /// against.  Decodes variants inline on the admission thread, but — like
+    /// the concurrent path — honours the `max_wait` deadline, so partial
+    /// waves fire on time during admission instead of starving until the
+    /// final drain (the old `pending >= width` gate never consulted the
+    /// timeout).  Arrival offsets are honoured when `realtime`.
     pub fn replay(&mut self, trace: &[TimedRequest], realtime: bool) -> Result<Vec<Response>> {
-        let _ = self.engine;
+        self.reset_metrics();
+        let mut queues: HashMap<String, WaveBatcher> = self
+            .lanes
+            .iter()
+            .map(|l| (l.name.clone(), WaveBatcher::new(l.engine.width, self.max_wait)))
+            .collect();
         let start = Instant::now();
         let mut responses = Vec::new();
         for tr in trace {
@@ -93,57 +194,118 @@ impl<'a> Cluster<'a> {
                 }
             }
             let variant = self.router.route(&tr.request).to_string();
-            self.queues.get_mut(&variant).unwrap().submit(tr.request.clone());
-            // opportunistically serve full waves as they form
-            responses.extend(self.pump(&variant, false)?);
+            queues.get_mut(&variant).unwrap().submit(tr.request.clone());
+            // fire whatever is due anywhere: a full wave on the routed lane,
+            // or a deadline-expired partial on any other lane
+            for lane in &mut self.lanes {
+                let q = queues.get_mut(&lane.name).unwrap();
+                while let Some(w) = q.next_wave(Instant::now()) {
+                    responses.extend(lane.execute(&w, &self.metrics)?);
+                }
+            }
         }
         // drain leftovers (fire partial waves)
-        let names: Vec<String> = self.queues.keys().cloned().collect();
-        for n in names {
-            responses.extend(self.pump(&n, true)?);
+        for lane in &mut self.lanes {
+            let q = queues.get_mut(&lane.name).unwrap();
+            while let Some(w) = q.force_wave() {
+                responses.extend(lane.execute(&w, &self.metrics)?);
+            }
         }
         Ok(responses)
     }
 
-    fn pump(&mut self, variant: &str, force: bool) -> Result<Vec<Response>> {
-        let mut out = Vec::new();
-        let de = &self.engines[variant];
-        let q = self.queues.get_mut(variant).unwrap();
-        let m = self.metrics.get_mut(variant).unwrap();
-        let st = self.states.get_mut(variant).unwrap();
-        loop {
-            let now = Instant::now();
-            let wave = if force {
-                q.force_wave()
-            } else if q.pending() >= de.width {
-                q.next_wave(now)
-            } else {
-                None
-            };
-            match wave {
-                Some(w) => out.extend(de.decode_wave(st, &w, m)?),
-                None => break,
+    /// Concurrent replay: one decode worker thread per variant, fed by this
+    /// (admission) thread through per-lane channels.  Workers fire full
+    /// waves immediately and partial waves on the `max_wait` deadline, then
+    /// drain gracefully when admission ends.  Responses are returned sorted
+    /// by request id (cross-variant completion order is nondeterministic).
+    pub fn replay_concurrent(
+        &mut self,
+        trace: &[TimedRequest],
+        realtime: bool,
+    ) -> Result<Vec<Response>> {
+        self.reset_metrics();
+        // split borrows up front: the scope closure must not capture `self`
+        // itself (lanes are lent &mut to workers while router/metrics are
+        // shared with the admission side)
+        let Cluster { router, lanes, metrics, max_wait } = self;
+        let router: &Router = router;
+        let metrics: &Arc<Mutex<HashMap<String, ServeMetrics>>> = metrics;
+        let max_wait = *max_wait;
+        let mut responses = Vec::new();
+        let mut errors: Vec<anyhow::Error> = Vec::new();
+
+        std::thread::scope(|s| {
+            let mut senders: HashMap<String, Sender<(Request, Instant)>> = HashMap::new();
+            let mut handles = Vec::new();
+            for lane in lanes.iter_mut() {
+                let (tx, rx) = channel();
+                senders.insert(lane.name.clone(), tx);
+                let name = lane.name.clone();
+                let width = lane.engine.width;
+                let worker = WorkerLane::new(
+                    name.clone(),
+                    WaveBatcher::new(width, max_wait),
+                    LaneExecutor { lane, shared: Arc::clone(metrics) },
+                );
+                handles.push((name, s.spawn(move || worker.run(rx))));
             }
+
+            admit(trace, router, &senders, realtime);
+            // graceful drain: closing the channels tells every worker to
+            // fire its remaining partials and return
+            drop(senders);
+
+            for (name, h) in handles {
+                match h.join() {
+                    Ok(Ok((rs, _exec))) => responses.extend(rs),
+                    Ok(Err(e)) => errors.push(e.context(format!("worker '{name}'"))),
+                    Err(_) => errors.push(anyhow!("worker '{name}' panicked")),
+                }
+            }
+        });
+
+        if let Some(e) = errors.pop() {
+            return Err(e);
         }
-        Ok(out)
+        responses.sort_by_key(|r| r.id);
+        Ok(responses)
     }
 
     pub fn report(&self) -> String {
+        let snapshot = self.metrics.lock().unwrap();
         let mut out = String::from(
             "variant      reqs waves  occup     p50      p95     tok/s\n",
         );
-        for (name, m) in &self.metrics {
+        // lane order (quality rank), not HashMap order: stable reports
+        let mut total = ServeMetrics::default();
+        for lane in &self.lanes {
+            let Some(m) = snapshot.get(&lane.name) else { continue };
             if m.requests == 0 {
                 continue;
             }
+            total.merge(m);
             out.push_str(&format!(
-                "{name:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1}\n",
+                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1}\n",
+                lane.name,
                 m.requests,
                 m.waves,
                 m.occupancy,
                 m.p50() * 1e3,
                 m.p95() * 1e3,
                 m.throughput_tok_s()
+            ));
+        }
+        if total.requests > 0 {
+            out.push_str(&format!(
+                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1}\n",
+                "TOTAL",
+                total.requests,
+                total.waves,
+                total.occupancy,
+                total.p50() * 1e3,
+                total.p95() * 1e3,
+                total.throughput_tok_s()
             ));
         }
         out

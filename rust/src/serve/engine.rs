@@ -19,7 +19,9 @@ pub struct ServeMetrics {
     pub requests: usize,
     pub tokens_out: usize,
     pub busy_secs: f64,
-    /// Sorted per-request latencies (seconds).
+    /// Per-request latencies (seconds), in completion order.  Kept unsorted;
+    /// percentiles select on demand (cold path) so the per-wave hot path
+    /// never pays an O(n log n) re-sort.
     pub latencies: Vec<f64>,
     /// Mean slot occupancy across waves (batching efficiency).
     pub occupancy: f64,
@@ -39,14 +41,37 @@ impl ServeMetrics {
             0.0
         }
     }
+
+    /// Fold another variant's (or worker's) metrics into this one.
+    /// Occupancy is re-weighted by wave count.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        let waves = self.waves + other.waves;
+        if waves > 0 {
+            self.occupancy = (self.occupancy * self.waves as f64
+                + other.occupancy * other.waves as f64)
+                / waves as f64;
+        }
+        self.waves = waves;
+        self.requests += other.requests;
+        self.tokens_out += other.tokens_out;
+        self.busy_secs += other.busy_secs;
+        self.latencies.extend_from_slice(&other.latencies);
+    }
 }
 
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
+/// Nearest-rank percentile, `ceil(q·n) - 1`, over an *unsorted* sample:
+/// selects in O(n) on a scratch copy instead of requiring callers to keep
+/// the sample sorted.  p50 of [1,2,3,4] is 2.0 (rank 2), p95 is 4.0.
+/// Public so benches and reports share one definition of pXX.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
         return 0.0;
     }
-    let i = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
-    sorted[i]
+    let n = xs.len();
+    let rank = ((q * n as f64).ceil() as usize).saturating_sub(1).min(n - 1);
+    let mut scratch = xs.to_vec();
+    let (_, v, _) = scratch.select_nth_unstable_by(rank, |a, b| a.total_cmp(b));
+    *v
 }
 
 pub struct DecodeEngine<'a> {
@@ -92,23 +117,27 @@ impl<'a> DecodeEngine<'a> {
         // fresh memories per wave (sequences are independent)
         st.zero_group(&gen, "mems")?;
 
-        let max_prompt = wave
-            .requests
-            .iter()
-            .map(|(r, _)| r.prompt.len())
-            .max()
-            .unwrap_or(0);
-        let max_gen = wave
-            .requests
-            .iter()
-            .map(|(r, _)| r.n_gen)
-            .max()
-            .unwrap_or(0);
+        let shape = wave_shape(wave);
+        let (max_prompt, max_gen) = (shape.max_prompt, shape.max_gen);
 
         let (xa, _) = gen.spec.in_group("x").context("x group")?;
         let xspec = gen.spec.inputs[xa].clone();
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); wave.requests.len()];
         let mut last_logits: Vec<f32> = Vec::new();
+
+        // All prompts empty but generation requested: without a seed step
+        // `last_logits` stays empty and the decode loop below would silently
+        // emit zero tokens.  Feed one BOS (token 0) step so every slot has
+        // logits to decode from.
+        if shape.needs_bos {
+            let lit = literal::literal_from_value(
+                &xspec,
+                &literal::TensorValue::I32(vec![0i32; self.width]),
+            )?;
+            st.set_single("x", lit);
+            let out = st.run(&gen, &["logits"])?;
+            last_logits = out["logits"].clone();
+        }
 
         // prompt phase: feed token t of every slot (right-aligned so all
         // prompts end on the same step and decode starts together)
@@ -170,9 +199,24 @@ impl<'a> DecodeEngine<'a> {
                 variant: self.arch_name.clone(),
             });
         }
-        metrics.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Ok(responses)
     }
+}
+
+/// Step-count plan for one wave: longest prompt, longest generation, and
+/// whether a BOS seed step is required (every prompt empty yet tokens are
+/// requested — otherwise the decode loop has no logits to start from).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaveShape {
+    pub max_prompt: usize,
+    pub max_gen: usize,
+    pub needs_bos: bool,
+}
+
+pub fn wave_shape(wave: &BatchWave) -> WaveShape {
+    let max_prompt = wave.requests.iter().map(|(r, _)| r.prompt.len()).max().unwrap_or(0);
+    let max_gen = wave.requests.iter().map(|(r, _)| r.n_gen).max().unwrap_or(0);
+    WaveShape { max_prompt, max_gen, needs_bos: max_prompt == 0 && max_gen > 0 }
 }
 
 fn argmax(xs: &[f32]) -> i32 {
@@ -201,6 +245,85 @@ mod tests {
     fn percentile_endpoints() {
         let v = vec![1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
+        // nearest-rank: p50 of four samples is the 2nd, not the 3rd
+        assert_eq!(percentile(&v, 0.50), 2.0);
         assert_eq!(percentile(&v, 0.95), 4.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        // odd length: p50 is the exact middle
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 0.50), 2.0);
+    }
+
+    #[test]
+    fn percentile_handles_unsorted_input() {
+        // latencies are kept in completion order now; selection must not
+        // depend on the caller pre-sorting
+        let v = vec![4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 0.50), 2.0);
+        assert_eq!(percentile(&v, 0.95), 4.0);
+    }
+
+    #[test]
+    fn metrics_merge_weights_occupancy_by_waves() {
+        let mut a = ServeMetrics {
+            waves: 1,
+            requests: 2,
+            tokens_out: 8,
+            busy_secs: 1.0,
+            latencies: vec![0.5],
+            occupancy: 1.0,
+        };
+        let b = ServeMetrics {
+            waves: 3,
+            requests: 3,
+            tokens_out: 12,
+            busy_secs: 2.0,
+            latencies: vec![0.1, 0.2],
+            occupancy: 0.5,
+        };
+        a.merge(&b);
+        assert_eq!(a.waves, 4);
+        assert_eq!(a.requests, 5);
+        assert_eq!(a.tokens_out, 20);
+        assert!((a.occupancy - 0.625).abs() < 1e-12);
+        assert_eq!(a.latencies.len(), 3);
+    }
+
+    fn wave_of(prompts: &[usize], gens: &[usize]) -> BatchWave {
+        let now = Instant::now();
+        BatchWave {
+            requests: prompts
+                .iter()
+                .zip(gens)
+                .enumerate()
+                .map(|(i, (&p, &g))| {
+                    (
+                        super::super::Request {
+                            id: i as u64,
+                            prompt: vec![1; p],
+                            n_gen: g,
+                            sla: f64::INFINITY,
+                        },
+                        now,
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn wave_shape_flags_all_empty_prompts() {
+        // the regression the BOS seed fixes: every prompt empty + tokens
+        // requested used to silently decode nothing
+        let s = wave_shape(&wave_of(&[0, 0], &[4, 2]));
+        assert_eq!(s, WaveShape { max_prompt: 0, max_gen: 4, needs_bos: true });
+    }
+
+    #[test]
+    fn wave_shape_no_bos_when_any_prompt_present() {
+        let s = wave_shape(&wave_of(&[0, 3], &[4, 2]));
+        assert_eq!(s, WaveShape { max_prompt: 3, max_gen: 4, needs_bos: false });
+        // nothing to generate → no seed step either
+        let s = wave_shape(&wave_of(&[0, 0], &[0, 0]));
+        assert!(!s.needs_bos);
     }
 }

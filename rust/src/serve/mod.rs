@@ -1,10 +1,24 @@
-//! Serving stack: SLA-aware router + dynamic wave batcher + decode engine.
+//! Serving stack: SLA-aware router + dynamic wave batcher + concurrent
+//! per-variant decode workers.
 //!
 //! PLANER's product is a *set* of latency/quality variants of one model
 //! (50%–95% targets).  The serving layer exploits that: requests carry a
 //! latency budget; the router picks the cheapest variant whose profiled
 //! latency fits, and each variant's engine batches concurrent requests into
 //! fixed-width decode waves over the AOT `gen_<arch>` program.
+//!
+//! Concurrency model (`cluster::Cluster`):
+//! - an **admission thread** replays the trace, routes each request via
+//!   [`Router`], and sends it down a per-variant `mpsc` channel;
+//! - one **decode worker** per variant owns that variant's [`DecodeEngine`],
+//!   `StateStore` and [`WaveBatcher`], firing full waves immediately and
+//!   partial waves the moment the oldest request's `max_wait` deadline
+//!   expires (the deadline-aware pump in [`worker::WorkerLane`]);
+//! - shutdown is a **graceful drain**: closing the admission channels makes
+//!   every worker flush its queue (partials included) before joining.
+//!
+//! The worker loop is generic over [`worker::WaveExecutor`], so batching,
+//! deadline and FIFO invariants are tested without XLA artifacts.
 //!
 //! Python is never on this path — everything below executes pre-compiled
 //! HLO through PJRT.
@@ -14,12 +28,14 @@ pub mod cluster;
 pub mod workload;
 pub mod engine;
 pub mod router;
+pub mod worker;
 
 pub use batcher::{BatchWave, WaveBatcher};
 pub use cluster::Cluster;
 pub use workload::{Arrival, TimedRequest, WorkloadGen};
-pub use engine::{DecodeEngine, ServeMetrics};
+pub use engine::{percentile, wave_shape, DecodeEngine, ServeMetrics, WaveShape};
 pub use router::{Router, RouterPolicy, VariantInfo};
+pub use worker::{admit, WaveExecutor, WorkerLane};
 
 /// A generation request.
 #[derive(Debug, Clone)]

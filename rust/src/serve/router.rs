@@ -33,8 +33,10 @@ pub struct Router {
 impl Router {
     pub fn new(mut variants: Vec<VariantInfo>, policy: RouterPolicy) -> Router {
         assert!(!variants.is_empty());
-        // sort by quality descending => first fit is best quality
-        variants.sort_by(|a, b| b.quality.partial_cmp(&a.quality).unwrap());
+        // sort by quality descending => first fit is best quality.
+        // total_cmp: a NaN quality (e.g. a failed profile) must not panic
+        // the router — it gets a deterministic position instead.
+        variants.sort_by(|a, b| b.quality.total_cmp(&a.quality));
         Router { variants, policy }
     }
 
@@ -50,7 +52,7 @@ impl Router {
                 &self
                     .variants
                     .iter()
-                    .min_by(|a, b| a.token_latency.partial_cmp(&b.token_latency).unwrap())
+                    .min_by(|a, b| a.token_latency.total_cmp(&b.token_latency))
                     .unwrap()
                     .name
             }
@@ -64,7 +66,7 @@ impl Router {
                 &self
                     .variants
                     .iter()
-                    .min_by(|a, b| a.token_latency.partial_cmp(&b.token_latency).unwrap())
+                    .min_by(|a, b| a.token_latency.total_cmp(&b.token_latency))
                     .unwrap()
                     .name
             }
@@ -113,5 +115,56 @@ mod tests {
         let mut r = router();
         r.policy = RouterPolicy::FastestAlways;
         assert_eq!(r.route(&req(1000.0)), "planer50");
+    }
+
+    #[test]
+    fn degenerate_equal_profiles_route_without_panicking() {
+        // identical latency AND quality across the pool: every comparison
+        // ties, which the old partial_cmp().unwrap() chain survived but any
+        // NaN would not — total_cmp must keep this total and deterministic
+        let variants: Vec<VariantInfo> = (0..4)
+            .map(|i| VariantInfo {
+                name: format!("v{i}"),
+                token_latency: 2.0,
+                quality: 1.0,
+            })
+            .collect();
+        let r = Router::new(variants, RouterPolicy::QualityWithinSla);
+        // feasible: some variant is picked and the choice is stable
+        let a = r.route(&req(1000.0)).to_string();
+        let b = r.route(&req(1000.0)).to_string();
+        assert_eq!(a, b);
+        // infeasible: fastest-fallback also ties everywhere — must not panic
+        let c = r.route(&req(0.0001)).to_string();
+        assert!(c.starts_with('v'));
+        let fr = Router::new(
+            (0..4)
+                .map(|i| VariantInfo {
+                    name: format!("v{i}"),
+                    token_latency: 2.0,
+                    quality: 1.0,
+                })
+                .collect(),
+            RouterPolicy::FastestAlways,
+        );
+        assert!(fr.route(&req(1.0)).starts_with('v'));
+    }
+
+    #[test]
+    fn nan_latency_profile_does_not_panic() {
+        // a variant whose profiling failed (NaN latency) must never abort
+        // routing; it just becomes unattractive relative to real numbers
+        let r = Router::new(
+            vec![
+                VariantInfo { name: "ok".into(), token_latency: 1.0, quality: 1.0 },
+                VariantInfo { name: "broken".into(), token_latency: f64::NAN, quality: 2.0 },
+            ],
+            RouterPolicy::QualityWithinSla,
+        );
+        // NaN estimate fails the `<= sla` test, so the healthy variant wins
+        assert_eq!(r.route(&req(1000.0)), "ok");
+        // fastest-fallback with a NaN in the pool must still return
+        let name = r.route(&req(0.0001)).to_string();
+        assert!(!name.is_empty());
     }
 }

@@ -1,0 +1,154 @@
+//! Deadline-aware decode workers: the concurrency core of the serving
+//! cluster.
+//!
+//! One `WorkerLane` runs per latency variant, owning that variant's
+//! `WaveBatcher` and a `WaveExecutor` (in production: the variant's
+//! `DecodeEngine` + `StateStore`; in tests: a mock).  An admission loop
+//! routes requests over an `mpsc` channel into the lane; the lane's pump
+//! loop fires *full* waves the moment they form and *partial* waves the
+//! moment the oldest request's `max_wait` deadline expires — even while
+//! admission is still in flight.  That deadline firing is the fix for the
+//! old serial `Cluster::pump`, which only fired when a queue filled and
+//! starved partial waves behind slow arrivals.
+//!
+//! Shutdown is graceful by construction: dropping the admission `Sender`
+//! closes the channel, and the lane drains every queued request (partials
+//! included) before returning its responses.
+//!
+//! The executor is a trait so the whole pump/admission machinery is
+//! unit-testable without XLA artifacts (see rust/tests/concurrent_serve.rs).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{BatchWave, WaveBatcher};
+use super::router::Router;
+use super::workload::TimedRequest;
+use super::{Request, Response};
+
+/// Executes one decode wave.  Implemented by the cluster over
+/// `DecodeEngine` + `StateStore`, and by mock executors in tests/benches.
+pub trait WaveExecutor {
+    fn execute_wave(&mut self, wave: &BatchWave) -> Result<Vec<Response>>;
+}
+
+/// Blanket impl so closures can serve as executors in tests and benches.
+impl<F> WaveExecutor for F
+where
+    F: FnMut(&BatchWave) -> Result<Vec<Response>>,
+{
+    fn execute_wave(&mut self, wave: &BatchWave) -> Result<Vec<Response>> {
+        self(wave)
+    }
+}
+
+/// One variant's serving lane: wave queue + executor + deadline pump.
+pub struct WorkerLane<E: WaveExecutor> {
+    pub name: String,
+    pub batcher: WaveBatcher,
+    pub executor: E,
+}
+
+impl<E: WaveExecutor> WorkerLane<E> {
+    pub fn new(name: impl Into<String>, batcher: WaveBatcher, executor: E) -> Self {
+        WorkerLane { name: name.into(), batcher, executor }
+    }
+
+    /// Fire every currently-ready wave: full waves, and partial waves whose
+    /// oldest request has outlived `max_wait`.
+    fn fire_ready(&mut self, out: &mut Vec<Response>) -> Result<()> {
+        while let Some(w) = self.batcher.next_wave(Instant::now()) {
+            out.extend(self.executor.execute_wave(&w)?);
+        }
+        Ok(())
+    }
+
+    /// Pull everything already sitting in the channel without blocking, so
+    /// a burst admitted during a long decode forms full waves immediately.
+    fn drain_channel(&mut self, rx: &Receiver<(Request, Instant)>) {
+        while let Ok((r, t)) = rx.try_recv() {
+            self.batcher.submit_at(r, t);
+        }
+    }
+
+    /// Worker main loop.  Blocks for admissions when idle; with work queued
+    /// it sleeps only until the oldest request's deadline, so partial waves
+    /// fire on time even if no further request ever arrives.  Returns every
+    /// response once the admission channel closes and the queue is drained.
+    pub fn run(mut self, rx: Receiver<(Request, Instant)>) -> Result<(Vec<Response>, E)> {
+        let mut out = Vec::new();
+        loop {
+            self.fire_ready(&mut out)?;
+            match self.batcher.deadline() {
+                // empty queue: nothing can become ready until an admission
+                None => match rx.recv() {
+                    Ok((r, t)) => {
+                        self.batcher.submit_at(r, t);
+                        self.drain_channel(&rx);
+                    }
+                    Err(_) => break, // admission closed, queue empty: done
+                },
+                // pending partial wave: wait for more work, but only until
+                // the oldest request's max_wait expires
+                Some(dl) => {
+                    let now = Instant::now();
+                    if dl <= now {
+                        continue; // already due — fire_ready pops it
+                    }
+                    match rx.recv_timeout(dl - now) {
+                        Ok((r, t)) => {
+                            self.batcher.submit_at(r, t);
+                            self.drain_channel(&rx);
+                        }
+                        Err(RecvTimeoutError::Timeout) => {} // deadline hit
+                        Err(RecvTimeoutError::Disconnected) => {
+                            // graceful drain: no more arrivals can top up
+                            // the wave, so waiting longer only adds latency
+                            while let Some(w) = self.batcher.force_wave() {
+                                out.extend(self.executor.execute_wave(&w)?);
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Ok((out, self.executor))
+    }
+}
+
+/// Admission loop: route each timed request to its variant's lane.  With
+/// `realtime`, arrival offsets are honoured relative to the loop start (the
+/// open-loop serving benchmark); otherwise requests are admitted as fast as
+/// the channels accept them.  Requests are stamped with their admission
+/// instant, so queue time is measured from here.  Returns the number of
+/// requests admitted (a send to a dead worker is dropped and not counted —
+/// the caller surfaces the worker's own error instead).
+pub fn admit(
+    trace: &[TimedRequest],
+    router: &Router,
+    lanes: &HashMap<String, Sender<(Request, Instant)>>,
+    realtime: bool,
+) -> usize {
+    let start = Instant::now();
+    let mut admitted = 0;
+    for tr in trace {
+        if realtime {
+            let due = start + Duration::from_secs_f64(tr.at);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let variant = router.route(&tr.request);
+        if let Some(tx) = lanes.get(variant) {
+            if tx.send((tr.request.clone(), Instant::now())).is_ok() {
+                admitted += 1;
+            }
+        }
+    }
+    admitted
+}

@@ -16,6 +16,12 @@ pub enum Arrival {
     Uniform { gap_s: f64 },
     /// Everything at t=0 (closed-loop batch).
     Burst,
+    /// Markov-modulated Poisson: alternating quiet (`rps`) and burst
+    /// (`burst_rps`) phases with exponentially distributed phase lengths of
+    /// mean `mean_phase_s`.  The traffic shape that exercises both the
+    /// deadline path (trickles during quiet phases leave partial waves
+    /// hanging) and full-wave batching (bursts fill widths instantly).
+    BurstyPoisson { rps: f64, burst_rps: f64, mean_phase_s: f64 },
 }
 
 /// Prompt/generation length distribution.
@@ -44,9 +50,13 @@ pub struct WorkloadGen {
     pub arrival: Arrival,
     pub lengths: LengthDist,
     /// Fraction of requests carrying a tight SLA (`sla_tight_s`); the rest
-    /// are best-quality (infinite budget).
+    /// get `sla_loose_s` (infinite by default = best quality).
     pub tight_frac: f64,
     pub sla_tight_s: f64,
+    /// Budget of non-tight requests.  Finite → a bimodal-SLA mix, where
+    /// *every* request has a deadline and the router spreads traffic across
+    /// at least two variants (the multi-variant serving scenario).
+    pub sla_loose_s: f64,
     pub vocab: usize,
 }
 
@@ -57,20 +67,62 @@ impl WorkloadGen {
             lengths: LengthDist::default(),
             tight_frac: 0.5,
             sla_tight_s: 0.25,
+            sla_loose_s: f64::INFINITY,
             vocab,
         }
+    }
+
+    /// Bursty/Poisson preset: quiet trickle punctuated by heavy bursts.
+    pub fn bursty(vocab: usize) -> Self {
+        let mut g = Self::new(vocab);
+        g.arrival = Arrival::BurstyPoisson { rps: 5.0, burst_rps: 500.0, mean_phase_s: 0.5 };
+        g
+    }
+
+    /// Bimodal-SLA preset: every request carries a finite budget, split
+    /// between a tight and a loose mode.
+    pub fn bimodal_sla(vocab: usize, tight_s: f64, loose_s: f64) -> Self {
+        let mut g = Self::new(vocab);
+        g.sla_tight_s = tight_s;
+        g.sla_loose_s = loose_s;
+        g
     }
 
     /// Generate `n` timed requests, deterministic in `seed`.
     pub fn generate(&self, n: usize, seed: u64) -> Vec<TimedRequest> {
         let mut rng = Rng::new(seed);
         let mut t = 0.0;
+        // BurstyPoisson phase state: remaining seconds in the current phase
+        let mut in_burst = false;
+        let mut phase_left = match self.arrival {
+            Arrival::BurstyPoisson { mean_phase_s, .. } => rng.exponential(1.0 / mean_phase_s),
+            _ => 0.0,
+        };
         (0..n as u64)
             .map(|id| {
                 t += match self.arrival {
                     Arrival::Poisson { rps } => rng.exponential(rps),
                     Arrival::Uniform { gap_s } => gap_s,
                     Arrival::Burst => 0.0,
+                    Arrival::BurstyPoisson { rps, burst_rps, mean_phase_s } => {
+                        // draw at the current phase's rate; if the phase
+                        // ends first, consume its remainder, switch phase,
+                        // and redraw (exponentials are memoryless)
+                        let mut gap = 0.0;
+                        loop {
+                            let rate = if in_burst { burst_rps } else { rps };
+                            let draw = rng.exponential(rate);
+                            if draw <= phase_left {
+                                phase_left -= draw;
+                                gap += draw;
+                                break;
+                            }
+                            gap += phase_left;
+                            in_burst = !in_burst;
+                            phase_left = rng.exponential(1.0 / mean_phase_s);
+                        }
+                        gap
+                    }
                 };
                 let plen = self.lengths.prompt_min
                     + rng.below(self.lengths.prompt_max - self.lengths.prompt_min + 1);
@@ -80,7 +132,7 @@ impl WorkloadGen {
                 let sla = if rng.f64() < self.tight_frac {
                     self.sla_tight_s
                 } else {
-                    f64::INFINITY
+                    self.sla_loose_s
                 };
                 TimedRequest { at: t, request: Request { id, prompt, n_gen: glen, sla } }
             })
@@ -194,6 +246,56 @@ mod tests {
             assert_eq!(a.request.id, b.request.id);
             assert_eq!(a.request.prompt, b.request.prompt);
             assert_eq!(a.request.sla.is_finite(), b.request.sla.is_finite());
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_monotone_and_overdispersed() {
+        let g = WorkloadGen::bursty(97);
+        let t = g.generate(2000, 9);
+        for w in t.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        // gaps must mix two very different rates: the coefficient of
+        // variation of a single-rate Poisson process is 1; a 5-vs-500 rps
+        // phase mix is far burstier
+        let gaps: Vec<f64> = t.windows(2).map(|w| w[1].at - w[0].at).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 2.0, "bursty trace not overdispersed: cv {cv:.2}");
+        // deterministic in seed, like every other arrival process
+        let t2 = g.generate(2000, 9);
+        assert_eq!(t.last().unwrap().at, t2.last().unwrap().at);
+    }
+
+    #[test]
+    fn bimodal_sla_takes_exactly_two_finite_values() {
+        let g = WorkloadGen::bimodal_sla(97, 0.1, 2.0);
+        let t = g.generate(500, 6);
+        let mut tight = 0;
+        for tr in &t {
+            assert!(tr.request.sla.is_finite(), "bimodal mix must bound every request");
+            if tr.request.sla == 0.1 {
+                tight += 1;
+            } else {
+                assert_eq!(tr.request.sla, 2.0);
+            }
+        }
+        let frac = tight as f64 / t.len() as f64;
+        assert!((frac - 0.5).abs() < 0.1, "tight frac {frac}");
+    }
+
+    #[test]
+    fn bimodal_sla_roundtrips_through_trace_json() {
+        // finite loose SLAs must survive serialisation (None is reserved
+        // for the infinite default)
+        let g = WorkloadGen::bimodal_sla(97, 0.1, 2.0);
+        let t = g.generate(20, 3);
+        let parsed = Json::parse(&trace_to_json(&t).to_string()).unwrap();
+        let t2 = trace_from_json(&parsed).unwrap();
+        for (a, b) in t.iter().zip(&t2) {
+            assert_eq!(a.request.sla, b.request.sla);
         }
     }
 

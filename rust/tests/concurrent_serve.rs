@@ -1,0 +1,216 @@
+//! Concurrent serving invariants, tested against mock wave executors so no
+//! XLA artifacts are needed: the deadline-aware pump must fire partial
+//! waves once `max_wait` elapses *during* admission (the starvation bug the
+//! worker rewrite fixes — the old serial pump only fired full queues), the
+//! graceful drain must answer every request, and per-variant FIFO order
+//! must survive concurrent workers.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use planer::serve::{
+    admit, BatchWave, Request, Response, Router, RouterPolicy, TimedRequest, VariantInfo,
+    WaveBatcher, WorkerLane,
+};
+use planer::util::rng::Rng;
+
+fn req(id: u64, sla: f64) -> Request {
+    Request { id, prompt: vec![1, 2], n_gen: 2, sla }
+}
+
+/// Mock executor: records (wave size, fire instant) and answers instantly.
+fn recording_executor(
+    name: &str,
+    record: Arc<Mutex<Vec<(usize, Instant)>>>,
+) -> impl FnMut(&BatchWave) -> anyhow::Result<Vec<Response>> {
+    let name = name.to_string();
+    move |wave: &BatchWave| {
+        let done = Instant::now();
+        record.lock().unwrap().push((wave.requests.len(), done));
+        Ok(wave
+            .requests
+            .iter()
+            .map(|(r, submitted)| Response {
+                id: r.id,
+                tokens: vec![0; r.n_gen],
+                latency: done.duration_since(*submitted).as_secs_f64(),
+                variant: name.clone(),
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn partial_wave_fires_on_deadline_during_admission() {
+    let max_wait = Duration::from_millis(40);
+    let record = Arc::new(Mutex::new(Vec::new()));
+    let lane = WorkerLane::new(
+        "v0",
+        WaveBatcher::new(8, max_wait),
+        recording_executor("v0", Arc::clone(&record)),
+    );
+    let (tx, rx) = channel();
+    let handle = std::thread::spawn(move || lane.run(rx).unwrap());
+
+    // admit a partial wave (3 of 8) and then stall — the admission channel
+    // stays OPEN, so only the deadline can release these requests
+    let t0 = Instant::now();
+    for id in 0..3 {
+        tx.send((req(id, f64::INFINITY), Instant::now())).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    {
+        let rec = record.lock().unwrap();
+        // THE regression: with the channel still open, the old cluster
+        // never fired (it waited for a full queue or the final drain)
+        assert!(
+            !rec.is_empty(),
+            "partial wave must fire on the max_wait deadline while admission is open"
+        );
+        assert_eq!(rec.iter().map(|(n, _)| n).sum::<usize>(), 3);
+        // ...and the deadline is a floor, not a suggestion: nothing may
+        // fire before the oldest request has waited max_wait
+        assert!(
+            rec[0].1.duration_since(t0) >= max_wait,
+            "partial wave fired before its deadline"
+        );
+    }
+
+    // late stragglers drain gracefully once the channel closes
+    tx.send((req(3, f64::INFINITY), Instant::now())).unwrap();
+    tx.send((req(4, f64::INFINITY), Instant::now())).unwrap();
+    drop(tx);
+    let (responses, _) = handle.join().unwrap();
+    let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4], "FIFO order across deadline + drain waves");
+    let sizes: Vec<usize> = record.lock().unwrap().iter().map(|(n, _)| *n).collect();
+    assert_eq!(sizes.iter().sum::<usize>(), 5);
+    assert!(sizes.iter().all(|&s| s <= 8));
+}
+
+#[test]
+fn full_wave_fires_immediately_despite_long_deadline() {
+    let record = Arc::new(Mutex::new(Vec::new()));
+    let lane = WorkerLane::new(
+        "v0",
+        WaveBatcher::new(4, Duration::from_secs(3600)),
+        recording_executor("v0", Arc::clone(&record)),
+    );
+    let (tx, rx) = channel();
+    let handle = std::thread::spawn(move || lane.run(rx).unwrap());
+    let t0 = Instant::now();
+    for id in 0..4 {
+        tx.send((req(id, 1.0), Instant::now())).unwrap();
+    }
+    // a full wave must not wait for the (hour-long) deadline
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if record.lock().unwrap().len() == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "full wave never fired");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    drop(tx);
+    let (responses, _) = handle.join().unwrap();
+    assert_eq!(responses.len(), 4);
+}
+
+/// Build a synthetic 3-variant router: quality rank 3..1, latency slowest
+/// first (the PLANER shape: best quality = slowest).
+fn test_router() -> Router {
+    Router::new(
+        vec![
+            VariantInfo { name: "base".into(), token_latency: 0.1, quality: 3.0 },
+            VariantInfo { name: "mid".into(), token_latency: 0.01, quality: 2.0 },
+            VariantInfo { name: "fast".into(), token_latency: 0.001, quality: 1.0 },
+        ],
+        RouterPolicy::QualityWithinSla,
+    )
+}
+
+#[test]
+fn fifo_preserved_across_concurrent_workers() {
+    // property test: for many seeds, admit a mixed-SLA trace across three
+    // concurrent lanes; each lane's responses must come back exactly in
+    // that lane's admission order, and no request may be lost or duplicated
+    for case_seed in 0..25u64 {
+        let mut rng = Rng::new(case_seed);
+        let n = 20 + rng.below(60);
+        let trace: Vec<TimedRequest> = (0..n as u64)
+            .map(|id| {
+                let sla = match rng.below(3) {
+                    0 => f64::INFINITY, // -> base
+                    1 => 0.2,           // -> mid (4 tokens * 0.01 fits)
+                    _ => 0.005,         // -> fast
+                };
+                TimedRequest { at: 0.0, request: req(id, sla) }
+            })
+            .collect();
+
+        let router = test_router();
+        // expected per-lane order = routing decisions in admission order
+        let mut expected: HashMap<String, Vec<u64>> = HashMap::new();
+        for tr in &trace {
+            expected
+                .entry(router.route(&tr.request).to_string())
+                .or_default()
+                .push(tr.request.id);
+        }
+
+        let mut senders = HashMap::new();
+        let mut handles = Vec::new();
+        for (name, width) in [("base", 3usize), ("mid", 4), ("fast", 2)] {
+            let (tx, rx) = channel();
+            senders.insert(name.to_string(), tx);
+            let record = Arc::new(Mutex::new(Vec::new()));
+            let lane = WorkerLane::new(
+                name,
+                WaveBatcher::new(width, Duration::from_millis(1)),
+                recording_executor(name, record),
+            );
+            handles.push((name, std::thread::spawn(move || lane.run(rx).unwrap())));
+        }
+
+        let admitted = admit(&trace, &router, &senders, false);
+        assert_eq!(admitted, trace.len(), "seed {case_seed}: every request admitted");
+        drop(senders);
+
+        let mut total = 0;
+        for (name, h) in handles {
+            let (responses, _) = h.join().unwrap();
+            let got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+            let want = expected.remove(name).unwrap_or_default();
+            assert_eq!(got, want, "seed {case_seed}: lane '{name}' broke FIFO");
+            assert!(responses.iter().all(|r| r.variant == name));
+            total += got.len();
+        }
+        assert_eq!(total, trace.len(), "seed {case_seed}: requests lost or duplicated");
+    }
+}
+
+#[test]
+fn worker_drains_everything_on_immediate_close() {
+    // degenerate shutdown: admission sends a non-multiple of width and
+    // closes at once — the drain must still answer every request
+    let record = Arc::new(Mutex::new(Vec::new()));
+    let lane = WorkerLane::new(
+        "v0",
+        WaveBatcher::new(4, Duration::from_secs(3600)),
+        recording_executor("v0", Arc::clone(&record)),
+    );
+    let (tx, rx) = channel();
+    for id in 0..11 {
+        tx.send((req(id, 1.0), Instant::now())).unwrap();
+    }
+    drop(tx);
+    let (responses, _) = lane.run(rx).unwrap();
+    let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..11).collect::<Vec<_>>());
+    let sizes: Vec<usize> = record.lock().unwrap().iter().map(|(n, _)| *n).collect();
+    assert!(sizes.iter().all(|&s| s <= 4));
+    assert_eq!(sizes.iter().sum::<usize>(), 11);
+}

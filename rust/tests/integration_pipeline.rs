@@ -248,3 +248,47 @@ fn cluster_replay_conserves_requests() {
         assert!(names.contains(&r.variant));
     }
 }
+
+#[test]
+fn cluster_concurrent_replay_matches_serial_routing() {
+    use planer::serve::{Cluster, WorkloadGen};
+
+    let eng = engine();
+    let names: Vec<String> = eng
+        .manifest
+        .arch_names()
+        .into_iter()
+        .filter(|a| eng.has_program(&format!("gen_{a}")))
+        .map(String::from)
+        .take(2)
+        .collect();
+    assert!(!names.is_empty());
+    let mut cluster = Cluster::new(&eng, &names, 0).unwrap();
+    cluster.set_max_wait(Duration::from_millis(5));
+    // bimodal SLAs: every request bounded, traffic spread over variants
+    let gen = WorkloadGen::bimodal_sla(eng.manifest.config.vocab, 0.05, 10.0);
+    let trace = gen.generate(13, 4);
+
+    let serial = cluster.replay(&trace, false).unwrap();
+    let concurrent = cluster.replay_concurrent(&trace, false).unwrap();
+
+    // both paths answer every request exactly once...
+    assert_eq!(concurrent.len(), trace.len());
+    let mut ids: Vec<u64> = concurrent.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, (0..13).collect::<Vec<_>>());
+    // ...and the SLA routing decision is identical per request (decode is
+    // greedy and state resets per wave, so tokens only depend on the wave)
+    let variant_of = |rs: &[planer::serve::Response]| {
+        let mut m: Vec<(u64, String)> = rs.iter().map(|r| (r.id, r.variant.clone())).collect();
+        m.sort();
+        m
+    };
+    assert_eq!(variant_of(&serial), variant_of(&concurrent));
+    for r in &concurrent {
+        assert!(!r.tokens.is_empty());
+    }
+    // the shared metrics map saw every request
+    let total: usize = cluster.metrics_snapshot().values().map(|m| m.requests).sum();
+    assert_eq!(total, trace.len());
+}
