@@ -4,16 +4,21 @@
 //!
 //!     cargo bench --bench block_latency
 
+use std::time::Instant;
+
 use planer::arch::SearchSpace;
 use planer::latency::{AnalyticalModel, Device, Profiler};
 use planer::metrics;
-use planer::runtime::Engine;
+use planer::runtime::{Engine, ExecMode, StateStore};
+use planer::serve::DecodeEngine;
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new(std::path::Path::new("artifacts"))?;
     let cfg = &engine.manifest.config;
     let prof = Profiler::new(&engine);
     let model = AnalyticalModel::new(Device::A100);
+
+    resident_ab(&engine)?;
 
     println!("== block latency: measured CPU vs analytical A100 (normalized to ffl) ==");
     let opts = SearchSpace::Paper.options(cfg.n_heads_full);
@@ -47,6 +52,67 @@ fn main() -> anyhow::Result<()> {
         }
         let r = metrics::pearson(&cpu_ratios, &a100_ratios);
         println!("pearson(cpu ratios, analytical ratios) = {r:.3}");
+    }
+    Ok(())
+}
+
+/// Resident-vs-roundtrip A/B over the single-token decode program: the same
+/// prebound StepPlan driven once with device-resident state (`Auto`) and
+/// once forcing the legacy full host sync per step (`Roundtrip`).  Reports
+/// steps/sec and, from the store's `SyncStats`, bytes synced per step —
+/// resident should move only `x` up and `logits` down, i.e. orders of
+/// magnitude less than params + opt-state + memories per token.
+fn resident_ab(engine: &Engine) -> anyhow::Result<()> {
+    let Some(arch) = engine
+        .manifest
+        .arch_names()
+        .into_iter()
+        .find(|a| engine.has_program(&format!("gen_{a}")))
+        .map(String::from)
+    else {
+        println!("resident A/B skipped: no gen programs in manifest");
+        return Ok(());
+    };
+    let de = DecodeEngine::new(engine, &arch)?;
+    let steps = 64usize;
+    let warmup = 4usize;
+
+    println!("== decode-step residency A/B ({arch}, {steps} steps) ==");
+    let mut results = Vec::new();
+    for (label, mode) in [("resident", ExecMode::Auto), ("roundtrip", ExecMode::Roundtrip)] {
+        let mut st = de.init_state(0)?;
+        st.set_mode(mode);
+        // the exact serve hot path, not a reconstruction of it
+        let step = |st: &mut StateStore, i: usize| -> anyhow::Result<()> {
+            let x = vec![(i % 7) as i32; de.width];
+            de.decode_step(st, &x)?;
+            Ok(())
+        };
+        for i in 0..warmup {
+            step(&mut st, i)?;
+        }
+        // steady state from here: snapshot so warmup uploads don't count
+        let sync0 = st.stats();
+        let t0 = Instant::now();
+        for i in 0..steps {
+            step(&mut st, i)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = st.stats().since(&sync0);
+        println!(
+            "  {label:9} {:8.1} steps/s  {:10.0} B/step synced  (resident frac {:.2})",
+            steps as f64 / wall,
+            s.total_bytes() as f64 / steps as f64,
+            s.resident_frac(),
+        );
+        results.push((steps as f64 / wall, s.total_bytes() as f64 / steps as f64));
+    }
+    if let [(rs, rb), (ts, tb)] = results[..] {
+        println!(
+            "  resident is {:.2}x steps/s at {:.1}x fewer bytes/step\n",
+            rs / ts,
+            tb / rb.max(1.0),
+        );
     }
     Ok(())
 }

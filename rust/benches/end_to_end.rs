@@ -8,8 +8,8 @@
 use std::time::{Duration, Instant};
 
 use planer::latency::Profiler;
-use planer::runtime::{literal, Engine, StateStore};
-use planer::serve::{percentile, Cluster, Response, WorkloadGen};
+use planer::runtime::{literal, Engine, ExecMode, StateStore};
+use planer::serve::{percentile, Cluster, Response, ServeMetrics, WorkloadGen};
 use planer::util::timer;
 
 fn main() -> anyhow::Result<()> {
@@ -58,7 +58,9 @@ fn main() -> anyhow::Result<()> {
 /// bimodal-SLA trace replayed once on the single-threaded baseline and once
 /// with one deadline-aware worker per variant.  Concurrency overlaps the
 /// variants' decode waves, so wall-clock and p95 should both drop on any
-/// ≥2-variant trace.
+/// ≥2-variant trace.  A second axis replays the concurrent path with
+/// `ExecMode::Roundtrip`, so the bytes-synced-per-token column shows what
+/// device residency saves on the real serve path.
 fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
     let names: Vec<String> = engine
         .manifest
@@ -81,27 +83,54 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
         let l: Vec<f64> = rs.iter().map(|r| r.latency).collect();
         percentile(&l, 0.95)
     };
+    let bytes_per_tok = |c: &Cluster<'_>| {
+        let mut total = ServeMetrics::default();
+        for m in c.metrics_snapshot().values() {
+            total.merge(m);
+        }
+        total.bytes_per_token()
+    };
 
     let t0 = Instant::now();
     let serial = cluster.replay(&trace, false)?;
     let serial_wall = t0.elapsed().as_secs_f64();
+    let serial_p95 = p95(&serial);
     let t0 = Instant::now();
     let concurrent = cluster.replay_concurrent(&trace, false)?;
     let concurrent_wall = t0.elapsed().as_secs_f64();
+    let resident_bpt = bytes_per_tok(&cluster);
+
+    // same trace, same workers, but force the legacy per-token host sync
+    cluster.set_exec_mode(ExecMode::Roundtrip);
+    let t0 = Instant::now();
+    let roundtrip = cluster.replay_concurrent(&trace, false)?;
+    let roundtrip_wall = t0.elapsed().as_secs_f64();
+    let roundtrip_bpt = bytes_per_tok(&cluster);
+    cluster.set_exec_mode(ExecMode::Auto);
 
     println!("\nserve A/B ({} variants, {} reqs, bimodal SLA):", names.len(), trace.len());
     println!(
-        "  serial:     wall {:7.1}ms  p95 {:7.1}ms",
+        "  serial:               wall {:7.1}ms  p95 {:7.1}ms",
         serial_wall * 1e3,
-        p95(&serial) * 1e3
+        serial_p95 * 1e3
     );
     println!(
-        "  concurrent: wall {:7.1}ms  p95 {:7.1}ms  ({:.2}x wall)",
+        "  concurrent resident:  wall {:7.1}ms  p95 {:7.1}ms  ({:.2}x wall)  {:8.0} B/tok",
         concurrent_wall * 1e3,
         p95(&concurrent) * 1e3,
-        serial_wall / concurrent_wall
+        serial_wall / concurrent_wall,
+        resident_bpt
+    );
+    println!(
+        "  concurrent roundtrip: wall {:7.1}ms  p95 {:7.1}ms  ({:.2}x wall)  {:8.0} B/tok  ({:.1}x more sync)",
+        roundtrip_wall * 1e3,
+        p95(&roundtrip) * 1e3,
+        serial_wall / roundtrip_wall,
+        roundtrip_bpt,
+        roundtrip_bpt / resident_bpt.max(1.0)
     );
     anyhow::ensure!(serial.len() == concurrent.len(), "A/B answered different request counts");
+    anyhow::ensure!(serial.len() == roundtrip.len(), "exec A/B answered different request counts");
     Ok(())
 }
 

@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 use crate::arch::{Arch, SearchSpace};
 use crate::data::Corpus;
 use crate::latency::{AnalyticalModel, Device, LatencyTable, MoeImpl};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ExecMode, SyncStats};
 use crate::search::{SearchConfig, SearchOrchestrator, SearchReport};
 use crate::train::{TrainConfig, TrainReport, Trainer};
 use crate::util::json::Json;
@@ -17,6 +17,9 @@ pub struct Pipeline<'a> {
     pub engine: &'a Engine,
     pub corpus: &'a Corpus,
     pub device: Device,
+    /// Execution mode threaded into every search/train state store
+    /// (`Auto` = device-resident; `Roundtrip` = legacy A/B baseline).
+    pub exec_mode: ExecMode,
 }
 
 #[derive(Debug)]
@@ -28,7 +31,7 @@ pub struct PipelineReport {
 
 impl<'a> Pipeline<'a> {
     pub fn new(engine: &'a Engine, corpus: &'a Corpus) -> Self {
-        Pipeline { engine, corpus, device: Device::A100 }
+        Pipeline { engine, corpus, device: Device::A100, exec_mode: ExecMode::default() }
     }
 
     /// The Eq. (2) lookup table + baseline latency for the search, from the
@@ -61,7 +64,8 @@ impl<'a> Pipeline<'a> {
     /// Phase 1: run the NAS for one latency target.
     pub fn search(&self, sc: SearchConfig) -> Result<SearchReport> {
         let (table, baseline) = self.analytical_table(sc.space);
-        let orch = SearchOrchestrator::new(self.engine, sc, table, baseline);
+        let mut orch = SearchOrchestrator::new(self.engine, sc, table, baseline);
+        orch.exec_mode = self.exec_mode;
         orch.run(&self.corpus.train)
     }
 
@@ -110,7 +114,8 @@ impl<'a> Pipeline<'a> {
 
     /// Phase 2: retrain a named architecture from scratch with balance loss.
     pub fn retrain(&self, arch_name: &str, tc: TrainConfig) -> Result<TrainReport> {
-        let trainer = Trainer::new(self.engine, arch_name);
+        let mut trainer = Trainer::new(self.engine, arch_name);
+        trainer.exec_mode = self.exec_mode;
         trainer.run(
             &tc,
             &self.corpus.train,
@@ -128,6 +133,7 @@ impl<'a> Pipeline<'a> {
             ("estimated_latency", Json::Num(r.estimated_latency)),
             ("baseline_latency", Json::Num(r.baseline_latency)),
             ("achieved_ratio", Json::Num(r.achieved_ratio())),
+            ("sync", sync_json(&r.sync)),
             (
                 "trace",
                 Json::Arr(
@@ -148,4 +154,17 @@ impl<'a> Pipeline<'a> {
             ),
         ])
     }
+}
+
+/// Host↔device traffic accounting as JSON (EXPERIMENTS.md provenance: a
+/// report with `resident_frac` 0.0 was measured on the legacy roundtrip
+/// path and its step times are not comparable to resident runs).
+fn sync_json(s: &SyncStats) -> Json {
+    Json::obj(vec![
+        ("bytes_to_device", Json::Num(s.bytes_to_device as f64)),
+        ("bytes_to_host", Json::Num(s.bytes_to_host as f64)),
+        ("resident_steps", Json::Num(s.resident_steps as f64)),
+        ("roundtrip_steps", Json::Num(s.roundtrip_steps as f64)),
+        ("resident_frac", Json::Num(s.resident_frac())),
+    ])
 }

@@ -23,7 +23,7 @@ use planer::coordinator::{experiments, figures, Pipeline};
 use planer::coordinator::experiments::ExperimentBudget;
 use planer::data::Corpus;
 use planer::latency::Profiler;
-use planer::runtime::Engine;
+use planer::runtime::{Engine, ExecMode};
 use planer::search::SearchConfig;
 use planer::train::TrainConfig;
 
@@ -63,7 +63,9 @@ fn run() -> Result<()> {
     let vocab = engine.manifest.config.vocab;
     let seed = args.get_i32("seed", 0)?;
     let corpus = load_corpus(&args, vocab, seed as u64)?;
-    let pipeline = Pipeline::new(&engine, &corpus);
+    let exec_mode = parse_exec_mode(&args.get_or("exec", "resident"))?;
+    let mut pipeline = Pipeline::new(&engine, &corpus);
+    pipeline.exec_mode = exec_mode;
     let out_dir = PathBuf::from(args.get_or("out", "runs"));
 
     match cmd {
@@ -142,6 +144,7 @@ fn run() -> Result<()> {
                 mode: args.get_or("mode", "concurrent"),
                 realtime: args.has("realtime"),
                 rps: args.get_f64("rps", 0.0)?,
+                exec_mode,
             };
             serve_demo(&engine, n_req, &arch_flag, seed, &opts)?;
         }
@@ -229,6 +232,7 @@ fn run() -> Result<()> {
                 .collect();
             let mut cluster = Cluster::new(&engine, &names, seed)?;
             cluster.set_max_wait(Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64));
+            cluster.set_exec_mode(exec_mode);
             let mut gen = match args.get_or("trace", "burst").as_str() {
                 "burst" => WorkloadGen::new(engine.manifest.config.vocab),
                 "bursty" => WorkloadGen::bursty(engine.manifest.config.vocab),
@@ -323,6 +327,16 @@ struct ServeOpts {
     realtime: bool,
     /// Poisson arrival rate (0 = closed-loop burst).
     rps: f64,
+    /// Device-resident decode (default) or forced per-token host roundtrip.
+    exec_mode: ExecMode,
+}
+
+fn parse_exec_mode(s: &str) -> Result<ExecMode> {
+    Ok(match s {
+        "resident" | "auto" => ExecMode::Auto,
+        "roundtrip" => ExecMode::Roundtrip,
+        other => bail!("unknown --exec '{other}' (resident|roundtrip)"),
+    })
 }
 
 /// Serving demo: SLA-aware routing across every arch that has a gen
@@ -359,6 +373,7 @@ fn serve_demo(
 
     let mut cluster = Cluster::new(engine, &names, seed)?;
     cluster.set_max_wait(opts.max_wait);
+    cluster.set_exec_mode(opts.exec_mode);
 
     // bimodal-SLA workload so the router actually spreads traffic
     let mut gen = WorkloadGen::bimodal_sla(engine.manifest.config.vocab, 0.05, 2.0);
@@ -426,4 +441,6 @@ USAGE: planer <cmd> [flags]
               [--mode concurrent|serial|ab] [--max-wait-ms 2] [--rps R] [--realtime]
 
 global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
+          --exec resident|roundtrip   (device-resident state, the default,
+           vs the legacy full host sync per step — for A/B measurements)
 ";

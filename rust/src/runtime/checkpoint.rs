@@ -53,7 +53,10 @@ fn literal_dtype(lit: &Literal) -> Result<DType> {
 }
 
 /// Save the named groups of `store` to `path`.
-pub fn save(store: &StateStore, groups: &[&str], path: &Path) -> Result<()> {
+///
+/// Takes `&mut` because device-resident groups are lazily materialised to
+/// host (`StateStore::host_group`) before serialisation.
+pub fn save(store: &mut StateStore, groups: &[&str], path: &Path) -> Result<()> {
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
     );
@@ -62,7 +65,7 @@ pub fn save(store: &StateStore, groups: &[&str], path: &Path) -> Result<()> {
     f.write_all(&(groups.len() as u32).to_le_bytes())?;
     for g in groups {
         let lits = store
-            .get_group(g)
+            .host_group(g)
             .with_context(|| format!("checkpoint: group '{g}' missing"))?;
         f.write_all(&(g.len() as u32).to_le_bytes())?;
         f.write_all(g.as_bytes())?;
@@ -194,17 +197,17 @@ mod tests {
             ],
         );
         st.set_single("step", Literal::vec1(&[7i32]).reshape(&[1]).unwrap());
-        save(&st, &["params", "step"], &path).unwrap();
+        save(&mut st, &["params", "step"], &path).unwrap();
 
         let mut st2 = StateStore::new();
         let names = load(&mut st2, &path).unwrap();
         assert_eq!(names, vec!["params", "step"]);
-        let p = st2.get_group("params").unwrap();
+        let p = st2.host_group("params").unwrap();
         assert_eq!(p.len(), 2);
         assert_eq!(p[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         let dims = literal_dims(&p[0]).unwrap();
         assert_eq!(dims, vec![2, 2]);
-        let s = st2.get_group("step").unwrap();
+        let s = st2.host_group("step").unwrap();
         assert_eq!(s[0].to_vec::<i32>().unwrap(), vec![7]);
         std::fs::remove_file(&path).ok();
     }

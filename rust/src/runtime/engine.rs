@@ -14,7 +14,9 @@ use super::program::Program;
 /// executables.  Cloneable and thread-safe: the serving engine shares one
 /// Engine across worker threads.
 pub struct Engine {
-    client: xla::PjRtClient,
+    /// Shared with every compiled `Program` so state uploads (host literal →
+    /// device buffer) don't need an engine handle on the hot path.
+    client: Arc<xla::PjRtClient>,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Program>>>,
     /// Cumulative XLA compile seconds (reported by `planer profile`).
@@ -34,7 +36,7 @@ impl Engine {
             );
         }
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()?;
+        let client = Arc::new(xla::PjRtClient::cpu()?);
         Ok(Engine {
             client,
             manifest,

@@ -78,6 +78,24 @@ pub fn literal_from_value(spec: &TensorSpec, value: &TensorValue) -> Result<Lite
     Ok(lit)
 }
 
+/// Build an i32 literal of `spec`'s shape from a borrowed slice.  The
+/// decode hot loop refills one scratch buffer per step; this avoids the
+/// `TensorValue` detour (which needs an owned `Vec` per call).
+pub fn literal_from_i32s(spec: &TensorSpec, vals: &[i32]) -> Result<Literal> {
+    if spec.dtype != DType::I32 {
+        bail!("tensor '{}' is not i32", spec.name);
+    }
+    if vals.len() != spec.element_count() {
+        bail!(
+            "tensor '{}' expects {} elements, got {}",
+            spec.name,
+            spec.element_count(),
+            vals.len()
+        );
+    }
+    Ok(Literal::vec1(vals).reshape(&dims_i64(&spec.shape))?)
+}
+
 /// Zero-initialised literal for `spec` (optimizer state, empty memories).
 pub fn zeros(spec: &TensorSpec) -> Literal {
     Literal::create_from_shape(spec.dtype.primitive(), &spec.shape)

@@ -2,12 +2,53 @@
 //! and executes them on the CPU PJRT client.  Entirely manifest-driven — the
 //! Rust side never hard-codes a tensor layout.
 //!
-//! Key facts (verified against xla_extension 0.5.1):
+//! # Device-residency model
+//!
+//! State (params, optimizer moments, TXL memories, alphas) lives in a
+//! [`StateStore`], and the store's steady state is **on the device**: each
+//! step's output buffers become the next step's input buffers without ever
+//! crossing the host boundary.  The hot loops bind a [`StepPlan`] once per
+//! (program, store) pair — freezing input-group order, output-group
+//! distribution and fetch indices — and then call
+//! [`StateStore::run_plan`] per step, which does no per-step HashMap
+//! building, no group re-sorting and no string formatting.
+//!
+//! # The host-sync boundary (what `fetch` costs)
+//!
+//! The only per-step host traffic is:
+//!
+//! - **uploads** of host-dirty input groups — in decode that is the token
+//!   batch `x` (`width × 4` bytes); params/opt-state/mems are already
+//!   resident and cost nothing;
+//! - **downloads** of the plan's *fetch* groups (losses, logits), via
+//!   `to_literal_sync` on just those buffers.  Fetching logits costs
+//!   `width × vocab × 4` bytes; everything not fetched stays put.
+//!
+//! Reading any other group (checkpointing, alpha extraction) goes through
+//! `StateStore::host_group`, which materialises lazily and caches, so you
+//! pay the download once, when you actually look.  Every byte in either
+//! direction is metered in [`SyncStats`]; `ExecMode::Roundtrip` forces the
+//! legacy upload-everything/sync-everything behaviour so the benches can
+//! A/B the two (`cargo bench --bench block_latency`).
+//!
+//! # Key facts (verified against xla_extension 0.5.1)
+//!
 //! - interchange is HLO *text*; `HloModuleProto::from_text_file` reassigns
 //!   instruction ids, sidestepping the 64-bit-id proto incompatibility.
-//! - multi-output programs return ONE tuple buffer per replica; we
-//!   `to_literal_sync().decompose_tuple()` on the way out (host round-trip,
-//!   measured in EXPERIMENTS.md §Perf).
+//! - aot.py lowers with `return_tuple=True`.  Runtimes that untie the
+//!   result tuple hand back one `PjRtBuffer` per output and the resident
+//!   path engages; runtimes that return a single tuple buffer force a
+//!   `to_literal_sync().decompose_tuple()` host round-trip per step, which
+//!   `Program::execute_buffers` detects and reports as
+//!   `ExecOutputs::Roundtrip` (metered, and visible as `resident_frac == 0`
+//!   in [`SyncStats`]).
+//! - the serving cluster moves `StateStore`s into per-variant worker
+//!   threads, which requires `xla::PjRtBuffer: Send + Sync` (device groups
+//!   are `Arc`-shared) — the analogue of the `xla::Literal: Send` contract
+//!   the pre-resident code already relied on.  Each store is owned by
+//!   exactly one worker at a time, so the handles are never *used* from
+//!   two threads concurrently; if the binding doesn't declare the marker
+//!   traits, the first build fails here, loudly, not subtly.
 
 pub mod checkpoint;
 pub mod engine;
@@ -15,9 +56,11 @@ pub mod literal;
 pub mod manifest;
 pub mod program;
 pub mod state;
+pub mod step;
 
 pub use engine::Engine;
 pub use literal::{DType, TensorValue};
 pub use manifest::{Manifest, ProgramSpec, TensorSpec};
-pub use program::Program;
-pub use state::StateStore;
+pub use program::{ExecOutputs, Program};
+pub use state::{ExecMode, StateStore, SyncStats};
+pub use step::{PlanGroup, StepPlan};

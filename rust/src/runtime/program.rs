@@ -1,58 +1,155 @@
 //! A compiled program: PJRT executable + its manifest spec.
+//!
+//! Two execution surfaces:
+//! - `execute` / `execute_refs`: host literals in, host literals out.  Every
+//!   call pays a full host→device upload of the inputs and a device→host
+//!   sync of the whole result tuple.  Kept for cold paths (profiling,
+//!   one-shot probes).
+//! - `execute_buffers`: device buffers in, device buffers out when the
+//!   runtime unties the result tuple.  This is the hot-loop surface used by
+//!   `StateStore::run_plan` — state stays resident on the device between
+//!   steps and only explicitly fetched groups are materialised to host.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use super::manifest::ProgramSpec;
 
+/// Result of a buffer-level execution.
+///
+/// aot.py lowers every program with `return_tuple=True`.  Depending on the
+/// PJRT runtime, the execute call hands back either one buffer per output
+/// (the runtime untupled for us — state can stay on the device) or a single
+/// tuple buffer (older runtimes — the only way to split it is a host
+/// round-trip, which `execute_buffers` performs eagerly so callers always
+/// see per-output values).
+pub enum ExecOutputs {
+    /// One device buffer per manifest output; nothing touched the host.
+    Resident(Vec<xla::PjRtBuffer>),
+    /// The runtime returned a single tuple buffer; the host sync has
+    /// already been paid and the tuple decomposed into per-output literals.
+    Roundtrip(Vec<Literal>),
+}
+
 pub struct Program {
     pub spec: ProgramSpec,
     exe: xla::PjRtLoadedExecutable,
+    /// Shared with the owning `Engine`; needed to upload host literals when
+    /// a state group is first promoted to the device.
+    client: Arc<xla::PjRtClient>,
 }
 
 impl Program {
-    pub fn compile(client: &xla::PjRtClient, spec: ProgramSpec) -> Result<Program> {
+    pub fn compile(client: &Arc<xla::PjRtClient>, spec: ProgramSpec) -> Result<Program> {
         let proto = xla::HloModuleProto::from_text_file(&spec.hlo_file)
             .with_context(|| format!("loading {}", spec.hlo_file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client
             .compile(&comp)
             .with_context(|| format!("compiling {}", spec.name))?;
-        Ok(Program { spec, exe })
+        Ok(Program { spec, exe, client: Arc::clone(client) })
+    }
+
+    /// Upload a host literal to the device this program executes on.
+    pub fn upload(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .with_context(|| format!("uploading input for {}", self.spec.name))
     }
 
     /// Execute with a full flat input list; returns the flat output list.
     ///
-    /// aot.py lowers with return_tuple=True, so PJRT hands back one tuple
-    /// buffer; we decompose it into per-output literals.
+    /// Host-literal convenience path: uploads every input and syncs every
+    /// output.  The hot loops use `execute_buffers` instead.
     pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let refs: Vec<&Literal> = inputs.iter().collect();
         self.execute_refs(&refs)
     }
 
-    /// Borrowing variant used by the StateStore hot loop (no clones).
+    /// Borrowing variant of `execute` (no input clones).
     pub fn execute_refs(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "program {}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
+        self.check_arity(inputs.len())?;
         let bufs = self.exe.execute::<&Literal>(inputs)?;
         let mut tuple = bufs[0][0]
             .to_literal_sync()
             .context("fetching result tuple")?;
         let outs = tuple.decompose_tuple().context("decomposing result")?;
-        if outs.len() != self.spec.outputs.len() {
+        self.check_out_arity(outs.len())?;
+        Ok(outs)
+    }
+
+    /// Execute with device-resident inputs; outputs stay on the device when
+    /// the runtime unties the result tuple (see [`ExecOutputs`]).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<ExecOutputs> {
+        self.check_arity(inputs.len())?;
+        let mut replicas = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        if replicas.is_empty() {
+            bail!("program {}: runtime returned no replicas", self.spec.name);
+        }
+        let outs = replicas.swap_remove(0);
+        let n = self.spec.outputs.len();
+        // n == 1 is ambiguous (a 1-tuple from return_tuple=True vs the raw
+        // output of an untupling runtime): ask the device shape, and treat a
+        // failed shape query conservatively as "maybe a tuple" — the host
+        // path below handles both layouts, while misclassifying a tuple as
+        // Resident would feed it back as an array input next step.
+        if outs.len() == n && !(n == 1 && may_be_tuple(&outs[0])) {
+            // The runtime already untupled: one buffer per declared output.
+            return Ok(ExecOutputs::Resident(outs));
+        }
+        if outs.len() == 1 {
+            // Single tuple buffer: the legacy layout.  Decompose via host.
+            let mut tuple = outs[0]
+                .to_literal_sync()
+                .context("fetching result tuple")?;
+            let lits = match tuple.decompose_tuple() {
+                Ok(lits) => lits,
+                // not a tuple after all (single-output, shape query had
+                // failed above): the literal IS the one output
+                Err(_) if n == 1 => vec![tuple],
+                Err(e) => return Err(e).context("decomposing result"),
+            };
+            self.check_out_arity(lits.len())?;
+            return Ok(ExecOutputs::Roundtrip(lits));
+        }
+        bail!(
+            "program {}: manifest declares {} outputs, runtime produced {} buffers",
+            self.spec.name,
+            n,
+            outs.len()
+        )
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.spec.inputs.len() {
+            bail!(
+                "program {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                got
+            );
+        }
+        Ok(())
+    }
+
+    fn check_out_arity(&self, got: usize) -> Result<()> {
+        if got != self.spec.outputs.len() {
             bail!(
                 "program {}: manifest declares {} outputs, runtime produced {}",
                 self.spec.name,
                 self.spec.outputs.len(),
-                outs.len()
+                got
             );
         }
-        Ok(outs)
+        Ok(())
     }
+}
+
+/// Whether a buffer may hold a tuple.  A failed shape query answers "yes"
+/// so the caller routes through the host-decompose path, which recovers
+/// either way (see `execute_buffers`).
+fn may_be_tuple(buf: &xla::PjRtBuffer) -> bool {
+    !matches!(buf.on_device_shape(), Ok(xla::Shape::Array(_)))
 }

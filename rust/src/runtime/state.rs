@@ -1,24 +1,99 @@
-//! StateStore: named tensor groups threaded across program invocations.
+//! StateStore: named tensor groups threaded across program invocations,
+//! resident on the accelerator between steps.
 //!
 //! Every exported program's manifest names its input/output index *groups*
 //! (params, m, v, alphas, mems, x, y, seed, ...).  The store holds the
-//! current literals for each group; running a program assembles its input
-//! list from the store (in manifest order), executes, and writes back every
-//! output group — so `train` steps thread params/opt-state/memories, and
-//! sibling programs (e.g. `search_weight_step` / `search_arch_step`) share
-//! state through their common group names.
+//! current value of each group in one of two homes:
+//!
+//! - **device**: `PjRtBuffer`s produced by the previous step.  This is the
+//!   steady state of every hot loop — params, optimizer state and TXL
+//!   memories never cross the PCIe/host boundary between steps.
+//! - **host**: `Literal`s installed by `set_group`/`zero_group`/checkpoint
+//!   load, or downloaded on demand by `host_group` (lazy materialisation).
+//!   A host group is promoted to the device the first time a plan needs it.
+//!
+//! `run_plan` executes a prebound [`StepPlan`]: it assembles the program's
+//! input list from the store (promoting host-dirty groups), executes at the
+//! buffer level, writes every output group back — resident when the runtime
+//! allows it — and materialises *only* the plan's fetch groups to host.
+//! All host↔device traffic is metered in [`SyncStats`], which is how the
+//! benches prove the resident path moves ~1000x fewer bytes per token than
+//! the old tuple-sync-everything loop.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use super::literal;
-use super::program::Program;
+use super::program::{ExecOutputs, Program};
+use super::step::StepPlan;
+
+/// How `run_plan` executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Buffer-level execution; state stays on the device whenever the
+    /// runtime unties result tuples (falls back per-step otherwise).
+    #[default]
+    Auto,
+    /// Force the legacy host path: upload every input, sync every output,
+    /// every step.  Exists for the resident-vs-roundtrip A/B benches.
+    Roundtrip,
+}
+
+/// Cumulative host↔device transfer accounting for one store.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncStats {
+    pub bytes_to_device: u64,
+    pub bytes_to_host: u64,
+    /// Steps whose outputs stayed on the device (only fetches synced).
+    pub resident_steps: u64,
+    /// Steps that paid a full output-tuple host sync.
+    pub roundtrip_steps: u64,
+}
+
+impl SyncStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_to_device + self.bytes_to_host
+    }
+
+    /// Fraction of steps that ran fully device-resident.
+    pub fn resident_frac(&self) -> f64 {
+        let steps = self.resident_steps + self.roundtrip_steps;
+        if steps == 0 {
+            0.0
+        } else {
+            self.resident_steps as f64 / steps as f64
+        }
+    }
+
+    /// Transfer delta since an earlier snapshot of the same store.
+    pub fn since(&self, earlier: &SyncStats) -> SyncStats {
+        SyncStats {
+            bytes_to_device: self.bytes_to_device - earlier.bytes_to_device,
+            bytes_to_host: self.bytes_to_host - earlier.bytes_to_host,
+            resident_steps: self.resident_steps - earlier.resident_steps,
+            roundtrip_steps: self.roundtrip_steps - earlier.roundtrip_steps,
+        }
+    }
+}
+
+/// One group's tensors; at least one home is always populated.  The homes
+/// are kept coherent: mutating one drops the other.  Device buffers are
+/// `Arc`-shared so callers can keep reusable sets (e.g. the decode engine's
+/// zeroed memories) and re-install them per wave without re-uploading.
+#[derive(Default)]
+struct Group {
+    host: Option<Vec<Literal>>,
+    device: Option<Vec<Arc<xla::PjRtBuffer>>>,
+}
 
 #[derive(Default)]
 pub struct StateStore {
-    groups: HashMap<String, Vec<Literal>>,
+    groups: HashMap<String, Group>,
+    mode: ExecMode,
+    stats: SyncStats,
 }
 
 impl StateStore {
@@ -26,18 +101,63 @@ impl StateStore {
         Self::default()
     }
 
+    /// Force the legacy per-step host round-trip (A/B benches) or restore
+    /// the default device-resident behaviour.
+    pub fn set_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Host↔device transfer counters since the store was created.
+    pub fn stats(&self) -> SyncStats {
+        self.stats
+    }
+
     /// Install a group's literals (e.g. params from an init program).
     pub fn set_group(&mut self, name: &str, lits: Vec<Literal>) {
-        self.groups.insert(name.to_string(), lits);
+        self.groups
+            .insert(name.to_string(), Group { host: Some(lits), device: None });
     }
 
     /// Install a single-tensor group.
     pub fn set_single(&mut self, name: &str, lit: Literal) {
-        self.groups.insert(name.to_string(), vec![lit]);
+        self.set_group(name, vec![lit]);
     }
 
-    pub fn get_group(&self, name: &str) -> Option<&[Literal]> {
-        self.groups.get(name).map(Vec::as_slice)
+    /// Install a group that is already on the device (no transfer, no
+    /// metering).  Shared buffers let callers re-install a cached set —
+    /// e.g. zeroed decode memories — for free on every wave.
+    pub fn set_device_group(&mut self, name: &str, bufs: Vec<Arc<xla::PjRtBuffer>>) {
+        self.groups
+            .insert(name.to_string(), Group { host: None, device: Some(bufs) });
+    }
+
+    /// Host view of a group, downloading from the device if that's where the
+    /// current value lives (lazy materialisation; the download is cached and
+    /// the device copy kept, so repeated reads don't re-sync).
+    pub fn host_group(&mut self, name: &str) -> Result<&[Literal]> {
+        let group = self
+            .groups
+            .get_mut(name)
+            .with_context(|| format!("group '{name}' not in store"))?;
+        if group.host.is_none() {
+            let bufs = group.device.as_ref().expect("group with neither home");
+            let mut lits = Vec::with_capacity(bufs.len());
+            let mut bytes = 0u64;
+            for b in bufs {
+                let lit = b
+                    .to_literal_sync()
+                    .with_context(|| format!("downloading group '{name}'"))?;
+                bytes += 4 * lit.element_count() as u64;
+                lits.push(lit);
+            }
+            self.stats.bytes_to_host += bytes;
+            group.host = Some(lits);
+        }
+        Ok(group.host.as_deref().unwrap())
     }
 
     pub fn has_group(&self, name: &str) -> bool {
@@ -52,59 +172,184 @@ impl StateStore {
             .in_group(name)
             .with_context(|| format!("group '{name}' not in {}", prog.spec.name))?;
         let lits = prog.spec.inputs[a..b].iter().map(literal::zeros).collect();
-        self.groups.insert(name.to_string(), lits);
+        self.set_group(name, lits);
         Ok(())
     }
 
-    /// Run `prog`, sourcing every input group from the store and writing
-    /// every output group back.  Returns the outputs of groups named in
-    /// `fetch` (read-only extracts, e.g. losses) as f32 vectors.
-    pub fn run(&mut self, prog: &Program, fetch: &[&str]) -> Result<HashMap<String, Vec<f32>>> {
-        let mut inputs: Vec<&Literal> = Vec::with_capacity(prog.spec.inputs.len());
-        for (gname, a, b) in prog.spec.in_group_order() {
-            let lits = self
+    /// Verify every input group the plan needs exists with the right arity.
+    pub fn check_bound(&self, plan: &StepPlan) -> Result<()> {
+        for g in plan.input_order() {
+            let group = self
                 .groups
-                .get(gname)
-                .with_context(|| format!("missing group '{gname}' for {}", prog.spec.name))?;
-            if lits.len() != b - a {
+                .get(&g.name)
+                .with_context(|| format!("missing group '{}' for {}", g.name, plan.program))?;
+            let held = group
+                .host
+                .as_ref()
+                .map(Vec::len)
+                .or(group.device.as_ref().map(Vec::len))
+                .unwrap_or(0);
+            if held != g.arity {
                 bail!(
-                    "group '{gname}' holds {} tensors, program {} wants {}",
-                    lits.len(),
-                    prog.spec.name,
-                    b - a
+                    "group '{}' holds {} tensors, program {} wants {}",
+                    g.name,
+                    held,
+                    plan.program,
+                    g.arity
                 );
             }
-            inputs.extend(lits.iter());
+        }
+        Ok(())
+    }
+
+    /// Run `prog` under a prebound plan, sourcing every input group from the
+    /// store and writing every output group back.  Returns the fetched
+    /// groups' values as f32 vectors, in the plan's fetch order.
+    ///
+    /// In `ExecMode::Auto` state stays on the device across steps; only the
+    /// fetch groups are synced to host.  In `ExecMode::Roundtrip` (and on
+    /// runtimes that return a single tuple buffer) every step pays the full
+    /// upload + tuple-sync, exactly like the pre-resident runtime.
+    pub fn run_plan(&mut self, prog: &Program, plan: &StepPlan) -> Result<Vec<Vec<f32>>> {
+        if plan.program != prog.spec.name {
+            bail!(
+                "plan bound to program '{}' cannot run '{}'",
+                plan.program,
+                prog.spec.name
+            );
+        }
+        self.check_bound(plan)?;
+        match self.mode {
+            ExecMode::Auto => self.run_plan_device(prog, plan),
+            ExecMode::Roundtrip => self.run_plan_host(prog, plan),
+        }
+    }
+
+    fn run_plan_device(&mut self, prog: &Program, plan: &StepPlan) -> Result<Vec<Vec<f32>>> {
+        // pass 1 (mutable): promote host-dirty groups to the device
+        for g in plan.input_order() {
+            let group = self.groups.get_mut(&g.name).unwrap(); // check_bound ran
+            if group.device.is_none() {
+                let lits = group.host.as_ref().expect("group with neither home");
+                let bufs = lits
+                    .iter()
+                    .map(|l| prog.upload(l).map(Arc::new))
+                    .collect::<Result<Vec<_>>>()?;
+                self.stats.bytes_to_device += g.bytes;
+                group.device = Some(bufs);
+            }
+        }
+        // pass 2 (shared): assemble the flat argument list
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(plan.n_inputs());
+        for g in plan.input_order() {
+            inputs.extend(
+                self.groups[&g.name]
+                    .device
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .map(Arc::as_ref),
+            );
         }
 
+        match prog.execute_buffers(&inputs)? {
+            ExecOutputs::Resident(bufs) => {
+                self.stats.resident_steps += 1;
+                // fetch first (device→host, metered), then write groups back
+                let mut bufs_iter = bufs.into_iter();
+                let mut per_group: Vec<Vec<Arc<xla::PjRtBuffer>>> = Vec::new();
+                for g in plan.output_order() {
+                    per_group.push((&mut bufs_iter).take(g.arity).map(Arc::new).collect());
+                }
+                let mut fetched = Vec::with_capacity(plan.fetch_indices().len());
+                for &i in plan.fetch_indices() {
+                    let g = &plan.output_order()[i];
+                    let mut vals = Vec::new();
+                    for b in &per_group[i] {
+                        let lit = b
+                            .to_literal_sync()
+                            .with_context(|| format!("fetching group '{}'", g.name))?;
+                        vals.extend(literal::to_f32s(&lit)?);
+                    }
+                    self.stats.bytes_to_host += g.bytes;
+                    fetched.push(vals);
+                }
+                for (g, bufs) in plan.output_order().iter().zip(per_group) {
+                    self.groups
+                        .insert(g.name.clone(), Group { host: None, device: Some(bufs) });
+                }
+                Ok(fetched)
+            }
+            ExecOutputs::Roundtrip(lits) => {
+                // runtime returned one tuple buffer: the full output sync
+                // was unavoidable, so account it and fall back to host state
+                self.stats.roundtrip_steps += 1;
+                self.stats.bytes_to_host += plan.total_out_bytes();
+                self.apply_host_outputs(plan, lits)
+            }
+        }
+    }
+
+    /// Legacy path: host literals in, full tuple sync out, every step.
+    fn run_plan_host(&mut self, prog: &Program, plan: &StepPlan) -> Result<Vec<Vec<f32>>> {
+        for g in plan.input_order() {
+            self.host_group(&g.name)?; // materialise before borrowing below
+        }
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(plan.n_inputs());
+        for g in plan.input_order() {
+            inputs.extend(self.groups[&g.name].host.as_ref().unwrap().iter());
+        }
+        self.stats.bytes_to_device += plan.total_in_bytes();
         let outs = prog.execute_refs(&inputs)?;
+        self.stats.roundtrip_steps += 1;
+        self.stats.bytes_to_host += plan.total_out_bytes();
+        self.apply_host_outputs(plan, outs)
+    }
 
-        // distribute outputs into groups
-        let mut by_group: HashMap<String, Vec<Literal>> = HashMap::new();
-        let mut order: Vec<(&String, &(usize, usize))> = prog.spec.out_groups.iter().collect();
-        order.sort_by_key(|(_, &(a, _))| a);
-        let mut outs_iter = outs.into_iter();
-        for (gname, &(a, b)) in order {
-            let lits: Vec<Literal> = (&mut outs_iter).take(b - a).collect();
-            by_group.insert(gname.clone(), lits);
+    /// Distribute host-literal outputs into the plan's output groups and
+    /// extract the fetched groups (this step's values).  Shared by the
+    /// roundtrip paths; public so the plan binding layer is testable
+    /// without artifacts.
+    pub fn apply_host_outputs(
+        &mut self,
+        plan: &StepPlan,
+        outs: Vec<Literal>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let declared: usize = plan.output_order().iter().map(|g| g.arity).sum();
+        if outs.len() != declared {
+            bail!(
+                "program {}: plan distributes {} outputs, got {}",
+                plan.program,
+                declared,
+                outs.len()
+            );
         }
-
-        let mut fetched = HashMap::new();
-        for f in fetch {
-            let lits = by_group
-                .get(*f)
-                .with_context(|| format!("fetch group '{f}' not produced by {}", prog.spec.name))?;
+        let mut outs_iter = outs.into_iter();
+        let mut per_group: Vec<Vec<Literal>> = Vec::new();
+        for g in plan.output_order() {
+            per_group.push((&mut outs_iter).take(g.arity).collect());
+        }
+        let mut fetched = Vec::with_capacity(plan.fetch_indices().len());
+        for &i in plan.fetch_indices() {
             let mut vals = Vec::new();
-            for l in lits {
+            for l in &per_group[i] {
                 vals.extend(literal::to_f32s(l)?);
             }
-            fetched.insert(f.to_string(), vals);
+            fetched.push(vals);
         }
-
-        // write back (after fetch so fetch sees this step's outputs)
-        for (g, lits) in by_group {
-            self.groups.insert(g, lits);
+        for (g, lits) in plan.output_order().iter().zip(per_group) {
+            self.set_group(&g.name, lits);
         }
         Ok(fetched)
+    }
+
+    /// Run `prog` without a prebound plan, fetching `fetch` groups as f32
+    /// vectors keyed by name.  Builds a transient [`StepPlan`] — fine for
+    /// cold paths (init programs, one-shot evals); hot loops bind a plan
+    /// once and call [`Self::run_plan`].
+    pub fn run(&mut self, prog: &Program, fetch: &[&str]) -> Result<HashMap<String, Vec<f32>>> {
+        let plan = StepPlan::new(&prog.spec, fetch)?;
+        let vals = self.run_plan(prog, &plan)?;
+        Ok(fetch.iter().map(|f| f.to_string()).zip(vals).collect())
     }
 }

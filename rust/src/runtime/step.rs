@@ -1,0 +1,160 @@
+//! StepPlan: a prebound execution plan for one (program, store) pairing.
+//!
+//! The per-token decode loop used to pay, on every single step, a re-sort of
+//! the program's `out_groups`, a fresh `HashMap<String, Vec<Literal>>` of
+//! outputs, and string formatting for group lookups.  A `StepPlan` freezes
+//! all of that once, at bind time:
+//!
+//! - the **input-group order** (flat assembly order of the program's input
+//!   list) and each group's arity and host byte size;
+//! - the **output-group distribution** (which contiguous run of outputs
+//!   lands in which store group), pre-sorted by flat index;
+//! - the **fetch indices** (which output groups are materialised to host
+//!   after a step — everything else stays wherever the runtime put it).
+//!
+//! Plans are pure metadata built from a [`ProgramSpec`]; they hold no
+//! buffers and no program handle, so they are cheap to build, trivially
+//! `Clone`, and testable without artifacts.  `StateStore::run_plan` is the
+//! execution half.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ProgramSpec;
+
+/// One named group inside a plan: arity (tensor count) and total host bytes
+/// (all exported dtypes are 4-byte scalars, see `literal::DType`).
+#[derive(Debug, Clone)]
+pub struct PlanGroup {
+    pub name: String,
+    pub arity: usize,
+    pub bytes: u64,
+}
+
+/// Frozen input/output wiring for one program (see module docs).
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// Program this plan was built against; `run_plan` refuses any other.
+    pub program: String,
+    inputs: Vec<PlanGroup>,
+    outputs: Vec<PlanGroup>,
+    /// Indices into `outputs` for the groups materialised to host per step.
+    fetch: Vec<usize>,
+    n_inputs: usize,
+    total_in_bytes: u64,
+    total_out_bytes: u64,
+}
+
+impl StepPlan {
+    /// Bind a plan to `spec`, fetching the named output groups per step.
+    ///
+    /// Fails if the spec's groups do not tile its flat input/output lists
+    /// (gaps or overlaps), or if a fetch group is not produced.
+    pub fn new(spec: &ProgramSpec, fetch: &[&str]) -> Result<StepPlan> {
+        let inputs = ordered_groups(
+            spec.in_groups.iter().map(|(k, &r)| (k.as_str(), r)),
+            spec.inputs.len(),
+            &spec.name,
+            "input",
+            |i| spec.inputs[i].element_count() as u64 * 4,
+        )?;
+        let outputs = ordered_groups(
+            spec.out_groups.iter().map(|(k, &r)| (k.as_str(), r)),
+            spec.outputs.len(),
+            &spec.name,
+            "output",
+            |i| spec.outputs[i].element_count() as u64 * 4,
+        )?;
+        let fetch_idx = fetch
+            .iter()
+            .map(|f| {
+                outputs
+                    .iter()
+                    .position(|g| g.name == *f)
+                    .with_context(|| format!("fetch group '{f}' not produced by {}", spec.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepPlan {
+            program: spec.name.clone(),
+            total_in_bytes: inputs.iter().map(|g| g.bytes).sum(),
+            total_out_bytes: outputs.iter().map(|g| g.bytes).sum(),
+            n_inputs: spec.inputs.len(),
+            inputs,
+            outputs,
+            fetch: fetch_idx,
+        })
+    }
+
+    /// Input groups in flat assembly order.
+    pub fn input_order(&self) -> &[PlanGroup] {
+        &self.inputs
+    }
+
+    /// Output groups in flat production order.
+    pub fn output_order(&self) -> &[PlanGroup] {
+        &self.outputs
+    }
+
+    /// Fetched groups as indices into [`Self::output_order`].
+    pub fn fetch_indices(&self) -> &[usize] {
+        &self.fetch
+    }
+
+    pub fn fetch_names(&self) -> Vec<&str> {
+        self.fetch.iter().map(|&i| self.outputs[i].name.as_str()).collect()
+    }
+
+    /// Flat input tensor count (the executable's argument arity).
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Host bytes a full input upload costs (the roundtrip path pays this
+    /// every step; the resident path only pays it for host-dirty groups).
+    pub fn total_in_bytes(&self) -> u64 {
+        self.total_in_bytes
+    }
+
+    /// Host bytes a full output sync costs (the roundtrip path pays this
+    /// every step; the resident path only pays the fetched groups' share).
+    pub fn total_out_bytes(&self) -> u64 {
+        self.total_out_bytes
+    }
+
+    /// Host bytes of the fetched groups alone (the resident path's
+    /// unavoidable per-step device→host traffic).
+    pub fn fetch_bytes(&self) -> u64 {
+        self.fetch.iter().map(|&i| self.outputs[i].bytes).sum()
+    }
+}
+
+/// Sort `(name, [a, b))` ranges by start and verify they tile `0..len`.
+fn ordered_groups<'a>(
+    groups: impl Iterator<Item = (&'a str, (usize, usize))>,
+    len: usize,
+    prog: &str,
+    kind: &str,
+    bytes_of: impl Fn(usize) -> u64,
+) -> Result<Vec<PlanGroup>> {
+    let mut v: Vec<(&str, usize, usize)> = groups.map(|(k, (a, b))| (k, a, b)).collect();
+    v.sort_by_key(|&(_, a, _)| a);
+    let mut cursor = 0usize;
+    let mut out = Vec::with_capacity(v.len());
+    for (name, a, b) in v {
+        if a != cursor || b < a {
+            bail!(
+                "program {prog}: {kind} groups leave a gap or overlap at index {cursor} \
+                 (group '{name}' spans [{a}, {b}))"
+            );
+        }
+        out.push(PlanGroup {
+            name: name.to_string(),
+            arity: b - a,
+            bytes: (a..b).map(&bytes_of).sum(),
+        });
+        cursor = b;
+    }
+    if cursor != len {
+        bail!("program {prog}: {kind} groups cover {cursor} of {len} tensors");
+    }
+    Ok(out)
+}

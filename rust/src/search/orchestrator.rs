@@ -5,7 +5,7 @@ use anyhow::{Context, Result};
 use crate::arch::{Arch, SearchSpace};
 use crate::data::TxlBatcher;
 use crate::latency::LatencyTable;
-use crate::runtime::{literal, Engine, StateStore};
+use crate::runtime::{literal, Engine, ExecMode, StateStore, StepPlan, SyncStats};
 
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
@@ -57,6 +57,9 @@ pub struct SearchReport {
     pub estimated_latency: f64,
     pub baseline_latency: f64,
     pub alphas: Vec<Vec<f32>>,
+    /// Host↔device traffic over the whole search (device-resident steps
+    /// only sync the fetched losses; roundtrip steps sync everything).
+    pub sync: SyncStats,
 }
 
 impl SearchReport {
@@ -72,6 +75,8 @@ pub struct SearchOrchestrator<'a> {
     pub table: LatencyTable,
     /// Baseline-network estimated latency (denominator of Eq. 3).
     pub baseline_latency: f64,
+    /// Execution mode for the search state store (default device-resident).
+    pub exec_mode: ExecMode,
 }
 
 impl<'a> SearchOrchestrator<'a> {
@@ -81,7 +86,13 @@ impl<'a> SearchOrchestrator<'a> {
         table: LatencyTable,
         baseline_latency: f64,
     ) -> Self {
-        SearchOrchestrator { engine, config, table, baseline_latency }
+        SearchOrchestrator {
+            engine,
+            config,
+            table,
+            baseline_latency,
+            exec_mode: ExecMode::default(),
+        }
     }
 
     /// Run phase 1 end to end; `stream` is the training token stream.
@@ -95,6 +106,7 @@ impl<'a> SearchOrchestrator<'a> {
         let sched = super::TemperatureSchedule::paper(self.config.epochs, self.config.anneal_rate);
 
         let mut st = StateStore::new();
+        st.set_mode(self.exec_mode);
         st.set_single(
             "seed",
             literal::scalar_i32(&init.spec.inputs[0], self.config.seed)?,
@@ -127,6 +139,11 @@ impl<'a> SearchOrchestrator<'a> {
             literal::scalar_f32(&astep.spec.inputs[ta], self.config.target as f32)?,
         );
 
+        // plans bound once for the whole search: the epoch loops below do
+        // no per-step group sorting, map building or fetch-name hashing
+        let wplan = StepPlan::new(&wstep.spec, &["ce"])?;
+        let aplan = StepPlan::new(&astep.spec, &["ce", "lat_ratio", "est_lat"])?;
+
         let mut batcher = TxlBatcher::new(stream, cfg.batch, cfg.seq_len);
         let mut traces = Vec::new();
         let mut global_step: i32 = 0;
@@ -143,8 +160,8 @@ impl<'a> SearchOrchestrator<'a> {
                 }
                 self.set_batch(&mut st, &wstep, &batch.x, &batch.y)?;
                 self.set_step(&mut st, &wstep, global_step, temp)?;
-                let out = st.run(&wstep, &["ce"])?;
-                wce = out["ce"][0] as f64;
+                let out = st.run_plan(&wstep, &wplan)?;
+                wce = out[0][0] as f64;
                 global_step += 1;
             }
 
@@ -164,10 +181,13 @@ impl<'a> SearchOrchestrator<'a> {
                     }
                     self.set_batch(&mut st, &astep, &batch.x, &batch.y)?;
                     self.set_step(&mut st, &astep, global_step, temp)?;
-                    let out = st.run(&astep, &["ce", "lat_ratio", "est_lat"])?;
-                    arch_ce = Some(out["ce"][0] as f64);
-                    ratio = Some(out["lat_ratio"][0] as f64);
-                    est = Some(out["est_lat"][0] as f64);
+                    let out = st.run_plan(&astep, &aplan)?;
+                    let [ce, lat_ratio, est_lat] = &out[..] else {
+                        anyhow::bail!("arch plan fetched {} groups, expected 3", out.len())
+                    };
+                    arch_ce = Some(ce[0] as f64);
+                    ratio = Some(lat_ratio[0] as f64);
+                    est = Some(est_lat[0] as f64);
                     global_step += 1;
                 }
             }
@@ -183,8 +203,10 @@ impl<'a> SearchOrchestrator<'a> {
         }
 
         // ---- phase-2 sampling: argmax over alphas per slot (paper §3.3)
+        // lazy materialisation: this is the first (and only) host read of
+        // the alphas — the epochs above never synced them
         let alphas_flat = st
-            .get_group("alphas")
+            .host_group("alphas")
             .context("alphas group missing after search")?;
         let a = literal::to_f32s(&alphas_flat[0])?;
         let n_opts = self.table.latencies.len();
@@ -213,6 +235,7 @@ impl<'a> SearchOrchestrator<'a> {
             estimated_latency,
             baseline_latency: self.baseline_latency,
             alphas,
+            sync: st.stats(),
         })
     }
 

@@ -32,7 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Engine, StateStore};
+use crate::runtime::{Engine, ExecMode, StateStore};
 
 use super::batcher::{BatchWave, WaveBatcher};
 use super::engine::{DecodeEngine, ServeMetrics};
@@ -105,7 +105,9 @@ impl<'a> Cluster<'a> {
         for (i, name) in names.iter().enumerate() {
             let de = DecodeEngine::new(engine, name)?;
             let st = de.init_state(seed)?;
-            let gen = engine.program(&format!("gen_{name}"))?;
+            // probe one decode step for the router's latency estimate,
+            // reusing the DecodeEngine's cached program Arc
+            let gen = Arc::clone(de.gen_program());
             let inputs: Vec<xla::Literal> = gen
                 .spec
                 .inputs
@@ -149,6 +151,15 @@ impl<'a> Cluster<'a> {
     /// Partial-wave deadline applied to every lane on the next replay.
     pub fn set_max_wait(&mut self, d: Duration) {
         self.max_wait = d;
+    }
+
+    /// Execution mode for every lane's state store: `Auto` (device-resident
+    /// decode, the default) or `Roundtrip` (legacy full host sync per
+    /// token — the baseline side of the resident-vs-roundtrip A/B).
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        for lane in &mut self.lanes {
+            lane.state.set_mode(mode);
+        }
     }
 
     pub fn variant_names(&self) -> Vec<String> {
@@ -275,7 +286,7 @@ impl<'a> Cluster<'a> {
     pub fn report(&self) -> String {
         let snapshot = self.metrics.lock().unwrap();
         let mut out = String::from(
-            "variant      reqs waves  occup     p50      p95     tok/s\n",
+            "variant      reqs waves  occup     p50      p95     tok/s   sync-B/tok\n",
         );
         // lane order (quality rank), not HashMap order: stable reports
         let mut total = ServeMetrics::default();
@@ -286,26 +297,28 @@ impl<'a> Cluster<'a> {
             }
             total.merge(m);
             out.push_str(&format!(
-                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1}\n",
+                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
                 lane.name,
                 m.requests,
                 m.waves,
                 m.occupancy,
                 m.p50() * 1e3,
                 m.p95() * 1e3,
-                m.throughput_tok_s()
+                m.throughput_tok_s(),
+                m.bytes_per_token()
             ));
         }
         if total.requests > 0 {
             out.push_str(&format!(
-                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1}\n",
+                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
                 "TOTAL",
                 total.requests,
                 total.waves,
                 total.occupancy,
                 total.p50() * 1e3,
                 total.p95() * 1e3,
-                total.throughput_tok_s()
+                total.throughput_tok_s(),
+                total.bytes_per_token()
             ));
         }
         out

@@ -3,15 +3,95 @@
 //! Per wave: feed every prompt token through the single-token decode program
 //! (threading TXL memories), then greedy-decode `n_gen` tokens per slot.
 //! Unused slots are padded with token 0 and ignored.
+//!
+//! The per-token loop is the hottest path in the repo, so everything
+//! bindable is bound once in `DecodeEngine::new`: the `gen` program `Arc`
+//! (no per-wave mutex hit on the engine's program cache), the `x` tensor
+//! spec, and a [`StepPlan`] fetching only `logits`.  Per token the loop
+//! uploads `width` i32s, runs device-resident, and syncs `width × vocab`
+//! logits back — params/opt-state/memories never leave the device (the
+//! `bytes_synced` metric proves it).
 
+use std::cell::RefCell;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{literal, Engine, StateStore};
+use crate::runtime::{literal, Engine, ExecMode, Program, StateStore, StepPlan, TensorSpec};
+use crate::util::rng::Rng;
 
 use super::batcher::BatchWave;
 use super::Response;
+
+/// Cap on retained latency samples (see [`LatencyReservoir`]).
+pub const LATENCY_RESERVOIR_CAP: usize = 65_536;
+
+/// Bounded uniform sample of per-request latencies (Vitter's algorithm R).
+///
+/// Long-running workers used to grow `Vec<f64>` without bound; the
+/// reservoir keeps a fixed-size uniform sample instead, so percentiles stay
+/// representative at any trace length.  The RNG is seeded deterministically
+/// (`util::rng`), so runs are reproducible.
+#[derive(Debug, Clone)]
+pub struct LatencyReservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl LatencyReservoir {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        LatencyReservoir { cap, seen: 0, samples: Vec::new(), rng: Rng::new(0x1a7e_5a3e) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // keep each of the `seen` observations with probability cap/seen
+            let j = self.rng.below(self.seen as usize);
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// The retained sample (unsorted, completion order while under cap).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Total observations pushed (≥ `samples().len()`).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Fold another reservoir in.  Each retained sample of `other` is
+    /// re-offered through the sampler; `other`'s already-evicted
+    /// observations adjust `seen` so acceptance odds keep shrinking.  Exact
+    /// when the union fits under the cap, an approximation beyond it
+    /// (cold-path use: end-of-run report merging).
+    pub fn merge(&mut self, other: &LatencyReservoir) {
+        for &x in &other.samples {
+            self.push(x);
+        }
+        self.seen += other.seen - other.samples.len() as u64;
+    }
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir::new(LATENCY_RESERVOIR_CAP)
+    }
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
@@ -19,24 +99,36 @@ pub struct ServeMetrics {
     pub requests: usize,
     pub tokens_out: usize,
     pub busy_secs: f64,
-    /// Per-request latencies (seconds), in completion order.  Kept unsorted;
-    /// percentiles select on demand (cold path) so the per-wave hot path
-    /// never pays an O(n log n) re-sort.
-    pub latencies: Vec<f64>,
+    /// Bounded uniform sample of per-request latencies (seconds); the hot
+    /// path pays O(1) per push and percentiles select on demand.
+    pub latencies: LatencyReservoir,
     /// Mean slot occupancy across waves (batching efficiency).
     pub occupancy: f64,
+    /// Host↔device bytes moved by decode (uploads of `x` + logits fetches;
+    /// in roundtrip mode, the whole state per token — the A/B counter).
+    pub bytes_synced: u64,
 }
 
 impl ServeMetrics {
     pub fn p50(&self) -> f64 {
-        percentile(&self.latencies, 0.50)
+        percentile(self.latencies.samples(), 0.50)
     }
     pub fn p95(&self) -> f64 {
-        percentile(&self.latencies, 0.95)
+        percentile(self.latencies.samples(), 0.95)
     }
     pub fn throughput_tok_s(&self) -> f64 {
         if self.busy_secs > 0.0 {
             self.tokens_out as f64 / self.busy_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Host-sync traffic per generated token — the resident-vs-roundtrip
+    /// figure of merit.
+    pub fn bytes_per_token(&self) -> f64 {
+        if self.tokens_out > 0 {
+            self.bytes_synced as f64 / self.tokens_out as f64
         } else {
             0.0
         }
@@ -55,7 +147,8 @@ impl ServeMetrics {
         self.requests += other.requests;
         self.tokens_out += other.tokens_out;
         self.busy_secs += other.busy_secs;
-        self.latencies.extend_from_slice(&other.latencies);
+        self.bytes_synced += other.bytes_synced;
+        self.latencies.merge(&other.latencies);
     }
 }
 
@@ -80,27 +173,84 @@ pub struct DecodeEngine<'a> {
     /// Wave width = the gen program's compiled batch dimension.
     pub width: usize,
     vocab: usize,
+    /// The `gen_<arch>` program, resolved once (the old per-wave
+    /// `engine.program()` lookup went through a mutex every wave).
+    gen: Arc<Program>,
+    /// Spec of the token-batch input, cloned once.
+    xspec: TensorSpec,
+    /// Prebound plan fetching only `logits`.
+    plan: StepPlan,
+    /// Zeroed TXL memories, uploaded once and re-installed per wave (waves
+    /// are independent sequences) — without this cache every wave would
+    /// re-upload the full memory set.
+    zero_mems: RefCell<Option<Vec<Arc<xla::PjRtBuffer>>>>,
 }
 
 impl<'a> DecodeEngine<'a> {
     pub fn new(engine: &'a Engine, arch_name: &str) -> Result<Self> {
         let gen = engine.program(&format!("gen_{arch_name}"))?;
         let (xa, _) = gen.spec.in_group("x").context("x group")?;
-        let width = gen.spec.inputs[xa].shape[0];
+        let xspec = gen.spec.inputs[xa].clone();
+        let width = xspec.shape[0];
         let vocab = engine.manifest.config.vocab;
-        Ok(DecodeEngine { engine, arch_name: arch_name.to_string(), width, vocab })
+        let plan = StepPlan::new(&gen.spec, &["logits"])?;
+        Ok(DecodeEngine {
+            engine,
+            arch_name: arch_name.to_string(),
+            width,
+            vocab,
+            gen,
+            xspec,
+            plan,
+            zero_mems: RefCell::new(None),
+        })
+    }
+
+    /// The cached `gen_<arch>` program (shared with callers that would
+    /// otherwise re-resolve it through the engine's cache mutex).
+    pub fn gen_program(&self) -> &Arc<Program> {
+        &self.gen
     }
 
     /// Load trained params into the decode state (from a StateStore that ran
     /// init/train), or initialise fresh ones with `seed`.
     pub fn init_state(&self, seed: i32) -> Result<StateStore> {
         let init = self.engine.program(&format!("init_{}", self.arch_name))?;
-        let gen = self.engine.program(&format!("gen_{}", self.arch_name))?;
         let mut st = StateStore::new();
         st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], seed)?);
         st.run(&init, &[])?;
-        st.zero_group(&gen, "mems")?;
+        st.zero_group(&self.gen, "mems")?;
         Ok(st)
+    }
+
+    /// One decode step: upload the token batch (`width` i32s), run
+    /// device-resident, sync only the logits back.  The single fetched
+    /// vector is moved out — never cloned.  Public so benches measure the
+    /// exact serve hot path rather than a reconstruction of it.
+    pub fn decode_step(&self, st: &mut StateStore, x: &[i32]) -> Result<Vec<f32>> {
+        st.set_single("x", literal::literal_from_i32s(&self.xspec, x)?);
+        let mut out = st.run_plan(&self.gen, &self.plan)?;
+        Ok(out.pop().expect("plan fetches logits"))
+    }
+
+    /// Reset the TXL memories for a fresh wave.  On the resident path this
+    /// re-installs a cached zeroed device set (uploaded once per engine);
+    /// in roundtrip mode it falls back to host zeros like the legacy loop.
+    fn reset_mems(&self, st: &mut StateStore) -> Result<()> {
+        if st.mode() == ExecMode::Roundtrip {
+            return st.zero_group(&self.gen, "mems");
+        }
+        let mut cache = self.zero_mems.borrow_mut();
+        if cache.is_none() {
+            let (a, b) = self.gen.spec.in_group("mems").context("mems group")?;
+            let bufs = self.gen.spec.inputs[a..b]
+                .iter()
+                .map(|s| self.gen.upload(&literal::zeros(s)).map(Arc::new))
+                .collect::<Result<Vec<_>>>()?;
+            *cache = Some(bufs);
+        }
+        st.set_device_group("mems", cache.as_ref().unwrap().clone());
+        Ok(())
     }
 
     /// Decode one wave; returns responses in wave order.
@@ -110,54 +260,45 @@ impl<'a> DecodeEngine<'a> {
         wave: &BatchWave,
         metrics: &mut ServeMetrics,
     ) -> Result<Vec<Response>> {
-        let gen = self.engine.program(&format!("gen_{}", self.arch_name))?;
         anyhow::ensure!(wave.requests.len() <= self.width, "wave too wide");
         let t0 = Instant::now();
+        let sync0 = st.stats();
 
         // fresh memories per wave (sequences are independent)
-        st.zero_group(&gen, "mems")?;
+        self.reset_mems(st)?;
 
         let shape = wave_shape(wave);
         let (max_prompt, max_gen) = (shape.max_prompt, shape.max_gen);
 
-        let (xa, _) = gen.spec.in_group("x").context("x group")?;
-        let xspec = gen.spec.inputs[xa].clone();
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); wave.requests.len()];
         let mut last_logits: Vec<f32> = Vec::new();
+        // one scratch token batch, refilled per step (no per-step allocs)
+        let mut x = vec![0i32; self.width];
 
         // All prompts empty but generation requested: without a seed step
         // `last_logits` stays empty and the decode loop below would silently
         // emit zero tokens.  Feed one BOS (token 0) step so every slot has
         // logits to decode from.
         if shape.needs_bos {
-            let lit = literal::literal_from_value(
-                &xspec,
-                &literal::TensorValue::I32(vec![0i32; self.width]),
-            )?;
-            st.set_single("x", lit);
-            let out = st.run(&gen, &["logits"])?;
-            last_logits = out["logits"].clone();
+            last_logits = self.decode_step(st, &x)?;
         }
 
         // prompt phase: feed token t of every slot (right-aligned so all
         // prompts end on the same step and decode starts together)
         for t in 0..max_prompt {
-            let mut x = vec![0i32; self.width];
+            x.fill(0);
             for (slot, (r, _)) in wave.requests.iter().enumerate() {
                 let offset = max_prompt - r.prompt.len();
                 if t >= offset {
                     x[slot] = r.prompt[t - offset];
                 }
             }
-            let lit = literal::literal_from_value(&xspec, &literal::TensorValue::I32(x))?;
-            st.set_single("x", lit);
-            let out = st.run(&gen, &["logits"])?;
-            last_logits = out["logits"].clone();
+            last_logits = self.decode_step(st, &x)?;
         }
 
         // decode phase: greedy argmax per live slot
         for g in 0..max_gen {
-            let mut x = vec![0i32; self.width];
+            x.fill(0);
             for (slot, (r, _)) in wave.requests.iter().enumerate() {
                 if g < r.n_gen && !last_logits.is_empty() {
                     let row = &last_logits[slot * self.vocab..(slot + 1) * self.vocab];
@@ -169,16 +310,14 @@ impl<'a> DecodeEngine<'a> {
             if g + 1 == max_gen {
                 break; // tokens already captured; skip the trailing step
             }
-            let lit = literal::literal_from_value(&xspec, &literal::TensorValue::I32(x))?;
-            st.set_single("x", lit);
-            let out = st.run(&gen, &["logits"])?;
-            last_logits = out["logits"].clone();
+            last_logits = self.decode_step(st, &x)?;
         }
 
         let busy = t0.elapsed().as_secs_f64();
         metrics.waves += 1;
         metrics.requests += wave.requests.len();
         metrics.busy_secs += busy;
+        metrics.bytes_synced += st.stats().since(&sync0).total_bytes();
         metrics.occupancy = (metrics.occupancy * (metrics.waves - 1) as f64
             + wave.requests.len() as f64 / self.width as f64)
             / metrics.waves as f64;
@@ -186,15 +325,15 @@ impl<'a> DecodeEngine<'a> {
         let done = Instant::now();
         let mut responses = Vec::with_capacity(wave.requests.len());
         for (slot, (r, submitted)) in wave.requests.iter().enumerate() {
-            let toks = outputs[slot].clone();
+            // drain the slot's tokens instead of clone + truncate
+            let mut toks = std::mem::take(&mut outputs[slot]);
             metrics.tokens_out += toks.len().min(r.n_gen);
-            let mut t = toks;
-            t.truncate(r.n_gen);
+            toks.truncate(r.n_gen);
             let lat = done.duration_since(*submitted).as_secs_f64();
             metrics.latencies.push(lat);
             responses.push(Response {
                 id: r.id,
-                tokens: t,
+                tokens: toks,
                 latency: lat,
                 variant: self.arch_name.clone(),
             });
@@ -235,6 +374,14 @@ fn argmax(xs: &[f32]) -> i32 {
 mod tests {
     use super::*;
 
+    fn reservoir_of(xs: &[f64]) -> LatencyReservoir {
+        let mut r = LatencyReservoir::default();
+        for &x in xs {
+            r.push(x);
+        }
+        r
+    }
+
     #[test]
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
@@ -263,29 +410,82 @@ mod tests {
     }
 
     #[test]
+    fn reservoir_stays_capped_and_percentiles_stay_sane() {
+        let mut r = LatencyReservoir::new(1000);
+        // uniform ramp over [0, 1): true p50 = 0.5, p95 = 0.95
+        let n = 200_000u64;
+        for i in 0..n {
+            r.push(i as f64 / n as f64);
+        }
+        assert_eq!(r.samples().len(), 1000, "reservoir exceeded its cap");
+        assert_eq!(r.seen(), n);
+        let p50 = percentile(r.samples(), 0.50);
+        let p95 = percentile(r.samples(), 0.95);
+        assert!((p50 - 0.5).abs() < 0.08, "p50 {p50} drifted");
+        assert!((p95 - 0.95).abs() < 0.05, "p95 {p95} drifted");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let mut a = LatencyReservoir::new(64);
+        let mut b = LatencyReservoir::new(64);
+        for i in 0..10_000 {
+            a.push(i as f64);
+            b.push(i as f64);
+        }
+        assert_eq!(a.samples(), b.samples());
+    }
+
+    #[test]
+    fn reservoir_under_cap_keeps_everything() {
+        let r = reservoir_of(&[3.0, 1.0, 2.0]);
+        assert_eq!(r.samples(), &[3.0, 1.0, 2.0]);
+        assert_eq!(r.seen(), 3);
+    }
+
+    #[test]
+    fn reservoir_merge_preserves_seen_and_cap() {
+        let mut a = LatencyReservoir::new(8);
+        for i in 0..100 {
+            a.push(i as f64);
+        }
+        let mut b = LatencyReservoir::new(8);
+        for i in 0..50 {
+            b.push(1000.0 + i as f64);
+        }
+        a.merge(&b);
+        assert!(a.samples().len() <= 8);
+        assert_eq!(a.seen(), 150);
+    }
+
+    #[test]
     fn metrics_merge_weights_occupancy_by_waves() {
         let mut a = ServeMetrics {
             waves: 1,
             requests: 2,
             tokens_out: 8,
             busy_secs: 1.0,
-            latencies: vec![0.5],
+            latencies: reservoir_of(&[0.5]),
             occupancy: 1.0,
+            bytes_synced: 100,
         };
         let b = ServeMetrics {
             waves: 3,
             requests: 3,
             tokens_out: 12,
             busy_secs: 2.0,
-            latencies: vec![0.1, 0.2],
+            latencies: reservoir_of(&[0.1, 0.2]),
             occupancy: 0.5,
+            bytes_synced: 50,
         };
         a.merge(&b);
         assert_eq!(a.waves, 4);
         assert_eq!(a.requests, 5);
         assert_eq!(a.tokens_out, 20);
+        assert_eq!(a.bytes_synced, 150);
         assert!((a.occupancy - 0.625).abs() < 1e-12);
-        assert_eq!(a.latencies.len(), 3);
+        assert_eq!(a.latencies.samples().len(), 3);
+        assert_eq!(a.latencies.seen(), 3);
     }
 
     fn wave_of(prompts: &[usize], gens: &[usize]) -> BatchWave {

@@ -33,7 +33,9 @@ pub mod worker;
 pub use batcher::{BatchWave, WaveBatcher};
 pub use cluster::Cluster;
 pub use workload::{Arrival, TimedRequest, WorkloadGen};
-pub use engine::{percentile, wave_shape, DecodeEngine, ServeMetrics, WaveShape};
+pub use engine::{
+    percentile, wave_shape, DecodeEngine, LatencyReservoir, ServeMetrics, WaveShape,
+};
 pub use router::{Router, RouterPolicy, VariantInfo};
 pub use worker::{admit, WaveExecutor, WorkerLane};
 

@@ -5,7 +5,7 @@ use anyhow::{Context, Result};
 
 use crate::data::TxlBatcher;
 use crate::metrics;
-use crate::runtime::{literal, Engine, Program, StateStore};
+use crate::runtime::{literal, Engine, ExecMode, Program, StateStore, StepPlan, SyncStats};
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -41,16 +41,22 @@ pub struct TrainReport {
     /// "ppl" or "bpc" value of valid/test, per manifest metric.
     pub valid_metric: Option<f64>,
     pub test_metric: Option<f64>,
+    /// Host↔device traffic over the whole run (resident decode keeps this
+    /// near the per-step fetch cost; roundtrip mode pays full state).
+    pub sync: SyncStats,
 }
 
 pub struct Trainer<'a> {
     pub engine: &'a Engine,
     pub arch_name: String,
+    /// Execution mode for the training state store (A/B benches force
+    /// `Roundtrip`; everything else wants the default `Auto`).
+    pub exec_mode: ExecMode,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(engine: &'a Engine, arch_name: &str) -> Self {
-        Trainer { engine, arch_name: arch_name.to_string() }
+        Trainer { engine, arch_name: arch_name.to_string(), exec_mode: ExecMode::default() }
     }
 
     /// Train on `train_stream`, then (optionally) evaluate valid/test.
@@ -66,6 +72,7 @@ impl<'a> Trainer<'a> {
         let train = self.engine.program(&format!("train_{}", self.arch_name))?;
 
         let mut st = StateStore::new();
+        st.set_mode(self.exec_mode);
         st.set_single("seed", literal::scalar_i32(&init.spec.inputs[0], cfg.seed)?);
         st.run(&init, &[])?;
         st.zero_group(&train, "m")?;
@@ -77,6 +84,12 @@ impl<'a> Trainer<'a> {
             literal::scalar_f32(&train.spec.inputs[ba], cfg.balance_coef)?,
         );
 
+        // bound once: the step loop does no group re-sorting or map churn
+        let plan = StepPlan::new(&train.spec, &["ce", "bal", "lr"])?;
+        let (sa, _) = train.spec.in_group("seed").context("seed")?;
+        let (pa, _) = train.spec.in_group("step").context("step")?;
+        st.set_single("seed", literal::scalar_i32(&train.spec.inputs[sa], cfg.seed)?);
+
         let mut batcher = TxlBatcher::new(train_stream, mcfg.batch, mcfg.seq_len);
         let mut curve = Vec::new();
         let mut last_ce = f64::NAN;
@@ -86,17 +99,17 @@ impl<'a> Trainer<'a> {
                 st.zero_group(&train, "mems")?;
             }
             set_batch(&mut st, &train, &batch.x, Some(&batch.y))?;
-            let (sa, _) = train.spec.in_group("seed").context("seed")?;
-            st.set_single("seed", literal::scalar_i32(&train.spec.inputs[sa], cfg.seed)?);
-            let (pa, _) = train.spec.in_group("step").context("step")?;
             st.set_single("step", literal::scalar_i32(&train.spec.inputs[pa], step as i32)?);
-            let out = st.run(&train, &["ce", "bal", "lr"])?;
-            last_ce = out["ce"][0] as f64;
+            let out = st.run_plan(&train, &plan)?;
+            let [ce, bal, lr] = &out[..] else {
+                anyhow::bail!("train plan fetched {} groups, expected 3", out.len())
+            };
+            last_ce = ce[0] as f64;
             curve.push(StepRecord {
                 step,
                 ce: last_ce,
-                balance: out["bal"][0] as f64,
-                lr: out["lr"][0] as f64,
+                balance: bal[0] as f64,
+                lr: lr[0] as f64,
             });
         }
 
@@ -117,6 +130,7 @@ impl<'a> Trainer<'a> {
             valid_ce,
             test_ce,
             curve,
+            sync: st.stats(),
         })
     }
 
@@ -126,14 +140,15 @@ impl<'a> Trainer<'a> {
         let mcfg = &self.engine.manifest.config;
         let evalp = self.engine.program(&format!("eval_{}", self.arch_name))?;
         st.zero_group(&evalp, "mems")?;
+        let plan = StepPlan::new(&evalp.spec, &["ce"])?;
         let mut batcher = TxlBatcher::new(stream, mcfg.batch, mcfg.seq_len);
         let n = batcher.batches_per_epoch().max(1);
         let mut total = 0.0;
         for _ in 0..n {
             let (batch, _) = batcher.next();
             set_batch(st, &evalp, &batch.x, Some(&batch.y))?;
-            let out = st.run(&evalp, &["ce"])?;
-            total += out["ce"][0] as f64;
+            let out = st.run_plan(&evalp, &plan)?;
+            total += out[0][0] as f64;
         }
         Ok(total / n as f64)
     }

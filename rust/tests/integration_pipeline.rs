@@ -149,7 +149,7 @@ fn checkpoint_roundtrip_through_decode_engine() {
     let dir = std::env::temp_dir().join("planer_int_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("m.ckpt");
-    checkpoint::save(&st, &["params"], &path).unwrap();
+    checkpoint::save(&mut st, &["params"], &path).unwrap();
 
     // load into a fresh store and decode with it
     let de = DecodeEngine::new(&eng, "baseline").unwrap();

@@ -1,0 +1,156 @@
+//! StepPlan binding-layer tests: group-order stability, gap/overlap and
+//! fetch validation, store arity checks, and the lazy-materialisation
+//! round-trip of the output-distribution path.  None of these need XLA
+//! artifacts — plans are pure metadata and the distribution core works on
+//! host literals.
+
+use planer::runtime::{DType, ProgramSpec, StateStore, StepPlan, TensorSpec};
+use xla::Literal;
+
+fn tensor(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+/// A fake two-input-group / two-output-group program spec.  Group names are
+/// chosen so that *alphabetical* order disagrees with *flat index* order —
+/// the plan must follow flat order.
+fn spec() -> ProgramSpec {
+    let mut in_groups = planer::runtime::manifest::Groups::new();
+    in_groups.insert("zebra".into(), (0, 2)); // first by index, last by name
+    in_groups.insert("apple".into(), (2, 3));
+    let mut out_groups = planer::runtime::manifest::Groups::new();
+    out_groups.insert("tail".into(), (1, 3));
+    out_groups.insert("head".into(), (0, 1));
+    ProgramSpec {
+        name: "fake".into(),
+        hlo_file: "fake.hlo".into(),
+        inputs: vec![tensor("z0", &[2]), tensor("z1", &[3]), tensor("a0", &[4])],
+        outputs: vec![tensor("h", &[2]), tensor("t0", &[1]), tensor("t1", &[5])],
+        in_groups,
+        out_groups,
+    }
+}
+
+fn lit(vals: &[f32]) -> Literal {
+    Literal::vec1(vals)
+}
+
+#[test]
+fn group_order_follows_flat_indices_not_names() {
+    let plan = StepPlan::new(&spec(), &[]).unwrap();
+    let in_names: Vec<&str> = plan.input_order().iter().map(|g| g.name.as_str()).collect();
+    assert_eq!(in_names, ["zebra", "apple"], "input order must be flat order");
+    let out_names: Vec<&str> = plan.output_order().iter().map(|g| g.name.as_str()).collect();
+    assert_eq!(out_names, ["head", "tail"], "output order must be flat order");
+    // arities and byte sizes frozen at bind time (f32 = 4 bytes)
+    assert_eq!(plan.input_order()[0].arity, 2);
+    assert_eq!(plan.input_order()[0].bytes, (2 + 3) * 4);
+    assert_eq!(plan.output_order()[1].bytes, (1 + 5) * 4);
+    assert_eq!(plan.total_in_bytes(), (2 + 3 + 4) * 4);
+    assert_eq!(plan.total_out_bytes(), (2 + 1 + 5) * 4);
+}
+
+#[test]
+fn plan_is_stable_across_rebinds() {
+    let a = StepPlan::new(&spec(), &["head"]).unwrap();
+    let b = StepPlan::new(&spec(), &["head"]).unwrap();
+    let names = |p: &StepPlan| {
+        p.input_order().iter().map(|g| g.name.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(names(&a), names(&b));
+    assert_eq!(a.fetch_indices(), b.fetch_indices());
+}
+
+#[test]
+fn fetch_of_unproduced_group_is_rejected() {
+    let err = StepPlan::new(&spec(), &["nope"]).unwrap_err();
+    assert!(err.to_string().contains("fetch group 'nope'"), "{err}");
+}
+
+#[test]
+fn fetch_indices_point_at_output_order() {
+    let plan = StepPlan::new(&spec(), &["tail", "head"]).unwrap();
+    assert_eq!(plan.fetch_indices(), &[1, 0]);
+    assert_eq!(plan.fetch_names(), vec!["tail", "head"]);
+    assert_eq!(plan.fetch_bytes(), (1 + 5) * 4 + 2 * 4);
+}
+
+#[test]
+fn gapped_input_groups_are_rejected() {
+    let mut s = spec();
+    s.in_groups.remove("apple"); // inputs 2..3 now uncovered
+    let err = StepPlan::new(&s, &[]).unwrap_err();
+    assert!(err.to_string().contains("input groups cover"), "{err}");
+}
+
+#[test]
+fn overlapping_output_groups_are_rejected() {
+    let mut s = spec();
+    s.out_groups.insert("head".into(), (0, 2)); // overlaps tail's (1, 3)
+    let err = StepPlan::new(&s, &[]).unwrap_err();
+    assert!(
+        err.to_string().contains("gap or overlap"),
+        "{err}"
+    );
+}
+
+#[test]
+fn missing_store_group_fails_binding_check() {
+    let plan = StepPlan::new(&spec(), &[]).unwrap();
+    let mut st = StateStore::new();
+    st.set_group("zebra", vec![lit(&[0.0; 2]), lit(&[0.0; 3])]);
+    // "apple" never installed
+    let err = st.check_bound(&plan).unwrap_err();
+    assert!(err.to_string().contains("missing group 'apple'"), "{err}");
+}
+
+#[test]
+fn arity_mismatch_fails_binding_check() {
+    let plan = StepPlan::new(&spec(), &[]).unwrap();
+    let mut st = StateStore::new();
+    st.set_group("zebra", vec![lit(&[0.0; 2])]); // wants 2 tensors, holds 1
+    st.set_group("apple", vec![lit(&[0.0; 4])]);
+    let err = st.check_bound(&plan).unwrap_err();
+    assert!(err.to_string().contains("holds 1 tensors"), "{err}");
+    assert!(err.to_string().contains("wants 2"), "{err}");
+}
+
+#[test]
+fn lazy_roundtrip_set_run_get_returns_this_steps_values() {
+    // set → (run: distribute a step's outputs) → get must observe the new
+    // values, and the fetch must see *this* step's outputs, not last step's
+    let plan = StepPlan::new(&spec(), &["head"]).unwrap();
+    let mut st = StateStore::new();
+    st.set_group("head", vec![lit(&[9.0, 9.0])]); // stale previous value
+    st.set_group("tail", vec![lit(&[9.0]), lit(&[9.0; 5])]);
+
+    let outs = vec![lit(&[1.0, 2.0]), lit(&[3.0]), lit(&[4.0, 5.0, 6.0, 7.0, 8.0])];
+    let fetched = st.apply_host_outputs(&plan, outs).unwrap();
+    assert_eq!(fetched, vec![vec![1.0, 2.0]], "fetch must return this step's head");
+
+    let head = st.host_group("head").unwrap();
+    assert_eq!(head[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    let tail = st.host_group("tail").unwrap();
+    assert_eq!(tail.len(), 2);
+    assert_eq!(tail[0].to_vec::<f32>().unwrap(), vec![3.0]);
+    assert_eq!(tail[1].to_vec::<f32>().unwrap(), vec![4.0, 5.0, 6.0, 7.0, 8.0]);
+}
+
+#[test]
+fn apply_rejects_wrong_output_count() {
+    let plan = StepPlan::new(&spec(), &[]).unwrap();
+    let mut st = StateStore::new();
+    let err = st.apply_host_outputs(&plan, vec![lit(&[1.0])]).unwrap_err();
+    assert!(err.to_string().contains("distributes 3 outputs"), "{err}");
+}
+
+#[test]
+fn host_groups_do_not_count_sync_traffic() {
+    // purely host-side set/get must not touch the transfer counters
+    let mut st = StateStore::new();
+    st.set_group("g", vec![lit(&[1.0, 2.0])]);
+    let _ = st.host_group("g").unwrap();
+    let s = st.stats();
+    assert_eq!(s.total_bytes(), 0);
+    assert_eq!(s.resident_steps + s.roundtrip_steps, 0);
+}

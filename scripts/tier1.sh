@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the exact sequence CI runs (.github/workflows/ci.yml), so a
+# green local run means a green CI run.
+#
+#   scripts/tier1.sh            # fmt + clippy + build + test
+#   SKIP_LINT=1 scripts/tier1.sh   # just build + test
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+if [[ -z "${SKIP_LINT:-}" ]]; then
+    cargo fmt --check
+    cargo clippy --all-targets -- -D warnings
+fi
+cargo build --release
+cargo test -q
