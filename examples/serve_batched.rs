@@ -1,14 +1,16 @@
 //! Serving example: concurrent multi-variant serving — SLA-aware routing
-//! over PLANER's latency variants, one deadline-aware decode worker per
-//! variant, graceful drain; reports per-variant latency percentiles and
-//! throughput, with a serial replay of the same trace for contrast.
+//! over PLANER's latency variants, one decode worker per variant, graceful
+//! drain; reports per-variant latency percentiles and throughput, with a
+//! serial replay of the same trace for contrast and — when the artifact
+//! exports `gen_masked_<arch>` — a continuous-batching replay showing
+//! per-slot admission beating fixed waves on occupancy.
 //!
 //!     cargo run --release --example serve_batched
 
 use std::time::{Duration, Instant};
 
 use planer::runtime::Engine;
-use planer::serve::{Cluster, WorkloadGen};
+use planer::serve::{Cluster, ServePolicy, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new(std::path::Path::new("artifacts"))?;
@@ -65,5 +67,25 @@ fn main() -> anyhow::Result<()> {
          ({} responses each)",
         serial.len()
     );
+
+    // continuous batching on the same trace: requests join free slots
+    // mid-flight (masked memory reset) instead of queueing behind waves.
+    // Lanes without gen_masked_<arch> silently fall back to waves.
+    cluster.set_serve_policy(ServePolicy::Continuous);
+    let continuous_lanes = cluster
+        .lane_policies()
+        .into_iter()
+        .filter(|(_, p)| *p == ServePolicy::Continuous)
+        .count();
+    let t0 = Instant::now();
+    let continuous = cluster.replay_concurrent(&trace, true)?;
+    let t_continuous = t0.elapsed().as_secs_f64();
+    println!(
+        "continuous policy ({continuous_lanes}/{} lanes slot-scheduled): \
+         {} responses in {t_continuous:.2}s",
+        names.len(),
+        continuous.len()
+    );
+    print!("{}", cluster.report());
     Ok(())
 }

@@ -22,6 +22,9 @@ per architecture (presets + any --arch JSONs):
     eval_<a>    params,mems,x,y -> ce,mems
     infer_<a>_b<B>   params,mems,x -> logits,mems      (scoring / prefill)
     gen_<a>     params,mems,x[B,1] -> logits,mems      (token-by-token decode)
+    gen_masked_<a>   params,mems,x,free_mask[B] -> logits,mems
+                (decode step that zeroes masked lanes' memories first —
+                 per-slot session reset for continuous batching)
 search space (paper space + iso-parameter ablation space):
     search_init, search_weight_step, search_arch_step, search_eval
     (prefix ``searchiso_`` for the ablation space)
@@ -223,6 +226,24 @@ class ProgramExporter:
 
         self.export(f"gen_{aname}", gen_fn,
                     [("params", params_abs), ("mems", mems_g), ("x", x_g)],
+                    ["logits", "mems"])
+
+        # masked decode: same single-token step, but a per-slot free_mask
+        # zeroes the flagged lanes' memories before the forward, so the
+        # serving scheduler can admit a request into a live batch without
+        # draining it (continuous batching).  Artifacts without this
+        # program fall back to wave serving in the Rust cluster.
+        mask_g = jax.ShapeDtypeStruct((cfg.batch,), F32)
+
+        def gen_masked_fn(params, mems, x, free_mask):
+            cleared = model.reset_masked_mems(mems, free_mask)
+            logits, new_mems, _ = model.forward(
+                params, arch, cfg_gen, x, cleared, jax.random.PRNGKey(0), False)
+            return (logits, new_mems)
+
+        self.export(f"gen_masked_{aname}", gen_masked_fn,
+                    [("params", params_abs), ("mems", mems_g), ("x", x_g),
+                     ("free_mask", mask_g)],
                     ["logits", "mems"])
 
     # ------------------------------------------------------- search programs

@@ -58,6 +58,18 @@ def forward(params, arch, cfg: ModelConfig, x_ids, mems, key, train: bool):
     return logits, jnp.stack(new_mems), balance
 
 
+def reset_masked_mems(mems, free_mask):
+    """Zero exactly the masked batch lanes' TXL memories.
+
+    mems [L,B,M,D], free_mask [B] float (1.0 = lane joins the batch this
+    step and must not inherit its slot's previous session).  Used by the
+    ``gen_masked_<arch>`` decode program so the serving scheduler can admit
+    a request into a live batch by clearing only that slot's memories
+    on-device (continuous batching).
+    """
+    return mems * (1.0 - free_mask)[None, :, None, None]
+
+
 def cross_entropy(logits, y_ids):
     """Mean next-token CE in nats.  logits [B,T,V], y_ids [B,T]."""
     logp = jax.nn.log_softmax(logits, axis=-1)

@@ -101,6 +101,24 @@ def test_dtypes_limited_to_supported_set(manifest):
             assert t["dtype"] in ok, f"{name}: {t['name']} has dtype {t['dtype']}"
 
 
+def test_masked_gen_programs_expose_free_mask(manifest):
+    """Every exported gen_masked_<arch> must take a per-slot free_mask [B]
+    and thread logits/mems exactly like its unmasked twin (the Rust
+    continuous-batching scheduler's ABI).  Vacuous on artifacts predating
+    the mask — those serve via the wave fallback."""
+    cfg = manifest["config"]
+    for name, prog in manifest["programs"].items():
+        if not name.startswith("gen_masked_"):
+            continue
+        fa, fb = prog["in_groups"]["free_mask"]
+        assert fb - fa == 1, f"{name}: free_mask must be one tensor"
+        assert prog["inputs"][fa]["shape"] == [cfg["batch"]]
+        assert prog["inputs"][fa]["dtype"] == "float32"
+        twin = manifest["programs"][name.replace("gen_masked_", "gen_")]
+        assert set(prog["in_groups"]) == set(twin["in_groups"]) | {"free_mask"}
+        assert set(prog["out_groups"]) == set(twin["out_groups"])
+
+
 def test_bench_programs_cover_search_options(manifest):
     opts = set(manifest["options"]) - {"skip"}
     batches = {k.rsplit("_b", 1)[1] for k in manifest["programs"] if k.startswith("bench_")}
@@ -125,6 +143,12 @@ def test_merge_preserves_existing_programs(tmp_path):
     assert r1.returncode == 0, r1.stderr
     m1 = json.load(open(out / "manifest.json"))
     assert "train_baseline" in m1["programs"]
+    # every arch export carries the masked decode twin for continuous
+    # batching, with the per-slot reset input
+    gm = m1["programs"]["gen_masked_baseline"]
+    fa, fb = gm["in_groups"]["free_mask"]
+    assert fb - fa == 1
+    assert gm["inputs"][fa]["shape"] == [m1["config"]["batch"]]
 
     # write an arch json and merge it in
     arch = [{"type": "ffl"} for _ in range(m1["config"]["n_slots"])]

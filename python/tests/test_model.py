@@ -127,6 +127,55 @@ def test_dropout_only_in_train_mode(baseline):
     assert not np.allclose(a, c)      # train applies dropout
 
 
+def test_reset_masked_mems_zeroes_exactly_masked_lanes():
+    key = jax.random.PRNGKey(0)
+    mems = jax.random.normal(key, (CFG.n_slots, CFG.batch, CFG.mem_len, CFG.d_model))
+    mask = np.zeros((CFG.batch,), np.float32)
+    mask[0] = 1.0
+    mask[CFG.batch - 1] = 1.0
+    out = np.asarray(model.reset_masked_mems(mems, jnp.asarray(mask)))
+    for b in range(CFG.batch):
+        lane = out[:, b]
+        if mask[b] == 1.0:
+            assert (lane == 0.0).all(), f"masked lane {b} not zeroed"
+        else:
+            np.testing.assert_array_equal(
+                lane, np.asarray(mems)[:, b],
+                err_msg=f"unmasked lane {b} modified")
+
+
+def test_masked_decode_step_matches_fresh_session(baseline):
+    """The gen_masked program's contract: a masked lane decodes exactly as
+    if its slot had zero memories (a fresh session), while unmasked lanes
+    are byte-identical to the unmasked step — the Rust scheduler relies on
+    this to admit a request into a live batch without draining it."""
+    arch, params = baseline
+    cfg_gen = dataclasses.replace(CFG, seq_len=1)
+    x = rand_ids(jax.random.PRNGKey(1), CFG.batch, 1)
+    mems = jax.random.normal(
+        jax.random.PRNGKey(2), (CFG.n_slots, CFG.batch, CFG.mem_len, CFG.d_model))
+    mask = np.zeros((CFG.batch,), np.float32)
+    mask[1] = 1.0
+
+    def step(m):
+        logits, new_mems, _ = model.forward(
+            params, arch, cfg_gen, x, m, jax.random.PRNGKey(0), False)
+        return np.asarray(logits), np.asarray(new_mems)
+
+    masked_logits, masked_mems = step(model.reset_masked_mems(mems, jnp.asarray(mask)))
+    stale_logits, stale_mems = step(mems)
+    fresh_logits, fresh_mems = step(jnp.zeros_like(mems))
+
+    # masked lane == fresh session (TXL lanes are independent in batch dim)
+    np.testing.assert_allclose(masked_logits[1], fresh_logits[1], rtol=1e-5)
+    np.testing.assert_allclose(masked_mems[:, 1], fresh_mems[:, 1], rtol=1e-5)
+    # the mask must actually matter: stale memories decode differently
+    assert not np.allclose(masked_logits[1], stale_logits[1])
+    # unmasked lanes untouched by the reset
+    np.testing.assert_allclose(masked_logits[0], stale_logits[0], rtol=1e-5)
+    np.testing.assert_allclose(masked_mems[:, 0], stale_mems[:, 0], rtol=1e-5)
+
+
 def test_lr_schedule_warmup_and_decay():
     total, warm = CFG.train_steps, CFG.warmup_steps
     lr0 = float(model.lr_schedule(jnp.int32(0), CFG, total, warm))

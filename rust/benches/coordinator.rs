@@ -1,22 +1,25 @@
 //! Bench: L3 hot-path micro-benchmarks — batcher, router, latency estimator,
-//! JSON parser, segment batcher — plus a serial-vs-concurrent serving A/B
-//! over simulated decode workers (no artifacts needed).  Goal (§Perf):
-//! coordinator overhead per request orders of magnitude below one PJRT
-//! decode step, and concurrent wave serving beating the serial baseline on
-//! wall-clock and p95 for multi-variant traces.
+//! JSON parser, segment batcher — plus two simulated serving A/Bs that run
+//! without artifacts: serial-vs-concurrent decode workers, and
+//! wave-vs-continuous batching policy on a mixed-length (bimodal `n_gen`)
+//! Poisson trace.  Goal (§Perf): coordinator overhead per request orders of
+//! magnitude below one PJRT decode step; concurrent serving beating serial
+//! on wall-clock and p95 for multi-variant traces; continuous batching
+//! beating waves on p95 and step-weighted occupancy for mixed lengths.
 //!
 //!     cargo bench --bench coordinator
 
 use std::collections::HashMap;
-use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use planer::arch::{Arch, SearchSpace};
 use planer::data::TxlBatcher;
 use planer::latency::LatencyTable;
 use planer::serve::{
-    admit, percentile, BatchWave, Request, Response, Router, RouterPolicy, VariantInfo,
-    WaveBatcher, WorkerLane, WorkloadGen,
+    admit, percentile, BatchWave, LaneSender, Request, Response, Router, RouterPolicy,
+    ServeMetrics, SlotExecutor, SlotLane, SlotScheduler, VariantInfo, WaveBatcher, WorkerLane,
+    WorkloadGen,
 };
 use planer::util::json::Json;
 use planer::util::rng::Rng;
@@ -113,6 +116,7 @@ fn main() {
     println!("coordinator operation above must stay (and is) well under that.");
 
     serve_ab();
+    policy_ab();
 }
 
 /// Serial-vs-concurrent serving A/B over simulated decode workers: three
@@ -201,9 +205,10 @@ fn serve_ab() {
     let mut senders = HashMap::new();
     let mut handles = Vec::new();
     for (n, _, s) in &sim {
-        let (tx, rx) = channel();
-        senders.insert(n.to_string(), tx);
-        let lane = WorkerLane::new(*n, WaveBatcher::new(width, max_wait), executor(*n, *s));
+        let (sender, rx, gauge) = LaneSender::channel();
+        senders.insert(n.to_string(), sender);
+        let mut lane = WorkerLane::new(*n, WaveBatcher::new(width, max_wait), executor(*n, *s));
+        lane.depth = gauge;
         handles.push(std::thread::spawn(move || lane.run(rx).unwrap()));
     }
     admit(&trace, &router, &senders, true);
@@ -235,4 +240,143 @@ fn serve_ab() {
         concurrent.len()
     );
     assert_eq!(serial.len(), concurrent.len(), "both paths must answer everything");
+}
+
+/// Wave-vs-continuous policy A/B over one simulated variant whose executor
+/// charges a fixed service time per decode *step* (standing in for one
+/// `gen`/`gen_masked` execution), on a mixed-length (bimodal `n_gen`)
+/// Poisson trace.  The wave policy pays the whole right-aligned
+/// `(max_prompt + max_gen)` schedule per wave — short requests idle through
+/// a long batch-mate's tail and arrivals queue behind the in-flight wave —
+/// while the continuous scheduler admits into free slots every step and
+/// retires each slot at its own `n_gen`.  Continuous must win p95 and
+/// step-weighted occupancy; both must answer every request.
+fn policy_ab() {
+    let width = 4usize;
+    let step_time = Duration::from_millis(1);
+    let max_wait = Duration::from_millis(2);
+    let router = Router::new(
+        vec![VariantInfo { name: "sim".into(), token_latency: 1e-3, quality: 1.0 }],
+        RouterPolicy::QualityWithinSla,
+    );
+
+    // mixed-length Poisson trace: half the requests want 2 tokens, half 20
+    // — the shape that exposes wave head-of-line blocking
+    let mut gen = WorkloadGen::new(256);
+    gen.arrival = planer::serve::Arrival::Poisson { rps: 150.0 };
+    gen.lengths =
+        planer::serve::workload::LengthDist { prompt_min: 1, prompt_max: 4, gen_min: 2, gen_max: 20 };
+    let mut trace = gen.generate(120, 7);
+    let mut rng = Rng::new(11);
+    for tr in &mut trace {
+        tr.request.n_gen = if rng.f64() < 0.5 { 2 } else { 20 };
+    }
+
+    // -- wave policy: simulated WaveExecutor sleeps the wave's whole
+    // right-aligned schedule and meters step-weighted occupancy
+    let wave_m = Arc::new(Mutex::new(ServeMetrics::default()));
+    let wm = Arc::clone(&wave_m);
+    let wave_exec = move |w: &BatchWave| -> anyhow::Result<Vec<Response>> {
+        let shape = w.shape();
+        // charge what the real engine executes: it elides the final decode
+        // step (last tokens are attributed from the previous step's logits),
+        // so sleeping shape.steps() would overcharge waves by one step each
+        let execs = shape.steps() - (shape.max_gen > 0) as u64;
+        std::thread::sleep(step_time * execs as u32);
+        let done = Instant::now();
+        let mut m = wm.lock().unwrap();
+        let (live, cap) = w.step_usage(width);
+        m.waves += 1;
+        m.steps += execs;
+        m.live_slot_steps += live;
+        m.slot_steps += cap;
+        Ok(w
+            .requests
+            .iter()
+            .map(|(r, t)| {
+                m.requests += 1;
+                m.tokens_out += r.n_gen;
+                let latency = done.duration_since(*t).as_secs_f64();
+                m.latencies.push(latency);
+                Response { id: r.id, tokens: vec![0; r.n_gen], latency, variant: "sim".into() }
+            })
+            .collect())
+    };
+    let t0 = Instant::now();
+    let (sender, rx, gauge) = LaneSender::channel();
+    let mut lane = WorkerLane::new("sim", WaveBatcher::new(width, max_wait), wave_exec);
+    lane.depth = gauge;
+    let handle = std::thread::spawn(move || lane.run(rx).unwrap());
+    let mut senders = HashMap::new();
+    senders.insert("sim".to_string(), sender);
+    admit(&trace, &router, &senders, true);
+    drop(senders);
+    let (wave_rs, _) = handle.join().unwrap();
+    let wave_wall = t0.elapsed().as_secs_f64();
+    let wave_m = wave_m.lock().unwrap().clone();
+
+    // -- continuous policy: simulated SlotExecutor sleeps once per step;
+    // the SlotScheduler does admission/retirement/occupancy itself
+    struct StepSim {
+        width: usize,
+        step_time: Duration,
+    }
+    impl SlotExecutor for StepSim {
+        fn width(&self) -> usize {
+            self.width
+        }
+        fn step(&mut self, _x: &[i32], _reset: &[bool]) -> anyhow::Result<Vec<i32>> {
+            std::thread::sleep(self.step_time);
+            Ok(vec![0; self.width])
+        }
+    }
+    let t0 = Instant::now();
+    let (sender, rx, gauge) = LaneSender::channel();
+    let mut slane = SlotLane::new("sim", SlotScheduler::new("sim", StepSim { width, step_time }));
+    slane.depth = gauge;
+    let handle = std::thread::spawn(move || slane.run(rx).unwrap());
+    let mut senders = HashMap::new();
+    senders.insert("sim".to_string(), sender);
+    admit(&trace, &router, &senders, true);
+    drop(senders);
+    let (cont_rs, scheduler) = handle.join().unwrap();
+    let cont_wall = t0.elapsed().as_secs_f64();
+    let cont_m = scheduler.metrics;
+
+    let lat = |rs: &[Response]| -> Vec<f64> { rs.iter().map(|r| r.latency).collect() };
+    let wave_lat = lat(&wave_rs);
+    let cont_lat = lat(&cont_rs);
+    println!(
+        "\npolicy A/B (1 simulated variant, width {width}, {} reqs, Poisson 150rps, bimodal n_gen 2|20):",
+        trace.len()
+    );
+    println!(
+        "  wave:       wall {:7.1}ms  p50 {:6.1}ms  p95 {:6.1}ms  occup {:4.2}  ({} waves, {} steps)",
+        wave_wall * 1e3,
+        percentile(&wave_lat, 0.50) * 1e3,
+        percentile(&wave_lat, 0.95) * 1e3,
+        wave_m.occupancy(),
+        wave_m.waves,
+        wave_m.steps,
+    );
+    println!(
+        "  continuous: wall {:7.1}ms  p50 {:6.1}ms  p95 {:6.1}ms  occup {:4.2}  ({} steps)",
+        cont_wall * 1e3,
+        percentile(&cont_lat, 0.50) * 1e3,
+        percentile(&cont_lat, 0.95) * 1e3,
+        cont_m.occupancy(),
+        cont_m.steps,
+    );
+    assert_eq!(wave_rs.len(), trace.len(), "wave policy dropped requests");
+    assert_eq!(cont_rs.len(), trace.len(), "continuous policy dropped requests");
+    assert!(
+        cont_m.occupancy() > wave_m.occupancy(),
+        "continuous batching must raise step-weighted occupancy ({:.2} vs {:.2})",
+        cont_m.occupancy(),
+        wave_m.occupancy()
+    );
+    assert!(
+        percentile(&cont_lat, 0.95) < percentile(&wave_lat, 0.95),
+        "continuous batching must cut p95 on a mixed-length trace"
+    );
 }

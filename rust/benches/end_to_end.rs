@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use planer::latency::Profiler;
 use planer::runtime::{literal, Engine, ExecMode, StateStore};
-use planer::serve::{percentile, Cluster, Response, ServeMetrics, WorkloadGen};
+use planer::serve::{percentile, Cluster, Response, ServeMetrics, ServePolicy, WorkloadGen};
 use planer::util::timer;
 
 fn main() -> anyhow::Result<()> {
@@ -60,7 +60,10 @@ fn main() -> anyhow::Result<()> {
 /// variants' decode waves, so wall-clock and p95 should both drop on any
 /// ≥2-variant trace.  A second axis replays the concurrent path with
 /// `ExecMode::Roundtrip`, so the bytes-synced-per-token column shows what
-/// device residency saves on the real serve path.
+/// device residency saves on the real serve path.  A third axis replays
+/// under `ServePolicy::Continuous` (slot scheduling over `gen_masked`,
+/// wave fallback for pre-mask artifacts) and reports step-weighted
+/// occupancy next to the wave run's.
 fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
     let names: Vec<String> = engine
         .manifest
@@ -100,6 +103,15 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
     let concurrent_wall = t0.elapsed().as_secs_f64();
     let resident_bpt = bytes_per_tok(&cluster);
 
+    let occupancy = |c: &Cluster<'_>| {
+        let mut total = ServeMetrics::default();
+        for m in c.metrics_snapshot().values() {
+            total.merge(m);
+        }
+        total.occupancy()
+    };
+    let wave_occup = occupancy(&cluster);
+
     // same trace, same workers, but force the legacy per-token host sync
     cluster.set_exec_mode(ExecMode::Roundtrip);
     let t0 = Instant::now();
@@ -107,6 +119,20 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
     let roundtrip_wall = t0.elapsed().as_secs_f64();
     let roundtrip_bpt = bytes_per_tok(&cluster);
     cluster.set_exec_mode(ExecMode::Auto);
+
+    // same trace again under continuous batching (per-slot admission via
+    // gen_masked; lanes whose artifact predates the mask fall back to waves)
+    cluster.set_serve_policy(ServePolicy::Continuous);
+    let n_continuous = cluster
+        .lane_policies()
+        .iter()
+        .filter(|(_, p)| *p == ServePolicy::Continuous)
+        .count();
+    let t0 = Instant::now();
+    let continuous = cluster.replay_concurrent(&trace, false)?;
+    let continuous_wall = t0.elapsed().as_secs_f64();
+    let continuous_occup = occupancy(&cluster);
+    cluster.set_serve_policy(ServePolicy::Wave);
 
     println!("\nserve A/B ({} variants, {} reqs, bimodal SLA):", names.len(), trace.len());
     println!(
@@ -129,8 +155,21 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
         roundtrip_bpt,
         roundtrip_bpt / resident_bpt.max(1.0)
     );
+    println!(
+        "  continuous batching:  wall {:7.1}ms  p95 {:7.1}ms  occup {:4.2} (wave {:4.2})  [{}/{} lanes continuous]",
+        continuous_wall * 1e3,
+        p95(&continuous) * 1e3,
+        continuous_occup,
+        wave_occup,
+        n_continuous,
+        names.len()
+    );
     anyhow::ensure!(serial.len() == concurrent.len(), "A/B answered different request counts");
     anyhow::ensure!(serial.len() == roundtrip.len(), "exec A/B answered different request counts");
+    anyhow::ensure!(
+        serial.len() == continuous.len(),
+        "policy A/B answered different request counts"
+    );
     Ok(())
 }
 

@@ -142,6 +142,7 @@ fn run() -> Result<()> {
                 workers: args.get_usize("workers", 0)?,
                 max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
                 mode: args.get_or("mode", "concurrent"),
+                policy: args.get_or("policy", "wave"),
                 realtime: args.has("realtime"),
                 rps: args.get_f64("rps", 0.0)?,
                 exec_mode,
@@ -256,14 +257,18 @@ fn run() -> Result<()> {
                 print!("{}", cluster.report());
             }
             if mode == "concurrent" || mode == "ab" {
-                let t0 = std::time::Instant::now();
-                let responses = cluster.replay_concurrent(&trace, realtime)?;
-                println!(
-                    "concurrent: {} responses in {:.2}s",
-                    responses.len(),
-                    t0.elapsed().as_secs_f64()
-                );
-                print!("{}", cluster.report());
+                for policy in serve_policies(&args.get_or("policy", "wave"))? {
+                    cluster.set_serve_policy(policy);
+                    print_lane_policies(&cluster);
+                    let t0 = std::time::Instant::now();
+                    let responses = cluster.replay_concurrent(&trace, realtime)?;
+                    println!(
+                        "concurrent[{policy:?}]: {} responses in {:.2}s",
+                        responses.len(),
+                        t0.elapsed().as_secs_f64()
+                    );
+                    print!("{}", cluster.report());
+                }
             }
             if !["serial", "concurrent", "ab"].contains(&mode.as_str()) {
                 bail!("unknown mode '{mode}' (serial|concurrent|ab)");
@@ -323,6 +328,9 @@ struct ServeOpts {
     max_wait: Duration,
     /// "concurrent" (default), "serial", or "ab" (run both, compare).
     mode: String,
+    /// Batching policy for concurrent replays: "wave" (default),
+    /// "continuous", or "ab" (replay under both and compare).
+    policy: String,
     /// Honour arrival offsets in wall-clock time.
     realtime: bool,
     /// Poisson arrival rate (0 = closed-loop burst).
@@ -337,6 +345,31 @@ fn parse_exec_mode(s: &str) -> Result<ExecMode> {
         "roundtrip" => ExecMode::Roundtrip,
         other => bail!("unknown --exec '{other}' (resident|roundtrip)"),
     })
+}
+
+/// Expand the `--policy` flag into the batching policies to replay under
+/// ("ab" = wave then continuous, same trace).
+fn serve_policies(s: &str) -> Result<Vec<planer::serve::ServePolicy>> {
+    use planer::serve::ServePolicy;
+    Ok(match s {
+        "wave" => vec![ServePolicy::Wave],
+        "continuous" => vec![ServePolicy::Continuous],
+        "ab" => vec![ServePolicy::Wave, ServePolicy::Continuous],
+        other => bail!("unknown --policy '{other}' (wave|continuous|ab)"),
+    })
+}
+
+/// Surface per-lane policy fallbacks (variants whose artifact predates
+/// `gen_masked_<arch>` serve waves even under `--policy continuous`).
+fn print_lane_policies(cluster: &planer::serve::Cluster<'_>) {
+    use planer::serve::ServePolicy;
+    if cluster.serve_policy() == ServePolicy::Continuous {
+        for (name, p) in cluster.lane_policies() {
+            if p != ServePolicy::Continuous {
+                println!("  note: {name} lacks gen_masked_{name} — wave fallback");
+            }
+        }
+    }
 }
 
 /// Serving demo: SLA-aware routing across every arch that has a gen
@@ -382,12 +415,19 @@ fn serve_demo(
     }
     let trace = gen.generate(n_req, seed as u64);
 
-    let mut run = |label: &str, concurrent: bool| -> Result<f64> {
+    fn run(
+        cluster: &mut planer::serve::Cluster<'_>,
+        trace: &[planer::serve::TimedRequest],
+        label: &str,
+        concurrent: bool,
+        realtime: bool,
+    ) -> Result<f64> {
         let t0 = std::time::Instant::now();
         let responses = if concurrent {
-            cluster.replay_concurrent(&trace, opts.realtime)?
+            print_lane_policies(cluster);
+            cluster.replay_concurrent(trace, realtime)?
         } else {
-            cluster.replay(&trace, opts.realtime)?
+            cluster.replay(trace, realtime)?
         };
         let wall = t0.elapsed().as_secs_f64();
         for r in &responses {
@@ -402,21 +442,42 @@ fn serve_demo(
         println!("{label}: {} responses in {wall:.2}s", responses.len());
         print!("{}", cluster.report());
         Ok(wall)
+    }
+
+    let policies = serve_policies(&opts.policy)?;
+    let mut concurrent_walls = Vec::new();
+    let mut concurrent_runs = |cluster: &mut planer::serve::Cluster<'_>| -> Result<()> {
+        for &p in &policies {
+            cluster.set_serve_policy(p);
+            let label = format!("concurrent[{p:?}]");
+            concurrent_walls.push((p, run(cluster, &trace, &label, true, opts.realtime)?));
+        }
+        Ok(())
     };
 
     match opts.mode.as_str() {
         "concurrent" => {
-            run("concurrent", true)?;
+            concurrent_runs(&mut cluster)?;
         }
         "serial" => {
-            run("serial", false)?;
+            run(&mut cluster, &trace, "serial", false, opts.realtime)?;
         }
         "ab" => {
-            let s = run("serial", false)?;
-            let c = run("concurrent", true)?;
-            println!("A/B wall-clock: serial {s:.2}s vs concurrent {c:.2}s ({:.2}x)", s / c);
+            let s = run(&mut cluster, &trace, "serial", false, opts.realtime)?;
+            concurrent_runs(&mut cluster)?;
+            for (p, c) in &concurrent_walls {
+                println!(
+                    "A/B wall-clock: serial {s:.2}s vs concurrent[{p:?}] {c:.2}s ({:.2}x)",
+                    s / c
+                );
+            }
         }
         other => bail!("unknown serve mode '{other}' (concurrent|serial|ab)"),
+    }
+    if opts.mode != "serial" && concurrent_walls.len() == 2 {
+        let (wp, ww) = concurrent_walls[0];
+        let (cp, cw) = concurrent_walls[1];
+        println!("policy A/B wall-clock: {wp:?} {ww:.2}s vs {cp:?} {cw:.2}s ({:.2}x)", ww / cw);
     }
     Ok(())
 }
@@ -429,16 +490,20 @@ USAGE: planer <cmd> [flags]
   search   --target 0.65 --epochs 10 --steps 20 [--iso] [--name found]
   train    --arch baseline --steps 200 [--balance 0.01]
   serve    --requests 12 [--arch auto] [--workers N] [--max-wait-ms 5]
-           [--mode concurrent|serial|ab] [--rps R] [--realtime]
-           (one deadline-aware decode worker per variant; --mode ab replays
-            the same trace serially then concurrently and compares)
+           [--mode concurrent|serial|ab] [--policy wave|continuous|ab]
+           [--rps R] [--realtime]
+           (one decode worker per variant; --mode ab replays the same trace
+            serially then concurrently; --policy picks wave batching or
+            continuous slot scheduling — 'ab' replays under both; variants
+            without gen_masked_<arch> fall back to waves)
   profile
   compile  --name <arch> --arch-json <path> [--config tiny]
   archs
   bench    fig1|fig2|fig4|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|table1|all-static
   roofline | ablation
   serve-trace --requests 16 [--variants 3] [--trace burst|bursty|bimodal]
-              [--mode concurrent|serial|ab] [--max-wait-ms 2] [--rps R] [--realtime]
+              [--mode concurrent|serial|ab] [--policy wave|continuous|ab]
+              [--max-wait-ms 2] [--rps R] [--realtime]
 
 global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
           --exec resident|roundtrip   (device-resident state, the default,

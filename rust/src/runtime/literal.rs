@@ -96,6 +96,24 @@ pub fn literal_from_i32s(spec: &TensorSpec, vals: &[i32]) -> Result<Literal> {
     Ok(Literal::vec1(vals).reshape(&dims_i64(&spec.shape))?)
 }
 
+/// Build an f32 literal of `spec`'s shape from a borrowed slice (the
+/// continuous-decode loop refills a scratch `free_mask` per step, mirroring
+/// `literal_from_i32s` for the token batch).
+pub fn literal_from_f32s(spec: &TensorSpec, vals: &[f32]) -> Result<Literal> {
+    if spec.dtype != DType::F32 {
+        bail!("tensor '{}' is not f32", spec.name);
+    }
+    if vals.len() != spec.element_count() {
+        bail!(
+            "tensor '{}' expects {} elements, got {}",
+            spec.name,
+            spec.element_count(),
+            vals.len()
+        );
+    }
+    Ok(Literal::vec1(vals).reshape(&dims_i64(&spec.shape))?)
+}
+
 /// Zero-initialised literal for `spec` (optimizer state, empty memories).
 pub fn zeros(spec: &TensorSpec) -> Literal {
     Literal::create_from_shape(spec.dtype.primitive(), &spec.shape)

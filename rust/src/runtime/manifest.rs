@@ -264,4 +264,14 @@ impl Manifest {
     pub fn arch_names(&self) -> Vec<&str> {
         self.archs.keys().map(String::as_str).collect()
     }
+
+    /// The `gen_masked_<arch>` spec, if this artifact exports it *with* the
+    /// per-slot `free_mask` input the continuous-batching scheduler needs.
+    /// `None` (artifact predates the mask ABI, or the group is missing)
+    /// means the serving cluster must fall back to the legacy
+    /// drain-then-reset wave policy for this arch.
+    pub fn masked_gen(&self, arch: &str) -> Option<&ProgramSpec> {
+        let spec = self.programs.get(&format!("gen_masked_{arch}"))?;
+        spec.in_group("free_mask").map(|_| spec)
+    }
 }

@@ -89,6 +89,12 @@ impl StepPlan {
         &self.inputs
     }
 
+    /// Look up one input group by name (e.g. validating that a masked gen
+    /// program really takes its `free_mask` as a single tensor).
+    pub fn input_group(&self, name: &str) -> Option<&PlanGroup> {
+        self.inputs.iter().find(|g| g.name == name)
+    }
+
     /// Output groups in flat production order.
     pub fn output_order(&self) -> &[PlanGroup] {
         &self.outputs

@@ -18,6 +18,56 @@ pub struct BatchWave {
     pub requests: Vec<(Request, Instant)>,
 }
 
+/// Step-count plan for one wave: longest prompt, longest generation, and
+/// whether a BOS seed step is required (every prompt empty yet tokens are
+/// requested — otherwise the decode loop has no logits to start from).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaveShape {
+    pub max_prompt: usize,
+    pub max_gen: usize,
+    pub needs_bos: bool,
+}
+
+impl WaveShape {
+    /// Decode steps the wave's schedule spans (BOS + prompt + decode; the
+    /// engine elides the final program execution but the last decode step
+    /// still attributes tokens, so it counts).
+    pub fn steps(&self) -> u64 {
+        (self.needs_bos as usize + self.max_prompt + self.max_gen) as u64
+    }
+}
+
+pub fn wave_shape(wave: &BatchWave) -> WaveShape {
+    let max_prompt = wave.requests.iter().map(|(r, _)| r.prompt.len()).max().unwrap_or(0);
+    let max_gen = wave.requests.iter().map(|(r, _)| r.n_gen).max().unwrap_or(0);
+    WaveShape { max_prompt, max_gen, needs_bos: max_prompt == 0 && max_gen > 0 }
+}
+
+impl BatchWave {
+    pub fn shape(&self) -> WaveShape {
+        wave_shape(self)
+    }
+
+    /// Step-weighted slot usage of this wave under the right-aligned wave
+    /// schedule: `(live_slot_steps, capacity_slot_steps)` for a batch of
+    /// `width` slots.  A slot is *live* on a step when it feeds a real
+    /// prompt token, needs the BOS seed, or has a token attributed to it —
+    /// slots idling through a batch-mate's longer schedule (and empty pad
+    /// slots) are the utilization the old per-wave request-count average
+    /// silently overstated.
+    pub fn step_usage(&self, width: usize) -> (u64, u64) {
+        let shape = self.shape();
+        let live: u64 = self
+            .requests
+            .iter()
+            .map(|(r, _)| {
+                (r.prompt.len() + r.n_gen + (shape.needs_bos && r.n_gen > 0) as usize) as u64
+            })
+            .sum();
+        (live, shape.steps() * width as u64)
+    }
+}
+
 pub struct WaveBatcher {
     queue: VecDeque<(Request, Instant)>,
     pub width: usize,
@@ -152,6 +202,69 @@ mod tests {
         assert!(b.ready(Instant::now()));
         let w = b.next_wave(Instant::now()).unwrap();
         assert_eq!(w.requests.len(), 1);
+    }
+
+    fn wave_of(prompts: &[usize], gens: &[usize]) -> BatchWave {
+        let now = Instant::now();
+        BatchWave {
+            requests: prompts
+                .iter()
+                .zip(gens)
+                .enumerate()
+                .map(|(i, (&p, &g))| {
+                    (
+                        Request {
+                            id: i as u64,
+                            prompt: vec![1; p],
+                            n_gen: g,
+                            sla: f64::INFINITY,
+                        },
+                        now,
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn wave_shape_flags_all_empty_prompts() {
+        // the regression the BOS seed fixes: every prompt empty + tokens
+        // requested used to silently decode nothing
+        let s = wave_shape(&wave_of(&[0, 0], &[4, 2]));
+        assert_eq!(s, WaveShape { max_prompt: 0, max_gen: 4, needs_bos: true });
+    }
+
+    #[test]
+    fn wave_shape_no_bos_when_any_prompt_present() {
+        let s = wave_shape(&wave_of(&[0, 3], &[4, 2]));
+        assert_eq!(s, WaveShape { max_prompt: 3, max_gen: 4, needs_bos: false });
+        // nothing to generate → no seed step either
+        let s = wave_shape(&wave_of(&[0, 0], &[0, 0]));
+        assert!(!s.needs_bos);
+    }
+
+    #[test]
+    fn step_usage_counts_live_slot_steps() {
+        // schedule spans max_prompt 3 + max_gen 4 = 7 steps over width 4;
+        // the short request is live for 1+2=3 of them, the long for 7
+        let w = wave_of(&[1, 3], &[2, 4]);
+        let (live, cap) = w.step_usage(4);
+        assert_eq!(live, 3 + 7);
+        assert_eq!(cap, 7 * 4);
+        // identical-length waves reduce to the old request-count ratio:
+        // 2 of 4 slots live every step
+        let w = wave_of(&[2, 2], &[3, 3]);
+        let (live, cap) = w.step_usage(4);
+        assert_eq!(live as f64 / cap as f64, 0.5);
+    }
+
+    #[test]
+    fn step_usage_counts_bos_seed_step() {
+        let w = wave_of(&[0, 0], &[2, 1]);
+        let (live, cap) = w.step_usage(2);
+        // 1 BOS + 2 decode steps; live = (0+2+1) + (0+1+1)
+        assert_eq!(cap, 3 * 2);
+        assert_eq!(live, 5);
     }
 
     #[test]

@@ -12,12 +12,16 @@
 //! ```
 //!
 //! Each variant gets its own worker thread owning that variant's
-//! `DecodeEngine`, `StateStore` and `WaveBatcher`; the admission loop (the
-//! calling thread) routes each request to the cheapest variant that fits
-//! its SLA and sends it down the lane's channel.  Workers overlap decode
-//! across variants — the serial baseline (`replay`) decodes them one at a
-//! time — and the deadline-aware pump keeps tail latency bounded under
-//! trickle arrivals: a partial wave never waits past `max_wait`.
+//! `DecodeEngine`, `StateStore` and batching state; the admission loop (the
+//! calling thread) routes each request to the best variant that fits its
+//! SLA (ties broken by lane depth) and sends it down the lane's channel.
+//! Workers overlap decode across variants — the serial baseline (`replay`)
+//! decodes them one at a time.  Per [`ServePolicy`], a worker is either a
+//! deadline-aware *wave* pump (`WorkerLane` + `WaveBatcher`: partial waves
+//! never wait past `max_wait`) or a *continuous* slot scheduler
+//! (`SlotLane` + `SlotScheduler` over `gen_masked_<arch>`: per-step
+//! admission into free slots, per-slot retirement, masked memory reset).
+//! Lanes whose artifact predates the free_mask ABI fall back to waves.
 //!
 //! Shutdown is a graceful drain: when the trace ends the admission side
 //! drops its senders, each worker force-fires whatever is still queued,
@@ -26,7 +30,6 @@
 //! so `report()` is accurate whichever path (serial/concurrent) ran.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -37,13 +40,30 @@ use crate::runtime::{Engine, ExecMode, StateStore};
 use super::batcher::{BatchWave, WaveBatcher};
 use super::engine::{DecodeEngine, ServeMetrics};
 use super::router::{Router, RouterPolicy, VariantInfo};
-use super::worker::{admit, WaveExecutor, WorkerLane};
+use super::scheduler::{SlotExecutor, SlotLane, SlotScheduler};
+use super::worker::{admit, LaneSender, WaveExecutor, WorkerLane};
 use super::workload::TimedRequest;
-use super::{Request, Response};
+use super::Response;
 
 /// Default partial-wave deadline (overridable via `set_max_wait` /
 /// `planer serve --max-wait-ms`).
 pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
+
+/// Which batching policy the concurrent decode workers run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServePolicy {
+    /// Fixed-membership waves: collect up to `width` requests, decode the
+    /// whole wave to completion, reset memories, repeat (the legacy
+    /// drain-then-reset path — the only option for artifacts without
+    /// `gen_masked_<arch>`).
+    #[default]
+    Wave,
+    /// Continuous batching: `width` persistent slots, per-step admission
+    /// into free slots, per-slot retirement, masked memory reset
+    /// (`serve::scheduler`).  Lanes whose artifact predates the free_mask
+    /// ABI silently fall back to [`ServePolicy::Wave`].
+    Continuous,
+}
 
 /// One variant's decode resources.  Owned by the cluster between runs and
 /// lent to a worker thread during `replay_concurrent`.
@@ -86,6 +106,31 @@ impl WaveExecutor for LaneExecutor<'_, '_> {
     }
 }
 
+/// Continuous-batching executor over one lane: each scheduler step runs the
+/// variant's `gen_masked_<arch>` program once (zeroing freshly-admitted
+/// slots' memories on-device) and greedy-decodes every slot's next token.
+struct LaneSlotExecutor<'l, 'a> {
+    lane: &'l mut Lane<'a>,
+}
+
+impl SlotExecutor for LaneSlotExecutor<'_, '_> {
+    fn width(&self) -> usize {
+        self.lane.engine.width
+    }
+
+    fn step(&mut self, x: &[i32], reset: &[bool]) -> Result<Vec<i32>> {
+        let logits = self
+            .lane
+            .engine
+            .decode_step_masked(&mut self.lane.state, x, reset)?;
+        Ok(self.lane.engine.argmax_rows(&logits))
+    }
+
+    fn bytes_synced(&self) -> u64 {
+        self.lane.state.stats().total_bytes()
+    }
+}
+
 pub struct Cluster<'a> {
     router: Router,
     lanes: Vec<Lane<'a>>,
@@ -93,6 +138,7 @@ pub struct Cluster<'a> {
     /// worker threads during concurrent replays).
     metrics: Arc<Mutex<HashMap<String, ServeMetrics>>>,
     max_wait: Duration,
+    policy: ServePolicy,
 }
 
 impl<'a> Cluster<'a> {
@@ -141,11 +187,38 @@ impl<'a> Cluster<'a> {
                 names.iter().map(|n| (n.clone(), ServeMetrics::default())).collect(),
             )),
             max_wait: DEFAULT_MAX_WAIT,
+            policy: ServePolicy::default(),
         })
     }
 
     pub fn set_policy(&mut self, p: RouterPolicy) {
         self.router.policy = p;
+    }
+
+    /// Batching policy for the next concurrent replay.  Continuous lanes
+    /// need `gen_masked_<arch>` in the artifact; lanes without it fall back
+    /// to the wave policy individually (see [`Self::lane_policies`]).
+    pub fn set_serve_policy(&mut self, p: ServePolicy) {
+        self.policy = p;
+    }
+
+    pub fn serve_policy(&self) -> ServePolicy {
+        self.policy
+    }
+
+    /// The policy each lane would actually run under the current setting —
+    /// surfaces per-variant fallbacks (old artifacts) to the CLI/benches.
+    pub fn lane_policies(&self) -> Vec<(String, ServePolicy)> {
+        self.lanes
+            .iter()
+            .map(|l| {
+                let p = match self.policy {
+                    ServePolicy::Continuous if l.engine.has_masked() => ServePolicy::Continuous,
+                    _ => ServePolicy::Wave,
+                };
+                (l.name.clone(), p)
+            })
+            .collect()
     }
 
     /// Partial-wave deadline applied to every lane on the next replay.
@@ -226,10 +299,14 @@ impl<'a> Cluster<'a> {
     }
 
     /// Concurrent replay: one decode worker thread per variant, fed by this
-    /// (admission) thread through per-lane channels.  Workers fire full
-    /// waves immediately and partial waves on the `max_wait` deadline, then
-    /// drain gracefully when admission ends.  Responses are returned sorted
-    /// by request id (cross-variant completion order is nondeterministic).
+    /// (admission) thread through per-lane channels.  Under the wave policy
+    /// workers fire full waves immediately and partial waves on the
+    /// `max_wait` deadline; under the continuous policy each worker runs a
+    /// `SlotScheduler` that admits arrivals into free slots between steps
+    /// (lanes without `gen_masked_<arch>` fall back to waves).  Either way
+    /// workers drain gracefully when admission ends.  Responses are
+    /// returned sorted by request id (cross-variant completion order is
+    /// nondeterministic).
     pub fn replay_concurrent(
         &mut self,
         trace: &[TimedRequest],
@@ -239,37 +316,63 @@ impl<'a> Cluster<'a> {
         // split borrows up front: the scope closure must not capture `self`
         // itself (lanes are lent &mut to workers while router/metrics are
         // shared with the admission side)
-        let Cluster { router, lanes, metrics, max_wait } = self;
+        let Cluster { router, lanes, metrics, max_wait, policy } = self;
         let router: &Router = router;
         let metrics: &Arc<Mutex<HashMap<String, ServeMetrics>>> = metrics;
         let max_wait = *max_wait;
+        let policy = *policy;
         let mut responses = Vec::new();
         let mut errors: Vec<anyhow::Error> = Vec::new();
 
         std::thread::scope(|s| {
-            let mut senders: HashMap<String, Sender<(Request, Instant)>> = HashMap::new();
+            let mut senders: HashMap<String, LaneSender> = HashMap::new();
             let mut handles = Vec::new();
             for lane in lanes.iter_mut() {
-                let (tx, rx) = channel();
-                senders.insert(lane.name.clone(), tx);
+                let (sender, rx, gauge) = LaneSender::channel();
+                senders.insert(lane.name.clone(), sender);
                 let name = lane.name.clone();
+                let join_name = lane.name.clone();
                 let width = lane.engine.width;
-                let worker = WorkerLane::new(
-                    name.clone(),
-                    WaveBatcher::new(width, max_wait),
-                    LaneExecutor { lane, shared: Arc::clone(metrics) },
-                );
-                handles.push((name, s.spawn(move || worker.run(rx))));
+                let continuous =
+                    policy == ServePolicy::Continuous && lane.engine.has_masked();
+                let shared = Arc::clone(metrics);
+                let handle = s.spawn(move || -> Result<Vec<Response>> {
+                    if continuous {
+                        let scheduler =
+                            SlotScheduler::new(name.clone(), LaneSlotExecutor { lane });
+                        let mut worker = SlotLane::new(name.clone(), scheduler);
+                        worker.depth = gauge;
+                        let (rs, mut scheduler) = worker.run_with(rx, |m| {
+                            shared.lock().unwrap().insert(name.clone(), m.clone());
+                        })?;
+                        // hand the final metrics back to the lane so the
+                        // cluster's own accumulator matches the map
+                        let m = scheduler.metrics.clone();
+                        scheduler.executor.lane.metrics = m;
+                        Ok(rs)
+                    } else {
+                        let mut worker = WorkerLane::new(
+                            name,
+                            WaveBatcher::new(width, max_wait),
+                            LaneExecutor { lane, shared },
+                        );
+                        worker.depth = gauge;
+                        let (rs, _exec) = worker.run(rx)?;
+                        Ok(rs)
+                    }
+                });
+                handles.push((join_name, handle));
             }
 
             admit(trace, router, &senders, realtime);
             // graceful drain: closing the channels tells every worker to
-            // fire its remaining partials and return
+            // fire its remaining partials (or finish its live slots) and
+            // return
             drop(senders);
 
             for (name, h) in handles {
                 match h.join() {
-                    Ok(Ok((rs, _exec))) => responses.extend(rs),
+                    Ok(Ok(rs)) => responses.extend(rs),
                     Ok(Err(e)) => errors.push(e.context(format!("worker '{name}'"))),
                     Err(_) => errors.push(anyhow!("worker '{name}' panicked")),
                 }
@@ -286,7 +389,7 @@ impl<'a> Cluster<'a> {
     pub fn report(&self) -> String {
         let snapshot = self.metrics.lock().unwrap();
         let mut out = String::from(
-            "variant      reqs waves  occup     p50      p95     tok/s   sync-B/tok\n",
+            "variant      reqs waves  steps  occup     p50      p95     tok/s   sync-B/tok\n",
         );
         // lane order (quality rank), not HashMap order: stable reports
         let mut total = ServeMetrics::default();
@@ -297,11 +400,12 @@ impl<'a> Cluster<'a> {
             }
             total.merge(m);
             out.push_str(&format!(
-                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
+                "{:12} {:4} {:5} {:6} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
                 lane.name,
                 m.requests,
                 m.waves,
-                m.occupancy,
+                m.steps,
+                m.occupancy(),
                 m.p50() * 1e3,
                 m.p95() * 1e3,
                 m.throughput_tok_s(),
@@ -310,11 +414,12 @@ impl<'a> Cluster<'a> {
         }
         if total.requests > 0 {
             out.push_str(&format!(
-                "{:12} {:4} {:5} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
+                "{:12} {:4} {:5} {:6} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
                 "TOTAL",
                 total.requests,
                 total.waves,
-                total.occupancy,
+                total.steps,
+                total.occupancy(),
                 total.p50() * 1e3,
                 total.p95() * 1e3,
                 total.throughput_tok_s(),

@@ -21,8 +21,26 @@ use anyhow::{Context, Result};
 use crate::runtime::{literal, Engine, ExecMode, Program, StateStore, StepPlan, TensorSpec};
 use crate::util::rng::Rng;
 
-use super::batcher::BatchWave;
+use super::batcher::{wave_shape, BatchWave};
 use super::Response;
+
+/// `gen_masked_<arch>` resources: the per-slot-reset decode program behind
+/// continuous batching (see `serve::scheduler`).  The ABI is validated from
+/// the manifest at engine construction (pure metadata — no XLA work), but
+/// the program itself is only compiled on the first masked step, so
+/// wave-only serving never pays the extra compile.
+struct MaskedGen {
+    /// Program name in the manifest (`gen_masked_<arch>`).
+    name: String,
+    xspec: TensorSpec,
+    mask_spec: TensorSpec,
+    plan: StepPlan,
+    /// Compiled executable, resolved through the engine cache on first use.
+    prog: RefCell<Option<Arc<Program>>>,
+    /// All-zero mask, uploaded once: most steps admit nothing, and the
+    /// common case must not pay a per-token literal build + upload.
+    zero_mask: RefCell<Option<Arc<xla::PjRtBuffer>>>,
+}
 
 /// Cap on retained latency samples (see [`LatencyReservoir`]).
 pub const LATENCY_RESERVOIR_CAP: usize = 65_536;
@@ -95,15 +113,22 @@ impl Default for LatencyReservoir {
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
+    /// Wave-path batches fired (0 on the continuous path, which has no
+    /// waves — only steps).
     pub waves: usize,
+    /// Decode program executions (every per-token step, both policies).
+    pub steps: u64,
+    /// Σ over steps of slots doing useful work that step (feeding a real
+    /// prompt/BOS token or having a generated token attributed).
+    pub live_slot_steps: u64,
+    /// Σ over steps of batch width — the capacity those steps paid for.
+    pub slot_steps: u64,
     pub requests: usize,
     pub tokens_out: usize,
     pub busy_secs: f64,
     /// Bounded uniform sample of per-request latencies (seconds); the hot
     /// path pays O(1) per push and percentiles select on demand.
     pub latencies: LatencyReservoir,
-    /// Mean slot occupancy across waves (batching efficiency).
-    pub occupancy: f64,
     /// Host↔device bytes moved by decode (uploads of `x` + logits fetches;
     /// in roundtrip mode, the whole state per token — the A/B counter).
     pub bytes_synced: u64,
@@ -115,6 +140,18 @@ impl ServeMetrics {
     }
     pub fn p95(&self) -> f64 {
         percentile(self.latencies.samples(), 0.95)
+    }
+
+    /// Step-weighted slot occupancy: live slot-steps over capacity
+    /// slot-steps.  Unlike the old per-wave request-count average, this
+    /// charges a wave for every step its short slots idle through the tail
+    /// — the honest number the wave-vs-continuous A/B compares.
+    pub fn occupancy(&self) -> f64 {
+        if self.slot_steps == 0 {
+            0.0
+        } else {
+            self.live_slot_steps as f64 / self.slot_steps as f64
+        }
     }
     pub fn throughput_tok_s(&self) -> f64 {
         if self.busy_secs > 0.0 {
@@ -134,16 +171,14 @@ impl ServeMetrics {
         }
     }
 
-    /// Fold another variant's (or worker's) metrics into this one.
-    /// Occupancy is re-weighted by wave count.
+    /// Fold another variant's (or worker's) metrics into this one.  The
+    /// occupancy numerator/denominator sum directly, so the merged
+    /// occupancy stays step-weighted across lanes.
     pub fn merge(&mut self, other: &ServeMetrics) {
-        let waves = self.waves + other.waves;
-        if waves > 0 {
-            self.occupancy = (self.occupancy * self.waves as f64
-                + other.occupancy * other.waves as f64)
-                / waves as f64;
-        }
-        self.waves = waves;
+        self.waves += other.waves;
+        self.steps += other.steps;
+        self.live_slot_steps += other.live_slot_steps;
+        self.slot_steps += other.slot_steps;
         self.requests += other.requests;
         self.tokens_out += other.tokens_out;
         self.busy_secs += other.busy_secs;
@@ -180,6 +215,11 @@ pub struct DecodeEngine<'a> {
     xspec: TensorSpec,
     /// Prebound plan fetching only `logits`.
     plan: StepPlan,
+    /// The `gen_masked_<arch>` program (per-slot memory reset — continuous
+    /// batching), bound when the artifact exports it.  `None` on artifacts
+    /// predating the free_mask ABI: the cluster then falls back to the
+    /// legacy drain-then-reset wave policy for this variant.
+    masked: Option<MaskedGen>,
     /// Zeroed TXL memories, uploaded once and re-installed per wave (waves
     /// are independent sequences) — without this cache every wave would
     /// re-upload the full memory set.
@@ -194,6 +234,19 @@ impl<'a> DecodeEngine<'a> {
         let width = xspec.shape[0];
         let vocab = engine.manifest.config.vocab;
         let plan = StepPlan::new(&gen.spec, &["logits"])?;
+        // A malformed masked program must not take down wave serving: the
+        // documented contract is per-lane degradation, so validation
+        // failures warn and fall back instead of failing the engine.
+        let masked = match Self::bind_masked(engine, arch_name, width) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!(
+                    "warning: gen_masked_{arch_name} unusable ({e:#}); \
+                     this lane will serve the wave policy"
+                );
+                None
+            }
+        };
         Ok(DecodeEngine {
             engine,
             arch_name: arch_name.to_string(),
@@ -202,8 +255,55 @@ impl<'a> DecodeEngine<'a> {
             gen,
             xspec,
             plan,
+            masked,
             zero_mems: RefCell::new(None),
         })
+    }
+
+    /// Bind `gen_masked_<arch>` if the artifact exports it, validating the
+    /// free_mask ABI against this engine's width — from the manifest spec
+    /// alone, compiling nothing.  `Ok(None)` = artifact predates the mask;
+    /// `Err` = present but malformed.
+    fn bind_masked(engine: &Engine, arch_name: &str, width: usize) -> Result<Option<MaskedGen>> {
+        let Some(spec) = engine.manifest.masked_gen(arch_name) else {
+            return Ok(None);
+        };
+        use crate::runtime::DType;
+        let (xa, _) = spec.in_group("x").context("masked x group")?;
+        let (ma, _) = spec.in_group("free_mask").context("free_mask group")?;
+        let mask_spec = spec.inputs[ma].clone();
+        anyhow::ensure!(
+            mask_spec.shape == [width] && mask_spec.dtype == DType::F32,
+            "free_mask must be a [{width}] f32 tensor, got {:?} {:?}",
+            mask_spec.shape,
+            mask_spec.dtype
+        );
+        let xspec = spec.inputs[xa].clone();
+        anyhow::ensure!(
+            xspec.element_count() == width && xspec.dtype == DType::I32,
+            "masked x must be a {width}-token i32 batch, got {:?} {:?}",
+            xspec.shape,
+            xspec.dtype
+        );
+        let plan = StepPlan::new(spec, &["logits"])?;
+        anyhow::ensure!(
+            plan.input_group("free_mask").map(|g| g.arity) == Some(1),
+            "free_mask must be a single tensor"
+        );
+        Ok(Some(MaskedGen {
+            name: spec.name.clone(),
+            xspec,
+            mask_spec,
+            plan,
+            prog: RefCell::new(None),
+            zero_mask: RefCell::new(None),
+        }))
+    }
+
+    /// Whether this variant's artifact exports a usable `gen_masked_<arch>`
+    /// — the prerequisite for the continuous-batching policy.
+    pub fn has_masked(&self) -> bool {
+        self.masked.is_some()
     }
 
     /// The cached `gen_<arch>` program (shared with callers that would
@@ -231,6 +331,56 @@ impl<'a> DecodeEngine<'a> {
         st.set_single("x", literal::literal_from_i32s(&self.xspec, x)?);
         let mut out = st.run_plan(&self.gen, &self.plan)?;
         Ok(out.pop().expect("plan fetches logits"))
+    }
+
+    /// One *masked* decode step (continuous batching): slots flagged in
+    /// `reset` have their TXL memories zeroed on-device before the forward
+    /// (`mems * (1 - free_mask)` inside `gen_masked_<arch>`), so a request
+    /// admitted into a reused slot never sees its predecessor's state.
+    /// Uploads `width` i32s per step; the mask is only built and uploaded
+    /// on admission steps — every other step re-installs a cached all-zero
+    /// device buffer for free (the `zero_mems` pattern).
+    pub fn decode_step_masked(
+        &self,
+        st: &mut StateStore,
+        x: &[i32],
+        reset: &[bool],
+    ) -> Result<Vec<f32>> {
+        let mg = self
+            .masked
+            .as_ref()
+            .with_context(|| format!("no gen_masked_{} in artifact", self.arch_name))?;
+        // compile-on-first-use: wave-only serving never reaches this
+        let prog = {
+            let mut cache = mg.prog.borrow_mut();
+            if cache.is_none() {
+                *cache = Some(self.engine.program(&mg.name)?);
+            }
+            Arc::clone(cache.as_ref().unwrap())
+        };
+        st.set_single("x", literal::literal_from_i32s(&mg.xspec, x)?);
+        if reset.iter().any(|&b| b) {
+            let mask: Vec<f32> = reset.iter().map(|&b| b as u8 as f32).collect();
+            st.set_single("free_mask", literal::literal_from_f32s(&mg.mask_spec, &mask)?);
+        } else if st.mode() == ExecMode::Roundtrip {
+            // mirror reset_mems: the legacy path keeps state host-side, and
+            // a device-resident mask here would force a per-token download
+            // that pollutes the bytes-synced A/B counter
+            st.set_single("free_mask", literal::zeros(&mg.mask_spec));
+        } else {
+            let mut cache = mg.zero_mask.borrow_mut();
+            if cache.is_none() {
+                *cache = Some(Arc::new(prog.upload(&literal::zeros(&mg.mask_spec))?));
+            }
+            st.set_device_group("free_mask", vec![Arc::clone(cache.as_ref().unwrap())]);
+        }
+        let mut out = st.run_plan(&prog, &mg.plan)?;
+        Ok(out.pop().expect("plan fetches logits"))
+    }
+
+    /// Greedy per-slot argmax over a `[width, vocab]` logits batch.
+    pub fn argmax_rows(&self, logits: &[f32]) -> Vec<i32> {
+        logits.chunks(self.vocab).map(argmax).collect()
     }
 
     /// Reset the TXL memories for a fresh wave.  On the resident path this
@@ -318,9 +468,17 @@ impl<'a> DecodeEngine<'a> {
         metrics.requests += wave.requests.len();
         metrics.busy_secs += busy;
         metrics.bytes_synced += st.stats().since(&sync0).total_bytes();
-        metrics.occupancy = (metrics.occupancy * (metrics.waves - 1) as f64
-            + wave.requests.len() as f64 / self.width as f64)
-            / metrics.waves as f64;
+        // step-weighted occupancy: charge the wave for every slot-step of
+        // its right-aligned schedule, live or idle.  `steps` counts actual
+        // program executions (the final decode step is elided — its tokens
+        // come from the previous step's logits), so the column is
+        // comparable with the continuous scheduler's executed-step count;
+        // the occupancy ratio keeps the schedule-step convention on both
+        // sides of the fraction.
+        let (live, cap) = wave.step_usage(self.width);
+        metrics.steps += shape.steps() - (shape.max_gen > 0) as u64;
+        metrics.live_slot_steps += live;
+        metrics.slot_steps += cap;
 
         let done = Instant::now();
         let mut responses = Vec::with_capacity(wave.requests.len());
@@ -340,22 +498,6 @@ impl<'a> DecodeEngine<'a> {
         }
         Ok(responses)
     }
-}
-
-/// Step-count plan for one wave: longest prompt, longest generation, and
-/// whether a BOS seed step is required (every prompt empty yet tokens are
-/// requested — otherwise the decode loop has no logits to start from).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct WaveShape {
-    pub max_prompt: usize,
-    pub max_gen: usize,
-    pub needs_bos: bool,
-}
-
-pub fn wave_shape(wave: &BatchWave) -> WaveShape {
-    let max_prompt = wave.requests.iter().map(|(r, _)| r.prompt.len()).max().unwrap_or(0);
-    let max_gen = wave.requests.iter().map(|(r, _)| r.n_gen).max().unwrap_or(0);
-    WaveShape { max_prompt, max_gen, needs_bos: max_prompt == 0 && max_gen > 0 }
 }
 
 fn argmax(xs: &[f32]) -> i32 {
@@ -459,71 +601,45 @@ mod tests {
     }
 
     #[test]
-    fn metrics_merge_weights_occupancy_by_waves() {
+    fn metrics_merge_is_step_weighted() {
+        // lane a: 10 steps of width 4, fully live; lane b: 30 steps of
+        // width 4, half live — merged occupancy must weight by slot-steps,
+        // not average the two ratios
         let mut a = ServeMetrics {
             waves: 1,
+            steps: 10,
+            live_slot_steps: 40,
+            slot_steps: 40,
             requests: 2,
             tokens_out: 8,
             busy_secs: 1.0,
             latencies: reservoir_of(&[0.5]),
-            occupancy: 1.0,
             bytes_synced: 100,
         };
         let b = ServeMetrics {
             waves: 3,
+            steps: 30,
+            live_slot_steps: 60,
+            slot_steps: 120,
             requests: 3,
             tokens_out: 12,
             busy_secs: 2.0,
             latencies: reservoir_of(&[0.1, 0.2]),
-            occupancy: 0.5,
             bytes_synced: 50,
         };
         a.merge(&b);
         assert_eq!(a.waves, 4);
+        assert_eq!(a.steps, 40);
         assert_eq!(a.requests, 5);
         assert_eq!(a.tokens_out, 20);
         assert_eq!(a.bytes_synced, 150);
-        assert!((a.occupancy - 0.625).abs() < 1e-12);
+        assert!((a.occupancy() - 100.0 / 160.0).abs() < 1e-12);
         assert_eq!(a.latencies.samples().len(), 3);
         assert_eq!(a.latencies.seen(), 3);
     }
 
-    fn wave_of(prompts: &[usize], gens: &[usize]) -> BatchWave {
-        let now = Instant::now();
-        BatchWave {
-            requests: prompts
-                .iter()
-                .zip(gens)
-                .enumerate()
-                .map(|(i, (&p, &g))| {
-                    (
-                        super::super::Request {
-                            id: i as u64,
-                            prompt: vec![1; p],
-                            n_gen: g,
-                            sla: f64::INFINITY,
-                        },
-                        now,
-                    )
-                })
-                .collect(),
-        }
-    }
-
     #[test]
-    fn wave_shape_flags_all_empty_prompts() {
-        // the regression the BOS seed fixes: every prompt empty + tokens
-        // requested used to silently decode nothing
-        let s = wave_shape(&wave_of(&[0, 0], &[4, 2]));
-        assert_eq!(s, WaveShape { max_prompt: 0, max_gen: 4, needs_bos: true });
-    }
-
-    #[test]
-    fn wave_shape_no_bos_when_any_prompt_present() {
-        let s = wave_shape(&wave_of(&[0, 3], &[4, 2]));
-        assert_eq!(s, WaveShape { max_prompt: 3, max_gen: 4, needs_bos: false });
-        // nothing to generate → no seed step either
-        let s = wave_shape(&wave_of(&[0, 0], &[0, 0]));
-        assert!(!s.needs_bos);
+    fn empty_metrics_occupancy_is_zero() {
+        assert_eq!(ServeMetrics::default().occupancy(), 0.0);
     }
 }

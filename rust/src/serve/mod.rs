@@ -1,24 +1,42 @@
-//! Serving stack: SLA-aware router + dynamic wave batcher + concurrent
-//! per-variant decode workers.
+//! Serving stack: SLA-aware router + concurrent per-variant decode workers
+//! running either wave batching or continuous (slot-based) batching.
 //!
 //! PLANER's product is a *set* of latency/quality variants of one model
 //! (50%–95% targets).  The serving layer exploits that: requests carry a
-//! latency budget; the router picks the cheapest variant whose profiled
-//! latency fits, and each variant's engine batches concurrent requests into
-//! fixed-width decode waves over the AOT `gen_<arch>` program.
+//! latency budget; the router picks the best variant whose profiled latency
+//! fits (breaking quality ties by lane depth), and each variant's worker
+//! batches concurrent requests over the AOT decode program.
 //!
 //! Concurrency model (`cluster::Cluster`):
 //! - an **admission thread** replays the trace, routes each request via
-//!   [`Router`], and sends it down a per-variant `mpsc` channel;
-//! - one **decode worker** per variant owns that variant's [`DecodeEngine`],
-//!   `StateStore` and [`WaveBatcher`], firing full waves immediately and
-//!   partial waves the moment the oldest request's `max_wait` deadline
-//!   expires (the deadline-aware pump in [`worker::WorkerLane`]);
+//!   [`Router::route_loaded`], and sends it down a per-variant `mpsc`
+//!   channel (a [`worker::LaneSender`], whose in-flight gauge feeds the
+//!   router's load tiebreak);
+//! - one **decode worker** per variant owns that variant's [`DecodeEngine`]
+//!   and `StateStore`, and runs one of two batching policies
+//!   ([`cluster::ServePolicy`]):
+//!   - **wave** ([`worker::WorkerLane`] + [`WaveBatcher`]): fixed-membership
+//!     waves over `gen_<arch>` — full waves fire immediately, partial waves
+//!     the moment the oldest request's `max_wait` deadline expires; every
+//!     wave resets all memories, so arrivals wait behind the in-flight wave;
+//!   - **continuous** ([`scheduler::SlotLane`] + [`scheduler::SlotScheduler`]
+//!     over `gen_masked_<arch>`): `width` persistent slots stepped every
+//!     token; queued requests are admitted into free slots *between steps*
+//!     (in-flight admission, FIFO), each slot retires the step its own
+//!     `n_gen` completes, and a per-slot `free_mask` zeroes exactly the
+//!     joining slots' TXL memories on-device — no drain, no head-of-line
+//!     blocking behind a long batch-mate.  Artifacts predating the
+//!     free_mask ABI fall back to the wave policy per lane;
 //! - shutdown is a **graceful drain**: closing the admission channels makes
-//!   every worker flush its queue (partials included) before joining.
+//!   every worker flush its queue (partial waves / live slots included)
+//!   before joining.
 //!
-//! The worker loop is generic over [`worker::WaveExecutor`], so batching,
-//! deadline and FIFO invariants are tested without XLA artifacts.
+//! Both worker loops are generic over executor traits
+//! ([`worker::WaveExecutor`], [`scheduler::SlotExecutor`]), so batching,
+//! deadline, FIFO-admission, slot-reuse and completion invariants are
+//! tested without XLA artifacts (rust/tests/{concurrent,continuous}_serve.rs),
+//! and `cargo bench --bench coordinator` A/Bs the two policies on a
+//! simulated mixed-length trace.
 //!
 //! Python is never on this path — everything below executes pre-compiled
 //! HLO through PJRT.
@@ -28,16 +46,18 @@ pub mod cluster;
 pub mod workload;
 pub mod engine;
 pub mod router;
+pub mod scheduler;
+pub mod session;
 pub mod worker;
 
-pub use batcher::{BatchWave, WaveBatcher};
-pub use cluster::Cluster;
+pub use batcher::{wave_shape, BatchWave, WaveBatcher, WaveShape};
+pub use cluster::{Cluster, ServePolicy};
 pub use workload::{Arrival, TimedRequest, WorkloadGen};
-pub use engine::{
-    percentile, wave_shape, DecodeEngine, LatencyReservoir, ServeMetrics, WaveShape,
-};
+pub use engine::{percentile, DecodeEngine, LatencyReservoir, ServeMetrics};
 pub use router::{Router, RouterPolicy, VariantInfo};
-pub use worker::{admit, WaveExecutor, WorkerLane};
+pub use scheduler::{SlotExecutor, SlotLane, SlotScheduler};
+pub use session::{Session, SessionState};
+pub use worker::{admit, DepthGauge, LaneSender, WaveExecutor, WorkerLane};
 
 /// A generation request.
 #[derive(Debug, Clone)]

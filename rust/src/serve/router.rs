@@ -45,32 +45,54 @@ impl Router {
         v.token_latency * (r.prompt.len() + r.n_gen) as f64
     }
 
-    /// Pick a variant name for the request.
+    /// Pick a variant name for the request (load-blind; see
+    /// [`Self::route_loaded`] for the serving path).
     pub fn route(&self, r: &Request) -> &str {
+        self.route_loaded(r, |_| 0)
+    }
+
+    /// Pick a variant name for the request, breaking ties by current load.
+    ///
+    /// `load` reports each variant's in-flight depth (the cluster exposes
+    /// it from the lane senders' [`super::worker::DepthGauge`]s).  The
+    /// quality-within-SLA scan still prefers the best quality that fits,
+    /// but among variants *tied at that quality* the least-loaded lane
+    /// wins — under bursty traffic the old first-fit rule piled every
+    /// SLA-equivalent request onto one lane while its twins sat idle.
+    pub fn route_loaded(&self, r: &Request, load: impl Fn(&str) -> usize) -> &str {
         match self.policy {
-            RouterPolicy::FastestAlways => {
-                &self
-                    .variants
-                    .iter()
-                    .min_by(|a, b| a.token_latency.total_cmp(&b.token_latency))
-                    .unwrap()
-                    .name
-            }
+            RouterPolicy::FastestAlways => self.fastest(),
             RouterPolicy::QualityWithinSla => {
+                let mut best: Option<&VariantInfo> = None;
                 for v in &self.variants {
-                    if self.estimate(v, r) <= r.sla {
-                        return &v.name;
+                    // variants are sorted by quality descending
+                    if let Some(b) = best {
+                        if v.quality != b.quality {
+                            break; // past the winning quality tier
+                        }
+                        if self.estimate(v, r) <= r.sla && load(&v.name) < load(&b.name) {
+                            best = Some(v);
+                        }
+                    } else if self.estimate(v, r) <= r.sla {
+                        best = Some(v);
                     }
                 }
-                // nothing fits: degrade to the fastest
-                &self
-                    .variants
-                    .iter()
-                    .min_by(|a, b| a.token_latency.total_cmp(&b.token_latency))
-                    .unwrap()
-                    .name
+                match best {
+                    Some(v) => &v.name,
+                    // nothing fits: degrade to the fastest
+                    None => self.fastest(),
+                }
             }
         }
+    }
+
+    fn fastest(&self) -> &str {
+        &self
+            .variants
+            .iter()
+            .min_by(|a, b| a.token_latency.total_cmp(&b.token_latency))
+            .unwrap()
+            .name
     }
 }
 
@@ -148,6 +170,44 @@ mod tests {
             RouterPolicy::FastestAlways,
         );
         assert!(fr.route(&req(1.0)).starts_with('v'));
+    }
+
+    #[test]
+    fn quality_tie_breaks_by_queue_depth() {
+        // two SLA-equivalent twins (same quality, both fit): the less
+        // loaded lane must win, and the choice must flip with the load
+        let r = Router::new(
+            vec![
+                VariantInfo { name: "twin-a".into(), token_latency: 1.0, quality: 2.0 },
+                VariantInfo { name: "twin-b".into(), token_latency: 1.0, quality: 2.0 },
+                VariantInfo { name: "cheap".into(), token_latency: 0.5, quality: 1.0 },
+            ],
+            RouterPolicy::QualityWithinSla,
+        );
+        let q = req(1000.0);
+        let depth_a_loaded = |v: &str| if v == "twin-a" { 5 } else { 0 };
+        let depth_b_loaded = |v: &str| if v == "twin-b" { 5 } else { 0 };
+        assert_eq!(r.route_loaded(&q, depth_a_loaded), "twin-b");
+        assert_eq!(r.route_loaded(&q, depth_b_loaded), "twin-a");
+        // equal load: first (list-order) twin wins, deterministically
+        assert_eq!(r.route_loaded(&q, |_| 3), "twin-a");
+        // the tiebreak never drags in a lower-quality variant, however idle
+        assert_eq!(r.route_loaded(&q, |v| if v == "cheap" { 0 } else { 99 }), "twin-a");
+    }
+
+    #[test]
+    fn load_tiebreak_skips_unfitting_twin() {
+        // same quality tier, but only one twin actually fits the SLA:
+        // load must not route onto the unfitting one
+        let r = Router::new(
+            vec![
+                VariantInfo { name: "slow-twin".into(), token_latency: 10.0, quality: 2.0 },
+                VariantInfo { name: "fit-twin".into(), token_latency: 1.0, quality: 2.0 },
+            ],
+            RouterPolicy::QualityWithinSla,
+        );
+        // 10 tokens: slow-twin estimates 100 > 15, fit-twin 10 <= 15
+        assert_eq!(r.route_loaded(&req(15.0), |v| if v == "fit-twin" { 9 } else { 0 }), "fit-twin");
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! Continuous batching: a slot-based session scheduler with in-flight
+//! admission.
+//!
+//! The wave path decodes fixed-membership batches: every request in a wave
+//! waits out the wave's `(max_prompt, max_gen)` schedule, and arrivals queue
+//! behind the whole in-flight wave — head-of-line blocking that wrecks p95
+//! on mixed-length traffic.  The [`SlotScheduler`] fixes that by running the
+//! decode program *every step* over `width` persistent slots
+//! ([`super::session::Session`]s) and treating membership as per-slot state:
+//!
+//! - queued requests are admitted into free slots **between steps**, while
+//!   the rest of the batch keeps decoding (in-flight admission, FIFO);
+//! - each slot retires the step its own `n_gen` completes, freeing the slot
+//!   for the next queued request on the very next step;
+//! - a slot joining a live batch must not inherit its predecessor's TXL
+//!   memories, so every step passes a per-slot reset mask to the executor —
+//!   in production the `gen_masked_<arch>` program zeroes exactly the masked
+//!   lanes' `[L,B,M,D]` memories on-device before the forward.
+//!
+//! The [`SlotExecutor`] trait mirrors the wave path's `WaveExecutor`: the
+//! cluster implements it over `DecodeEngine::decode_step_masked`, and tests
+//! and benches implement simulators, so every scheduling invariant (FIFO
+//! admission, slot reuse isolation, per-slot completion, starvation-freedom)
+//! is checkable without XLA artifacts (rust/tests/continuous_serve.rs).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::ServeMetrics;
+use super::session::Session;
+use super::worker::DepthGauge;
+use super::{Request, Response};
+
+/// Executes one continuous-batch decode step.  Implemented by the cluster
+/// over `DecodeEngine` + `StateStore` (the masked gen program), and by
+/// simulators in tests/benches.
+pub trait SlotExecutor {
+    /// Slot count of the underlying decode batch (the program's compiled
+    /// batch width).
+    fn width(&self) -> usize;
+
+    /// Run one decode step.  `x[width]` is the token batch (free slots pad
+    /// with 0); `reset[width]` marks slots whose TXL memories must be
+    /// zeroed *before* this step runs (slots admitted since the previous
+    /// step).  Returns the greedy next token for every slot.
+    fn step(&mut self, x: &[i32], reset: &[bool]) -> Result<Vec<i32>>;
+
+    /// Cumulative host↔device bytes this executor has moved (0 for sims);
+    /// the scheduler meters the per-step delta into its metrics.
+    fn bytes_synced(&self) -> u64 {
+        0
+    }
+}
+
+/// Owns `width` persistent decode slots and a FIFO admission queue; runs the
+/// gen program one step at a time (see module docs).
+pub struct SlotScheduler<E: SlotExecutor> {
+    /// Variant name stamped on every response.
+    pub variant: String,
+    pub executor: E,
+    slots: Vec<Session>,
+    queue: VecDeque<(Request, Instant)>,
+    /// Slots admitted since the last step — their memories are cleared by
+    /// the next step's mask.
+    reset: Vec<bool>,
+    /// Scratch token batch, refilled per step (no per-step allocs).
+    x: Vec<i32>,
+    pub metrics: ServeMetrics,
+    bytes_seen: u64,
+}
+
+impl<E: SlotExecutor> SlotScheduler<E> {
+    pub fn new(variant: impl Into<String>, executor: E) -> Self {
+        let width = executor.width();
+        assert!(width > 0, "scheduler needs at least one slot");
+        // baseline the byte meter so pre-serve traffic (init uploads) is
+        // not charged to the first decode step
+        let bytes_seen = executor.bytes_synced();
+        SlotScheduler {
+            variant: variant.into(),
+            executor,
+            slots: (0..width).map(|_| Session::free()).collect(),
+            queue: VecDeque::new(),
+            reset: vec![false; width],
+            x: vec![0; width],
+            metrics: ServeMetrics::default(),
+            bytes_seen,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Queue a request for admission at the next step boundary.
+    pub fn submit(&mut self, r: Request, submitted: Instant) {
+        self.queue.push_back((r, submitted));
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Slots currently occupied (prefilling or decoding).
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_free()).count()
+    }
+
+    /// Anything left to do: occupied slots or queued requests.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(|s| !s.is_free())
+    }
+
+    /// Request ids per slot, in slot order (test/introspection hook).
+    pub fn slot_ids(&self) -> Vec<Option<u64>> {
+        self.slots.iter().map(|s| s.request_id()).collect()
+    }
+
+    /// Admit queued requests into free slots, strictly FIFO: the queue head
+    /// takes the lowest-index free slot; when no slot is free admission
+    /// stops (nothing overtakes the head, so the head starves only if the
+    /// executor itself stops completing work).  Zero-token requests are
+    /// answered immediately and never occupy a slot.
+    fn admit_queued(&mut self, out: &mut Vec<Response>) {
+        while let Some((r, _)) = self.queue.front() {
+            if r.n_gen == 0 {
+                let (r, submitted) = self.queue.pop_front().unwrap();
+                let latency = Instant::now().duration_since(submitted).as_secs_f64();
+                self.metrics.requests += 1;
+                self.metrics.latencies.push(latency);
+                out.push(Response {
+                    id: r.id,
+                    tokens: Vec::new(),
+                    latency,
+                    variant: self.variant.clone(),
+                });
+                continue;
+            }
+            let Some(slot) = self.slots.iter().position(Session::is_free) else {
+                break;
+            };
+            let (r, submitted) = self.queue.pop_front().unwrap();
+            self.slots[slot].admit(r, submitted);
+            self.reset[slot] = true;
+        }
+    }
+
+    /// One scheduler step: admit into free slots, run the executor once over
+    /// all live slots, and retire every slot whose `n_gen` completed this
+    /// step.  Returns the completed responses (possibly empty).  A step with
+    /// no live slots (e.g. only zero-token requests queued) skips the
+    /// executor entirely.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        self.admit_queued(&mut out);
+        let live = self.live();
+        if live == 0 {
+            return Ok(out);
+        }
+        let width = self.slots.len();
+        for (i, s) in self.slots.iter().enumerate() {
+            self.x[i] = s.feed();
+        }
+        let t0 = Instant::now();
+        let tokens = self.executor.step(&self.x, &self.reset)?;
+        anyhow::ensure!(
+            tokens.len() == width,
+            "executor returned {} tokens for width {width}",
+            tokens.len()
+        );
+        self.metrics.busy_secs += t0.elapsed().as_secs_f64();
+        self.metrics.steps += 1;
+        self.metrics.slot_steps += width as u64;
+        self.metrics.live_slot_steps += live as u64;
+        let bytes = self.executor.bytes_synced();
+        self.metrics.bytes_synced += bytes.saturating_sub(self.bytes_seen);
+        self.bytes_seen = bytes;
+        self.reset.fill(false);
+
+        let done = Instant::now();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if let Some(r) = s.advance(tokens[i], done, &self.variant) {
+                self.metrics.requests += 1;
+                self.metrics.tokens_out += r.tokens.len();
+                self.metrics.latencies.push(r.latency);
+                out.push(r);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Steps between metric snapshots published to the cluster's shared map —
+/// comparable cadence to the wave path's once-per-wave publish.
+pub const PUBLISH_EVERY_STEPS: u64 = 16;
+
+/// One variant's continuous-batching lane: scheduler + admission channel
+/// pump.  The continuous counterpart of `worker::WorkerLane` — the cluster
+/// spawns one per variant when the continuous policy is active.
+pub struct SlotLane<E: SlotExecutor> {
+    pub name: String,
+    pub scheduler: SlotScheduler<E>,
+    /// In-flight gauge shared with the admission side's `LaneSender` (the
+    /// router's load-aware tiebreak reads it); decremented per response.
+    pub depth: DepthGauge,
+}
+
+impl<E: SlotExecutor> SlotLane<E> {
+    pub fn new(name: impl Into<String>, scheduler: SlotScheduler<E>) -> Self {
+        SlotLane { name: name.into(), scheduler, depth: DepthGauge::default() }
+    }
+
+    /// Lane main loop: drain the admission channel between steps (in-flight
+    /// admission — arrivals join the live batch at the next step boundary),
+    /// step while there is work, block for admissions when idle.  When the
+    /// channel closes, finish the remaining slots/queue and return every
+    /// response.  `publish` runs with the lane's current metrics at most
+    /// once per [`PUBLISH_EVERY_STEPS`] steps, plus once at shutdown — NOT
+    /// on every step: cloning a ServeMetrics (with its latency reservoir)
+    /// into the cluster's shared map per token would put a mutex + memcpy
+    /// on the hottest loop in the repo, where the wave path only pays it
+    /// once per multi-step wave.
+    pub fn run_with(
+        mut self,
+        rx: Receiver<(Request, Instant)>,
+        mut publish: impl FnMut(&ServeMetrics),
+    ) -> Result<(Vec<Response>, SlotScheduler<E>)> {
+        let mut out = Vec::new();
+        let mut published_at = 0u64;
+        loop {
+            while let Ok((r, t)) = rx.try_recv() {
+                self.scheduler.submit(r, t);
+            }
+            if self.scheduler.has_work() {
+                let rs = self.scheduler.step()?;
+                self.depth.sub(rs.len());
+                out.extend(rs);
+                if self.scheduler.metrics.steps >= published_at + PUBLISH_EVERY_STEPS {
+                    published_at = self.scheduler.metrics.steps;
+                    publish(&self.scheduler.metrics);
+                }
+            } else {
+                // idle: nothing can happen until an admission (or close)
+                match rx.recv() {
+                    Ok((r, t)) => self.scheduler.submit(r, t),
+                    Err(_) => break,
+                }
+            }
+        }
+        // graceful drain: no further arrivals, finish what's in flight
+        while self.scheduler.has_work() {
+            let rs = self.scheduler.step()?;
+            self.depth.sub(rs.len());
+            out.extend(rs);
+        }
+        // final snapshot so trailing steps' occupancy/counters land even
+        // when the last steps completed nothing
+        publish(&self.scheduler.metrics);
+        Ok((out, self.scheduler))
+    }
+
+    /// `run_with` without a metrics observer (tests/benches).
+    pub fn run(
+        self,
+        rx: Receiver<(Request, Instant)>,
+    ) -> Result<(Vec<Response>, SlotScheduler<E>)> {
+        self.run_with(rx, |_| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal sim: next token = slot-local counter (no memory semantics —
+    /// those live in rust/tests/continuous_serve.rs).
+    struct CountExec {
+        width: usize,
+        count: i32,
+    }
+
+    impl SlotExecutor for CountExec {
+        fn width(&self) -> usize {
+            self.width
+        }
+        fn step(&mut self, x: &[i32], reset: &[bool]) -> Result<Vec<i32>> {
+            assert_eq!(x.len(), self.width);
+            assert_eq!(reset.len(), self.width);
+            self.count += 1;
+            Ok(vec![self.count; self.width])
+        }
+    }
+
+    fn req(id: u64, prompt: usize, n_gen: usize) -> Request {
+        Request { id, prompt: vec![1; prompt], n_gen, sla: f64::INFINITY }
+    }
+
+    #[test]
+    fn completes_everything_with_exact_counts() {
+        let mut s = SlotScheduler::new("v", CountExec { width: 2, count: 0 });
+        let now = Instant::now();
+        for (id, (p, g)) in [(0, (2, 3)), (1, (0, 1)), (2, (4, 2)), (3, (1, 5))] {
+            s.submit(req(id, p, g), now);
+        }
+        let mut responses = Vec::new();
+        while s.has_work() {
+            responses.extend(s.step().unwrap());
+        }
+        assert_eq!(responses.len(), 4);
+        responses.sort_by_key(|r| r.id);
+        for (r, want) in responses.iter().zip([3usize, 1, 2, 5]) {
+            assert_eq!(r.tokens.len(), want, "req {} token count", r.id);
+        }
+        assert_eq!(s.metrics.requests, 4);
+        assert_eq!(s.metrics.tokens_out, 11);
+        assert!(s.metrics.occupancy() > 0.0);
+    }
+
+    #[test]
+    fn zero_token_requests_never_occupy_a_slot() {
+        let mut s = SlotScheduler::new("v", CountExec { width: 1, count: 0 });
+        let now = Instant::now();
+        s.submit(req(0, 3, 0), now);
+        s.submit(req(1, 1, 1), now);
+        let first = s.step().unwrap();
+        // the zero-token request answers instantly; req 1 completes in the
+        // same step (1 prompt token, n_gen 1)
+        let ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        assert!(first[0].tokens.is_empty());
+        assert_eq!(s.metrics.steps, 1);
+    }
+
+    #[test]
+    fn admission_is_fifo_and_respects_width() {
+        let mut s = SlotScheduler::new("v", CountExec { width: 2, count: 0 });
+        let now = Instant::now();
+        for id in 0..5 {
+            s.submit(req(id, 1, 4), now);
+        }
+        s.step().unwrap();
+        assert_eq!(s.slot_ids(), vec![Some(0), Some(1)]);
+        assert_eq!(s.queued(), 3);
+        // membership is stable until the occupants retire
+        while s.live() == 2 {
+            s.step().unwrap();
+        }
+        // first two retired together (identical lengths) — the next step
+        // admits the next two in queue order
+        s.step().unwrap();
+        assert_eq!(s.slot_ids(), vec![Some(2), Some(3)]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Per-slot decode session: the unit of continuous batching.
+//!
+//! Where the wave path schedules a whole batch with one right-aligned
+//! `(max_prompt, max_gen)` plan, a [`Session`] gives every slot its own
+//! lifecycle:
+//!
+//! ```text
+//!   Free ──admit──▶ Prefill(cursor) ──last prompt token──▶ Decode(g) ──▶ Free
+//! ```
+//!
+//! - **Prefill** feeds one prompt token per step, tracking its own cursor;
+//!   an empty prompt feeds a single BOS (token 0) step instead, matching the
+//!   wave path's BOS seeding for all-empty-prompt waves.
+//! - **Decode** feeds back the previously emitted token and appends the
+//!   executor's next token; the slot retires the step its own `n_gen`
+//!   completes — it never idles through a batch-mate's longer schedule.
+//! - **Free** slots pad the batch with token 0 and must never have a token
+//!   attributed to them (property-tested in rust/tests/continuous_serve.rs).
+//!
+//! Sessions are pure bookkeeping — no buffers, no program handles — so the
+//! whole lifecycle is testable without XLA artifacts.
+
+use std::time::Instant;
+
+use super::{Request, Response};
+
+/// Lifecycle phase of one slot, as observed via [`Session::state`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Unoccupied: pads the batch, produces nothing.
+    Free,
+    /// Feeding prompt token `cursor` this step (BOS step when the prompt is
+    /// empty).
+    Prefill { cursor: usize },
+    /// `generated` tokens emitted so far; feeding back the last one.
+    Decode { generated: usize },
+}
+
+/// Occupied-slot phase.  Deliberately has no `Free` variant: a free slot is
+/// `Session.state == None` and nothing else, so "occupied but free-phased"
+/// (a slot that feeds pad tokens forever while counting as live) is
+/// unrepresentable.
+#[derive(Debug, Clone, Copy)]
+enum Phase {
+    Prefill { cursor: usize },
+    Decode { generated: usize },
+}
+
+/// One slot of the continuous batch (see module docs).
+#[derive(Debug, Default)]
+pub struct Session {
+    state: Option<SessionInner>,
+}
+
+#[derive(Debug)]
+struct SessionInner {
+    request: Request,
+    submitted: Instant,
+    phase: Phase,
+    tokens: Vec<i32>,
+    /// Last emitted token — next step's input while decoding.
+    last_token: i32,
+}
+
+impl Session {
+    pub fn free() -> Session {
+        Session::default()
+    }
+
+    pub fn is_free(&self) -> bool {
+        self.state.is_none()
+    }
+
+    pub fn state(&self) -> SessionState {
+        match &self.state {
+            None => SessionState::Free,
+            Some(s) => match s.phase {
+                Phase::Prefill { cursor } => SessionState::Prefill { cursor },
+                Phase::Decode { generated } => SessionState::Decode { generated },
+            },
+        }
+    }
+
+    /// Id of the occupying request, if any (test/introspection hook).
+    pub fn request_id(&self) -> Option<u64> {
+        self.state.as_ref().map(|s| s.request.id)
+    }
+
+    /// Occupy this slot.  The caller (scheduler) guarantees the slot is free
+    /// and `n_gen > 0` (zero-token requests are answered at admission and
+    /// never occupy a slot).
+    pub fn admit(&mut self, request: Request, submitted: Instant) {
+        debug_assert!(self.is_free(), "admit into an occupied slot");
+        debug_assert!(request.n_gen > 0, "zero-token request occupying a slot");
+        self.state = Some(SessionInner {
+            request,
+            submitted,
+            phase: Phase::Prefill { cursor: 0 },
+            tokens: Vec::new(),
+            last_token: 0,
+        });
+    }
+
+    /// Token this slot contributes to the batch for the next step.
+    pub fn feed(&self) -> i32 {
+        match &self.state {
+            None => 0,
+            Some(s) => match s.phase {
+                Phase::Prefill { cursor } => s.prompt_token(cursor),
+                Phase::Decode { .. } => s.last_token,
+            },
+        }
+    }
+
+    /// Consume the executor's next token for this slot after a step.
+    /// Returns the finished [`Response`] the step the session's own `n_gen`
+    /// completes; the slot is Free again on return.  Free slots ignore the
+    /// token — nothing is ever attributed to them.
+    pub fn advance(&mut self, token: i32, done: Instant, variant: &str) -> Option<Response> {
+        let s = self.state.as_mut()?;
+        match s.phase {
+            Phase::Prefill { cursor } => {
+                if cursor + 1 < s.prompt_steps() {
+                    // mid-prompt: logits not yet meaningful for decoding
+                    s.phase = Phase::Prefill { cursor: cursor + 1 };
+                    return None;
+                }
+                // final prompt (or BOS) token just ran: this step's output
+                // is the first generated token
+                s.tokens.push(token);
+                s.last_token = token;
+                s.phase = Phase::Decode { generated: 1 };
+            }
+            Phase::Decode { generated } => {
+                s.tokens.push(token);
+                s.last_token = token;
+                s.phase = Phase::Decode { generated: generated + 1 };
+            }
+        }
+        if s.tokens.len() >= s.request.n_gen {
+            let s = self.state.take().unwrap();
+            return Some(Response {
+                id: s.request.id,
+                tokens: s.tokens,
+                latency: done.duration_since(s.submitted).as_secs_f64(),
+                variant: variant.to_string(),
+            });
+        }
+        None
+    }
+}
+
+impl SessionInner {
+    /// Steps the prompt phase takes: one per prompt token, or a single BOS
+    /// step when the prompt is empty.
+    fn prompt_steps(&self) -> usize {
+        self.request.prompt.len().max(1)
+    }
+
+    fn prompt_token(&self, cursor: usize) -> i32 {
+        *self.request.prompt.get(cursor).unwrap_or(&0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: Vec<i32>, n_gen: usize) -> Request {
+        Request { id: 7, prompt, n_gen, sla: f64::INFINITY }
+    }
+
+    #[test]
+    fn lifecycle_prompt_then_decode() {
+        let mut s = Session::free();
+        assert!(s.is_free());
+        let t0 = Instant::now();
+        s.admit(req(vec![10, 11], 2), t0);
+        assert_eq!(s.state(), SessionState::Prefill { cursor: 0 });
+        assert_eq!(s.feed(), 10);
+        // first prompt token ran; output ignored
+        assert!(s.advance(99, Instant::now(), "v").is_none());
+        assert_eq!(s.feed(), 11);
+        // final prompt token ran: output is generated token #1
+        assert!(s.advance(42, Instant::now(), "v").is_none());
+        assert_eq!(s.state(), SessionState::Decode { generated: 1 });
+        assert_eq!(s.feed(), 42);
+        let r = s.advance(43, Instant::now(), "v").expect("completes");
+        assert_eq!(r.tokens, vec![42, 43]);
+        assert_eq!(r.variant, "v");
+        assert!(s.is_free());
+    }
+
+    #[test]
+    fn empty_prompt_takes_one_bos_step() {
+        let mut s = Session::free();
+        s.admit(req(vec![], 1), Instant::now());
+        assert_eq!(s.feed(), 0); // BOS
+        let r = s.advance(5, Instant::now(), "v").expect("one token");
+        assert_eq!(r.tokens, vec![5]);
+    }
+
+    #[test]
+    fn free_slot_ignores_tokens() {
+        let mut s = Session::free();
+        assert!(s.advance(123, Instant::now(), "v").is_none());
+        assert_eq!(s.feed(), 0);
+        assert!(s.is_free());
+    }
+
+    #[test]
+    fn single_token_request_completes_on_prompt_step() {
+        let mut s = Session::free();
+        s.admit(req(vec![3], 1), Instant::now());
+        assert_eq!(s.feed(), 3);
+        let r = s.advance(9, Instant::now(), "v").expect("done in one step");
+        assert_eq!(r.tokens, vec![9]);
+        assert!(s.is_free());
+    }
+}

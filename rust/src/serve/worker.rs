@@ -19,7 +19,9 @@
 //! unit-testable without XLA artifacts (see rust/tests/concurrent_serve.rs).
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -28,6 +30,70 @@ use super::batcher::{BatchWave, WaveBatcher};
 use super::router::Router;
 use super::workload::TimedRequest;
 use super::{Request, Response};
+
+/// Shared in-flight gauge for one lane: requests admitted but not yet
+/// answered.  The admission side increments on send; the lane decrements as
+/// responses are produced.  The router's load-aware tiebreak reads it to
+/// spread SLA-equivalent traffic away from backed-up variants.
+#[derive(Debug, Clone, Default)]
+pub struct DepthGauge(Arc<AtomicUsize>);
+
+impl DepthGauge {
+    pub fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: a lane driven without an admission-side gauge
+    /// (direct-test harnesses) must not wrap below zero.
+    pub fn sub(&self, n: usize) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(n)));
+    }
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Admission-side handle for one lane: the mpsc sender plus the shared
+/// depth gauge (incremented per send, decremented by the worker per
+/// response).
+pub struct LaneSender {
+    tx: Sender<(Request, Instant)>,
+    depth: DepthGauge,
+}
+
+impl LaneSender {
+    /// Build a lane channel: `(admission handle, worker receiver, gauge)` —
+    /// give the gauge to the worker (`WorkerLane`/`SlotLane`) so completions
+    /// drain the depth the sender accumulates.
+    pub fn channel() -> (LaneSender, Receiver<(Request, Instant)>, DepthGauge) {
+        let (tx, rx) = channel();
+        let depth = DepthGauge::default();
+        (LaneSender { tx, depth: depth.clone() }, rx, depth)
+    }
+
+    /// Send a request down the lane, bumping the in-flight gauge.  Returns
+    /// false if the worker is gone (the send is dropped, not counted).
+    /// The increment happens *before* the send: a worker that receives and
+    /// answers instantly must never observe (and saturate away) its
+    /// decrement ahead of our increment, which would leave the gauge
+    /// permanently inflated.
+    pub fn send(&self, r: Request, t: Instant) -> bool {
+        self.depth.add(1);
+        if self.tx.send((r, t)).is_ok() {
+            true
+        } else {
+            self.depth.sub(1);
+            false
+        }
+    }
+
+    /// Current in-flight depth (admitted, unanswered).
+    pub fn depth(&self) -> usize {
+        self.depth.get()
+    }
+}
 
 /// Executes one decode wave.  Implemented by the cluster over
 /// `DecodeEngine` + `StateStore`, and by mock executors in tests/benches.
@@ -50,18 +116,24 @@ pub struct WorkerLane<E: WaveExecutor> {
     pub name: String,
     pub batcher: WaveBatcher,
     pub executor: E,
+    /// In-flight gauge shared with the admission side's [`LaneSender`];
+    /// decremented per response.  Defaults to a private gauge when the lane
+    /// is driven without one (direct tests).
+    pub depth: DepthGauge,
 }
 
 impl<E: WaveExecutor> WorkerLane<E> {
     pub fn new(name: impl Into<String>, batcher: WaveBatcher, executor: E) -> Self {
-        WorkerLane { name: name.into(), batcher, executor }
+        WorkerLane { name: name.into(), batcher, executor, depth: DepthGauge::default() }
     }
 
     /// Fire every currently-ready wave: full waves, and partial waves whose
     /// oldest request has outlived `max_wait`.
     fn fire_ready(&mut self, out: &mut Vec<Response>) -> Result<()> {
         while let Some(w) = self.batcher.next_wave(Instant::now()) {
-            out.extend(self.executor.execute_wave(&w)?);
+            let rs = self.executor.execute_wave(&w)?;
+            self.depth.sub(rs.len());
+            out.extend(rs);
         }
         Ok(())
     }
@@ -108,7 +180,9 @@ impl<E: WaveExecutor> WorkerLane<E> {
                             // graceful drain: no more arrivals can top up
                             // the wave, so waiting longer only adds latency
                             while let Some(w) = self.batcher.force_wave() {
-                                out.extend(self.executor.execute_wave(&w)?);
+                                let rs = self.executor.execute_wave(&w)?;
+                                self.depth.sub(rs.len());
+                                out.extend(rs);
                             }
                             break;
                         }
@@ -123,14 +197,17 @@ impl<E: WaveExecutor> WorkerLane<E> {
 /// Admission loop: route each timed request to its variant's lane.  With
 /// `realtime`, arrival offsets are honoured relative to the loop start (the
 /// open-loop serving benchmark); otherwise requests are admitted as fast as
-/// the channels accept them.  Requests are stamped with their admission
-/// instant, so queue time is measured from here.  Returns the number of
-/// requests admitted (a send to a dead worker is dropped and not counted —
-/// the caller surfaces the worker's own error instead).
+/// the channels accept them.  Routing is load-aware: among SLA-equivalent
+/// variants the router breaks ties by each lane's current in-flight depth,
+/// so bursts spread instead of piling onto one lane.  Requests are stamped
+/// with their admission instant, so queue time is measured from here.
+/// Returns the number of requests admitted (a send to a dead worker is
+/// dropped and not counted — the caller surfaces the worker's own error
+/// instead).
 pub fn admit(
     trace: &[TimedRequest],
     router: &Router,
-    lanes: &HashMap<String, Sender<(Request, Instant)>>,
+    lanes: &HashMap<String, LaneSender>,
     realtime: bool,
 ) -> usize {
     let start = Instant::now();
@@ -143,9 +220,10 @@ pub fn admit(
                 std::thread::sleep(due - now);
             }
         }
-        let variant = router.route(&tr.request);
-        if let Some(tx) = lanes.get(variant) {
-            if tx.send((tr.request.clone(), Instant::now())).is_ok() {
+        let variant =
+            router.route_loaded(&tr.request, |v| lanes.get(v).map_or(0, LaneSender::depth));
+        if let Some(lane) = lanes.get(variant) {
+            if lane.send(tr.request.clone(), Instant::now()) {
                 admitted += 1;
             }
         }

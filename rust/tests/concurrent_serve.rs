@@ -11,8 +11,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use planer::serve::{
-    admit, BatchWave, Request, Response, Router, RouterPolicy, TimedRequest, VariantInfo,
-    WaveBatcher, WorkerLane,
+    admit, BatchWave, LaneSender, Request, Response, Router, RouterPolicy, TimedRequest,
+    VariantInfo, WaveBatcher, WorkerLane,
 };
 use planer::util::rng::Rng;
 
@@ -163,15 +163,18 @@ fn fifo_preserved_across_concurrent_workers() {
 
         let mut senders = HashMap::new();
         let mut handles = Vec::new();
+        let mut gauges = Vec::new();
         for (name, width) in [("base", 3usize), ("mid", 4), ("fast", 2)] {
-            let (tx, rx) = channel();
-            senders.insert(name.to_string(), tx);
+            let (sender, rx, gauge) = LaneSender::channel();
+            senders.insert(name.to_string(), sender);
+            gauges.push(gauge.clone());
             let record = Arc::new(Mutex::new(Vec::new()));
-            let lane = WorkerLane::new(
+            let mut lane = WorkerLane::new(
                 name,
                 WaveBatcher::new(width, Duration::from_millis(1)),
                 recording_executor(name, record),
             );
+            lane.depth = gauge;
             handles.push((name, std::thread::spawn(move || lane.run(rx).unwrap())));
         }
 
@@ -189,6 +192,9 @@ fn fifo_preserved_across_concurrent_workers() {
             total += got.len();
         }
         assert_eq!(total, trace.len(), "seed {case_seed}: requests lost or duplicated");
+        for g in &gauges {
+            assert_eq!(g.get(), 0, "seed {case_seed}: depth gauge must drain to zero");
+        }
     }
 }
 

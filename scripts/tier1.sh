@@ -2,8 +2,8 @@
 # Tier-1 gate: the exact sequence CI runs (.github/workflows/ci.yml), so a
 # green local run means a green CI run.
 #
-#   scripts/tier1.sh            # fmt + clippy + build + test
-#   SKIP_LINT=1 scripts/tier1.sh   # just build + test
+#   scripts/tier1.sh            # fmt + clippy + build + test + bench compile
+#   SKIP_LINT=1 scripts/tier1.sh   # skip fmt/clippy
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -13,3 +13,5 @@ if [[ -z "${SKIP_LINT:-}" ]]; then
 fi
 cargo build --release
 cargo test -q
+# bench harnesses must at least compile, or the A/B numbers silently rot
+cargo bench --no-run
