@@ -1,0 +1,303 @@
+"""Golden-parity fixture for the Rust reference backend (rust/src/runtime/refback.rs).
+
+Two jobs:
+
+1. Validate a NumPy *mirror* of the Rust `gen_forward` algorithm — same flat
+   parameter order (jax tree_flatten / sorted dict keys), same loop
+   structure, same f32 math — against the real JAX model at decode shape
+   (T=1, eval).  This is the algorithm-level proof that the Rust
+   transcription implements the exported `gen_<arch>` / `gen_masked_<arch>`
+   semantics, including TXL memory threading, MoE capacity admission order
+   and the free_mask reset.
+
+2. Export `rust/tests/fixtures/ref_golden.json`: a tiny-config
+   prompt -> logits / greedy-token trace (with a mid-trace masked lane
+   reset) plus the exact flat parameter leaves.  rust/tests/ref_backend.rs
+   replays it through the reference backend and asserts logits parity
+   within tolerance and the greedy token stream exactly.
+
+The fixture is deterministic (PRNGKey(0), fixed prompts), so re-running this
+test rewrites an identical file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.config import ModelConfig
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests",
+                       "fixtures", "ref_golden.json")
+
+# Tiny but fully representative: every block type the serving ABI can see,
+# 2 lanes, short memory.  d_model must be even (sinusoid halves).
+CFG = ModelConfig(vocab=13, d_model=8, n_slots=5, d_inner=16, n_heads_full=2,
+                  seq_len=4, mem_len=4, batch=2, n_experts=2, sffl_inner=24,
+                  capacity_factor=2.0)
+ARCH = [{"type": "mha", "heads": 2}, {"type": "ffl"}, {"type": "moe", "top_k": 2},
+        {"type": "skip"}, {"type": "sffl"}]
+
+
+# ---------------------------------------------------------------- mirror
+# NumPy mirror of the Rust refback::gen_forward.  Consumes the FLAT param
+# list via cursors in jax tree_flatten order, exactly like the Rust code.
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(dtype=np.float32)
+    var = ((x - mu) ** 2).mean(dtype=np.float32)
+    return (x - mu) / np.sqrt(var + eps) * g + b
+
+
+def _softmax(v):
+    e = np.exp(v - v.max())
+    return e / e.sum()
+
+
+def _sinusoid(s, d):
+    out = np.zeros((s, d), dtype=np.float32)
+    half = d // 2
+    for j in range(s):
+        pos = np.float32(s - 1 - j)
+        for i in range(half):
+            inv = np.float32(1.0 / (10000.0 ** ((2.0 * i) / d)))
+            out[j, i] = np.sin(pos * inv)
+            out[j, half + i] = np.cos(pos * inv)
+    return out
+
+
+def _mha(p, h, mem, heads, d):
+    ln_b, ln_g, u, v_bias, wkv, wo, wq, wr = p
+    M = mem.shape[1]
+    S = M + 1
+    dh = d // heads
+    scale = np.float32(1.0 / math.sqrt(dh))
+    rk = _sinusoid(S, d) @ wr
+    out = h.copy()
+    for b in range(h.shape[0]):
+        xn = _ln(h[b], ln_g, ln_b)
+        q = xn @ wq
+        keys = np.zeros((S, 2 * d), dtype=np.float32)
+        for j in range(M):
+            keys[j] = _ln(mem[b, j], ln_g, ln_b) @ wkv
+        keys[S - 1] = xn @ wkv
+        o = np.zeros(d, dtype=np.float32)
+        for hh in range(heads):
+            qu = q[hh * dh:(hh + 1) * dh] + u[hh]
+            qv = q[hh * dh:(hh + 1) * dh] + v_bias[hh]
+            scores = np.array([
+                (qu @ keys[j, hh * dh:(hh + 1) * dh]
+                 + qv @ rk[j, hh * dh:(hh + 1) * dh]) * scale
+                for j in range(S)], dtype=np.float32)
+            pr = _softmax(scores)
+            for j in range(S):
+                o[hh * dh:(hh + 1) * dh] += pr[j] * keys[j, d + hh * dh:d + (hh + 1) * dh]
+        out[b] = h[b] + o @ wo
+    return out
+
+
+def _ffl(p, h):
+    b1, b2, ln_b, ln_g, w1, w2 = p
+    out = h.copy()
+    for b in range(h.shape[0]):
+        xn = _ln(h[b], ln_g, ln_b)
+        out[b] = h[b] + (np.maximum(xn @ w1 + b1, 0.0) @ w2 + b2)
+    return out
+
+
+def _moe(p, h, cfg, top_k):
+    b1, b2, ln_b, ln_g, w1, w2, wg = p
+    B = h.shape[0]
+    E = cfg.n_experts
+    # decode tokens-per-step = batch (seq_len 1), truncating int() as config.py
+    cap = max(4, int(cfg.capacity_factor * top_k * B / E))
+    out = h.copy()
+    counts = [0] * E
+    for n in range(B):
+        xn = _ln(h[n], ln_g, ln_b)
+        pw = _softmax(xn @ wg).astype(np.float32)
+        picks, total = [], np.float32(0.0)
+        for _ in range(top_k):
+            i = int(np.argmax(pw))
+            picks.append((i, pw[i]))
+            total += pw[i]
+            pw[i] -= np.float32(1e9)
+        norm = max(total, np.float32(1e-9))
+        for e, raw in picks:
+            pos = counts[e]
+            counts[e] += 1
+            if pos >= cap:
+                continue
+            hid = np.maximum(xn @ w1[e] + b1[e], 0.0)
+            out[n] = out[n] + (raw / norm) * (hid @ w2[e] + b2[e])
+    return out
+
+
+N_LEAVES = {"skip": 0, "mha": 8, "ffl": 6, "sffl": 6, "moe": 7}
+
+
+def mirror_gen_step(cfg, arch, flat, mems, x, free_mask=None):
+    """Flat params + mems [L,B,M,D] + x [B] -> (logits [B,V], new_mems)."""
+    L, B, M, D = mems.shape
+    mems = mems.astype(np.float32).copy()
+    if free_mask is not None:
+        for b in range(B):
+            mems[:, b] *= np.float32(1.0) - np.float32(free_mask[b])
+    i = 0
+    block_p = []
+    for opt in arch:
+        n = N_LEAVES[opt["type"]]
+        block_p.append(flat[i:i + n])
+        i += n
+    emb, ln_f_b, ln_f_g, out_b = flat[i], flat[i + 1], flat[i + 2], flat[i + 3]
+    assert i + 4 == len(flat), "leaf count mismatch"
+
+    h = np.stack([emb[x[b]] * np.float32(math.sqrt(D)) for b in range(B)])
+    new_mems = np.zeros_like(mems)
+    for l, opt in enumerate(arch):
+        mem = mems[l]
+        new_mems[l, :, :M - 1] = mem[:, 1:]
+        new_mems[l, :, M - 1] = h
+        t = opt["type"]
+        if t == "mha":
+            h = _mha(block_p[l], h, mem, opt["heads"], D)
+        elif t in ("ffl", "sffl"):
+            h = _ffl(block_p[l], h)
+        elif t == "moe":
+            h = _moe(block_p[l], h, cfg, opt["top_k"])
+    logits = np.stack([_ln(h[b], ln_f_g, ln_f_b) @ emb.T + out_b for b in range(B)])
+    return logits.astype(np.float32), new_mems
+
+
+# ---------------------------------------------------------------- helpers
+
+def flat_params(params):
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    return [np.asarray(p, dtype=np.float32) for p in leaves]
+
+
+def leaf_names(params):
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["params" + jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+def jax_gen_step(cfg, arch, params, mems, x, free_mask=None):
+    cfg_gen = dataclasses.replace(cfg, seq_len=1)
+    m = jnp.asarray(mems)
+    if free_mask is not None:
+        m = model.reset_masked_mems(m, jnp.asarray(free_mask))
+    logits, new_mems, _ = model.forward(params, arch, cfg_gen,
+                                        jnp.asarray(np.asarray(x)[:, None]),
+                                        m, jax.random.PRNGKey(0), False)
+    return np.asarray(logits)[:, 0, :], np.asarray(new_mems)
+
+
+# ------------------------------------------------------------------ tests
+
+def test_mirror_matches_jax_with_memory_and_mask():
+    params = model.init_model(jax.random.PRNGKey(1), CFG, ARCH)
+    flat = flat_params(params)
+    L, B, M, D = len(ARCH), CFG.batch, CFG.mem_len, CFG.d_model
+    mems = np.zeros((L, B, M, D), dtype=np.float32)
+    rng = np.random.RandomState(7)
+    for step in range(10):
+        x = rng.randint(0, CFG.vocab, size=(B,))
+        fm = np.array([0.0, 1.0], dtype=np.float32) if step == 5 else None
+        jl, jm = jax_gen_step(CFG, ARCH, params, mems, x, fm)
+        rl, rm = mirror_gen_step(CFG, ARCH, flat, mems, x, fm)
+        np.testing.assert_allclose(rl, jl, atol=5e-6, rtol=1e-5)
+        np.testing.assert_allclose(rm, jm, atol=5e-6, rtol=1e-5)
+        assert np.argmax(rl, -1).tolist() == np.argmax(jl, -1).tolist()
+        mems = jm
+
+
+def test_mirror_matches_jax_under_capacity_drops():
+    # B * top_k = 8 choices > cap = 4: expert overflow must drop identically
+    cfg = dataclasses.replace(CFG, batch=4, capacity_factor=0.5)
+    arch = [{"type": "moe", "top_k": 2}, {"type": "mha", "heads": 1}]
+    params = model.init_model(jax.random.PRNGKey(3), cfg, arch)
+    flat = flat_params(params)
+    mems = np.zeros((2, 4, cfg.mem_len, cfg.d_model), dtype=np.float32)
+    rng = np.random.RandomState(1)
+    for _ in range(6):
+        x = rng.randint(0, cfg.vocab, size=(4,))
+        jl, jm = jax_gen_step(cfg, arch, params, mems, x)
+        rl, rm = mirror_gen_step(cfg, arch, flat, mems, x)
+        np.testing.assert_allclose(rl, jl, atol=5e-6, rtol=1e-5)
+        np.testing.assert_allclose(rm, jm, atol=5e-6, rtol=1e-5)
+        mems = jm
+
+
+def test_export_golden_fixture():
+    """Greedy prompt->decode trace (with one masked lane reset), exported
+    for rust/tests/ref_backend.rs.  Self-checks the mirror at every step."""
+    params = model.init_model(jax.random.PRNGKey(0), CFG, ARCH)
+    flat = flat_params(params)
+    names = leaf_names(params)
+    L, B, M, D = len(ARCH), CFG.batch, CFG.mem_len, CFG.d_model
+
+    prompts = [[3, 1, 4], [5, 9, 2]]        # equal length: lanes stay in phase
+    n_prompt = 3
+    n_steps = 13
+    reset_step = 8                          # lane 1 rejoins with a new prompt token
+    reset_token = 7
+
+    mems = np.zeros((L, B, M, D), dtype=np.float32)
+    steps = []
+    last_greedy = None
+    for step in range(n_steps):
+        if step < n_prompt:
+            x = [prompts[0][step], prompts[1][step]]
+            fm = None
+        elif step == reset_step:
+            x = [int(last_greedy[0]), reset_token]
+            fm = np.array([0.0, 1.0], dtype=np.float32)
+        else:
+            x = [int(last_greedy[0]), int(last_greedy[1])]
+            fm = None
+        jl, jm = jax_gen_step(CFG, ARCH, params, mems, x, fm)
+        rl, rm = mirror_gen_step(CFG, ARCH, flat, mems, x, fm)
+        np.testing.assert_allclose(rl, jl, atol=5e-6, rtol=1e-5,
+                                   err_msg=f"mirror diverged at step {step}")
+        greedy = np.argmax(jl, axis=-1)
+        assert (np.argmax(rl, axis=-1) == greedy).all(), f"greedy split at {step}"
+        steps.append({
+            "x": [int(v) for v in x],
+            "free_mask": [float(v) for v in fm] if fm is not None else None,
+            "logits": [float(v) for v in jl.reshape(-1)],
+            "greedy": [int(v) for v in greedy],
+        })
+        mems = jm
+        last_greedy = greedy
+
+    fixture = {
+        "config": CFG.to_json(),
+        "arch": ARCH,
+        "n_prompt": n_prompt,
+        "prompts": prompts,
+        "params": [
+            {"name": n, "shape": list(p.shape), "data": [float(v) for v in p.reshape(-1)]}
+            for n, p in zip(names, flat)
+        ],
+        "steps": steps,
+    }
+    # the fixture a fresh checkout ships must match what this env generates —
+    # compare BEFORE overwriting, so a jax/numpy upgrade that changes the
+    # trace fails loudly here instead of silently rewriting the golden file
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    if os.path.exists(FIXTURE):
+        with open(FIXTURE) as f:
+            existing = json.load(f)
+        assert existing == fixture, (
+            "checked-in ref_golden.json no longer matches this environment's "
+            "export; if the numerics change is intentional, delete the fixture, "
+            "re-run this test, and re-run rust/tests/ref_backend.rs"
+        )
+    with open(FIXTURE, "w") as f:
+        json.dump(fixture, f, indent=1)

@@ -58,8 +58,14 @@ fn run() -> Result<()> {
     }
 
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let engine = Engine::new(&artifacts)
-        .context("loading artifacts (run `make artifacts` first)")?;
+    let engine = match args.get_or("backend", "pjrt").as_str() {
+        "pjrt" => Engine::new(&artifacts)
+            .context("loading artifacts (run `make artifacts` first, or use --backend ref)")?,
+        // hermetic pure-Rust decode backend: no artifacts, no XLA programs;
+        // serve/serve-trace run end-to-end, train/search/bench need pjrt
+        "ref" => Engine::reference_named(&args.get_or("config", "tiny"))?,
+        other => bail!("unknown --backend '{other}' (pjrt|ref)"),
+    };
     let vocab = engine.manifest.config.vocab;
     let seed = args.get_i32("seed", 0)?;
     let corpus = load_corpus(&args, vocab, seed as u64)?;
@@ -402,7 +408,11 @@ fn serve_demo(
         names.truncate(opts.workers);
     }
     anyhow::ensure!(!names.is_empty(), "no gen programs in manifest");
-    println!("{} decode workers (one per variant): {names:?}", names.len());
+    println!(
+        "{} decode workers (one per variant, backend {}): {names:?}",
+        names.len(),
+        engine.backend_name()
+    );
 
     let mut cluster = Cluster::new(engine, &names, seed)?;
     cluster.set_max_wait(opts.max_wait);
@@ -508,4 +518,8 @@ USAGE: planer <cmd> [flags]
 global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
           --exec resident|roundtrip   (device-resident state, the default,
            vs the legacy full host sync per step — for A/B measurements)
+          --backend pjrt|ref [--config tiny|base]
+           (pjrt = AOT artifacts on the XLA CPU client, the default;
+            ref = the hermetic pure-Rust decode oracle — no artifacts
+            needed, serve/serve-trace only)
 ";

@@ -1,0 +1,165 @@
+//! The backend abstraction: who actually executes a manifest program.
+//!
+//! Everything above this layer — [`super::state::StateStore`],
+//! [`super::step::StepPlan`], the serve stack, the CLI — is written against
+//! the manifest's `TensorSpec`/`Groups` contract and two small traits:
+//!
+//! - [`Backend`]: compiles a [`ProgramSpec`] into an executable body and
+//!   moves host literals into backend-owned "device" memory;
+//! - [`ProgramBody`]: the two execution surfaces of a compiled program
+//!   (host literals in/out, and device buffers in/out).
+//!
+//! Two implementations exist:
+//!
+//! - **PJRT** (`program::PjrtBackend`): loads AOT HLO text from the
+//!   artifact directory and runs it on the XLA CPU client.  This is the
+//!   production path and the only one that exercises XLA itself.
+//! - **Reference** (`refback::RefBackend`): a deterministic pure-Rust
+//!   Transformer-XL forward over a *synthesized* manifest — no artifacts,
+//!   no XLA programs, no Python.  It implements exactly the serving ABI
+//!   (`init_<arch>`, `gen_<arch>`, `gen_masked_<arch>`) and exists so the
+//!   whole prefill→decode→retire pipeline is testable anywhere (CI, a
+//!   laptop without artifacts) and so scheduler experiments can run at
+//!   simulated scale.
+//!
+//! [`DeviceBuf`] is the buffer currency between the store and a backend:
+//! a real `PjRtBuffer` on PJRT, a host-resident [`RefTensor`] on the
+//! reference backend.  The reference variant never touches a device, but
+//! the store's `SyncStats` metering is kept identical on both backends, so
+//! byte counters report what a real accelerator *would* transfer — which is
+//! what makes ref-backend serve metrics meaningful in CI assertions.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::literal::{self, DType, TensorValue};
+use super::manifest::{ProgramSpec, TensorSpec};
+
+/// Result of a buffer-level execution (see `Program::execute_buffers`).
+///
+/// aot.py lowers every program with `return_tuple=True`.  Depending on the
+/// PJRT runtime, the execute call hands back either one buffer per output
+/// (the runtime untupled for us — state can stay on the device) or a single
+/// tuple buffer (older runtimes — the only way to split it is a host
+/// round-trip, which `execute_buffers` performs eagerly so callers always
+/// see per-output values).  The reference backend is always `Resident`:
+/// its "device" is host memory, so nothing ever forces a tuple sync.
+pub enum ExecOutputs {
+    /// One device buffer per manifest output; nothing touched the host.
+    Resident(Vec<DeviceBuf>),
+    /// The runtime returned a single tuple buffer; the host sync has
+    /// already been paid and the tuple decomposed into per-output literals.
+    Roundtrip(Vec<Literal>),
+}
+
+/// A decoded host tensor: the reference backend's "device buffer".
+///
+/// Shape and dtype travel with the data so a `DeviceBuf::Ref` can be
+/// materialised back into a `Literal` without consulting a spec.
+#[derive(Debug, Clone)]
+pub struct RefTensor {
+    pub shape: Vec<usize>,
+    pub value: TensorValue,
+}
+
+impl RefTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> RefTensor {
+        RefTensor { shape, value: TensorValue::F32(data) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.value {
+            TensorValue::F32(_) => DType::F32,
+            TensorValue::I32(_) => DType::I32,
+            TensorValue::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.value.len()
+    }
+
+    pub fn as_f32s(&self) -> Result<&[f32]> {
+        match &self.value {
+            TensorValue::F32(v) => Ok(v),
+            _ => bail!("reference tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32s(&self) -> Result<&[i32]> {
+        match &self.value {
+            TensorValue::I32(v) => Ok(v),
+            _ => bail!("reference tensor is not i32"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let spec = TensorSpec {
+            name: "ref".into(),
+            shape: self.shape.clone(),
+            dtype: self.dtype(),
+        };
+        literal::literal_from_value(&spec, &self.value)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<RefTensor> {
+        let (shape, value) = literal::to_value(lit)?;
+        Ok(RefTensor { shape, value })
+    }
+}
+
+/// Backend-owned memory for one tensor.  `Arc`-shared by the store so
+/// cached sets (e.g. the decode engine's zeroed memories) can be
+/// re-installed per wave without re-uploading.
+pub enum DeviceBuf {
+    /// A real PJRT device buffer.
+    Pjrt(xla::PjRtBuffer),
+    /// The reference backend's host-resident tensor.
+    Ref(RefTensor),
+}
+
+impl DeviceBuf {
+    /// Materialise to a host literal.  Downloads on PJRT (the caller meters
+    /// the bytes); a pure re-encode on the reference backend.
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            DeviceBuf::Pjrt(b) => Ok(b.to_literal_sync()?),
+            DeviceBuf::Ref(t) => t.to_literal(),
+        }
+    }
+
+    /// The reference tensor inside, or an error on a PJRT buffer (the
+    /// reference executor must never be fed foreign buffers).
+    pub fn as_ref_tensor(&self) -> Result<&RefTensor> {
+        match self {
+            DeviceBuf::Ref(t) => Ok(t),
+            DeviceBuf::Pjrt(_) => bail!("expected a reference tensor, got a PJRT buffer"),
+        }
+    }
+}
+
+/// A compiled program's execution surfaces.  `Program` wraps one of these
+/// together with its `ProgramSpec` and owns all arity checking, so bodies
+/// only implement the raw calls.
+pub trait ProgramBody: Send + Sync {
+    /// Host literals in, host literals out (cold paths: probes, profiling).
+    fn execute_refs(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+
+    /// Device buffers in; outputs stay device-resident when the runtime
+    /// allows it (see [`ExecOutputs`]).
+    fn execute_buffers(&self, inputs: &[&DeviceBuf]) -> Result<ExecOutputs>;
+}
+
+/// A program execution backend (see module docs).
+pub trait Backend: Send + Sync {
+    /// Short name for reports/CLI ("pjrt" / "ref").
+    fn name(&self) -> &'static str;
+
+    /// Compile `spec` into an executable body.  PJRT reads and compiles
+    /// the spec's HLO file; the reference backend checks the program name
+    /// against the serving ABI it implements.
+    fn compile(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramBody>>;
+
+    /// Move a host literal into backend memory.
+    fn upload(&self, lit: &Literal) -> Result<DeviceBuf>;
+}

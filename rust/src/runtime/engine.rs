@@ -1,5 +1,11 @@
-//! The PJRT engine: one client + a compile-once program cache.
+//! The engine: one backend + a compile-once program cache.
+//!
+//! `Engine::new` is the production constructor (PJRT over an artifact
+//! directory); `Engine::reference` builds the hermetic pure-Rust backend
+//! over a synthesized manifest — same surface, zero artifacts (see
+//! `super::refback`).
 
+use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -7,42 +13,77 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::manifest::Manifest;
-use super::program::Program;
+use super::backend::Backend;
+use super::manifest::{Block, Manifest, ModelConfig};
+use super::program::{PjrtBackend, Program};
+use super::refback::{self, RefBackend};
 
-/// Owns the PJRT client, the artifact manifest, and the cache of compiled
-/// executables.  Cloneable and thread-safe: the serving engine shares one
-/// Engine across worker threads.
+/// Default XLA flags for the CPU pipeline.  One flag per space-separated
+/// token — XLA parses the env var by splitting on single spaces, so a
+/// multi-space run would produce empty-string "flags" it rejects (see the
+/// `default_xla_flags_*` test below, which pins the tokenisation).
+const DEFAULT_XLA_FLAGS: &str =
+    "--xla_backend_optimization_level=0 --xla_llvm_disable_expensive_passes=true";
+
+/// Owns the execution backend, the manifest, and the cache of compiled
+/// executables.  Cloneable-by-reference and thread-safe: the serving engine
+/// shares one Engine across worker threads.
 pub struct Engine {
     /// Shared with every compiled `Program` so state uploads (host literal →
     /// device buffer) don't need an engine handle on the hot path.
-    client: Arc<xla::PjRtClient>,
+    backend: Arc<dyn Backend>,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Program>>>,
-    /// Cumulative XLA compile seconds (reported by `planer profile`).
+    /// Cumulative backend compile seconds (reported by `planer profile`).
     compile_secs: Mutex<f64>,
 }
 
 impl Engine {
+    /// Production constructor: PJRT over an AOT artifact directory.
     pub fn new(artifact_dir: &Path) -> Result<Engine> {
         // The stock XLA-CPU pipeline spends minutes on the large fused
         // search-network programs; the expensive LLVM passes buy <10% step
         // time here (measured in EXPERIMENTS.md §Perf).  Respect any
         // user-provided XLA_FLAGS.
         if std::env::var_os("XLA_FLAGS").is_none() {
-            std::env::set_var(
-                "XLA_FLAGS",
-                "--xla_backend_optimization_level=0                  --xla_llvm_disable_expensive_passes=true",
-            );
+            std::env::set_var("XLA_FLAGS", DEFAULT_XLA_FLAGS);
         }
         let manifest = Manifest::load(artifact_dir)?;
-        let client = Arc::new(xla::PjRtClient::cpu()?);
-        Ok(Engine {
-            client,
+        let backend = Arc::new(PjrtBackend::new()?);
+        Ok(Engine::over(backend, manifest))
+    }
+
+    /// Hermetic constructor: the pure-Rust reference backend over a
+    /// synthesized manifest for `archs`.  Needs no artifact directory, no
+    /// XLA programs and no Python — serving, tests and benches run the
+    /// identical pipeline over it (see `refback` module docs for what it
+    /// does and does not guarantee).
+    pub fn reference(cfg: ModelConfig, archs: BTreeMap<String, Vec<Block>>) -> Result<Engine> {
+        let manifest = refback::reference_manifest(&cfg, &archs)?;
+        let backend = Arc::new(RefBackend::new(cfg, archs));
+        Ok(Engine::over(backend, manifest))
+    }
+
+    /// `reference` over the named built-in config ("tiny"/"base") and the
+    /// default reference arch presets — what `planer --backend ref` runs.
+    pub fn reference_named(config: &str) -> Result<Engine> {
+        let cfg = ModelConfig::named(config)?;
+        let archs = refback::preset_archs(&cfg);
+        Engine::reference(cfg, archs)
+    }
+
+    fn over(backend: Arc<dyn Backend>, manifest: Manifest) -> Engine {
+        Engine {
+            backend,
             manifest,
             cache: Mutex::new(HashMap::new()),
             compile_secs: Mutex::new(0.0),
-        })
+        }
+    }
+
+    /// Which backend this engine executes on ("pjrt" / "ref").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Fetch (compiling on first use) the named program.
@@ -52,7 +93,7 @@ impl Engine {
         }
         let spec = self.manifest.program(name)?.clone();
         let t = Instant::now();
-        let prog = Arc::new(Program::compile(&self.client, spec)?);
+        let prog = Arc::new(Program::compile(Arc::clone(&self.backend), spec)?);
         *self.compile_secs.lock().unwrap() += t.elapsed().as_secs_f64();
         self.cache
             .lock()
@@ -75,5 +116,26 @@ impl Engine {
             self.program(n)?;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_xla_flags_tokenise_into_exactly_the_intended_flags() {
+        // Regression: the literal used to contain a multi-space run between
+        // the two flags, which XLA's space-split parser turns into empty
+        // "flags".  Split on *single* spaces so any such run fails here.
+        let toks: Vec<&str> = DEFAULT_XLA_FLAGS.split(' ').collect();
+        assert_eq!(
+            toks,
+            vec![
+                "--xla_backend_optimization_level=0",
+                "--xla_llvm_disable_expensive_passes=true",
+            ]
+        );
+        assert!(toks.iter().all(|t| t.starts_with("--xla_")), "stray token in XLA_FLAGS");
     }
 }

@@ -139,6 +139,26 @@ pub fn first_f32(lit: &Literal) -> Result<f32> {
     v.first().copied().context("empty literal")
 }
 
+/// Decode any supported literal into (shape, host value) — the reference
+/// backend's upload path, and the inverse of [`literal_from_value`].
+pub fn to_value(lit: &Literal) -> Result<(Vec<usize>, TensorValue)> {
+    use xla::ElementType as E;
+    let shape = lit
+        .array_shape()
+        .context("decoding a non-array literal")?
+        .dims()
+        .iter()
+        .map(|&d| d as usize)
+        .collect();
+    let value = match lit.ty().context("literal dtype")? {
+        E::F32 => TensorValue::F32(lit.to_vec::<f32>()?),
+        E::S32 => TensorValue::I32(lit.to_vec::<i32>()?),
+        E::U32 => TensorValue::U32(lit.to_vec::<u32>()?),
+        other => bail!("unsupported literal dtype {other:?}"),
+    };
+    Ok((shape, value))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,5 +193,21 @@ mod tests {
     fn dtype_mismatch_rejected() {
         let s = spec(&[1], DType::I32);
         assert!(literal_from_value(&s, &TensorValue::F32(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn to_value_roundtrips_shape_and_dtype() {
+        let s = spec(&[2, 3], DType::F32);
+        let lit =
+            literal_from_value(&s, &TensorValue::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])).unwrap();
+        let (shape, value) = to_value(&lit).unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert!(matches!(value, TensorValue::F32(ref v) if v.len() == 6));
+
+        let s = spec(&[4], DType::I32);
+        let lit = literal_from_value(&s, &TensorValue::I32(vec![7, -1, 0, 3])).unwrap();
+        let (shape, value) = to_value(&lit).unwrap();
+        assert_eq!(shape, vec![4]);
+        assert!(matches!(value, TensorValue::I32(ref v) if v == &vec![7, -1, 0, 3]));
     }
 }

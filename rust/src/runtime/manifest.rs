@@ -157,6 +157,58 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// The `tiny` preset from python/compile/config.py — the shape every
+    /// artifact-free path (reference backend, hermetic tests) defaults to.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            vocab: 97,
+            d_model: 32,
+            n_slots: 6,
+            d_inner: 64,
+            n_heads_full: 4,
+            seq_len: 16,
+            mem_len: 16,
+            batch: 4,
+            n_experts: 4,
+            sffl_inner: 256,
+            capacity_factor: 2.0,
+            train_steps: 600,
+            warmup_steps: 20,
+            balance_coef: 0.01,
+            metric: "bpc".to_string(),
+        }
+    }
+
+    /// The `base` preset from python/compile/config.py (repro scale).
+    pub fn base() -> ModelConfig {
+        ModelConfig {
+            vocab: 256,
+            d_model: 128,
+            n_slots: 12,
+            d_inner: 512,
+            n_heads_full: 8,
+            seq_len: 64,
+            mem_len: 64,
+            batch: 16,
+            n_experts: 4,
+            sffl_inner: 2048,
+            capacity_factor: 1.5,
+            train_steps: 2000,
+            warmup_steps: 200,
+            balance_coef: 0.01,
+            metric: "bpc".to_string(),
+        }
+    }
+
+    /// Look up a built-in preset by name ("tiny" | "base").
+    pub fn named(name: &str) -> Result<ModelConfig> {
+        match name {
+            "tiny" => Ok(ModelConfig::tiny()),
+            "base" => Ok(ModelConfig::base()),
+            other => bail!("unknown config '{other}' (tiny|base)"),
+        }
+    }
+
     fn from_json(j: &Json) -> Result<Self> {
         let u = |k: &str| -> Result<usize> { Ok(j.req(k)?.as_usize().context(k.to_string())?) };
         let f = |k: &str| -> Result<f64> { Ok(j.req(k)?.as_f64().context(k.to_string())?) };

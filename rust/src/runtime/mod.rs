@@ -1,6 +1,27 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them on the CPU PJRT client.  Entirely manifest-driven — the
-//! Rust side never hard-codes a tensor layout.
+//! Runtime: loads AOT artifacts produced by `python/compile/aot.py` and
+//! executes them through a pluggable [`Backend`].  Entirely manifest-driven
+//! — the Rust side never hard-codes a tensor layout.
+//!
+//! # Backend selection
+//!
+//! Two backends implement the same `Engine`/`Program` surface
+//! (`planer --backend pjrt|ref` picks one at the CLI):
+//!
+//! - **PJRT** ([`Engine::new`]): compiles the artifact directory's HLO text
+//!   on the XLA CPU client.  This is production; it is the only path that
+//!   exercises XLA compilation, PJRT buffer semantics (tuple untying,
+//!   device residency) and real device latency, and the only one with
+//!   train/eval/search programs.
+//! - **Reference** ([`Engine::reference`], `refback`): a deterministic
+//!   pure-Rust Transformer-XL decode oracle over a *synthesized* manifest —
+//!   `init_<arch>`, `gen_<arch>` and `gen_masked_<arch>` only, weights from
+//!   a seeded `util::rng` (or installed from a checkpoint/fixture).  It
+//!   guarantees the manifest/StepPlan/StateStore contract and the full
+//!   serve pipeline with **zero artifacts**, and its numerics are pinned
+//!   against the JAX model by the golden-parity fixture
+//!   (rust/tests/ref_backend.rs).  Everything below this module is
+//!   backend-agnostic: the store's buffer currency is [`DeviceBuf`], which
+//!   is a PJRT buffer or a host-resident reference tensor.
 //!
 //! # Device-residency model
 //!
@@ -21,7 +42,7 @@
 //!   batch `x` (`width × 4` bytes); params/opt-state/mems are already
 //!   resident and cost nothing;
 //! - **downloads** of the plan's *fetch* groups (losses, logits), via
-//!   `to_literal_sync` on just those buffers.  Fetching logits costs
+//!   `to_literal` on just those buffers.  Fetching logits costs
 //!   `width × vocab × 4` bytes; everything not fetched stays put.
 //!
 //! Reading any other group (checkpointing, alpha extraction) goes through
@@ -29,38 +50,45 @@
 //! pay the download once, when you actually look.  Every byte in either
 //! direction is metered in [`SyncStats`]; `ExecMode::Roundtrip` forces the
 //! legacy upload-everything/sync-everything behaviour so the benches can
-//! A/B the two (`cargo bench --bench block_latency`).
+//! A/B the two (`cargo bench --bench block_latency`).  The reference
+//! backend keeps the metering identical (it reports what a real device
+//! *would* move), so byte-level assertions hold hermetically in CI.
 //!
 //! # Key facts (verified against xla_extension 0.5.1)
 //!
 //! - interchange is HLO *text*; `HloModuleProto::from_text_file` reassigns
 //!   instruction ids, sidestepping the 64-bit-id proto incompatibility.
 //! - aot.py lowers with `return_tuple=True`.  Runtimes that untie the
-//!   result tuple hand back one `PjRtBuffer` per output and the resident
+//!   result tuple hand back one buffer per output and the resident
 //!   path engages; runtimes that return a single tuple buffer force a
 //!   `to_literal_sync().decompose_tuple()` host round-trip per step, which
-//!   `Program::execute_buffers` detects and reports as
+//!   the PJRT program body detects and reports as
 //!   `ExecOutputs::Roundtrip` (metered, and visible as `resident_frac == 0`
-//!   in [`SyncStats`]).
+//!   in [`SyncStats`]).  The reference backend is always `Resident`.
 //! - the serving cluster moves `StateStore`s into per-variant worker
 //!   threads, which requires `xla::PjRtBuffer: Send + Sync` (device groups
-//!   are `Arc`-shared) — the analogue of the `xla::Literal: Send` contract
-//!   the pre-resident code already relied on.  Each store is owned by
-//!   exactly one worker at a time, so the handles are never *used* from
-//!   two threads concurrently; if the binding doesn't declare the marker
-//!   traits, the first build fails here, loudly, not subtly.
+//!   are `Arc`-shared [`DeviceBuf`]s) — the analogue of the
+//!   `xla::Literal: Send` contract the pre-resident code already relied on.
+//!   Each store is owned by exactly one worker at a time, so the handles
+//!   are never *used* from two threads concurrently; if the binding doesn't
+//!   declare the marker traits, the first build fails here, loudly, not
+//!   subtly.
 
+pub mod backend;
 pub mod checkpoint;
 pub mod engine;
 pub mod literal;
 pub mod manifest;
 pub mod program;
+pub mod refback;
 pub mod state;
 pub mod step;
 
+pub use backend::{Backend, DeviceBuf, ExecOutputs, ProgramBody, RefTensor};
 pub use engine::Engine;
 pub use literal::{DType, TensorValue};
-pub use manifest::{Manifest, ProgramSpec, TensorSpec};
-pub use program::{ExecOutputs, Program};
+pub use manifest::{Manifest, ModelConfig, ProgramSpec, TensorSpec};
+pub use program::{PjrtBackend, Program};
+pub use refback::RefBackend;
 pub use state::{ExecMode, StateStore, SyncStats};
 pub use step::{PlanGroup, StepPlan};

@@ -1,4 +1,4 @@
-//! A compiled program: PJRT executable + its manifest spec.
+//! A compiled program: a backend execution body + its manifest spec.
 //!
 //! Two execution surfaces:
 //! - `execute` / `execute_refs`: host literals in, host literals out.  Every
@@ -9,53 +9,41 @@
 //!   runtime unties the result tuple.  This is the hot-loop surface used by
 //!   `StateStore::run_plan` — state stays resident on the device between
 //!   steps and only explicitly fetched groups are materialised to host.
+//!
+//! The PJRT implementation ([`PjrtBackend`] / `PjrtProgram`) lives here;
+//! the pure-Rust reference implementation lives in `super::refback`.  All
+//! arity checking is done once in [`Program`], so backend bodies only
+//! implement the raw calls.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
+use super::backend::{Backend, DeviceBuf, ExecOutputs, ProgramBody};
 use super::manifest::ProgramSpec;
-
-/// Result of a buffer-level execution.
-///
-/// aot.py lowers every program with `return_tuple=True`.  Depending on the
-/// PJRT runtime, the execute call hands back either one buffer per output
-/// (the runtime untupled for us — state can stay on the device) or a single
-/// tuple buffer (older runtimes — the only way to split it is a host
-/// round-trip, which `execute_buffers` performs eagerly so callers always
-/// see per-output values).
-pub enum ExecOutputs {
-    /// One device buffer per manifest output; nothing touched the host.
-    Resident(Vec<xla::PjRtBuffer>),
-    /// The runtime returned a single tuple buffer; the host sync has
-    /// already been paid and the tuple decomposed into per-output literals.
-    Roundtrip(Vec<Literal>),
-}
 
 pub struct Program {
     pub spec: ProgramSpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// Shared with the owning `Engine`; needed to upload host literals when
-    /// a state group is first promoted to the device.
-    client: Arc<xla::PjRtClient>,
+    body: Box<dyn ProgramBody>,
+    /// The backend this program was compiled by; needed to upload host
+    /// literals when a state group is first promoted to the device.
+    backend: Arc<dyn Backend>,
 }
 
 impl Program {
-    pub fn compile(client: &Arc<xla::PjRtClient>, spec: ProgramSpec) -> Result<Program> {
-        let proto = xla::HloModuleProto::from_text_file(&spec.hlo_file)
-            .with_context(|| format!("loading {}", spec.hlo_file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", spec.name))?;
-        Ok(Program { spec, exe, client: Arc::clone(client) })
+    /// Compile `spec` on `backend` (PJRT: parse + XLA-compile the HLO file;
+    /// reference: resolve the arch the program name refers to).
+    pub fn compile(backend: Arc<dyn Backend>, spec: ProgramSpec) -> Result<Program> {
+        let body = backend.compile(&spec)?;
+        Ok(Program { spec, body, backend })
     }
 
-    /// Upload a host literal to the device this program executes on.
-    pub fn upload(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, lit)
+    /// Upload a host literal to the memory of the backend this program
+    /// executes on.
+    pub fn upload(&self, lit: &Literal) -> Result<DeviceBuf> {
+        self.backend
+            .upload(lit)
             .with_context(|| format!("uploading input for {}", self.spec.name))
     }
 
@@ -71,55 +59,21 @@ impl Program {
     /// Borrowing variant of `execute` (no input clones).
     pub fn execute_refs(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
         self.check_arity(inputs.len())?;
-        let bufs = self.exe.execute::<&Literal>(inputs)?;
-        let mut tuple = bufs[0][0]
-            .to_literal_sync()
-            .context("fetching result tuple")?;
-        let outs = tuple.decompose_tuple().context("decomposing result")?;
+        let outs = self.body.execute_refs(inputs)?;
         self.check_out_arity(outs.len())?;
         Ok(outs)
     }
 
     /// Execute with device-resident inputs; outputs stay on the device when
     /// the runtime unties the result tuple (see [`ExecOutputs`]).
-    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<ExecOutputs> {
+    pub fn execute_buffers(&self, inputs: &[&DeviceBuf]) -> Result<ExecOutputs> {
         self.check_arity(inputs.len())?;
-        let mut replicas = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
-        if replicas.is_empty() {
-            bail!("program {}: runtime returned no replicas", self.spec.name);
+        let outs = self.body.execute_buffers(inputs)?;
+        match &outs {
+            ExecOutputs::Resident(bufs) => self.check_out_arity(bufs.len())?,
+            ExecOutputs::Roundtrip(lits) => self.check_out_arity(lits.len())?,
         }
-        let outs = replicas.swap_remove(0);
-        let n = self.spec.outputs.len();
-        // n == 1 is ambiguous (a 1-tuple from return_tuple=True vs the raw
-        // output of an untupling runtime): ask the device shape, and treat a
-        // failed shape query conservatively as "maybe a tuple" — the host
-        // path below handles both layouts, while misclassifying a tuple as
-        // Resident would feed it back as an array input next step.
-        if outs.len() == n && !(n == 1 && may_be_tuple(&outs[0])) {
-            // The runtime already untupled: one buffer per declared output.
-            return Ok(ExecOutputs::Resident(outs));
-        }
-        if outs.len() == 1 {
-            // Single tuple buffer: the legacy layout.  Decompose via host.
-            let mut tuple = outs[0]
-                .to_literal_sync()
-                .context("fetching result tuple")?;
-            let lits = match tuple.decompose_tuple() {
-                Ok(lits) => lits,
-                // not a tuple after all (single-output, shape query had
-                // failed above): the literal IS the one output
-                Err(_) if n == 1 => vec![tuple],
-                Err(e) => return Err(e).context("decomposing result"),
-            };
-            self.check_out_arity(lits.len())?;
-            return Ok(ExecOutputs::Roundtrip(lits));
-        }
-        bail!(
-            "program {}: manifest declares {} outputs, runtime produced {} buffers",
-            self.spec.name,
-            n,
-            outs.len()
-        )
+        Ok(outs)
     }
 
     fn check_arity(&self, got: usize) -> Result<()> {
@@ -144,6 +98,109 @@ impl Program {
             );
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- PJRT
+
+/// The production backend: one PJRT CPU client, programs compiled from the
+/// artifact directory's HLO text.
+pub struct PjrtBackend {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { client: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramBody>> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.hlo_file)
+            .with_context(|| format!("loading {}", spec.hlo_file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Box::new(PjrtProgram {
+            name: spec.name.clone(),
+            n_outputs: spec.outputs.len(),
+            exe,
+        }))
+    }
+
+    fn upload(&self, lit: &Literal) -> Result<DeviceBuf> {
+        Ok(DeviceBuf::Pjrt(self.client.buffer_from_host_literal(None, lit)?))
+    }
+}
+
+struct PjrtProgram {
+    name: String,
+    /// Declared output count (tuple-vs-untupled disambiguation).
+    n_outputs: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ProgramBody for PjrtProgram {
+    fn execute_refs(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let bufs = self.exe.execute::<&Literal>(inputs)?;
+        let mut tuple = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        Ok(tuple.decompose_tuple().context("decomposing result")?)
+    }
+
+    fn execute_buffers(&self, inputs: &[&DeviceBuf]) -> Result<ExecOutputs> {
+        let raw: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|b| match b {
+                DeviceBuf::Pjrt(p) => Ok(p),
+                DeviceBuf::Ref(_) => {
+                    bail!("program {}: reference tensor fed to the PJRT backend", self.name)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let mut replicas = self.exe.execute_b::<&xla::PjRtBuffer>(&raw)?;
+        if replicas.is_empty() {
+            bail!("program {}: runtime returned no replicas", self.name);
+        }
+        let outs = replicas.swap_remove(0);
+        let n = self.n_outputs;
+        // n == 1 is ambiguous (a 1-tuple from return_tuple=True vs the raw
+        // output of an untupling runtime): ask the device shape, and treat a
+        // failed shape query conservatively as "maybe a tuple" — the host
+        // path below handles both layouts, while misclassifying a tuple as
+        // Resident would feed it back as an array input next step.
+        if outs.len() == n && !(n == 1 && may_be_tuple(&outs[0])) {
+            // The runtime already untupled: one buffer per declared output.
+            return Ok(ExecOutputs::Resident(outs.into_iter().map(DeviceBuf::Pjrt).collect()));
+        }
+        if outs.len() == 1 {
+            // Single tuple buffer: the legacy layout.  Decompose via host.
+            let mut tuple = outs[0]
+                .to_literal_sync()
+                .context("fetching result tuple")?;
+            let lits = match tuple.decompose_tuple() {
+                Ok(lits) => lits,
+                // not a tuple after all (single-output, shape query had
+                // failed above): the literal IS the one output
+                Err(_) if n == 1 => vec![tuple],
+                Err(e) => return Err(e).context("decomposing result"),
+            };
+            return Ok(ExecOutputs::Roundtrip(lits));
+        }
+        bail!(
+            "program {}: manifest declares {} outputs, runtime produced {} buffers",
+            self.name,
+            n,
+            outs.len()
+        )
     }
 }
 

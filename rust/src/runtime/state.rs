@@ -5,7 +5,8 @@
 //! (params, m, v, alphas, mems, x, y, seed, ...).  The store holds the
 //! current value of each group in one of two homes:
 //!
-//! - **device**: `PjRtBuffer`s produced by the previous step.  This is the
+//! - **device**: [`DeviceBuf`]s produced by the previous step (real PJRT
+//!   buffers, or host-resident tensors on the reference backend).  This is the
 //!   steady state of every hot loop — params, optimizer state and TXL
 //!   memories never cross the PCIe/host boundary between steps.
 //! - **host**: `Literal`s installed by `set_group`/`zero_group`/checkpoint
@@ -26,8 +27,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
+use super::backend::{DeviceBuf, ExecOutputs};
 use super::literal;
-use super::program::{ExecOutputs, Program};
+use super::program::Program;
 use super::step::StepPlan;
 
 /// How `run_plan` executes.
@@ -86,7 +88,7 @@ impl SyncStats {
 #[derive(Default)]
 struct Group {
     host: Option<Vec<Literal>>,
-    device: Option<Vec<Arc<xla::PjRtBuffer>>>,
+    device: Option<Vec<Arc<DeviceBuf>>>,
 }
 
 #[derive(Default)]
@@ -130,7 +132,7 @@ impl StateStore {
     /// Install a group that is already on the device (no transfer, no
     /// metering).  Shared buffers let callers re-install a cached set —
     /// e.g. zeroed decode memories — for free on every wave.
-    pub fn set_device_group(&mut self, name: &str, bufs: Vec<Arc<xla::PjRtBuffer>>) {
+    pub fn set_device_group(&mut self, name: &str, bufs: Vec<Arc<DeviceBuf>>) {
         self.groups
             .insert(name.to_string(), Group { host: None, device: Some(bufs) });
     }
@@ -149,7 +151,7 @@ impl StateStore {
             let mut bytes = 0u64;
             for b in bufs {
                 let lit = b
-                    .to_literal_sync()
+                    .to_literal()
                     .with_context(|| format!("downloading group '{name}'"))?;
                 bytes += 4 * lit.element_count() as u64;
                 lits.push(lit);
@@ -240,7 +242,7 @@ impl StateStore {
             }
         }
         // pass 2 (shared): assemble the flat argument list
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(plan.n_inputs());
+        let mut inputs: Vec<&DeviceBuf> = Vec::with_capacity(plan.n_inputs());
         for g in plan.input_order() {
             inputs.extend(
                 self.groups[&g.name]
@@ -257,7 +259,7 @@ impl StateStore {
                 self.stats.resident_steps += 1;
                 // fetch first (device→host, metered), then write groups back
                 let mut bufs_iter = bufs.into_iter();
-                let mut per_group: Vec<Vec<Arc<xla::PjRtBuffer>>> = Vec::new();
+                let mut per_group: Vec<Vec<Arc<DeviceBuf>>> = Vec::new();
                 for g in plan.output_order() {
                     per_group.push((&mut bufs_iter).take(g.arity).map(Arc::new).collect());
                 }
@@ -267,7 +269,7 @@ impl StateStore {
                     let mut vals = Vec::new();
                     for b in &per_group[i] {
                         let lit = b
-                            .to_literal_sync()
+                            .to_literal()
                             .with_context(|| format!("fetching group '{}'", g.name))?;
                         vals.extend(literal::to_f32s(&lit)?);
                     }

@@ -18,7 +18,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{literal, Engine, ExecMode, Program, StateStore, StepPlan, TensorSpec};
+use crate::runtime::{
+    literal, DeviceBuf, Engine, ExecMode, Program, StateStore, StepPlan, TensorSpec,
+};
 use crate::util::rng::Rng;
 
 use super::batcher::{wave_shape, BatchWave};
@@ -39,7 +41,7 @@ struct MaskedGen {
     prog: RefCell<Option<Arc<Program>>>,
     /// All-zero mask, uploaded once: most steps admit nothing, and the
     /// common case must not pay a per-token literal build + upload.
-    zero_mask: RefCell<Option<Arc<xla::PjRtBuffer>>>,
+    zero_mask: RefCell<Option<Arc<DeviceBuf>>>,
 }
 
 /// Cap on retained latency samples (see [`LatencyReservoir`]).
@@ -223,7 +225,7 @@ pub struct DecodeEngine<'a> {
     /// Zeroed TXL memories, uploaded once and re-installed per wave (waves
     /// are independent sequences) — without this cache every wave would
     /// re-upload the full memory set.
-    zero_mems: RefCell<Option<Vec<Arc<xla::PjRtBuffer>>>>,
+    zero_mems: RefCell<Option<Vec<Arc<DeviceBuf>>>>,
 }
 
 impl<'a> DecodeEngine<'a> {

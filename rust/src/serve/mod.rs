@@ -38,8 +38,26 @@
 //! and `cargo bench --bench coordinator` A/Bs the two policies on a
 //! simulated mixed-length trace.
 //!
+//! # Backend selection
+//!
+//! The whole stack is backend-agnostic: it drives `Engine`/`Program`/
+//! `StateStore`, whose buffer currency (`runtime::DeviceBuf`) is either a
+//! real PJRT device buffer or the pure-Rust reference backend's host
+//! tensor.  `planer serve --backend pjrt` (default) serves the AOT
+//! artifacts through XLA; `--backend ref` serves the hermetic reference
+//! oracle (`runtime::refback`) — same router, same workers, same policies,
+//! same masked resets, same metrics, zero artifacts.  What the reference
+//! backend guarantees: JAX-parity decode numerics (golden-pinned),
+//! deterministic token streams, and byte metering identical to the
+//! resident PJRT path (it reports what a real device would move) — so
+//! `rust/tests/ref_serve.rs` asserts exact per-request streams and
+//! occupancy bounds in CI.  What only PJRT exercises: XLA compilation,
+//! tuple-untying/device-residency behaviour, and real step latency — so
+//! latency-sensitive A/B *numbers* still come from artifact runs; the ref
+//! backend validates scheduling and correctness, not wall-clock.
+//!
 //! Python is never on this path — everything below executes pre-compiled
-//! HLO through PJRT.
+//! HLO through PJRT (or the in-process reference forward).
 
 pub mod batcher;
 pub mod cluster;

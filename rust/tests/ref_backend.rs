@@ -1,0 +1,294 @@
+//! Reference-backend correctness: golden parity against the JAX model, and
+//! masked-decode properties over random tiny archs.  Fully hermetic — no
+//! artifacts, no Python at test time.
+//!
+//! The fixture (tests/fixtures/ref_golden.json) is exported by
+//! python/tests/test_ref_golden.py: a tiny-config greedy prompt→decode
+//! trace (with one mid-trace masked lane reset) plus the exact flat
+//! parameter leaves of the JAX model.  Here we install those weights into a
+//! `StateStore` and drive the serve-path `DecodeEngine` over the reference
+//! backend, asserting:
+//!
+//! - the synthesized manifest's parameter layout matches jax tree_flatten
+//!   leaf-for-leaf (names and shapes — the cross-language ABI);
+//! - per-step logits agree with JAX within tolerance;
+//! - the greedy token stream is reproduced *exactly*, self-driven (each
+//!   step feeds our own argmax, not the fixture's).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use planer::runtime::manifest::Block;
+use planer::runtime::{literal, DType, Engine, ModelConfig, StateStore, TensorSpec, TensorValue};
+use planer::serve::DecodeEngine;
+use planer::util::json::Json;
+use planer::util::rng::Rng;
+
+fn fixture() -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_golden.json");
+    let text = std::fs::read_to_string(&path).expect("golden fixture missing");
+    Json::parse(&text).expect("golden fixture unparseable")
+}
+
+fn config_from(j: &Json) -> ModelConfig {
+    let u = |k: &str| j.req(k).unwrap().as_usize().unwrap();
+    let mut c = ModelConfig::tiny();
+    c.vocab = u("vocab");
+    c.d_model = u("d_model");
+    c.n_slots = u("n_slots");
+    c.d_inner = u("d_inner");
+    c.n_heads_full = u("n_heads_full");
+    c.seq_len = u("seq_len");
+    c.mem_len = u("mem_len");
+    c.batch = u("batch");
+    c.n_experts = u("n_experts");
+    c.sffl_inner = u("sffl_inner");
+    c.capacity_factor = j.req("capacity_factor").unwrap().as_f64().unwrap();
+    c
+}
+
+fn f32s(j: &Json) -> Vec<f32> {
+    j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect()
+}
+
+fn i32s(j: &Json) -> Vec<i32> {
+    j.as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect()
+}
+
+#[test]
+fn golden_parity_with_jax_model() {
+    let fx = fixture();
+    let cfg = config_from(fx.req("config").unwrap());
+    let blocks: Vec<Block> = fx
+        .req("arch")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|b| Block::from_json(b).unwrap())
+        .collect();
+    let mut archs = BTreeMap::new();
+    archs.insert("golden".to_string(), blocks);
+    let engine = Engine::reference(cfg.clone(), archs).unwrap();
+
+    // --- the parameter ABI: synthesized layout == jax tree_flatten layout
+    let gen = engine.program("gen_golden").unwrap();
+    let (pa, pb) = gen.spec.in_group("params").unwrap();
+    let leaves = fx.req("params").unwrap().as_arr().unwrap();
+    assert_eq!(pb - pa, leaves.len(), "param leaf count differs from jax");
+    let mut params = Vec::new();
+    for (spec, leaf) in gen.spec.inputs[pa..pb].iter().zip(leaves) {
+        let name = leaf.req("name").unwrap().as_str().unwrap();
+        let shape: Vec<usize> = leaf
+            .req("shape")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(spec.name, name, "leaf name order diverges from jax tree_flatten");
+        assert_eq!(spec.shape, shape, "leaf {} shape differs", name);
+        let data = f32s(leaf.req("data").unwrap());
+        params.push(literal::literal_from_f32s(spec, &data).unwrap());
+    }
+
+    // --- install fixture weights, drive the serve-path decode engine
+    let de = DecodeEngine::new(&engine, "golden").unwrap();
+    assert!(de.has_masked(), "reference manifest must export gen_masked");
+    let mut st = StateStore::new();
+    st.set_group("params", params);
+    st.zero_group(de.gen_program(), "mems").unwrap();
+
+    let n_prompt = fx.req("n_prompt").unwrap().as_usize().unwrap();
+    let steps = fx.req("steps").unwrap().as_arr().unwrap();
+    let width = de.width;
+    let mut own_next: Vec<i32> = vec![0; width];
+    let mut max_diff = 0.0f32;
+    for (si, step) in steps.iter().enumerate() {
+        let fx_x = i32s(step.req("x").unwrap());
+        let mask = step.req("free_mask").unwrap();
+        // self-driven feed: prompts from the fixture, decode tokens from OUR
+        // argmax of the previous step; a reset lane takes its fresh prompt
+        // token from the fixture (it starts a new session there)
+        let x: Vec<i32> = if si < n_prompt {
+            fx_x.clone()
+        } else {
+            let reset_lanes: Vec<bool> = match mask.as_arr() {
+                Some(a) => a.iter().map(|v| v.as_f64().unwrap() != 0.0).collect(),
+                None => vec![false; width],
+            };
+            (0..width)
+                .map(|b| if reset_lanes[b] { fx_x[b] } else { own_next[b] })
+                .collect()
+        };
+        assert_eq!(x, fx_x, "step {si}: self-driven token stream diverged");
+
+        let logits = match mask.as_arr() {
+            Some(a) => {
+                let reset: Vec<bool> = a.iter().map(|v| v.as_f64().unwrap() != 0.0).collect();
+                de.decode_step_masked(&mut st, &x, &reset).unwrap()
+            }
+            None => de.decode_step(&mut st, &x).unwrap(),
+        };
+        let want = f32s(step.req("logits").unwrap());
+        assert_eq!(logits.len(), want.len());
+        let step_diff = logits
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            step_diff < 1e-4,
+            "step {si}: logits drifted from JAX by {step_diff}"
+        );
+        max_diff = max_diff.max(step_diff);
+        let greedy = de.argmax_rows(&logits);
+        assert_eq!(greedy, i32s(step.req("greedy").unwrap()), "step {si}: greedy tokens");
+        own_next = greedy;
+    }
+    println!("golden parity over {} steps, max |logit diff| = {max_diff:e}", steps.len());
+}
+
+// ------------------------------------------------------------ properties
+
+/// Small config the random-arch properties run at.  batch=2 with
+/// n_experts=2 keeps `capacity >= batch * top_k`, so no MoE choice is ever
+/// dropped and batch lanes are independent — the precondition for the
+/// reset-equals-fresh property.
+fn prop_cfg(n_slots: usize) -> ModelConfig {
+    let mut c = ModelConfig::tiny();
+    c.vocab = 11;
+    c.d_model = 8;
+    c.n_slots = n_slots;
+    c.d_inner = 12;
+    c.n_heads_full = 2;
+    c.seq_len = 4;
+    c.mem_len = 3;
+    c.batch = 2;
+    c.n_experts = 2;
+    c.sffl_inner = 16;
+    c.capacity_factor = 2.0;
+    c
+}
+
+fn random_arch(rng: &mut Rng, n_slots: usize) -> Vec<Block> {
+    (0..n_slots)
+        .map(|_| match rng.below(7) {
+            0 => Block::Skip,
+            1 => Block::Mha { heads: 1 },
+            2 => Block::Mha { heads: 2 },
+            3 => Block::Ffl,
+            4 => Block::SFfl,
+            5 => Block::Moe { top_k: 1 },
+            _ => Block::Moe { top_k: 2 },
+        })
+        .collect()
+}
+
+fn ref_engine(seed: u64) -> (Engine, String) {
+    let mut rng = Rng::new(seed);
+    let n_slots = 2 + rng.below(3);
+    let cfg = prop_cfg(n_slots);
+    let mut archs = BTreeMap::new();
+    archs.insert("rand".to_string(), random_arch(&mut rng, n_slots));
+    (Engine::reference(cfg, archs).unwrap(), "rand".to_string())
+}
+
+#[test]
+fn masked_with_zero_mask_agrees_with_gen_step_for_step() {
+    for seed in 0..12u64 {
+        let (engine, arch) = ref_engine(seed);
+        let de = DecodeEngine::new(&engine, &arch).unwrap();
+        let mut st_gen = de.init_state(5).unwrap();
+        let mut st_masked = de.init_state(5).unwrap();
+        let vocab = engine.manifest.config.vocab as i32;
+        let mut rng = Rng::new(seed ^ 0xfeed);
+        let no_reset = vec![false; de.width];
+        for step in 0..6 {
+            let x: Vec<i32> = (0..de.width).map(|_| rng.below(vocab as usize) as i32).collect();
+            let a = de.decode_step(&mut st_gen, &x).unwrap();
+            let b = de.decode_step_masked(&mut st_masked, &x, &no_reset).unwrap();
+            assert_eq!(a, b, "seed {seed} step {step}: zero-mask masked decode diverged");
+        }
+    }
+}
+
+#[test]
+fn masked_reset_equals_fresh_session_forward() {
+    for seed in 0..12u64 {
+        let (engine, arch) = ref_engine(seed);
+        let de = DecodeEngine::new(&engine, &arch).unwrap();
+        let vocab = engine.manifest.config.vocab;
+        let mut rng = Rng::new(seed ^ 0xab1e);
+        let reset_lane = rng.below(de.width);
+        let fresh_tok = rng.below(vocab) as i32;
+
+        // warm store: several steps of random traffic on every lane
+        let mut warm = de.init_state(9).unwrap();
+        for _ in 0..5 {
+            let x: Vec<i32> = (0..de.width).map(|_| rng.below(vocab) as i32).collect();
+            de.decode_step(&mut warm, &x).unwrap();
+        }
+        // reset one lane and feed it a fresh token
+        let mut x: Vec<i32> = (0..de.width).map(|_| rng.below(vocab) as i32).collect();
+        x[reset_lane] = fresh_tok;
+        let mut reset = vec![false; de.width];
+        reset[reset_lane] = true;
+        let warm_logits = de.decode_step_masked(&mut warm, &x, &reset).unwrap();
+
+        // fresh store: zero memories, same token in the same lane
+        let mut fresh = de.init_state(9).unwrap();
+        let mut fx = vec![0i32; de.width];
+        fx[reset_lane] = fresh_tok;
+        let fresh_logits = de.decode_step(&mut fresh, &fx).unwrap();
+
+        let (a, b) = (
+            &warm_logits[reset_lane * vocab..(reset_lane + 1) * vocab],
+            &fresh_logits[reset_lane * vocab..(reset_lane + 1) * vocab],
+        );
+        assert_eq!(a, b, "seed {seed}: reset lane differs from a fresh session");
+    }
+}
+
+#[test]
+fn init_state_is_deterministic_across_stores() {
+    let (engine, arch) = ref_engine(3);
+    let de = DecodeEngine::new(&engine, &arch).unwrap();
+    let mut a = de.init_state(42).unwrap();
+    let mut b = de.init_state(42).unwrap();
+    let mut c = de.init_state(43).unwrap();
+    let x = vec![1i32; de.width];
+    let (la, lb, lc) = (
+        de.decode_step(&mut a, &x).unwrap(),
+        de.decode_step(&mut b, &x).unwrap(),
+        de.decode_step(&mut c, &x).unwrap(),
+    );
+    assert_eq!(la, lb, "same seed must give identical decode");
+    assert_ne!(la, lc, "different seed must give different params");
+}
+
+#[test]
+fn reference_manifest_rejects_malformed_archs() {
+    let mut archs: BTreeMap<String, Vec<Block>> = BTreeMap::new();
+    archs.insert("bad".to_string(), vec![Block::Mha { heads: 3 }]);
+    let mut cfg = prop_cfg(1);
+    cfg.d_model = 8; // not divisible by 3 heads
+    assert!(Engine::reference(cfg, archs).is_err());
+
+    let mut cfg = prop_cfg(1);
+    cfg.vocab = 1; // degenerate vocab
+    let mut archs: BTreeMap<String, Vec<Block>> = BTreeMap::new();
+    archs.insert("bad".to_string(), vec![Block::Ffl]);
+    assert!(Engine::reference(cfg, archs).is_err());
+}
+
+/// The spec-level dtype plumbing the fixture relies on.
+#[test]
+fn literal_helpers_roundtrip_i32_specs() {
+    let spec = TensorSpec { name: "x".into(), shape: vec![2, 1], dtype: DType::I32 };
+    let lit = literal::literal_from_i32s(&spec, &[3, 4]).unwrap();
+    let (shape, val) = literal::to_value(&lit).unwrap();
+    assert_eq!(shape, vec![2, 1]);
+    assert!(matches!(val, TensorValue::I32(ref v) if v == &vec![3, 4]));
+}

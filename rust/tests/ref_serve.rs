@@ -1,0 +1,266 @@
+//! Hermetic end-to-end serving over the reference backend: the whole
+//! prefill→decode→retire pipeline — router, per-variant workers, wave
+//! batching, continuous slot scheduling, masked memory resets, metrics —
+//! with **zero XLA artifacts**.  This is the CI proof that the serve stack
+//! runs unmodified over either backend.
+//!
+//! Determinism notes: the reference forward is a pure function, and every
+//! trace here uses equal-length prompts and configs where MoE capacity
+//! admits every choice (`capacity >= batch * top_k`), so batch lanes are
+//! independent and a request's tokens do not depend on which slots or
+//! batch-mates it shared a step with.  That makes per-request token
+//! streams comparable across scheduling policies — and against a
+//! one-request-per-wave oracle — *exactly*, not just statistically.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use planer::runtime::manifest::Block;
+use planer::runtime::{Engine, ModelConfig, StateStore};
+use planer::serve::{
+    BatchWave, Cluster, DecodeEngine, Request, ServeMetrics, ServePolicy, SlotExecutor,
+    SlotScheduler, TimedRequest, WaveBatcher,
+};
+
+fn serve_cfg() -> ModelConfig {
+    let mut c = ModelConfig::tiny();
+    c.vocab = 17;
+    c.d_model = 8;
+    c.n_slots = 4;
+    c.d_inner = 12;
+    c.n_heads_full = 2;
+    c.seq_len = 4;
+    c.mem_len = 4;
+    c.batch = 2; // width 2, and capacity (>=4) admits every MoE choice
+    c.n_experts = 2;
+    c.sffl_inner = 16;
+    c.capacity_factor = 2.0;
+    c
+}
+
+fn ref_engine(n_variants: usize) -> (Engine, Vec<String>) {
+    let cfg = serve_cfg();
+    let mut archs = BTreeMap::new();
+    archs.insert(
+        "alpha".to_string(),
+        vec![Block::Mha { heads: 2 }, Block::Ffl, Block::Moe { top_k: 2 }, Block::SFfl],
+    );
+    archs.insert(
+        "beta".to_string(),
+        vec![Block::Mha { heads: 1 }, Block::Skip, Block::Ffl, Block::Ffl],
+    );
+    let names: Vec<String> = archs.keys().take(n_variants).cloned().collect();
+    (Engine::reference(cfg, archs).unwrap(), names)
+}
+
+fn req(id: u64, prompt: Vec<i32>, n_gen: usize) -> TimedRequest {
+    TimedRequest {
+        at: 0.0,
+        request: Request { id, prompt, n_gen, sla: f64::INFINITY },
+    }
+}
+
+/// Mixed-length trace: equal 3-token prompts (lanes stay in phase under the
+/// wave schedule), bimodal n_gen (short 1 vs long 6-8) so continuous
+/// batching has head-of-line blocking to win against.
+fn trace(n: usize) -> Vec<TimedRequest> {
+    (0..n)
+        .map(|i| {
+            let p = vec![
+                (1 + i % 5) as i32,
+                (3 + i % 7) as i32,
+                (2 + i % 11) as i32,
+            ];
+            let n_gen = if i % 2 == 0 { 1 } else { 6 + i % 3 };
+            req(i as u64, p, n_gen)
+        })
+        .collect()
+}
+
+/// One request decoded alone (one-request wave, fresh memories): the
+/// scheduling-independent reference stream for that request.
+fn solo_oracle(de: &DecodeEngine, st: &mut StateStore, r: &Request) -> Vec<i32> {
+    let wave = BatchWave { requests: vec![(r.clone(), Instant::now())] };
+    let mut m = ServeMetrics::default();
+    let rs = de.decode_wave(st, &wave, &mut m).unwrap();
+    rs.into_iter().next().unwrap().tokens
+}
+
+#[test]
+fn wave_and_continuous_replay_match_the_solo_oracle_exactly() {
+    let (engine, names) = ref_engine(1);
+    let trace = trace(9);
+
+    // oracle: every request alone through the same decode engine
+    let de = DecodeEngine::new(&engine, &names[0]).unwrap();
+    let mut st = de.init_state(0).unwrap();
+    let expected: Vec<Vec<i32>> = trace
+        .iter()
+        .map(|t| solo_oracle(&de, &mut st, &t.request))
+        .collect();
+
+    let mut cluster = Cluster::new(&engine, &names, 0).unwrap();
+    cluster.set_max_wait(Duration::from_millis(1));
+    for policy in [ServePolicy::Wave, ServePolicy::Continuous] {
+        cluster.set_serve_policy(policy);
+        assert!(
+            cluster.lane_policies().iter().all(|(_, p)| *p == policy),
+            "reference manifest must support {policy:?} with no fallback"
+        );
+        let responses = cluster.replay_concurrent(&trace, false).unwrap();
+        assert_eq!(responses.len(), trace.len(), "{policy:?}: request conservation");
+        for (r, t) in responses.iter().zip(&trace) {
+            assert_eq!(r.id, t.request.id, "{policy:?}: ids sorted and unique");
+            assert_eq!(r.tokens.len(), t.request.n_gen, "{policy:?}: req {} length", r.id);
+            assert_eq!(
+                r.tokens, expected[r.id as usize],
+                "{policy:?}: req {} token stream diverged from the solo oracle",
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_variant_drain_conserves_requests_and_meters_occupancy() {
+    let (engine, names) = ref_engine(2);
+    assert_eq!(names.len(), 2);
+    let trace = trace(14);
+    let mut cluster = Cluster::new(&engine, &names, 1).unwrap();
+    cluster.set_max_wait(Duration::from_millis(1));
+
+    for policy in [ServePolicy::Wave, ServePolicy::Continuous] {
+        cluster.set_serve_policy(policy);
+        let responses = cluster.replay_concurrent(&trace, false).unwrap();
+
+        // conservation on drain: every id answered exactly once, in full
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "{policy:?}: duplicate or lost responses");
+        for r in &responses {
+            assert_eq!(r.tokens.len(), trace[r.id as usize].request.n_gen);
+        }
+
+        // metrics: merged across lanes, step-weighted occupancy in bounds,
+        // byte metering alive (the ref backend meters what a device would)
+        let mut total = ServeMetrics::default();
+        for (_, m) in cluster.metrics_snapshot() {
+            total.merge(&m);
+        }
+        assert_eq!(total.requests, trace.len(), "{policy:?}: metrics lost requests");
+        let want_tokens: usize = trace.iter().map(|t| t.request.n_gen).sum();
+        assert_eq!(total.tokens_out, want_tokens, "{policy:?}: token accounting");
+        assert!(total.steps > 0 && total.slot_steps >= total.live_slot_steps);
+        let occ = total.occupancy();
+        assert!(occ > 0.0 && occ <= 1.0, "{policy:?}: occupancy {occ} out of bounds");
+        assert!(total.bytes_synced > 0, "{policy:?}: sync metering dead");
+        assert!(total.bytes_per_token() > 0.0);
+    }
+}
+
+/// Deterministic continuous-vs-wave occupancy comparison: drive the slot
+/// scheduler and the wave batcher directly (no threads, no timing), same
+/// trace, same decode engine.  Continuous must win step-weighted occupancy
+/// on a bimodal-length trace — the core claim of PR 3, now checkable in CI
+/// with real decode math instead of a simulator.
+#[test]
+fn continuous_beats_wave_occupancy_deterministically() {
+    let (engine, names) = ref_engine(1);
+    let trace = trace(10);
+
+    // oracle streams (scheduling-independent)
+    let de = DecodeEngine::new(&engine, &names[0]).unwrap();
+    let mut st = de.init_state(0).unwrap();
+    let expected: Vec<Vec<i32>> = trace
+        .iter()
+        .map(|t| solo_oracle(&de, &mut st, &t.request))
+        .collect();
+
+    // --- wave: FIFO pairs through WaveBatcher + decode_wave
+    let de_w = DecodeEngine::new(&engine, &names[0]).unwrap();
+    let mut st_w = de_w.init_state(0).unwrap();
+    let mut wave_metrics = ServeMetrics::default();
+    let mut batcher = WaveBatcher::new(de_w.width, Duration::from_secs(600));
+    let mut wave_tokens: Vec<Vec<i32>> = vec![Vec::new(); trace.len()];
+    for t in &trace {
+        batcher.submit(t.request.clone());
+        while let Some(w) = batcher.next_wave(Instant::now()) {
+            for r in de_w.decode_wave(&mut st_w, &w, &mut wave_metrics).unwrap() {
+                wave_tokens[r.id as usize] = r.tokens;
+            }
+        }
+    }
+    while let Some(w) = batcher.force_wave() {
+        for r in de_w.decode_wave(&mut st_w, &w, &mut wave_metrics).unwrap() {
+            wave_tokens[r.id as usize] = r.tokens;
+        }
+    }
+
+    // --- continuous: SlotScheduler over decode_step_masked
+    struct RefExec<'a> {
+        de: DecodeEngine<'a>,
+        st: StateStore,
+    }
+    impl SlotExecutor for RefExec<'_> {
+        fn width(&self) -> usize {
+            self.de.width
+        }
+        fn step(&mut self, x: &[i32], reset: &[bool]) -> anyhow::Result<Vec<i32>> {
+            let logits = self.de.decode_step_masked(&mut self.st, x, reset)?;
+            Ok(self.de.argmax_rows(&logits))
+        }
+        fn bytes_synced(&self) -> u64 {
+            self.st.stats().total_bytes()
+        }
+    }
+    let de_c = DecodeEngine::new(&engine, &names[0]).unwrap();
+    let st_c = de_c.init_state(0).unwrap();
+    let mut sched = SlotScheduler::new(names[0].clone(), RefExec { de: de_c, st: st_c });
+    let now = Instant::now();
+    for t in &trace {
+        sched.submit(t.request.clone(), now);
+    }
+    let mut cont_tokens: Vec<Vec<i32>> = vec![Vec::new(); trace.len()];
+    while sched.has_work() {
+        for r in sched.step().unwrap() {
+            cont_tokens[r.id as usize] = r.tokens;
+        }
+    }
+
+    // exact parity with the oracle through both schedulers
+    for (i, want) in expected.iter().enumerate() {
+        assert_eq!(&wave_tokens[i], want, "wave: req {i} diverged");
+        assert_eq!(&cont_tokens[i], want, "continuous: req {i} diverged");
+    }
+
+    // and the occupancy claim, now on real decode math
+    let (occ_w, occ_c) = (wave_metrics.occupancy(), sched.metrics.occupancy());
+    assert!(
+        occ_c > occ_w,
+        "continuous occupancy {occ_c:.3} must beat wave {occ_w:.3} on a bimodal trace"
+    );
+    // hand-simulated bound for this trace: 59 live slot-steps over 33
+    // 2-wide steps = 0.894 (only the drain tail idles)
+    assert!(occ_c > 0.85, "with instant backfill, continuous should stay near-full: {occ_c:.3}");
+}
+
+/// Empty prompts ride the BOS seeding path on both policies.
+#[test]
+fn empty_prompts_decode_identically_on_both_policies() {
+    let (engine, names) = ref_engine(1);
+    let trace: Vec<TimedRequest> = (0..4).map(|i| req(i, vec![], 3)).collect();
+    let mut cluster = Cluster::new(&engine, &names, 0).unwrap();
+    cluster.set_max_wait(Duration::from_millis(1));
+    let mut per_policy = Vec::new();
+    for policy in [ServePolicy::Wave, ServePolicy::Continuous] {
+        cluster.set_serve_policy(policy);
+        let responses = cluster.replay_concurrent(&trace, false).unwrap();
+        assert_eq!(responses.len(), 4);
+        for r in &responses {
+            assert_eq!(r.tokens.len(), 3);
+        }
+        per_policy.push(responses.into_iter().map(|r| r.tokens).collect::<Vec<_>>());
+    }
+    assert_eq!(per_policy[0], per_policy[1], "BOS-seeded streams must agree across policies");
+}

@@ -4,6 +4,12 @@
 #
 #   scripts/tier1.sh            # fmt + clippy + build + test + bench compile
 #   SKIP_LINT=1 scripts/tier1.sh   # skip fmt/clippy
+#
+# The suite is hermetic: no AOT artifacts are required.  Artifact-gated
+# integration tests skip themselves when ./artifacts is absent, while the
+# reference-backend tests (tests/ref_backend.rs, tests/ref_serve.rs) and the
+# `serve --backend ref` smoke below exercise the full
+# prefill→decode→retire pipeline unconditionally.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -13,5 +19,8 @@ if [[ -z "${SKIP_LINT:-}" ]]; then
 fi
 cargo build --release
 cargo test -q
+# hermetic serve smoke: the whole CLI serve path (router, workers, wave +
+# continuous policies, masked resets) over the pure-Rust reference backend
+cargo run --release --quiet -- serve --backend ref --requests 8 --policy ab --max-wait-ms 2
 # bench harnesses must at least compile, or the A/B numbers silently rot
 cargo bench --no-run
