@@ -7,6 +7,7 @@
 use std::time::Instant;
 
 use planer::arch::SearchSpace;
+use planer::bench::{env_fingerprint, LegReport, Report, Summary, BENCH_SCHEMA};
 use planer::latency::{AnalyticalModel, Device, Profiler};
 use planer::metrics;
 use planer::runtime::{Engine, ExecMode, StateStore};
@@ -105,14 +106,48 @@ fn resident_ab(engine: &Engine) -> anyhow::Result<()> {
             s.total_bytes() as f64 / steps as f64,
             s.resident_frac(),
         );
-        results.push((steps as f64 / wall, s.total_bytes() as f64 / steps as f64));
+        results.push((label, wall, s.total_bytes(), steps as f64 / wall));
     }
-    if let [(rs, rb), (ts, tb)] = results[..] {
+    if let [(_, rw, rb, rs), (_, tw, tb, ts)] = results[..] {
         println!(
             "  resident is {:.2}x steps/s at {:.1}x fewer bytes/step\n",
             rs / ts,
-            tb / rb.max(1.0),
+            (tb as f64 / steps as f64) / (rb as f64 / steps as f64).max(1.0),
         );
+        // wall-clock BENCH report (deterministic: false — archived, not
+        // gated); `wall_ticks` carries milliseconds for wall-clock legs
+        let leg = |name: &str, exec: &str, wall: f64, bytes: u64| LegReport {
+            name: name.to_string(),
+            policy: "wave".to_string(),
+            concurrency: "serial".to_string(),
+            exec: exec.to_string(),
+            requests: 0,
+            tokens_out: steps,
+            waves: 0,
+            steps: steps as u64,
+            wall_ticks: (wall * 1e3) as u64,
+            occupancy: 0.0,
+            bytes_synced: bytes,
+            bytes_per_token: bytes as f64 / steps as f64,
+            latency: Summary::of("ms", &[wall * 1e3 / steps as f64]),
+        };
+        let report = Report {
+            schema: BENCH_SCHEMA,
+            scenario: "block_latency".to_string(),
+            suite: "pjrt".to_string(),
+            backend: engine.backend_name().to_string(),
+            deterministic: false,
+            seed: 0,
+            ticks_per_sec: 0.0,
+            warmup,
+            requests: 0,
+            env: env_fingerprint(),
+            legs: vec![leg("resident", "resident", rw, rb), leg("roundtrip", "roundtrip", tw, tb)],
+        };
+        let out = std::path::PathBuf::from(
+            std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".to_string()),
+        );
+        println!("  wrote {}", report.write(&out)?.display());
     }
     Ok(())
 }

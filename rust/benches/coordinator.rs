@@ -1,26 +1,27 @@
 //! Bench: L3 hot-path micro-benchmarks — batcher, router, latency estimator,
-//! JSON parser, segment batcher — plus two simulated serving A/Bs that run
-//! without artifacts: serial-vs-concurrent decode workers, and
-//! wave-vs-continuous batching policy on a mixed-length (bimodal `n_gen`)
-//! Poisson trace.  Goal (§Perf): coordinator overhead per request orders of
-//! magnitude below one PJRT decode step; concurrent serving beating serial
-//! on wall-clock and p95 for multi-variant traces; continuous batching
-//! beating waves on p95 and step-weighted occupancy for mixed lengths.
+//! JSON parser, segment batcher — plus the hermetic serve A/B suite
+//! (`planer::bench`): wave-vs-continuous, serial-vs-concurrent and
+//! resident-vs-roundtrip legs replayed over **real reference-backend decode
+//! math** on a virtual step-clock.  No artifacts required.  Goal (§Perf):
+//! coordinator overhead per request orders of magnitude below one PJRT
+//! decode step; continuous batching beating waves on p95 and step-weighted
+//! occupancy; concurrent serving beating serial wall-clock on multi-variant
+//! traces; device residency cutting bytes/token by orders of magnitude.
+//!
+//! Each suite scenario writes a deterministic, schema-versioned
+//! `BENCH_<scenario>.json` (into `$BENCH_OUT`, default the current
+//! directory) — the files `scripts/bench_gate.sh` diffs against
+//! `rust/benches/BENCH_BASELINE.json` in CI.
 //!
 //!     cargo bench --bench coordinator
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use planer::arch::{Arch, SearchSpace};
+use planer::bench::{run_named, DEFAULT_SEED, HERMETIC_SUITE};
 use planer::data::TxlBatcher;
 use planer::latency::LatencyTable;
-use planer::serve::{
-    admit, percentile, BatchWave, LaneSender, Request, Response, Router, RouterPolicy,
-    ServeMetrics, SlotExecutor, SlotLane, SlotScheduler, VariantInfo, WaveBatcher, WorkerLane,
-    WorkloadGen,
-};
+use planer::serve::{Request, Router, RouterPolicy, VariantInfo, WaveBatcher};
 use planer::util::json::Json;
 use planer::util::rng::Rng;
 
@@ -45,7 +46,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
 
     // wave batcher submit+drain
@@ -115,268 +116,77 @@ fn main() {
     println!("\nreference: one tiny-model PJRT decode step is ~1-10ms; every");
     println!("coordinator operation above must stay (and is) well under that.");
 
-    serve_ab();
-    policy_ab();
+    hermetic_suite()
 }
 
-/// Serial-vs-concurrent serving A/B over simulated decode workers: three
-/// variants whose `WaveExecutor` sleeps a fixed per-wave service time
-/// (standing in for one PJRT decode wave), Poisson arrivals, bimodal SLAs.
-/// Serial replays waves inline on the admission thread (so decode blocks
-/// admission and variants never overlap); concurrent runs the real
-/// WorkerLane pump.  Both wall-clock and p95 should drop with concurrency.
-fn serve_ab() {
-    // (name, quality-ordered token latency for routing, per-wave service)
-    let sim: [(&str, f64, Duration); 3] = [
-        ("base", 1e-3, Duration::from_millis(20)),
-        ("mid", 5e-4, Duration::from_millis(10)),
-        ("fast", 1e-4, Duration::from_millis(5)),
-    ];
-    let width = 8;
-    let max_wait = Duration::from_millis(2);
-    let router = Router::new(
-        sim.iter()
-            .enumerate()
-            .map(|(i, (n, lat, _))| VariantInfo {
-                name: n.to_string(),
-                token_latency: *lat,
-                quality: (sim.len() - i) as f64,
-            })
-            .collect(),
-        RouterPolicy::QualityWithinSla,
+/// The hermetic serve A/B suite: real reference-backend decode math on a
+/// virtual step-clock (see `planer::bench`).  Replaces the old synthetic
+/// `thread::sleep` simulators — the A/Bs below measure genuine scheduling
+/// effects of the production `DecodeEngine`/`SlotScheduler` code paths, and
+/// their reports are byte-identical across runs (the property the CI perf
+/// gate depends on).
+fn hermetic_suite() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from(
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".to_string()),
     );
+    for name in HERMETIC_SUITE {
+        let report = run_named(name, DEFAULT_SEED)?;
+        let path = report.write(&out)?;
+        print!("\n{}", report.render());
+        println!("  wrote {}", path.display());
 
-    let mut gen = WorkloadGen::bimodal_sla(256, 0.004, 2.0);
-    gen.arrival = planer::serve::Arrival::Poisson { rps: 400.0 };
-    let trace = gen.generate(96, 42);
-
-    let executor = |name: &'static str, service: Duration| {
-        move |wave: &BatchWave| -> anyhow::Result<Vec<Response>> {
-            std::thread::sleep(service); // one simulated decode wave
-            let done = Instant::now();
-            Ok(wave
-                .requests
-                .iter()
-                .map(|(r, t)| Response {
-                    id: r.id,
-                    tokens: vec![0; r.n_gen],
-                    latency: done.duration_since(*t).as_secs_f64(),
-                    variant: name.to_string(),
-                })
-                .collect())
-        }
-    };
-
-    // -- serial baseline: decode inline on the admission thread
-    let t0 = Instant::now();
-    let mut queues: HashMap<&str, WaveBatcher> = sim
-        .iter()
-        .map(|(n, _, _)| (*n, WaveBatcher::new(width, max_wait)))
-        .collect();
-    let mut execs: HashMap<&str, _> = sim
-        .iter()
-        .map(|(n, _, s)| (*n, executor(*n, *s)))
-        .collect();
-    let mut serial: Vec<Response> = Vec::new();
-    let start = Instant::now();
-    for tr in &trace {
-        let due = start + Duration::from_secs_f64(tr.at);
-        let now = Instant::now();
-        if due > now {
-            std::thread::sleep(due - now);
-        }
-        let v = router.route(&tr.request);
-        queues.get_mut(v).unwrap().submit(tr.request.clone());
-        for (n, q) in queues.iter_mut() {
-            while let Some(w) = q.next_wave(Instant::now()) {
-                serial.extend(execs.get_mut(n).unwrap()(&w).unwrap());
+        // the claims each scenario exists to keep true
+        match *name {
+            "coordinator" => {
+                let (wave, cont) = (report.leg("wave").unwrap(), report.leg("continuous").unwrap());
+                anyhow::ensure!(
+                    cont.latency.p95 < wave.latency.p95,
+                    "continuous batching must cut p95 on a mixed-length trace \
+                     ({:.0} vs {:.0} ticks)",
+                    cont.latency.p95,
+                    wave.latency.p95
+                );
+                anyhow::ensure!(
+                    cont.occupancy > wave.occupancy,
+                    "continuous batching must raise step-weighted occupancy \
+                     ({:.2} vs {:.2})",
+                    cont.occupancy,
+                    wave.occupancy
+                );
             }
+            "serve_fleet" => {
+                let (serial, conc) =
+                    (report.leg("serial").unwrap(), report.leg("concurrent").unwrap());
+                anyhow::ensure!(
+                    conc.wall_ticks < serial.wall_ticks,
+                    "overlapping per-variant decode must cut wall-clock \
+                     ({} vs {} ticks)",
+                    conc.wall_ticks,
+                    serial.wall_ticks
+                );
+                anyhow::ensure!(
+                    conc.latency.p95 <= serial.latency.p95,
+                    "concurrent serving must not worsen p95 ({:.0} vs {:.0} ticks)",
+                    conc.latency.p95,
+                    serial.latency.p95
+                );
+            }
+            "residency" => {
+                let (res, rt) = (report.leg("resident").unwrap(), report.leg("roundtrip").unwrap());
+                anyhow::ensure!(
+                    rt.bytes_per_token > 10.0 * res.bytes_per_token,
+                    "device residency must cut bytes/token by >10x \
+                     ({:.0} vs {:.0} B/tok)",
+                    res.bytes_per_token,
+                    rt.bytes_per_token
+                );
+                anyhow::ensure!(
+                    res.latency == rt.latency,
+                    "exec mode must not change the virtual schedule"
+                );
+            }
+            _ => {}
         }
     }
-    for (n, q) in queues.iter_mut() {
-        while let Some(w) = q.force_wave() {
-            serial.extend(execs.get_mut(n).unwrap()(&w).unwrap());
-        }
-    }
-    let serial_wall = t0.elapsed().as_secs_f64();
-
-    // -- concurrent: one deadline-aware worker per variant
-    let t0 = Instant::now();
-    let mut senders = HashMap::new();
-    let mut handles = Vec::new();
-    for (n, _, s) in &sim {
-        let (sender, rx, gauge) = LaneSender::channel();
-        senders.insert(n.to_string(), sender);
-        let mut lane = WorkerLane::new(*n, WaveBatcher::new(width, max_wait), executor(*n, *s));
-        lane.depth = gauge;
-        handles.push(std::thread::spawn(move || lane.run(rx).unwrap()));
-    }
-    admit(&trace, &router, &senders, true);
-    drop(senders);
-    let mut concurrent: Vec<Response> = Vec::new();
-    for h in handles {
-        concurrent.extend(h.join().unwrap().0);
-    }
-    let concurrent_wall = t0.elapsed().as_secs_f64();
-
-    let p95 = |rs: &[Response]| {
-        let l: Vec<f64> = rs.iter().map(|r| r.latency).collect();
-        percentile(&l, 0.95)
-    };
-    println!(
-        "\nserve A/B (3 simulated variants, {} reqs, Poisson 400rps, bimodal SLA):",
-        trace.len()
-    );
-    println!(
-        "  serial:     wall {:7.1}ms  p95 {:6.1}ms  ({} responses)",
-        serial_wall * 1e3,
-        p95(&serial) * 1e3,
-        serial.len()
-    );
-    println!(
-        "  concurrent: wall {:7.1}ms  p95 {:6.1}ms  ({} responses)",
-        concurrent_wall * 1e3,
-        p95(&concurrent) * 1e3,
-        concurrent.len()
-    );
-    assert_eq!(serial.len(), concurrent.len(), "both paths must answer everything");
-}
-
-/// Wave-vs-continuous policy A/B over one simulated variant whose executor
-/// charges a fixed service time per decode *step* (standing in for one
-/// `gen`/`gen_masked` execution), on a mixed-length (bimodal `n_gen`)
-/// Poisson trace.  The wave policy pays the whole right-aligned
-/// `(max_prompt + max_gen)` schedule per wave — short requests idle through
-/// a long batch-mate's tail and arrivals queue behind the in-flight wave —
-/// while the continuous scheduler admits into free slots every step and
-/// retires each slot at its own `n_gen`.  Continuous must win p95 and
-/// step-weighted occupancy; both must answer every request.
-fn policy_ab() {
-    let width = 4usize;
-    let step_time = Duration::from_millis(1);
-    let max_wait = Duration::from_millis(2);
-    let router = Router::new(
-        vec![VariantInfo { name: "sim".into(), token_latency: 1e-3, quality: 1.0 }],
-        RouterPolicy::QualityWithinSla,
-    );
-
-    // mixed-length Poisson trace: half the requests want 2 tokens, half 20
-    // — the shape that exposes wave head-of-line blocking
-    let mut gen = WorkloadGen::new(256);
-    gen.arrival = planer::serve::Arrival::Poisson { rps: 150.0 };
-    gen.lengths =
-        planer::serve::workload::LengthDist { prompt_min: 1, prompt_max: 4, gen_min: 2, gen_max: 20 };
-    let mut trace = gen.generate(120, 7);
-    let mut rng = Rng::new(11);
-    for tr in &mut trace {
-        tr.request.n_gen = if rng.f64() < 0.5 { 2 } else { 20 };
-    }
-
-    // -- wave policy: simulated WaveExecutor sleeps the wave's whole
-    // right-aligned schedule and meters step-weighted occupancy
-    let wave_m = Arc::new(Mutex::new(ServeMetrics::default()));
-    let wm = Arc::clone(&wave_m);
-    let wave_exec = move |w: &BatchWave| -> anyhow::Result<Vec<Response>> {
-        let shape = w.shape();
-        // charge what the real engine executes: it elides the final decode
-        // step (last tokens are attributed from the previous step's logits),
-        // so sleeping shape.steps() would overcharge waves by one step each
-        let execs = shape.steps() - (shape.max_gen > 0) as u64;
-        std::thread::sleep(step_time * execs as u32);
-        let done = Instant::now();
-        let mut m = wm.lock().unwrap();
-        let (live, cap) = w.step_usage(width);
-        m.waves += 1;
-        m.steps += execs;
-        m.live_slot_steps += live;
-        m.slot_steps += cap;
-        Ok(w
-            .requests
-            .iter()
-            .map(|(r, t)| {
-                m.requests += 1;
-                m.tokens_out += r.n_gen;
-                let latency = done.duration_since(*t).as_secs_f64();
-                m.latencies.push(latency);
-                Response { id: r.id, tokens: vec![0; r.n_gen], latency, variant: "sim".into() }
-            })
-            .collect())
-    };
-    let t0 = Instant::now();
-    let (sender, rx, gauge) = LaneSender::channel();
-    let mut lane = WorkerLane::new("sim", WaveBatcher::new(width, max_wait), wave_exec);
-    lane.depth = gauge;
-    let handle = std::thread::spawn(move || lane.run(rx).unwrap());
-    let mut senders = HashMap::new();
-    senders.insert("sim".to_string(), sender);
-    admit(&trace, &router, &senders, true);
-    drop(senders);
-    let (wave_rs, _) = handle.join().unwrap();
-    let wave_wall = t0.elapsed().as_secs_f64();
-    let wave_m = wave_m.lock().unwrap().clone();
-
-    // -- continuous policy: simulated SlotExecutor sleeps once per step;
-    // the SlotScheduler does admission/retirement/occupancy itself
-    struct StepSim {
-        width: usize,
-        step_time: Duration,
-    }
-    impl SlotExecutor for StepSim {
-        fn width(&self) -> usize {
-            self.width
-        }
-        fn step(&mut self, _x: &[i32], _reset: &[bool]) -> anyhow::Result<Vec<i32>> {
-            std::thread::sleep(self.step_time);
-            Ok(vec![0; self.width])
-        }
-    }
-    let t0 = Instant::now();
-    let (sender, rx, gauge) = LaneSender::channel();
-    let mut slane = SlotLane::new("sim", SlotScheduler::new("sim", StepSim { width, step_time }));
-    slane.depth = gauge;
-    let handle = std::thread::spawn(move || slane.run(rx).unwrap());
-    let mut senders = HashMap::new();
-    senders.insert("sim".to_string(), sender);
-    admit(&trace, &router, &senders, true);
-    drop(senders);
-    let (cont_rs, scheduler) = handle.join().unwrap();
-    let cont_wall = t0.elapsed().as_secs_f64();
-    let cont_m = scheduler.metrics;
-
-    let lat = |rs: &[Response]| -> Vec<f64> { rs.iter().map(|r| r.latency).collect() };
-    let wave_lat = lat(&wave_rs);
-    let cont_lat = lat(&cont_rs);
-    println!(
-        "\npolicy A/B (1 simulated variant, width {width}, {} reqs, Poisson 150rps, bimodal n_gen 2|20):",
-        trace.len()
-    );
-    println!(
-        "  wave:       wall {:7.1}ms  p50 {:6.1}ms  p95 {:6.1}ms  occup {:4.2}  ({} waves, {} steps)",
-        wave_wall * 1e3,
-        percentile(&wave_lat, 0.50) * 1e3,
-        percentile(&wave_lat, 0.95) * 1e3,
-        wave_m.occupancy(),
-        wave_m.waves,
-        wave_m.steps,
-    );
-    println!(
-        "  continuous: wall {:7.1}ms  p50 {:6.1}ms  p95 {:6.1}ms  occup {:4.2}  ({} steps)",
-        cont_wall * 1e3,
-        percentile(&cont_lat, 0.50) * 1e3,
-        percentile(&cont_lat, 0.95) * 1e3,
-        cont_m.occupancy(),
-        cont_m.steps,
-    );
-    assert_eq!(wave_rs.len(), trace.len(), "wave policy dropped requests");
-    assert_eq!(cont_rs.len(), trace.len(), "continuous policy dropped requests");
-    assert!(
-        cont_m.occupancy() > wave_m.occupancy(),
-        "continuous batching must raise step-weighted occupancy ({:.2} vs {:.2})",
-        cont_m.occupancy(),
-        wave_m.occupancy()
-    );
-    assert!(
-        percentile(&cont_lat, 0.95) < percentile(&wave_lat, 0.95),
-        "continuous batching must cut p95 on a mixed-length trace"
-    );
+    Ok(())
 }

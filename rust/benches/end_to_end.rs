@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use planer::bench::{env_fingerprint, LegReport, Report, Summary, BENCH_SCHEMA};
 use planer::latency::Profiler;
 use planer::runtime::{literal, Engine, ExecMode, StateStore};
 use planer::serve::{percentile, Cluster, Response, ServeMetrics, ServePolicy, WorkloadGen};
@@ -54,6 +55,37 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Wall-clock leg entry for the BENCH report: the shared schema with
+/// `latency.unit = "ms"` and `wall_ticks` carrying milliseconds (wall-clock
+/// reports are `deterministic: false` — archived for trend dashboards,
+/// never gated; see rust/benches/README.md).
+fn wall_leg(
+    name: &str,
+    policy: &str,
+    concurrency: &str,
+    exec: &str,
+    responses: &[Response],
+    total: &ServeMetrics,
+    wall_s: f64,
+) -> LegReport {
+    let lat_ms: Vec<f64> = responses.iter().map(|r| r.latency * 1e3).collect();
+    LegReport {
+        name: name.to_string(),
+        policy: policy.to_string(),
+        concurrency: concurrency.to_string(),
+        exec: exec.to_string(),
+        requests: responses.len(),
+        tokens_out: total.tokens_out,
+        waves: total.waves,
+        steps: total.steps,
+        wall_ticks: (wall_s * 1e3) as u64,
+        occupancy: total.occupancy(),
+        bytes_synced: total.bytes_synced,
+        bytes_per_token: total.bytes_per_token(),
+        latency: Summary::of("ms", &lat_ms),
+    }
+}
+
 /// Serial-vs-concurrent serving A/B over the real decode engines: the same
 /// bimodal-SLA trace replayed once on the single-threaded baseline and once
 /// with one deadline-aware worker per variant.  Concurrency overlaps the
@@ -86,38 +118,25 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
         let l: Vec<f64> = rs.iter().map(|r| r.latency).collect();
         percentile(&l, 0.95)
     };
-    let bytes_per_tok = |c: &Cluster<'_>| {
-        let mut total = ServeMetrics::default();
-        for m in c.metrics_snapshot().values() {
-            total.merge(m);
-        }
-        total.bytes_per_token()
-    };
-
     let t0 = Instant::now();
     let serial = cluster.replay(&trace, false)?;
     let serial_wall = t0.elapsed().as_secs_f64();
     let serial_p95 = p95(&serial);
+    let serial_total = cluster.merged_metrics();
     let t0 = Instant::now();
     let concurrent = cluster.replay_concurrent(&trace, false)?;
     let concurrent_wall = t0.elapsed().as_secs_f64();
-    let resident_bpt = bytes_per_tok(&cluster);
-
-    let occupancy = |c: &Cluster<'_>| {
-        let mut total = ServeMetrics::default();
-        for m in c.metrics_snapshot().values() {
-            total.merge(m);
-        }
-        total.occupancy()
-    };
-    let wave_occup = occupancy(&cluster);
+    let concurrent_total = cluster.merged_metrics();
+    let resident_bpt = concurrent_total.bytes_per_token();
+    let wave_occup = concurrent_total.occupancy();
 
     // same trace, same workers, but force the legacy per-token host sync
     cluster.set_exec_mode(ExecMode::Roundtrip);
     let t0 = Instant::now();
     let roundtrip = cluster.replay_concurrent(&trace, false)?;
     let roundtrip_wall = t0.elapsed().as_secs_f64();
-    let roundtrip_bpt = bytes_per_tok(&cluster);
+    let roundtrip_total = cluster.merged_metrics();
+    let roundtrip_bpt = roundtrip_total.bytes_per_token();
     cluster.set_exec_mode(ExecMode::Auto);
 
     // same trace again under continuous batching (per-slot admission via
@@ -131,7 +150,8 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
     let t0 = Instant::now();
     let continuous = cluster.replay_concurrent(&trace, false)?;
     let continuous_wall = t0.elapsed().as_secs_f64();
-    let continuous_occup = occupancy(&cluster);
+    let continuous_total = cluster.merged_metrics();
+    let continuous_occup = continuous_total.occupancy();
     cluster.set_serve_policy(ServePolicy::Wave);
 
     println!("\nserve A/B ({} variants, {} reqs, bimodal SLA):", names.len(), trace.len());
@@ -170,6 +190,54 @@ fn serve_ab(engine: &Engine) -> anyhow::Result<()> {
         serial.len() == continuous.len(),
         "policy A/B answered different request counts"
     );
+
+    // wall-clock BENCH report (deterministic: false — archived, not gated)
+    let report = Report {
+        schema: BENCH_SCHEMA,
+        scenario: "end_to_end".to_string(),
+        suite: "pjrt".to_string(),
+        backend: engine.backend_name().to_string(),
+        deterministic: false,
+        seed: 1,
+        ticks_per_sec: 0.0,
+        warmup: 0,
+        requests: trace.len(),
+        env: env_fingerprint(),
+        legs: vec![
+            wall_leg("serial", "wave", "serial", "resident", &serial, &serial_total, serial_wall),
+            wall_leg(
+                "concurrent",
+                "wave",
+                "overlapped",
+                "resident",
+                &concurrent,
+                &concurrent_total,
+                concurrent_wall,
+            ),
+            wall_leg(
+                "roundtrip",
+                "wave",
+                "overlapped",
+                "roundtrip",
+                &roundtrip,
+                &roundtrip_total,
+                roundtrip_wall,
+            ),
+            wall_leg(
+                "continuous",
+                "continuous",
+                "overlapped",
+                "resident",
+                &continuous,
+                &continuous_total,
+                continuous_wall,
+            ),
+        ],
+    };
+    let out = std::path::PathBuf::from(
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".to_string()),
+    );
+    println!("  wrote {}", report.write(&out)?.display());
     Ok(())
 }
 

@@ -1,0 +1,88 @@
+//! Virtual step-clock: deterministic time for the bench harness.
+//!
+//! Wall-clock timings make bench reports irreproducible — the same binary on
+//! the same trace produces different JSON every run, so CI cannot diff
+//! reports and a perf gate degenerates into a flaky threshold.  The harness
+//! therefore measures in **ticks**, a virtual time unit:
+//!
+//! - each *executed decode-program step* on a lane costs that lane's
+//!   `step_ticks` (the scheduling cost model — graded per variant so a
+//!   "big" arch is slower than a "small" one in virtual time exactly as it
+//!   would be on hardware);
+//! - workload arrival offsets (seconds, from `serve::workload`) map onto the
+//!   clock via the scenario's `ticks_per_sec`;
+//! - nothing else advances time.
+//!
+//! Latency in ticks is then a pure function of (trace, scheduling policy):
+//! two runs with the same seed produce byte-identical reports, and any
+//! change in a report is a real scheduling change, not noise.  Wall-clock
+//! performance of real programs remains the PJRT benches' job.
+
+/// Monotone virtual clock measured in ticks (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepClock {
+    now: u64,
+}
+
+impl StepClock {
+    pub fn new() -> StepClock {
+        StepClock::default()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Advance by `ticks` (decode work happening).
+    pub fn advance(&mut self, ticks: u64) {
+        self.now += ticks;
+    }
+
+    /// Jump forward to `t` if it is in the future; never moves backwards
+    /// (waiting for an arrival or a deadline that may already have passed).
+    pub fn at_least(&mut self, t: u64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Convert a workload arrival offset (seconds) to a tick timestamp:
+/// `ceil(at · ticks_per_sec)`, so an arrival never lands *before* its
+/// real-valued offset.
+pub fn arrival_tick(at_secs: f64, ticks_per_sec: f64) -> u64 {
+    (at_secs * ticks_per_sec).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_advances() {
+        let mut c = StepClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(5);
+        assert_eq!(c.now(), 5);
+        c.advance(0);
+        assert_eq!(c.now(), 5);
+    }
+
+    #[test]
+    fn at_least_never_rewinds() {
+        let mut c = StepClock::new();
+        c.advance(10);
+        c.at_least(3);
+        assert_eq!(c.now(), 10, "waiting on a past deadline must not rewind");
+        c.at_least(12);
+        assert_eq!(c.now(), 12);
+    }
+
+    #[test]
+    fn arrival_ticks_round_up() {
+        assert_eq!(arrival_tick(0.0, 1000.0), 0);
+        assert_eq!(arrival_tick(0.005, 1000.0), 5);
+        assert_eq!(arrival_tick(0.0051, 1000.0), 6, "mid-tick arrivals land on the next tick");
+    }
+}

@@ -1,0 +1,467 @@
+//! Deterministic serve-bench harness: replays a fixed-seed workload trace
+//! through the real serve primitives (`DecodeEngine::decode_wave`,
+//! `SlotScheduler` over `decode_step_masked`) on a virtual step-clock.
+//!
+//! A [`Scenario`] freezes everything a leg needs — seed, trace, lane fleet,
+//! tick mapping, deadline, warmup policy — and a [`Harness`] replays it
+//! under one (policy, concurrency, exec-mode) combination per [`Leg`].
+//! Decode math is *real* (typically the reference backend, so the whole
+//! thing is hermetic); only **time** is virtual (see [`super::clock`]):
+//!
+//! - every executed decode-program step advances the lane's clock by the
+//!   lane's `step_ticks`;
+//! - arrivals/deadlines are tick timestamps; waiting jumps the clock.
+//!
+//! Scheduling semantics per leg (mirrored byte-for-byte by
+//! `scripts/bench_baseline.py`, which seeds the CI gate's baseline):
+//!
+//! - **wave / overlapped** — per-lane event loop: admit every arrival due at
+//!   the current tick; fire a full wave immediately; otherwise fire a
+//!   partial wave when the oldest request has waited `max_wait_ticks`
+//!   (admitting any arrival that lands before that deadline first); idle
+//!   lanes jump to the next arrival.  Decode on a lane serializes with that
+//!   lane's own admissions, exactly like a worker thread.
+//! - **continuous / overlapped** — per-lane `SlotScheduler` loop: admit due
+//!   arrivals between steps, step while there is work, jump when idle; each
+//!   executed step costs `step_ticks`.
+//! - **wave / serial** — all lanes share one clock (decode blocks
+//!   admission, the `Cluster::replay` baseline): arrivals are processed in
+//!   trace order, the clock jumps to each arrival, and after every
+//!   admission lanes (in quality order) fire due waves to a fixpoint.
+//!   Deadlines expiring strictly between arrivals fire at the next
+//!   admission or at drain — time only moves on arrivals and decode.
+//!
+//! Requests are routed once, up front, by the load-blind `Router::route`
+//! (the load-aware tiebreak reads live queue depths, which are a wall-clock
+//! artifact the virtual replay deliberately does not model).
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Engine, ExecMode, StateStore};
+use crate::serve::{
+    BatchWave, DecodeEngine, Router, RouterPolicy, ServeMetrics, ServePolicy, SlotExecutor,
+    SlotScheduler, TimedRequest, VariantInfo,
+};
+
+use super::clock::{arrival_tick, StepClock};
+
+/// One serving variant in a scenario's fleet.
+#[derive(Debug, Clone)]
+pub struct LaneSpec {
+    /// Arch name in the engine's manifest (`gen_<arch>` must exist).
+    pub arch: String,
+    /// Virtual cost of one executed decode step on this lane.
+    pub step_ticks: u64,
+    /// Router quality rank (higher = better; drives SLA routing).
+    pub quality: f64,
+}
+
+/// A frozen bench scenario: fixed-seed trace + fleet + clock mapping.
+/// Everything a leg's schedule depends on lives here, so two runs of the
+/// same scenario produce identical samples.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub suite: String,
+    pub seed: u64,
+    /// Arrival-offset mapping from workload seconds to ticks.
+    pub ticks_per_sec: f64,
+    /// Partial-wave deadline, in ticks.
+    pub max_wait_ticks: u64,
+    /// Completions dropped from the head of the latency summary (cold
+    /// waves: first-wave memory uploads, unfilled batches).
+    pub warmup: usize,
+    /// Quality-ordered fleet (index 0 = best quality).
+    pub lanes: Vec<LaneSpec>,
+    pub trace: Vec<TimedRequest>,
+}
+
+impl Scenario {
+    /// Router over the fleet: token latency = per-step tick cost in
+    /// seconds, quality from the lane spec.
+    pub fn router(&self) -> Router {
+        Router::new(
+            self.lanes
+                .iter()
+                .map(|l| VariantInfo {
+                    name: l.arch.clone(),
+                    token_latency: l.step_ticks as f64 / self.ticks_per_sec,
+                    quality: l.quality,
+                })
+                .collect(),
+            RouterPolicy::QualityWithinSla,
+        )
+    }
+}
+
+/// One completed request in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sample {
+    pub id: u64,
+    pub arrive_tick: u64,
+    pub done_tick: u64,
+}
+
+impl Sample {
+    pub fn latency_ticks(&self) -> u64 {
+        self.done_tick - self.arrive_tick
+    }
+}
+
+/// How a leg overlaps its lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Concurrency {
+    /// One shared clock: decode blocks admission across all lanes (the
+    /// single-threaded baseline).
+    Serial,
+    /// Per-lane clocks: lanes decode independently (one worker per
+    /// variant); leg wall = the slowest lane's clock.
+    Overlapped,
+}
+
+/// One measured (policy, concurrency, exec-mode) replay of a scenario.
+#[derive(Debug)]
+pub struct Leg {
+    pub name: String,
+    pub policy: ServePolicy,
+    pub concurrency: Concurrency,
+    pub exec: ExecMode,
+    /// Completion samples, sorted by (done_tick, id) — completion order,
+    /// ties broken deterministically.
+    pub samples: Vec<Sample>,
+    /// Merged per-lane serve metrics.  Only the deterministic fields
+    /// (steps, occupancy counters, tokens, bytes) are meaningful here; the
+    /// wall-clock fields (`busy_secs`, `latencies`) are replay artifacts.
+    pub metrics: ServeMetrics,
+    /// Virtual makespan: final shared clock (serial) or the slowest lane's
+    /// clock (overlapped).
+    pub wall_ticks: u64,
+}
+
+/// Latencies (ticks, as f64 for the summary stats) after dropping the first
+/// `warmup` completions.  Samples must already be in completion order, as
+/// [`Leg::samples`] guarantees.
+pub fn trimmed_latencies(samples: &[Sample], warmup: usize) -> Vec<f64> {
+    samples
+        .iter()
+        .skip(warmup.min(samples.len()))
+        .map(|s| s.latency_ticks() as f64)
+        .collect()
+}
+
+/// Replays one [`Scenario`] leg at a time over a (usually reference)
+/// engine.  Routing happens once at construction; every leg replays the
+/// same per-lane sub-traces.
+pub struct Harness<'a> {
+    pub engine: &'a Engine,
+    pub scenario: Scenario,
+    /// Per-lane routed sub-trace: `(request, arrive_tick)` in trace order.
+    routed: Vec<Vec<(crate::serve::Request, u64)>>,
+}
+
+impl<'a> Harness<'a> {
+    pub fn new(engine: &'a Engine, scenario: Scenario) -> Result<Harness<'a>> {
+        anyhow::ensure!(!scenario.lanes.is_empty(), "scenario '{}' has no lanes", scenario.name);
+        for l in &scenario.lanes {
+            anyhow::ensure!(l.step_ticks > 0, "lane '{}': step_ticks must be positive", l.arch);
+            anyhow::ensure!(
+                engine.has_program(&format!("gen_{}", l.arch)),
+                "lane '{}' has no gen program in the engine manifest",
+                l.arch
+            );
+        }
+        let router = scenario.router();
+        let mut routed: Vec<Vec<(crate::serve::Request, u64)>> =
+            vec![Vec::new(); scenario.lanes.len()];
+        for tr in &scenario.trace {
+            let variant = router.route(&tr.request);
+            let lane = scenario
+                .lanes
+                .iter()
+                .position(|l| l.arch == variant)
+                .context("router picked an unknown lane")?;
+            let at = arrival_tick(tr.at, scenario.ticks_per_sec);
+            routed[lane].push((tr.request.clone(), at));
+        }
+        Ok(Harness { engine, scenario, routed })
+    }
+
+    /// Requests routed to each lane (scenario sanity checks / reports).
+    pub fn lane_loads(&self) -> Vec<usize> {
+        self.routed.iter().map(Vec::len).collect()
+    }
+
+    /// Replay one leg.  `Serial` is only defined for the wave policy (the
+    /// single-threaded baseline the cluster exposes); continuous legs are
+    /// always `Overlapped`.
+    pub fn run_leg(
+        &self,
+        name: &str,
+        policy: ServePolicy,
+        concurrency: Concurrency,
+        exec: ExecMode,
+    ) -> Result<Leg> {
+        let (samples, metrics, wall) = match (policy, concurrency) {
+            (ServePolicy::Wave, Concurrency::Overlapped) => self.wave_overlapped(exec)?,
+            (ServePolicy::Wave, Concurrency::Serial) => self.wave_serial(exec)?,
+            (ServePolicy::Continuous, Concurrency::Overlapped) => self.continuous(exec)?,
+            (ServePolicy::Continuous, Concurrency::Serial) => {
+                bail!("serial replay is wave-only (the cluster has no serial continuous path)")
+            }
+        };
+        let mut samples = samples;
+        samples.sort_by_key(|s| (s.done_tick, s.id));
+        anyhow::ensure!(
+            samples.len() == self.scenario.trace.len(),
+            "leg '{name}' answered {} of {} requests",
+            samples.len(),
+            self.scenario.trace.len()
+        );
+        Ok(Leg {
+            name: name.to_string(),
+            policy,
+            concurrency,
+            exec,
+            samples,
+            metrics,
+            wall_ticks: wall,
+        })
+    }
+
+    fn wave_overlapped(&self, exec: ExecMode) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        let mut samples = Vec::new();
+        let mut metrics = ServeMetrics::default();
+        let mut wall = 0u64;
+        for (spec, sub) in self.scenario.lanes.iter().zip(&self.routed) {
+            let mut lane = WaveLane::new(self.engine, spec, exec)?;
+            let mut clock = StepClock::new();
+            let mut i = 0usize;
+            loop {
+                while i < sub.len() && sub[i].1 <= clock.now() {
+                    lane.queue.push_back(sub[i].clone());
+                    i += 1;
+                }
+                if lane.queue.len() >= lane.de.width {
+                    lane.fire(&mut clock, &mut samples)?;
+                    continue;
+                }
+                if let Some((_, oldest)) = lane.queue.front() {
+                    let deadline = oldest + self.scenario.max_wait_ticks;
+                    if i < sub.len() && sub[i].1 <= deadline {
+                        // an arrival lands before the partial-wave deadline:
+                        // admit it first (it may fill the wave)
+                        clock.at_least(sub[i].1);
+                        continue;
+                    }
+                    clock.at_least(deadline);
+                    lane.fire(&mut clock, &mut samples)?;
+                    continue;
+                }
+                if i < sub.len() {
+                    clock.at_least(sub[i].1);
+                    continue;
+                }
+                break;
+            }
+            metrics.merge(&lane.metrics);
+            wall = wall.max(clock.now());
+        }
+        Ok((samples, metrics, wall))
+    }
+
+    fn wave_serial(&self, exec: ExecMode) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        let mut lanes = self
+            .scenario
+            .lanes
+            .iter()
+            .map(|spec| WaveLane::new(self.engine, spec, exec))
+            .collect::<Result<Vec<_>>>()?;
+        // interleave the routed sub-traces back into global trace order
+        let mut merged: Vec<(usize, &(crate::serve::Request, u64))> = Vec::new();
+        for (li, sub) in self.routed.iter().enumerate() {
+            merged.extend(sub.iter().map(|e| (li, e)));
+        }
+        merged.sort_by_key(|(_, (r, at))| (*at, r.id));
+
+        let mut samples = Vec::new();
+        let mut clock = StepClock::new();
+        for (li, (r, at)) in merged {
+            clock.at_least(*at);
+            lanes[li].queue.push_back((r.clone(), *at));
+            // fire due waves anywhere to a fixpoint: decode on one lane can
+            // expire another lane's deadline
+            loop {
+                let mut fired = false;
+                for lane in lanes.iter_mut() {
+                    while lane.due(clock.now(), self.scenario.max_wait_ticks) {
+                        lane.fire(&mut clock, &mut samples)?;
+                        fired = true;
+                    }
+                }
+                if !fired {
+                    break;
+                }
+            }
+        }
+        for lane in lanes.iter_mut() {
+            while !lane.queue.is_empty() {
+                lane.fire(&mut clock, &mut samples)?;
+            }
+        }
+        let mut metrics = ServeMetrics::default();
+        for lane in &lanes {
+            metrics.merge(&lane.metrics);
+        }
+        Ok((samples, metrics, clock.now()))
+    }
+
+    fn continuous(&self, exec: ExecMode) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        let mut samples = Vec::new();
+        let mut metrics = ServeMetrics::default();
+        let mut wall = 0u64;
+        // the scheduler tracks wall submission Instants we ignore; one epoch
+        // keeps them harmlessly constant
+        let epoch = Instant::now();
+        for (spec, sub) in self.scenario.lanes.iter().zip(&self.routed) {
+            let arrive: HashMap<u64, u64> = sub.iter().map(|(q, at)| (q.id, *at)).collect();
+            let de = DecodeEngine::new(self.engine, &spec.arch)?;
+            anyhow::ensure!(
+                de.has_masked(),
+                "lane '{}': continuous leg needs gen_masked_{}",
+                spec.arch,
+                spec.arch
+            );
+            let mut st = de.init_state(0)?;
+            st.set_mode(exec);
+            let mut sched = SlotScheduler::new(spec.arch.clone(), RefSlotExec { de, st });
+            let mut clock = StepClock::new();
+            let mut i = 0usize;
+            loop {
+                while i < sub.len() && sub[i].1 <= clock.now() {
+                    sched.submit(sub[i].0.clone(), epoch);
+                    i += 1;
+                }
+                if sched.has_work() {
+                    let s0 = sched.metrics.steps;
+                    let rs = sched.step()?;
+                    clock.advance((sched.metrics.steps - s0) * spec.step_ticks);
+                    let done = clock.now();
+                    for r in rs {
+                        let at = *arrive
+                            .get(&r.id)
+                            .context("response for an unrouted request")?;
+                        samples.push(Sample { id: r.id, arrive_tick: at, done_tick: done });
+                    }
+                } else if i < sub.len() {
+                    clock.at_least(sub[i].1);
+                } else {
+                    break;
+                }
+            }
+            metrics.merge(&sched.metrics);
+            wall = wall.max(clock.now());
+        }
+        Ok((samples, metrics, wall))
+    }
+}
+
+/// One wave-policy lane: real decode engine + state + virtual-time queue.
+struct WaveLane<'e> {
+    de: DecodeEngine<'e>,
+    st: StateStore,
+    step_ticks: u64,
+    queue: VecDeque<(crate::serve::Request, u64)>,
+    metrics: ServeMetrics,
+}
+
+impl<'e> WaveLane<'e> {
+    fn new(engine: &'e Engine, spec: &LaneSpec, exec: ExecMode) -> Result<WaveLane<'e>> {
+        let de = DecodeEngine::new(engine, &spec.arch)?;
+        let mut st = de.init_state(0)?;
+        st.set_mode(exec);
+        Ok(WaveLane {
+            de,
+            st,
+            step_ticks: spec.step_ticks,
+            queue: VecDeque::new(),
+            metrics: ServeMetrics::default(),
+        })
+    }
+
+    /// Wave-batcher readiness at virtual time `now`: full width, or the
+    /// oldest request past the partial-wave deadline.
+    fn due(&self, now: u64, max_wait: u64) -> bool {
+        self.queue.len() >= self.de.width
+            || self.queue.front().is_some_and(|(_, at)| at + max_wait <= now)
+    }
+
+    /// Pop one wave, decode it for real, advance the clock by the executed
+    /// steps, and record completion samples at the new time.
+    fn fire(&mut self, clock: &mut StepClock, samples: &mut Vec<Sample>) -> Result<()> {
+        let n = self.queue.len().min(self.de.width);
+        let popped: Vec<(crate::serve::Request, u64)> = self.queue.drain(..n).collect();
+        let wave = BatchWave {
+            requests: popped.iter().map(|(r, _)| (r.clone(), Instant::now())).collect(),
+        };
+        let s0 = self.metrics.steps;
+        self.de.decode_wave(&mut self.st, &wave, &mut self.metrics)?;
+        clock.advance((self.metrics.steps - s0) * self.step_ticks);
+        let done = clock.now();
+        samples.extend(
+            popped
+                .iter()
+                .map(|(r, at)| Sample { id: r.id, arrive_tick: *at, done_tick: done }),
+        );
+        Ok(())
+    }
+}
+
+/// Continuous-lane executor over the real masked decode program (identical
+/// to the cluster's lane executor, minus the thread).
+struct RefSlotExec<'e> {
+    de: DecodeEngine<'e>,
+    st: StateStore,
+}
+
+impl SlotExecutor for RefSlotExec<'_> {
+    fn width(&self) -> usize {
+        self.de.width
+    }
+
+    fn step(&mut self, x: &[i32], reset: &[bool]) -> Result<Vec<i32>> {
+        let logits = self.de.decode_step_masked(&mut self.st, x, reset)?;
+        Ok(self.de.argmax_rows(&logits))
+    }
+
+    fn bytes_synced(&self) -> u64 {
+        self.st.stats().total_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(id: u64, at: u64, done: u64) -> Sample {
+        Sample { id, arrive_tick: at, done_tick: done }
+    }
+
+    #[test]
+    fn trim_drops_exactly_the_warmup_head() {
+        let s = vec![sample(0, 0, 10), sample(1, 2, 10), sample(2, 4, 20)];
+        assert_eq!(trimmed_latencies(&s, 0), vec![10.0, 8.0, 16.0]);
+        assert_eq!(trimmed_latencies(&s, 1), vec![8.0, 16.0]);
+        assert_eq!(trimmed_latencies(&s, 3), Vec::<f64>::new());
+        // over-trimming an exhausted sample set is a no-op, not a panic
+        assert_eq!(trimmed_latencies(&s, 99), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn sample_latency_is_done_minus_arrive() {
+        assert_eq!(sample(7, 3, 11).latency_ticks(), 8);
+        assert_eq!(sample(7, 3, 3).latency_ticks(), 0);
+    }
+}

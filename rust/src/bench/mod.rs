@@ -1,0 +1,38 @@
+//! Bench subsystem: a deterministic, hermetic performance harness.
+//!
+//! PLANER's claims are latency claims, so the repo needs perf numbers that
+//! (a) run anywhere — no AOT artifacts, no accelerator — and (b) are exact
+//! enough to diff in CI.  This module provides both:
+//!
+//! - [`clock`] — the virtual step-clock: time advances only on executed
+//!   decode steps and workload arrivals, so schedules (and therefore
+//!   latencies, in ticks) are pure functions of the seed;
+//! - [`harness`] — [`harness::Scenario`] (frozen trace + fleet) replayed by
+//!   [`harness::Harness`] into [`harness::Leg`]s of
+//!   [`harness::Sample`]s, over the *real* serve primitives
+//!   (`DecodeEngine`, `SlotScheduler`) and real (reference-backend) decode
+//!   math — wave-vs-continuous and serial-vs-concurrent A/Bs measure
+//!   genuine scheduling effects, not simulator sleeps;
+//! - [`report`] — schema-versioned `BENCH_<scenario>.json`
+//!   ([`report::Report`], nearest-rank [`report::Summary`], host env
+//!   fingerprint) that CI archives and `scripts/bench_gate.sh` diffs
+//!   against the committed baseline;
+//! - [`scenarios`] — the frozen hermetic suite (`planer bench --suite
+//!   hermetic --backend ref`, also run by `cargo bench --bench
+//!   coordinator`).
+//!
+//! Division of labour with the PJRT benches: this harness proves
+//! *scheduling* properties (p95, occupancy, bytes/token) deterministically;
+//! wall-clock step latency of real XLA programs stays with
+//! `cargo bench --bench end_to_end` / `block_latency` on artifact builds,
+//! which reuse [`report`] to emit (non-deterministic, ungated) BENCH JSON.
+
+pub mod clock;
+pub mod harness;
+pub mod report;
+pub mod scenarios;
+
+pub use clock::{arrival_tick, StepClock};
+pub use harness::{trimmed_latencies, Concurrency, Harness, LaneSpec, Leg, Sample, Scenario};
+pub use report::{env_fingerprint, LegReport, Report, Summary, BENCH_SCHEMA};
+pub use scenarios::{bench_cfg, fleet_engine, run_named, run_suite, DEFAULT_SEED, HERMETIC_SUITE};

@@ -1,0 +1,435 @@
+//! Machine-readable bench reports: the `BENCH_<scenario>.json` schema the
+//! CI perf gate (`scripts/bench_gate.sh`) archives and diffs.
+//!
+//! Schema (version [`BENCH_SCHEMA`]):
+//!
+//! ```text
+//! {
+//!   "bench_schema": 1,
+//!   "scenario": "coordinator",        // file name: BENCH_<scenario>.json
+//!   "suite": "hermetic",
+//!   "backend": "ref",
+//!   "deterministic": true,            // legs are virtual-time (ticks) and
+//!                                     // byte-identical across runs; false
+//!                                     // for wall-clock (PJRT) reports
+//!   "seed": 42, "ticks_per_sec": 1000, "warmup": 4, "requests": 64,
+//!   "env": { "os": ..., "arch": ..., "host": ... },   // fingerprint only —
+//!                                     // excluded from the determinism claim
+//!   "legs": [ {
+//!     "name": "wave", "policy": "wave", "concurrency": "overlapped",
+//!     "exec": "resident",
+//!     "requests": 64, "tokens_out": 580, "waves": 17, "steps": 500,
+//!     "wall_ticks": 520, "occupancy": 0.70,
+//!     "bytes_synced": 167936, "bytes_per_token": 289.5,
+//!     "latency": { "unit": "ticks", "n": 60, "mean": ...,
+//!                  "min": ..., "max": ..., "p50": ..., "p95": ... }
+//!   } ... ]
+//! }
+//! ```
+//!
+//! The gate reads `legs[*].latency.p95` and fails on >threshold regressions
+//! against the committed `rust/benches/BENCH_BASELINE.json`; everything
+//! else is context for humans and dashboards.  `deterministic: false`
+//! reports (real-engine wall clock) are archived but never gated.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::ExecMode;
+use crate::serve::{percentile, ServePolicy};
+use crate::util::json::Json;
+
+use super::harness::{trimmed_latencies, Concurrency, Leg, Scenario};
+
+/// Version stamp every report carries; bump on any breaking schema change
+/// (the gate refuses to compare across versions).
+pub const BENCH_SCHEMA: u64 = 1;
+
+/// Nearest-rank summary statistics over one latency sample (the same
+/// percentile definition as `serve::percentile`, so benches, serve reports
+/// and the CI gate agree on what "p95" means).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    /// Sample unit, e.g. "ticks" (virtual) or "ms" (wall clock).
+    pub unit: String,
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Summarise `xs` (need not be sorted).  An empty sample yields an
+    /// all-zero summary rather than NaNs, so reports stay JSON-clean.
+    pub fn of(unit: &str, xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                unit: unit.into(),
+                n: 0,
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+            };
+        }
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+            sum += x;
+        }
+        Summary {
+            unit: unit.into(),
+            n: xs.len(),
+            mean: sum / xs.len() as f64,
+            min,
+            max,
+            p50: percentile(xs, 0.50),
+            p95: percentile(xs, 0.95),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("unit", Json::Str(self.unit.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Summary> {
+        let f = |k: &str| -> Result<f64> { Ok(j.req(k)?.as_f64().context(k.to_string())?) };
+        Ok(Summary {
+            unit: j.req("unit")?.as_str().context("unit")?.to_string(),
+            n: f("n")? as usize,
+            mean: f("mean")?,
+            min: f("min")?,
+            max: f("max")?,
+            p50: f("p50")?,
+            p95: f("p95")?,
+        })
+    }
+}
+
+/// One leg's report entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LegReport {
+    pub name: String,
+    pub policy: String,
+    pub concurrency: String,
+    pub exec: String,
+    pub requests: usize,
+    pub tokens_out: usize,
+    pub waves: usize,
+    pub steps: u64,
+    pub wall_ticks: u64,
+    pub occupancy: f64,
+    pub bytes_synced: u64,
+    pub bytes_per_token: f64,
+    pub latency: Summary,
+}
+
+impl LegReport {
+    /// Build from a harness leg, applying the scenario's warmup trim to the
+    /// latency summary (counters stay untrimmed — they describe the whole
+    /// replay).
+    pub fn from_leg(leg: &Leg, warmup: usize) -> LegReport {
+        let lat = trimmed_latencies(&leg.samples, warmup);
+        LegReport {
+            name: leg.name.clone(),
+            policy: policy_str(leg.policy).into(),
+            concurrency: concurrency_str(leg.concurrency).into(),
+            exec: exec_str(leg.exec).into(),
+            requests: leg.samples.len(),
+            tokens_out: leg.metrics.tokens_out,
+            waves: leg.metrics.waves,
+            steps: leg.metrics.steps,
+            wall_ticks: leg.wall_ticks,
+            occupancy: leg.metrics.occupancy(),
+            bytes_synced: leg.metrics.bytes_synced,
+            bytes_per_token: leg.metrics.bytes_per_token(),
+            latency: Summary::of("ticks", &lat),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("concurrency", Json::Str(self.concurrency.clone())),
+            ("exec", Json::Str(self.exec.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("tokens_out", Json::Num(self.tokens_out as f64)),
+            ("waves", Json::Num(self.waves as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("wall_ticks", Json::Num(self.wall_ticks as f64)),
+            ("occupancy", Json::Num(self.occupancy)),
+            ("bytes_synced", Json::Num(self.bytes_synced as f64)),
+            ("bytes_per_token", Json::Num(self.bytes_per_token)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<LegReport> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?.as_str().context(k.to_string())?.to_string())
+        };
+        let f = |k: &str| -> Result<f64> { Ok(j.req(k)?.as_f64().context(k.to_string())?) };
+        Ok(LegReport {
+            name: s("name")?,
+            policy: s("policy")?,
+            concurrency: s("concurrency")?,
+            exec: s("exec")?,
+            requests: f("requests")? as usize,
+            tokens_out: f("tokens_out")? as usize,
+            waves: f("waves")? as usize,
+            steps: f("steps")? as u64,
+            wall_ticks: f("wall_ticks")? as u64,
+            occupancy: f("occupancy")?,
+            bytes_synced: f("bytes_synced")? as u64,
+            bytes_per_token: f("bytes_per_token")?,
+            latency: Summary::from_json(j.req("latency")?)?,
+        })
+    }
+
+    /// One aligned table row (see [`Report::render`]).
+    pub fn render_row(&self) -> String {
+        format!(
+            "{:14} {:5} {:6} {:7} {:7} {:6.2} {:8.1} {:8.1} {:10.0}",
+            self.name,
+            self.requests,
+            self.steps,
+            self.wall_ticks,
+            self.waves,
+            self.occupancy,
+            self.latency.p50,
+            self.latency.p95,
+            self.bytes_per_token,
+        )
+    }
+}
+
+/// A full scenario report (serialised as `BENCH_<scenario>.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub schema: u64,
+    pub scenario: String,
+    pub suite: String,
+    pub backend: String,
+    pub deterministic: bool,
+    pub seed: u64,
+    pub ticks_per_sec: f64,
+    pub warmup: usize,
+    pub requests: usize,
+    /// Host fingerprint (os/arch/host).  Context for archived artifacts;
+    /// NOT covered by the determinism claim and ignored by the gate.
+    pub env: Vec<(String, String)>,
+    pub legs: Vec<LegReport>,
+}
+
+impl Report {
+    /// Assemble a deterministic report from harness legs.
+    pub fn from_legs(scenario: &Scenario, backend: &str, legs: &[Leg]) -> Report {
+        Report {
+            schema: BENCH_SCHEMA,
+            scenario: scenario.name.clone(),
+            suite: scenario.suite.clone(),
+            backend: backend.to_string(),
+            deterministic: true,
+            seed: scenario.seed,
+            ticks_per_sec: scenario.ticks_per_sec,
+            warmup: scenario.warmup,
+            requests: scenario.trace.len(),
+            env: env_fingerprint(),
+            legs: legs.iter().map(|l| LegReport::from_leg(l, scenario.warmup)).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench_schema", Json::Num(self.schema as f64)),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("suite", Json::Str(self.suite.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("deterministic", Json::Bool(self.deterministic)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("ticks_per_sec", Json::Num(self.ticks_per_sec)),
+            ("warmup", Json::Num(self.warmup as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            (
+                "env",
+                Json::Obj(
+                    self.env.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+                ),
+            ),
+            ("legs", Json::Arr(self.legs.iter().map(LegReport::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Report> {
+        let schema = j.req("bench_schema")?.as_f64().context("bench_schema")? as u64;
+        anyhow::ensure!(
+            schema == BENCH_SCHEMA,
+            "bench schema {schema} unsupported (this build reads {BENCH_SCHEMA})"
+        );
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?.as_str().context(k.to_string())?.to_string())
+        };
+        let env = match j.req("env")? {
+            Json::Obj(o) => o
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str().context("env value")?.to_string())))
+                .collect::<Result<Vec<_>>>()?,
+            _ => anyhow::bail!("env must be an object"),
+        };
+        Ok(Report {
+            schema,
+            scenario: s("scenario")?,
+            suite: s("suite")?,
+            backend: s("backend")?,
+            deterministic: j.req("deterministic")?.as_bool().context("deterministic")?,
+            seed: j.req("seed")?.as_f64().context("seed")? as u64,
+            ticks_per_sec: j.req("ticks_per_sec")?.as_f64().context("ticks_per_sec")?,
+            warmup: j.req("warmup")?.as_usize().context("warmup")?,
+            requests: j.req("requests")?.as_usize().context("requests")?,
+            env,
+            legs: j
+                .req("legs")?
+                .as_arr()
+                .context("legs")?
+                .iter()
+                .map(LegReport::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// File name this report persists under.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.scenario)
+    }
+
+    /// Write `BENCH_<scenario>.json` (pretty, trailing newline) into `dir`,
+    /// creating it if needed.  Returns the written path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating bench output dir {}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Human-readable leg table for bench stdout.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "scenario {} (suite {}, seed {}, {} reqs, warmup {}, 1 tick = {:.0}us virtual):\n",
+            self.scenario,
+            self.suite,
+            self.seed,
+            self.requests,
+            self.warmup,
+            1e6 / self.ticks_per_sec
+        );
+        out.push_str(
+            "  leg            reqs  steps    wall   waves  occup  p50-tk   p95-tk      B/tok\n",
+        );
+        for leg in &self.legs {
+            out.push_str("  ");
+            out.push_str(&leg.render_row());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Look a leg up by name (gate checks, tests).
+    pub fn leg(&self, name: &str) -> Option<&LegReport> {
+        self.legs.iter().find(|l| l.name == name)
+    }
+}
+
+/// Host fingerprint stamped into every report.  Stable on one machine;
+/// differs across machines by design (it exists so archived artifacts say
+/// where they came from).
+pub fn env_fingerprint() -> Vec<(String, String)> {
+    vec![
+        ("os".to_string(), std::env::consts::OS.to_string()),
+        ("arch".to_string(), std::env::consts::ARCH.to_string()),
+        (
+            "host".to_string(),
+            std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown".to_string()),
+        ),
+    ]
+}
+
+fn policy_str(p: ServePolicy) -> &'static str {
+    match p {
+        ServePolicy::Wave => "wave",
+        ServePolicy::Continuous => "continuous",
+    }
+}
+
+fn concurrency_str(c: Concurrency) -> &'static str {
+    match c {
+        Concurrency::Serial => "serial",
+        Concurrency::Overlapped => "overlapped",
+    }
+}
+
+fn exec_str(e: ExecMode) -> &'static str {
+    match e {
+        ExecMode::Auto => "resident",
+        ExecMode::Roundtrip => "roundtrip",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_nearest_rank_single_sample() {
+        // n = 1: every percentile is the one sample
+        let s = Summary::of("ticks", &[7.0]);
+        assert_eq!((s.n, s.mean, s.min, s.max, s.p50, s.p95), (1, 7.0, 7.0, 7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn summary_nearest_rank_ties() {
+        // ties collapse to the tied value at every rank they span
+        let s = Summary::of("ticks", &[3.0, 3.0, 3.0, 9.0]);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p95, 9.0);
+        let all_tied = Summary::of("ticks", &[5.0; 10]);
+        assert_eq!(all_tied.p50, 5.0);
+        assert_eq!(all_tied.p95, 5.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroed_not_nan() {
+        let s = Summary::of("ticks", &[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p95, 0.0);
+        assert!(!s.mean.is_nan());
+    }
+
+    #[test]
+    fn summary_handles_unsorted_input() {
+        let s = Summary::of("ticks", &[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p95, 4.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! The hermetic bench suite: frozen scenarios over the reference backend.
+//!
+//! Every scenario here runs with **zero artifacts** — engines are
+//! synthesized by `runtime::refback::bench_fleet` over [`bench_cfg`] — and
+//! measures in virtual ticks (see `bench::clock`), so the emitted
+//! `BENCH_<scenario>.json` is byte-identical across runs with the same
+//! seed.  That is what lets CI commit a baseline and gate regressions
+//! (`scripts/bench_gate.sh`); `scripts/bench_baseline.py` mirrors the trace
+//! generation and scheduling semantics to seed that baseline.
+//!
+//! **Do not retune constants casually**: any change to a scenario's
+//! config/trace/fleet changes its report, which requires regenerating
+//! `rust/benches/BENCH_BASELINE.json` in the same PR (see
+//! rust/benches/README.md for the procedure).
+//!
+//! Scenarios:
+//! - [`coordinator`] — wave-vs-continuous policy A/B, one variant, steady
+//!   arrivals with bimodal `n_gen` (2 | 16): the head-of-line-blocking
+//!   shape where continuous batching must win p95 and occupancy.
+//! - [`serve_fleet`] — serial-vs-concurrent A/B over a 3-variant fleet with
+//!   graded per-step costs and bimodal SLAs: serial wall ≈ Σ lane work,
+//!   overlapped wall ≈ max lane work.
+//! - [`residency`] — resident-vs-roundtrip exec A/B on the continuous
+//!   path: identical schedule, orders-of-magnitude different bytes/token.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{refback, Engine, ExecMode, ModelConfig};
+use crate::serve::{Arrival, ServePolicy, WorkloadGen};
+use crate::util::rng::Rng;
+
+use super::harness::{Concurrency, Harness, LaneSpec, Scenario};
+use super::report::Report;
+
+/// Scenario names in suite order.
+pub const HERMETIC_SUITE: &[&str] = &["coordinator", "serve_fleet", "residency"];
+
+/// Default seed for the committed baseline (CI runs exactly this).
+pub const DEFAULT_SEED: u64 = 42;
+
+/// The serve-shaped reference config every hermetic scenario uses: small
+/// enough that a full suite is a sub-second CPU run, wide enough (batch 4)
+/// that wave padding and slot reuse actually happen.
+pub fn bench_cfg() -> ModelConfig {
+    let mut c = ModelConfig::tiny();
+    c.vocab = 17;
+    c.d_model = 8;
+    c.n_slots = 4;
+    c.d_inner = 12;
+    c.n_heads_full = 2;
+    c.seq_len = 4;
+    c.mem_len = 4;
+    c.batch = 4;
+    c.n_experts = 2;
+    c.sffl_inner = 16;
+    c.capacity_factor = 2.0;
+    c
+}
+
+/// Reference engine over the first `n` bench-fleet archs (see
+/// `refback::bench_fleet`).
+pub fn fleet_engine(n: usize) -> Result<Engine> {
+    let cfg = bench_cfg();
+    let archs = refback::bench_fleet(&cfg, n);
+    Engine::reference(cfg, archs)
+}
+
+/// Graded lane specs over the fleet: lane `k` costs `base + n - 1 - k`
+/// ticks per step (best quality = slowest) with quality rank `n - k`.
+fn fleet_lanes(n: usize, base: u64) -> Vec<LaneSpec> {
+    (0..n)
+        .map(|k| LaneSpec {
+            arch: refback::fleet_arch_name(k),
+            step_ticks: base + (n - 1 - k) as u64,
+            quality: (n - k) as f64,
+        })
+        .collect()
+}
+
+/// Wave-vs-continuous policy A/B (see module docs).
+pub fn coordinator(seed: u64) -> Scenario {
+    let mut gen = WorkloadGen::new(bench_cfg().vocab);
+    // 3ms gaps load one ~2.9-tick/request continuous lane to ~95% while the
+    // ~4.7-tick/request wave schedule saturates — the regime where
+    // continuous batching wins BOTH p95 and occupancy on every seed tried
+    // (scripts/bench_baseline.py sweeps this)
+    gen.arrival = Arrival::Uniform { gap_s: 0.003 };
+    gen.lengths = crate::serve::workload::LengthDist {
+        prompt_min: 1,
+        prompt_max: 4,
+        gen_min: 2,
+        gen_max: 16,
+    };
+    let mut trace = gen.generate(64, seed);
+    // bimodal n_gen 2 | 16 from an independent stream, so the short/long
+    // mix does not disturb the prompt/sla draws above
+    let mut rng = Rng::new(seed ^ 0xb1f0);
+    for tr in &mut trace {
+        tr.request.n_gen = if rng.f64() < 0.5 { 2 } else { 16 };
+    }
+    Scenario {
+        name: "coordinator".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(1, 1),
+        trace,
+    }
+}
+
+/// Serial-vs-concurrent fleet A/B (see module docs).
+pub fn serve_fleet(seed: u64) -> Scenario {
+    let mut gen = WorkloadGen::bimodal_sla(bench_cfg().vocab, 0.018, 0.1);
+    gen.arrival = Arrival::Uniform { gap_s: 0.003 };
+    let trace = gen.generate(48, seed);
+    Scenario {
+        name: "serve_fleet".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(3, 1),
+        trace,
+    }
+}
+
+/// Resident-vs-roundtrip exec A/B (see module docs).
+pub fn residency(seed: u64) -> Scenario {
+    let gen = WorkloadGen::new(bench_cfg().vocab); // Burst: everything at t=0
+    let trace = gen.generate(32, seed);
+    Scenario {
+        name: "residency".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(1, 1),
+        trace,
+    }
+}
+
+/// Run one named scenario end to end, returning its report.
+pub fn run_named(name: &str, seed: u64) -> Result<Report> {
+    match name {
+        "coordinator" => {
+            let engine = fleet_engine(1)?;
+            let h = Harness::new(&engine, coordinator(seed))?;
+            let legs = vec![
+                h.run_leg("wave", ServePolicy::Wave, Concurrency::Overlapped, ExecMode::Auto)?,
+                h.run_leg(
+                    "continuous",
+                    ServePolicy::Continuous,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
+                )?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        "serve_fleet" => {
+            let engine = fleet_engine(3)?;
+            let h = Harness::new(&engine, serve_fleet(seed))?;
+            let legs = vec![
+                h.run_leg("serial", ServePolicy::Wave, Concurrency::Serial, ExecMode::Auto)?,
+                h.run_leg(
+                    "concurrent",
+                    ServePolicy::Wave,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
+                )?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        "residency" => {
+            let engine = fleet_engine(1)?;
+            let h = Harness::new(&engine, residency(seed))?;
+            let legs = vec![
+                h.run_leg(
+                    "resident",
+                    ServePolicy::Continuous,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
+                )?,
+                h.run_leg(
+                    "roundtrip",
+                    ServePolicy::Continuous,
+                    Concurrency::Overlapped,
+                    ExecMode::Roundtrip,
+                )?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        other => bail!("unknown bench scenario '{other}' (try {HERMETIC_SUITE:?})"),
+    }
+}
+
+/// Run the whole hermetic suite, writing `BENCH_<scenario>.json` per
+/// scenario into `out_dir`.  Returns (report, written path) pairs.
+pub fn run_suite(seed: u64, out_dir: &Path) -> Result<Vec<(Report, PathBuf)>> {
+    HERMETIC_SUITE
+        .iter()
+        .map(|name| {
+            let report = run_named(name, seed)?;
+            let path = report.write(out_dir)?;
+            Ok((report, path))
+        })
+        .collect()
+}

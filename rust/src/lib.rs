@@ -12,6 +12,7 @@
 
 pub mod arch;
 pub mod util;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;

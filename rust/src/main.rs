@@ -57,6 +57,14 @@ fn run() -> Result<()> {
         return Ok(());
     }
 
+    // `planer bench --suite hermetic`: dispatch BEFORE any engine/corpus
+    // construction — the suite builds its own reference fleet engines, and
+    // the default pjrt engine would die on missing artifacts in exactly the
+    // no-artifact environment the hermetic suite exists for.
+    if cmd == "bench" && args.get("suite").is_some() {
+        return run_bench_suite(&args);
+    }
+
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let engine = match args.get_or("backend", "pjrt").as_str() {
         "pjrt" => Engine::new(&artifacts)
@@ -326,6 +334,29 @@ fn run() -> Result<()> {
     Ok(())
 }
 
+/// `planer bench --suite hermetic --backend ref`: the deterministic serve
+/// A/B suite (`planer::bench`) — zero artifacts, virtual-time reports, one
+/// `BENCH_<scenario>.json` per scenario for the CI perf gate
+/// (`scripts/bench_gate.sh`).  Runs before any engine/pipeline setup.
+fn run_bench_suite(args: &Args) -> Result<()> {
+    let suite = args.get("suite").unwrap_or_default();
+    anyhow::ensure!(suite == "hermetic", "unknown --suite '{suite}' (hermetic)");
+    anyhow::ensure!(
+        args.get_or("backend", "pjrt") == "ref",
+        "--suite hermetic measures the reference backend; pass --backend ref"
+    );
+    let out = PathBuf::from(args.get_or("out", "."));
+    let seed = match args.get("seed") {
+        Some(_) => args.get_i32("seed", 0)? as u64,
+        None => planer::bench::DEFAULT_SEED,
+    };
+    for (report, path) in planer::bench::run_suite(seed, &out)? {
+        print!("{}", report.render());
+        println!("  wrote {}\n", path.display());
+    }
+    Ok(())
+}
+
 /// `planer serve` options (see HELP).
 struct ServeOpts {
     /// Cap on decode workers = variants served (0 = one per gen program).
@@ -510,6 +541,11 @@ USAGE: planer <cmd> [flags]
   compile  --name <arch> --arch-json <path> [--config tiny]
   archs
   bench    fig1|fig2|fig4|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|table1|all-static
+  bench    --suite hermetic --backend ref [--out DIR] [--seed N]
+           (deterministic serve A/B suite — wave-vs-continuous,
+            serial-vs-concurrent, resident-vs-roundtrip — over the
+            reference backend on a virtual step-clock; writes one
+            BENCH_<scenario>.json per scenario for the CI perf gate)
   roofline | ablation
   serve-trace --requests 16 [--variants 3] [--trace burst|bursty|bimodal]
               [--mode concurrent|serial|ab] [--policy wave|continuous|ab]

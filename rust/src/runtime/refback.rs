@@ -241,6 +241,38 @@ pub fn preset_archs(cfg: &ModelConfig) -> BTreeMap<String, Vec<Block>> {
     out
 }
 
+/// Canonical name of bench-fleet variant `k` ("fleet00", "fleet01", ...).
+/// Two digits keep `BTreeMap` iteration in quality order up to 100 lanes.
+pub fn fleet_arch_name(k: usize) -> String {
+    format!("fleet{k:02}")
+}
+
+/// Batched multi-arch synthesis for bench fleets: `n` graded variants of
+/// one config, quality-ordered (`fleet00` = richest).  Variant `k` rotates
+/// the block pattern and thins attention (`heads >> k`), with the marquee
+/// sparse block degrading MoE → scaled-FFL → skip — so a fleet exercises
+/// every block type the reference forward implements while giving the
+/// router a real quality/latency spread to schedule across.  Deterministic
+/// in `(cfg, n)`: bench scenarios freeze their fleet by construction.
+pub fn bench_fleet(cfg: &ModelConfig, n: usize) -> BTreeMap<String, Vec<Block>> {
+    assert!(n <= 100, "bench fleet names are two-digit (max 100 variants)");
+    let nh = cfg.n_heads_full.max(1);
+    (0..n)
+        .map(|k| {
+            let blocks = (0..cfg.n_slots)
+                .map(|i| match (i + k) % 4 {
+                    0 => Block::Mha { heads: (nh >> k.min(2)).max(1) },
+                    2 if k == 0 => Block::Moe { top_k: 2.min(cfg.n_experts) },
+                    2 if k == 1 => Block::SFfl,
+                    2 => Block::Skip,
+                    _ => Block::Ffl,
+                })
+                .collect();
+            (fleet_arch_name(k), blocks)
+        })
+        .collect()
+}
+
 // ------------------------------------------------------------- backend
 
 /// Pure-Rust reference backend (see module docs).  Holds only the model

@@ -244,6 +244,22 @@ impl<'a> Cluster<'a> {
         self.metrics.lock().unwrap().clone()
     }
 
+    /// All variants' metrics folded into one (step-weighted — see
+    /// [`ServeMetrics::merge`]): the cluster-wide occupancy / bytes-per-
+    /// token / percentile view the benches and reports aggregate over.
+    pub fn merged_metrics(&self) -> ServeMetrics {
+        let snapshot = self.metrics.lock().unwrap();
+        // lane order (quality rank), not HashMap order: reservoir merges
+        // sample, so fold order must be deterministic
+        let mut total = ServeMetrics::default();
+        for lane in &self.lanes {
+            if let Some(m) = snapshot.get(&lane.name) {
+                total.merge(m);
+            }
+        }
+        total
+    }
+
     fn reset_metrics(&mut self) {
         for lane in &mut self.lanes {
             lane.metrics = ServeMetrics::default();

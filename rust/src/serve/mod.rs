@@ -35,8 +35,9 @@
 //! ([`worker::WaveExecutor`], [`scheduler::SlotExecutor`]), so batching,
 //! deadline, FIFO-admission, slot-reuse and completion invariants are
 //! tested without XLA artifacts (rust/tests/{concurrent,continuous}_serve.rs),
-//! and `cargo bench --bench coordinator` A/Bs the two policies on a
-//! simulated mixed-length trace.
+//! and `cargo bench --bench coordinator` A/Bs the two policies over real
+//! reference-backend decode math on a deterministic virtual step-clock
+//! (`crate::bench` — the same run CI gates via `BENCH_coordinator.json`).
 //!
 //! # Backend selection
 //!

@@ -1,0 +1,206 @@
+//! Hermetic tests for the bench subsystem (`planer::bench`): report
+//! determinism, warmup trimming, nearest-rank percentile edges, schema
+//! round-trips, and the A/B claims the suite's scenarios exist to keep
+//! true.  Everything runs on the reference backend — zero artifacts.
+
+use planer::bench::{
+    fleet_engine, run_named, trimmed_latencies, Harness, Report, Sample, Summary, BENCH_SCHEMA,
+    DEFAULT_SEED, HERMETIC_SUITE,
+};
+use planer::util::json::Json;
+
+/// Two runs, same seed, fresh engines: byte-identical JSON.  This is the
+/// property the CI perf gate rests on — without it, diffing BENCH files
+/// would gate on noise.
+#[test]
+fn identical_seeds_produce_byte_identical_reports() {
+    let a = run_named("coordinator", 7).unwrap();
+    let b = run_named("coordinator", 7).unwrap();
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "same seed must serialize identically"
+    );
+}
+
+/// Determinism is not constancy: a different seed reshuffles the trace and
+/// the schedule must follow.
+#[test]
+fn different_seeds_produce_different_schedules() {
+    let a = run_named("coordinator", 7).unwrap();
+    let b = run_named("coordinator", 8).unwrap();
+    assert_ne!(
+        a.legs.iter().map(|l| l.latency.clone()).collect::<Vec<_>>(),
+        b.legs.iter().map(|l| l.latency.clone()).collect::<Vec<_>>(),
+        "seed 7 and 8 produced identical latency summaries"
+    );
+}
+
+/// Full report -> pretty JSON -> util::json parse -> Report -> equality.
+#[test]
+fn schema_round_trips_through_util_json() {
+    let rep = run_named("residency", 3).unwrap();
+    assert_eq!(rep.schema, BENCH_SCHEMA);
+    let text = rep.to_json().to_string_pretty();
+    let parsed = Report::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, rep);
+    // compact form round-trips too (the gate reads either)
+    let compact = Report::from_json(&Json::parse(&rep.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(compact, rep);
+}
+
+#[test]
+fn schema_version_is_enforced() {
+    let rep = run_named("residency", 3).unwrap();
+    let mut j = rep.to_json();
+    if let Json::Obj(o) = &mut j {
+        o[0].1 = Json::Num(99.0); // bench_schema
+    }
+    assert!(Report::from_json(&j).is_err(), "future schema versions must be rejected");
+}
+
+/// Warmup trims exactly the first completions from the latency summary and
+/// nothing else (counters describe the whole replay).
+#[test]
+fn warmup_trims_the_cold_head() {
+    let sample = |id, at, done| Sample { id, arrive_tick: at, done_tick: done };
+    let s = vec![sample(2, 0, 4), sample(0, 1, 9), sample(1, 3, 12)];
+    assert_eq!(trimmed_latencies(&s, 0), vec![4.0, 8.0, 9.0]);
+    assert_eq!(trimmed_latencies(&s, 2), vec![9.0]);
+    assert_eq!(trimmed_latencies(&s, 5), Vec::<f64>::new());
+
+    let rep = run_named("coordinator", DEFAULT_SEED).unwrap();
+    assert!(rep.warmup > 0, "suite scenarios must exercise the warmup policy");
+    for leg in &rep.legs {
+        assert_eq!(
+            leg.latency.n,
+            rep.requests - rep.warmup,
+            "leg '{}' summarized the wrong sample count",
+            leg.name
+        );
+        assert_eq!(leg.requests, rep.requests, "leg '{}' dropped requests", leg.name);
+    }
+}
+
+/// Nearest-rank percentile edges: n = 1, ties, and the empty sample.
+#[test]
+fn nearest_rank_percentile_edge_cases() {
+    let one = Summary::of("ticks", &[42.0]);
+    assert_eq!((one.p50, one.p95, one.min, one.max), (42.0, 42.0, 42.0, 42.0));
+
+    let tied = Summary::of("ticks", &[5.0, 5.0, 5.0, 5.0, 9.0]);
+    assert_eq!(tied.p50, 5.0, "rank 3 of 5 sits inside the tie run");
+    assert_eq!(tied.p95, 9.0, "rank 5 of 5 is the outlier");
+
+    let empty = Summary::of("ticks", &[]);
+    assert_eq!(empty.n, 0);
+    assert_eq!((empty.p50, empty.p95), (0.0, 0.0));
+    assert!(!empty.mean.is_nan(), "empty summaries must stay JSON-clean");
+}
+
+/// The claims each scenario exists to keep true, at the gated seed.
+#[test]
+fn suite_scenarios_hold_their_ab_claims() {
+    let coord = run_named("coordinator", DEFAULT_SEED).unwrap();
+    let (wave, cont) = (coord.leg("wave").unwrap(), coord.leg("continuous").unwrap());
+    assert!(
+        cont.latency.p95 < wave.latency.p95,
+        "continuous p95 {} !< wave p95 {}",
+        cont.latency.p95,
+        wave.latency.p95
+    );
+    assert!(
+        cont.occupancy > wave.occupancy,
+        "continuous occupancy {} !> wave {}",
+        cont.occupancy,
+        wave.occupancy
+    );
+    assert_eq!(wave.tokens_out, cont.tokens_out, "policies must emit the same token volume");
+
+    let fleet = run_named("serve_fleet", DEFAULT_SEED).unwrap();
+    let (serial, conc) = (fleet.leg("serial").unwrap(), fleet.leg("concurrent").unwrap());
+    assert!(
+        conc.wall_ticks < serial.wall_ticks,
+        "overlap must cut wall: {} !< {}",
+        conc.wall_ticks,
+        serial.wall_ticks
+    );
+    assert!(conc.latency.p95 <= serial.latency.p95);
+
+    let res = run_named("residency", DEFAULT_SEED).unwrap();
+    let (r, t) = (res.leg("resident").unwrap(), res.leg("roundtrip").unwrap());
+    assert!(
+        t.bytes_per_token > 10.0 * r.bytes_per_token,
+        "residency must save >10x bytes/token ({} vs {})",
+        r.bytes_per_token,
+        t.bytes_per_token
+    );
+    assert_eq!(r.latency, t.latency, "exec mode must not change the virtual schedule");
+    assert_eq!(r.steps, t.steps);
+}
+
+/// The committed baseline matches what this build actually measures, leg by
+/// leg, within the gate's threshold — the in-repo cross-check of
+/// `scripts/bench_baseline.py` (which seeded it) against the real harness.
+#[test]
+fn committed_baseline_matches_the_harness() {
+    let text = std::fs::read_to_string("benches/BENCH_BASELINE.json")
+        .expect("rust/benches/BENCH_BASELINE.json is committed");
+    let base = Json::parse(&text).unwrap();
+    assert_eq!(base.req("bench_schema").unwrap().as_f64(), Some(1.0));
+    let threshold = base.get("threshold_pct").and_then(Json::as_f64).unwrap_or(15.0);
+    let scenarios = base.req("scenarios").unwrap();
+    for name in HERMETIC_SUITE {
+        let entry = scenarios
+            .get(name)
+            .unwrap_or_else(|| panic!("baseline lacks scenario '{name}'"));
+        let rep = run_named(name, DEFAULT_SEED).unwrap();
+        for leg in &rep.legs {
+            let want = entry
+                .get(&leg.name)
+                .and_then(|l| l.get("p95"))
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("baseline lacks {name}/{}", leg.name));
+            let got = leg.latency.p95;
+            assert!(
+                got <= want * (1.0 + threshold / 100.0) && got >= want * (1.0 - threshold / 100.0),
+                "{name}/{}: harness p95 {got} vs baseline {want} drifted past {threshold}% — \
+                 regenerate the baseline (scripts/bench_gate.sh --update) or fix the mirror",
+                leg.name
+            );
+        }
+    }
+}
+
+/// Harness plumbing: lane validation and the routed split.
+#[test]
+fn harness_rejects_unknown_lanes_and_splits_the_fleet() {
+    let engine = fleet_engine(3).unwrap();
+    let scenario = planer::bench::scenarios::serve_fleet(DEFAULT_SEED);
+    let h = Harness::new(&engine, scenario).unwrap();
+    let loads = h.lane_loads();
+    assert_eq!(loads.len(), 3);
+    assert_eq!(loads.iter().sum::<usize>(), h.scenario.trace.len());
+    assert!(
+        loads.iter().filter(|&&n| n > 0).count() >= 2,
+        "bimodal SLAs must spread traffic across the fleet, got {loads:?}"
+    );
+
+    let mut bad = planer::bench::scenarios::serve_fleet(DEFAULT_SEED);
+    bad.lanes[0].arch = "no_such_arch".into();
+    assert!(Harness::new(&engine, bad).is_err(), "unknown lane arch must fail loudly");
+}
+
+/// The bench fleet synthesizes valid, quality-ordered reference archs.
+#[test]
+fn bench_fleet_synthesis_is_servable() {
+    let engine = fleet_engine(3).unwrap();
+    let names = engine.manifest.arch_names();
+    assert_eq!(names.len(), 3);
+    for (k, name) in names.iter().enumerate() {
+        assert_eq!(*name, planer::runtime::refback::fleet_arch_name(k).as_str());
+        assert!(engine.has_program(&format!("gen_{name}")));
+        assert!(engine.has_program(&format!("gen_masked_{name}")));
+        assert!(engine.has_program(&format!("init_{name}")));
+    }
+}

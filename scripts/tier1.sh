@@ -2,25 +2,64 @@
 # Tier-1 gate: the exact sequence CI runs (.github/workflows/ci.yml), so a
 # green local run means a green CI run.
 #
-#   scripts/tier1.sh            # fmt + clippy + build + test + bench compile
-#   SKIP_LINT=1 scripts/tier1.sh   # skip fmt/clippy
+#   scripts/tier1.sh               # fmt + clippy + build + test + smoke + bench compile
+#   SKIP_LINT=1 scripts/tier1.sh   # skip fmt/clippy (CI runs them in the lint job)
 #
 # The suite is hermetic: no AOT artifacts are required.  Artifact-gated
 # integration tests skip themselves when ./artifacts is absent, while the
-# reference-backend tests (tests/ref_backend.rs, tests/ref_serve.rs) and the
-# `serve --backend ref` smoke below exercise the full
-# prefill→decode→retire pipeline unconditionally.
+# reference-backend tests (tests/ref_backend.rs, tests/ref_serve.rs,
+# tests/bench_harness.rs) and the `serve --backend ref` smoke below exercise
+# the full prefill→decode→retire pipeline unconditionally.
+#
+# Every suite runs through `suite <name> <cmd...>`: set -e aborts on the
+# first failure (including the serve smoke — a previous revision could in
+# principle have masked a pipeline member's exit status; nothing here is
+# piped anymore, and pipefail guards anything that ever is), and the EXIT
+# trap prints a one-line summary of which suites ran, failed, or were
+# skipped — so a red run says *where* it died even in a terse CI log.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+ran=()
+skipped=()
+current=""
+
+summary() {
+    local status=$?
+    local line="tier1 summary: ran [${ran[*]:-}]"
+    if [[ $status -ne 0 && -n "$current" ]]; then
+        line+=" FAILED [$current]"
+    fi
+    line+=" skipped [${skipped[*]:-}]"
+    echo "$line"
+    exit $status
+}
+trap summary EXIT
+
+suite() {
+    current="$1"
+    shift
+    echo "== tier1: $current =="
+    "$@"
+    ran+=("$current")
+    current=""
+}
+
 if [[ -z "${SKIP_LINT:-}" ]]; then
-    cargo fmt --check
-    cargo clippy --all-targets -- -D warnings
+    suite fmt cargo fmt --check
+    suite clippy cargo clippy --all-targets -- -D warnings
+else
+    skipped+=(fmt clippy)
 fi
-cargo build --release
-cargo test -q
+suite build cargo build --release
+suite test cargo test -q
 # hermetic serve smoke: the whole CLI serve path (router, workers, wave +
 # continuous policies, masked resets) over the pure-Rust reference backend
-cargo run --release --quiet -- serve --backend ref --requests 8 --policy ab --max-wait-ms 2
+suite serve-smoke cargo run --release --quiet -- serve --backend ref \
+    --requests 8 --policy ab --max-wait-ms 2
+# hermetic bench smoke: the deterministic suite must run and satisfy its
+# own A/B assertions (writes BENCH_*.json to a scratch dir, not the repo)
+suite bench-smoke env BENCH_SMOKE_DIR="$(mktemp -d)" bash -c \
+    'cargo run --release --quiet -- bench --suite hermetic --backend ref --out "$BENCH_SMOKE_DIR" && rm -rf "$BENCH_SMOKE_DIR"'
 # bench harnesses must at least compile, or the A/B numbers silently rot
-cargo bench --no-run
+suite bench-compile cargo bench --no-run
