@@ -35,7 +35,7 @@
 //! (the load-aware tiebreak reads live queue depths, which are a wall-clock
 //! artifact the virtual replay deliberately does not model).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -240,28 +240,32 @@ impl<'a> Harness<'a> {
             let mut clock = StepClock::new();
             let mut i = 0usize;
             loop {
-                while i < sub.len() && sub[i].1 <= clock.now() {
-                    lane.queue.push_back(sub[i].clone());
+                while let Some((r, at)) = sub.get(i) {
+                    if *at > clock.now() {
+                        break;
+                    }
+                    lane.queue.push_back((r.clone(), *at));
                     i += 1;
                 }
                 if lane.queue.len() >= lane.de.width {
                     lane.fire(&mut clock, &mut samples)?;
                     continue;
                 }
+                let next_at = sub.get(i).map(|(_, at)| *at);
                 if let Some((_, oldest)) = lane.queue.front() {
                     let deadline = oldest + self.scenario.max_wait_ticks;
-                    if i < sub.len() && sub[i].1 <= deadline {
+                    if let Some(at) = next_at.filter(|&at| at <= deadline) {
                         // an arrival lands before the partial-wave deadline:
                         // admit it first (it may fill the wave)
-                        clock.at_least(sub[i].1);
+                        clock.at_least(at);
                         continue;
                     }
                     clock.at_least(deadline);
                     lane.fire(&mut clock, &mut samples)?;
                     continue;
                 }
-                if i < sub.len() {
-                    clock.at_least(sub[i].1);
+                if let Some(at) = next_at {
+                    clock.at_least(at);
                     continue;
                 }
                 break;
@@ -290,7 +294,8 @@ impl<'a> Harness<'a> {
         let mut clock = StepClock::new();
         for (li, (r, at)) in merged {
             clock.at_least(*at);
-            lanes[li].queue.push_back((r.clone(), *at));
+            let Some(lane) = lanes.get_mut(li) else { continue };
+            lane.queue.push_back((r.clone(), *at));
             // fire due waves anywhere to a fixpoint: decode on one lane can
             // expire another lane's deadline
             loop {
@@ -324,9 +329,10 @@ impl<'a> Harness<'a> {
         let mut wall = 0u64;
         // the scheduler tracks wall submission Instants we ignore; one epoch
         // keeps them harmlessly constant
+        // analyze:allow(bench, single wall epoch never read back; the virtual StepClock is authoritative)
         let epoch = Instant::now();
         for (spec, sub) in self.scenario.lanes.iter().zip(&self.routed) {
-            let arrive: HashMap<u64, u64> = sub.iter().map(|(q, at)| (q.id, *at)).collect();
+            let arrive: BTreeMap<u64, u64> = sub.iter().map(|(q, at)| (q.id, *at)).collect();
             let de = DecodeEngine::new(self.engine, &spec.arch)?;
             anyhow::ensure!(
                 de.has_masked(),
@@ -340,8 +346,11 @@ impl<'a> Harness<'a> {
             let mut clock = StepClock::new();
             let mut i = 0usize;
             loop {
-                while i < sub.len() && sub[i].1 <= clock.now() {
-                    sched.submit(sub[i].0.clone(), epoch);
+                while let Some((q, at)) = sub.get(i) {
+                    if *at > clock.now() {
+                        break;
+                    }
+                    sched.submit(q.clone(), epoch);
                     i += 1;
                 }
                 if sched.has_work() {
@@ -355,8 +364,8 @@ impl<'a> Harness<'a> {
                             .context("response for an unrouted request")?;
                         samples.push(Sample { id: r.id, arrive_tick: at, done_tick: done });
                     }
-                } else if i < sub.len() {
-                    clock.at_least(sub[i].1);
+                } else if let Some((_, at)) = sub.get(i) {
+                    clock.at_least(*at);
                 } else {
                     break;
                 }
@@ -404,6 +413,7 @@ impl<'e> WaveLane<'e> {
         let n = self.queue.len().min(self.de.width);
         let popped: Vec<(crate::serve::Request, u64)> = self.queue.drain(..n).collect();
         let wave = BatchWave {
+            // analyze:allow(bench, submission instants feed wall-clock fields the replay ignores)
             requests: popped.iter().map(|(r, _)| (r.clone(), Instant::now())).collect(),
         };
         let s0 = self.metrics.steps;

@@ -146,7 +146,10 @@ impl StateStore {
             .get_mut(name)
             .with_context(|| format!("group '{name}' not in store"))?;
         if group.host.is_none() {
-            let bufs = group.device.as_ref().expect("group with neither home");
+            let bufs = group
+                .device
+                .as_ref()
+                .with_context(|| format!("group '{name}' has neither home"))?;
             let mut lits = Vec::with_capacity(bufs.len());
             let mut bytes = 0u64;
             for b in bufs {
@@ -159,7 +162,10 @@ impl StateStore {
             self.stats.bytes_to_host += bytes;
             group.host = Some(lits);
         }
-        Ok(group.host.as_deref().unwrap())
+        group
+            .host
+            .as_deref()
+            .with_context(|| format!("group '{name}' failed to materialise"))
     }
 
     pub fn has_group(&self, name: &str) -> bool {
@@ -230,9 +236,15 @@ impl StateStore {
     fn run_plan_device(&mut self, prog: &Program, plan: &StepPlan) -> Result<Vec<Vec<f32>>> {
         // pass 1 (mutable): promote host-dirty groups to the device
         for g in plan.input_order() {
-            let group = self.groups.get_mut(&g.name).unwrap(); // check_bound ran
+            let group = self
+                .groups
+                .get_mut(&g.name)
+                .with_context(|| format!("group '{}' vanished after check_bound", g.name))?;
             if group.device.is_none() {
-                let lits = group.host.as_ref().expect("group with neither home");
+                let lits = group
+                    .host
+                    .as_ref()
+                    .with_context(|| format!("group '{}' has neither home", g.name))?;
                 let bufs = lits
                     .iter()
                     .map(|l| prog.upload(l).map(Arc::new))
@@ -244,14 +256,12 @@ impl StateStore {
         // pass 2 (shared): assemble the flat argument list
         let mut inputs: Vec<&DeviceBuf> = Vec::with_capacity(plan.n_inputs());
         for g in plan.input_order() {
-            inputs.extend(
-                self.groups[&g.name]
-                    .device
-                    .as_ref()
-                    .unwrap()
-                    .iter()
-                    .map(Arc::as_ref),
-            );
+            let bufs = self
+                .groups
+                .get(&g.name)
+                .and_then(|gr| gr.device.as_ref())
+                .with_context(|| format!("group '{}' not device-resident after promotion", g.name))?;
+            inputs.extend(bufs.iter().map(Arc::as_ref));
         }
 
         match prog.execute_buffers(&inputs)? {
@@ -265,9 +275,13 @@ impl StateStore {
                 }
                 let mut fetched = Vec::with_capacity(plan.fetch_indices().len());
                 for &i in plan.fetch_indices() {
-                    let g = &plan.output_order()[i];
+                    let (g, group_bufs) = plan
+                        .output_order()
+                        .get(i)
+                        .zip(per_group.get(i))
+                        .context("fetch index beyond plan outputs")?;
                     let mut vals = Vec::new();
-                    for b in &per_group[i] {
+                    for b in group_bufs {
                         let lit = b
                             .to_literal()
                             .with_context(|| format!("fetching group '{}'", g.name))?;
@@ -299,7 +313,12 @@ impl StateStore {
         }
         let mut inputs: Vec<&Literal> = Vec::with_capacity(plan.n_inputs());
         for g in plan.input_order() {
-            inputs.extend(self.groups[&g.name].host.as_ref().unwrap().iter());
+            let lits = self
+                .groups
+                .get(&g.name)
+                .and_then(|gr| gr.host.as_ref())
+                .with_context(|| format!("group '{}' not materialised on host", g.name))?;
+            inputs.extend(lits.iter());
         }
         self.stats.bytes_to_device += plan.total_in_bytes();
         let outs = prog.execute_refs(&inputs)?;
@@ -333,8 +352,9 @@ impl StateStore {
         }
         let mut fetched = Vec::with_capacity(plan.fetch_indices().len());
         for &i in plan.fetch_indices() {
+            let lits = per_group.get(i).context("fetch index beyond plan outputs")?;
             let mut vals = Vec::new();
-            for l in &per_group[i] {
+            for l in lits {
                 vals.extend(literal::to_f32s(l)?);
             }
             fetched.push(vals);

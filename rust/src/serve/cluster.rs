@@ -30,10 +30,10 @@
 //! so `report()` is accurate whichever path (serial/concurrent) ran.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::{Engine, ExecMode, StateStore};
 
@@ -48,6 +48,15 @@ use super::Response;
 /// Default partial-wave deadline (overridable via `set_max_wait` /
 /// `planer serve --max-wait-ms`).
 pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
+
+/// Lock the shared metrics map, recovering from poison: the map holds
+/// plain cloned snapshots, so a publisher that panicked mid-`insert`
+/// cannot leave it torn — readers (report/merge) must keep working.
+fn lock_metrics(
+    m: &Mutex<HashMap<String, ServeMetrics>>,
+) -> MutexGuard<'_, HashMap<String, ServeMetrics>> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Which batching policy the concurrent decode workers run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -85,10 +94,7 @@ impl<'a> Lane<'a> {
         // thread mid-serve (live dashboards) — decode dominates the clone
         // by orders of magnitude at realistic trace sizes.
         let rs = self.engine.decode_wave(&mut self.state, wave, &mut self.metrics)?;
-        shared
-            .lock()
-            .unwrap()
-            .insert(self.name.clone(), self.metrics.clone());
+        lock_metrics(shared).insert(self.name.clone(), self.metrics.clone());
         Ok(rs)
     }
 }
@@ -160,9 +166,14 @@ impl<'a> Cluster<'a> {
                 .iter()
                 .map(crate::runtime::literal::zeros)
                 .collect();
+            // surface a broken program as an error up front; the timed
+            // closure then ignores the per-iteration Result (a probe step
+            // that worked once does not start failing two iterations later)
+            gen.execute(&inputs)
+                .with_context(|| format!("probing decode step for '{name}'"))?;
             let t = crate::util::timer::time_iters(
                 || {
-                    gen.execute(&inputs).unwrap();
+                    let _ = gen.execute(&inputs);
                 },
                 1,
                 3,
@@ -241,14 +252,17 @@ impl<'a> Cluster<'a> {
 
     /// Snapshot of the per-variant metrics map.
     pub fn metrics_snapshot(&self) -> HashMap<String, ServeMetrics> {
-        self.metrics.lock().unwrap().clone()
+        lock_metrics(&self.metrics).clone()
     }
 
     /// All variants' metrics folded into one (step-weighted — see
     /// [`ServeMetrics::merge`]): the cluster-wide occupancy / bytes-per-
     /// token / percentile view the benches and reports aggregate over.
     pub fn merged_metrics(&self) -> ServeMetrics {
-        let snapshot = self.metrics.lock().unwrap();
+        // clone the map and release the lock before folding: merge walks
+        // latency reservoirs, and decode workers publishing after a wave
+        // must never queue behind a reader
+        let snapshot = lock_metrics(&self.metrics).clone();
         // lane order (quality rank), not HashMap order: reservoir merges
         // sample, so fold order must be deterministic
         let mut total = ServeMetrics::default();
@@ -264,7 +278,7 @@ impl<'a> Cluster<'a> {
         for lane in &mut self.lanes {
             lane.metrics = ServeMetrics::default();
         }
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = lock_metrics(&self.metrics);
         for lane in &self.lanes {
             m.insert(lane.name.clone(), ServeMetrics::default());
         }
@@ -294,11 +308,14 @@ impl<'a> Cluster<'a> {
                 }
             }
             let variant = self.router.route(&tr.request).to_string();
-            queues.get_mut(&variant).unwrap().submit(tr.request.clone());
+            queues
+                .get_mut(&variant)
+                .with_context(|| format!("router chose unknown variant '{variant}'"))?
+                .submit(tr.request.clone());
             // fire whatever is due anywhere: a full wave on the routed lane,
             // or a deadline-expired partial on any other lane
             for lane in &mut self.lanes {
-                let q = queues.get_mut(&lane.name).unwrap();
+                let Some(q) = queues.get_mut(&lane.name) else { continue };
                 while let Some(w) = q.next_wave(Instant::now()) {
                     responses.extend(lane.execute(&w, &self.metrics)?);
                 }
@@ -306,7 +323,7 @@ impl<'a> Cluster<'a> {
         }
         // drain leftovers (fire partial waves)
         for lane in &mut self.lanes {
-            let q = queues.get_mut(&lane.name).unwrap();
+            let Some(q) = queues.get_mut(&lane.name) else { continue };
             while let Some(w) = q.force_wave() {
                 responses.extend(lane.execute(&w, &self.metrics)?);
             }
@@ -359,7 +376,7 @@ impl<'a> Cluster<'a> {
                         let mut worker = SlotLane::new(name.clone(), scheduler);
                         worker.depth = gauge;
                         let (rs, mut scheduler) = worker.run_with(rx, |m| {
-                            shared.lock().unwrap().insert(name.clone(), m.clone());
+                            lock_metrics(&shared).insert(name.clone(), m.clone());
                         })?;
                         // hand the final metrics back to the lane so the
                         // cluster's own accumulator matches the map
@@ -403,7 +420,9 @@ impl<'a> Cluster<'a> {
     }
 
     pub fn report(&self) -> String {
-        let snapshot = self.metrics.lock().unwrap();
+        // clone + release before formatting: report() may run from any
+        // thread mid-serve, and the publishers must not wait on it
+        let snapshot = lock_metrics(&self.metrics).clone();
         let mut out = String::from(
             "variant      reqs waves  steps  occup     p50      p95     tok/s   sync-B/tok\n",
         );

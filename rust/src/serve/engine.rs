@@ -332,7 +332,7 @@ impl<'a> DecodeEngine<'a> {
     pub fn decode_step(&self, st: &mut StateStore, x: &[i32]) -> Result<Vec<f32>> {
         st.set_single("x", literal::literal_from_i32s(&self.xspec, x)?);
         let mut out = st.run_plan(&self.gen, &self.plan)?;
-        Ok(out.pop().expect("plan fetches logits"))
+        out.pop().context("decode plan fetched no outputs")
     }
 
     /// One *masked* decode step (continuous batching): slots flagged in
@@ -355,10 +355,14 @@ impl<'a> DecodeEngine<'a> {
         // compile-on-first-use: wave-only serving never reaches this
         let prog = {
             let mut cache = mg.prog.borrow_mut();
-            if cache.is_none() {
-                *cache = Some(self.engine.program(&mg.name)?);
+            match cache.as_ref() {
+                Some(p) => Arc::clone(p),
+                None => {
+                    let p = self.engine.program(&mg.name)?;
+                    *cache = Some(Arc::clone(&p));
+                    p
+                }
             }
-            Arc::clone(cache.as_ref().unwrap())
         };
         st.set_single("x", literal::literal_from_i32s(&mg.xspec, x)?);
         if reset.iter().any(|&b| b) {
@@ -371,13 +375,18 @@ impl<'a> DecodeEngine<'a> {
             st.set_single("free_mask", literal::zeros(&mg.mask_spec));
         } else {
             let mut cache = mg.zero_mask.borrow_mut();
-            if cache.is_none() {
-                *cache = Some(Arc::new(prog.upload(&literal::zeros(&mg.mask_spec))?));
-            }
-            st.set_device_group("free_mask", vec![Arc::clone(cache.as_ref().unwrap())]);
+            let zero = match cache.as_ref() {
+                Some(z) => Arc::clone(z),
+                None => {
+                    let z = Arc::new(prog.upload(&literal::zeros(&mg.mask_spec))?);
+                    *cache = Some(Arc::clone(&z));
+                    z
+                }
+            };
+            st.set_device_group("free_mask", vec![zero]);
         }
         let mut out = st.run_plan(&prog, &mg.plan)?;
-        Ok(out.pop().expect("plan fetches logits"))
+        out.pop().context("masked decode plan fetched no outputs")
     }
 
     /// Greedy per-slot argmax over a `[width, vocab]` logits batch.
@@ -392,16 +401,27 @@ impl<'a> DecodeEngine<'a> {
         if st.mode() == ExecMode::Roundtrip {
             return st.zero_group(&self.gen, "mems");
         }
-        let mut cache = self.zero_mems.borrow_mut();
-        if cache.is_none() {
-            let (a, b) = self.gen.spec.in_group("mems").context("mems group")?;
-            let bufs = self.gen.spec.inputs[a..b]
-                .iter()
-                .map(|s| self.gen.upload(&literal::zeros(s)).map(Arc::new))
-                .collect::<Result<Vec<_>>>()?;
-            *cache = Some(bufs);
-        }
-        st.set_device_group("mems", cache.as_ref().unwrap().clone());
+        let bufs = {
+            let mut cache = self.zero_mems.borrow_mut();
+            match cache.as_ref() {
+                Some(bufs) => bufs.clone(),
+                None => {
+                    let (a, b) = self.gen.spec.in_group("mems").context("mems group")?;
+                    let bufs = self
+                        .gen
+                        .spec
+                        .inputs
+                        .get(a..b)
+                        .context("mems group out of spec bounds")?
+                        .iter()
+                        .map(|s| self.gen.upload(&literal::zeros(s)).map(Arc::new))
+                        .collect::<Result<Vec<_>>>()?;
+                    *cache = Some(bufs.clone());
+                    bufs
+                }
+            }
+        };
+        st.set_device_group("mems", bufs);
         Ok(())
     }
 
@@ -439,24 +459,30 @@ impl<'a> DecodeEngine<'a> {
         // prompts end on the same step and decode starts together)
         for t in 0..max_prompt {
             x.fill(0);
-            for (slot, (r, _)) in wave.requests.iter().enumerate() {
+            for (slot, (r, _)) in x.iter_mut().zip(&wave.requests) {
                 let offset = max_prompt - r.prompt.len();
                 if t >= offset {
-                    x[slot] = r.prompt[t - offset];
+                    *slot = r.prompt.get(t - offset).copied().unwrap_or(0);
                 }
             }
             last_logits = self.decode_step(st, &x)?;
         }
 
-        // decode phase: greedy argmax per live slot
+        // decode phase: greedy argmax per live slot.  An empty
+        // `last_logits` (no prompt/BOS step ran) yields no chunks, so the
+        // zip is a no-op — same behaviour as the old emptiness guard.
         for g in 0..max_gen {
             x.fill(0);
-            for (slot, (r, _)) in wave.requests.iter().enumerate() {
-                if g < r.n_gen && !last_logits.is_empty() {
-                    let row = &last_logits[slot * self.vocab..(slot + 1) * self.vocab];
+            for (((slot, out), row), (r, _)) in x
+                .iter_mut()
+                .zip(outputs.iter_mut())
+                .zip(last_logits.chunks(self.vocab))
+                .zip(&wave.requests)
+            {
+                if g < r.n_gen {
                     let tok = argmax(row);
-                    outputs[slot].push(tok);
-                    x[slot] = tok;
+                    out.push(tok);
+                    *slot = tok;
                 }
             }
             if g + 1 == max_gen {
@@ -484,9 +510,9 @@ impl<'a> DecodeEngine<'a> {
 
         let done = Instant::now();
         let mut responses = Vec::with_capacity(wave.requests.len());
-        for (slot, (r, submitted)) in wave.requests.iter().enumerate() {
-            // drain the slot's tokens instead of clone + truncate
-            let mut toks = std::mem::take(&mut outputs[slot]);
+        // `outputs` is consumed by value: each slot's tokens move straight
+        // into its Response, no clone + truncate
+        for ((r, submitted), mut toks) in wave.requests.iter().zip(outputs) {
             metrics.tokens_out += toks.len().min(r.n_gen);
             toks.truncate(r.n_gen);
             let lat = done.duration_since(*submitted).as_secs_f64();

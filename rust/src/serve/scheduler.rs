@@ -127,7 +127,7 @@ impl<E: SlotExecutor> SlotScheduler<E> {
     fn admit_queued(&mut self, out: &mut Vec<Response>) {
         while let Some((r, _)) = self.queue.front() {
             if r.n_gen == 0 {
-                let (r, submitted) = self.queue.pop_front().unwrap();
+                let Some((r, submitted)) = self.queue.pop_front() else { break };
                 let latency = Instant::now().duration_since(submitted).as_secs_f64();
                 self.metrics.requests += 1;
                 self.metrics.latencies.push(latency);
@@ -142,9 +142,13 @@ impl<E: SlotExecutor> SlotScheduler<E> {
             let Some(slot) = self.slots.iter().position(Session::is_free) else {
                 break;
             };
-            let (r, submitted) = self.queue.pop_front().unwrap();
-            self.slots[slot].admit(r, submitted);
-            self.reset[slot] = true;
+            let Some((r, submitted)) = self.queue.pop_front() else { break };
+            if let (Some(s), Some(reset)) =
+                (self.slots.get_mut(slot), self.reset.get_mut(slot))
+            {
+                s.admit(r, submitted);
+                *reset = true;
+            }
         }
     }
 
@@ -161,8 +165,8 @@ impl<E: SlotExecutor> SlotScheduler<E> {
             return Ok(out);
         }
         let width = self.slots.len();
-        for (i, s) in self.slots.iter().enumerate() {
-            self.x[i] = s.feed();
+        for (x, s) in self.x.iter_mut().zip(&self.slots) {
+            *x = s.feed();
         }
         let t0 = Instant::now();
         let tokens = self.executor.step(&self.x, &self.reset)?;
@@ -181,8 +185,8 @@ impl<E: SlotExecutor> SlotScheduler<E> {
         self.reset.fill(false);
 
         let done = Instant::now();
-        for (i, s) in self.slots.iter_mut().enumerate() {
-            if let Some(r) = s.advance(tokens[i], done, &self.variant) {
+        for (s, &tok) in self.slots.iter_mut().zip(&tokens) {
+            if let Some(r) = s.advance(tok, done, &self.variant) {
                 self.metrics.requests += 1;
                 self.metrics.tokens_out += r.tokens.len();
                 self.metrics.latencies.push(r.latency);

@@ -137,16 +137,16 @@ impl Session {
                 s.phase = Phase::Decode { generated: generated + 1 };
             }
         }
-        if s.tokens.len() >= s.request.n_gen {
-            let s = self.state.take().unwrap();
-            return Some(Response {
-                id: s.request.id,
-                tokens: s.tokens,
-                latency: done.duration_since(s.submitted).as_secs_f64(),
-                variant: variant.to_string(),
-            });
+        if s.tokens.len() < s.request.n_gen {
+            return None;
         }
-        None
+        let s = self.state.take()?;
+        Some(Response {
+            id: s.request.id,
+            tokens: s.tokens,
+            latency: done.duration_since(s.submitted).as_secs_f64(),
+            variant: variant.to_string(),
+        })
     }
 }
 

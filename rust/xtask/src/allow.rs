@@ -1,0 +1,181 @@
+//! Committed allowlist (`rust/xtask/allow.toml`): a TOML-subset parser for
+//! `[[allow]]` entries.  Policy: the file must shrink, never grow, without a
+//! written reason — every entry requires `reason = "..."`.
+//!
+//! Grammar accepted (subset of TOML, enough for this one file):
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "PANIC001"          # required: rule id the entry silences
+//! path = "serve/cluster.rs"  # required: suffix-matched against finding file
+//! line = 42                  # optional: exact line; omitted = whole file
+//! fn = "Cluster::report"     # optional: enclosing function name
+//! reason = "why this is OK"  # required, non-empty
+//! ```
+
+use crate::findings::Finding;
+
+#[derive(Debug, Clone, Default)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub line: Option<u32>,
+    pub func: Option<String>,
+    pub reason: String,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule
+            && suffix_match(&f.file, &self.path)
+            && match self.line {
+                Some(l) => l == f.line,
+                None => true,
+            }
+            && match &self.func {
+                Some(n) => *n == f.function,
+                None => true,
+            }
+    }
+}
+
+/// `path` matches if it equals the finding's file or is a trailing
+/// `/`-separated suffix of it ("cluster.rs" matches "rust/src/serve/cluster.rs").
+fn suffix_match(file: &str, path: &str) -> bool {
+    file == path || file.ends_with(&format!("/{path}"))
+}
+
+/// Parse the allowlist.  Returns Err with a line-numbered message on
+/// malformed input or an entry missing rule/path/reason — a silently
+/// ignored allow entry would be worse than a parse failure.
+pub fn parse(src: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut open = false; // inside an [[allow]] block?
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = match raw.find('#') {
+            // strip comments, but not '#' inside a quoted value
+            Some(h) if raw[..h].matches('"').count() % 2 == 0 => &raw[..h],
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if open {
+                validate(entries.last().ok_or("internal: open without entry")?, lineno)?;
+            }
+            entries.push(AllowEntry::default());
+            open = true;
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(format!("allow.toml:{lineno}: unknown table `{line}`"));
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("allow.toml:{lineno}: expected `key = value`"))?;
+        let (key, val) = (key.trim(), val.trim());
+        if !open {
+            return Err(format!("allow.toml:{lineno}: `{key}` outside [[allow]]"));
+        }
+        let e = entries.last_mut().ok_or("internal: open without entry")?;
+        match key {
+            "rule" => e.rule = unquote(val, lineno)?,
+            "path" => e.path = unquote(val, lineno)?,
+            "fn" => e.func = Some(unquote(val, lineno)?),
+            "reason" => e.reason = unquote(val, lineno)?,
+            "line" => {
+                e.line = Some(val.parse().map_err(|_| {
+                    format!("allow.toml:{lineno}: `line` must be an integer, got `{val}`")
+                })?)
+            }
+            other => return Err(format!("allow.toml:{lineno}: unknown key `{other}`")),
+        }
+    }
+    if let Some(last) = entries.last() {
+        validate(last, src.lines().count())?;
+    }
+    Ok(entries)
+}
+
+fn validate(e: &AllowEntry, lineno: usize) -> Result<(), String> {
+    if e.rule.is_empty() || e.path.is_empty() {
+        return Err(format!("allow.toml:{lineno}: entry needs `rule` and `path`"));
+    }
+    if e.reason.trim().is_empty() {
+        return Err(format!(
+            "allow.toml:{lineno}: entry for {} lacks a `reason` — the allowlist only \
+             grows with justification",
+            e.rule
+        ));
+    }
+    Ok(())
+}
+
+fn unquote(val: &str, lineno: usize) -> Result<String, String> {
+    let v = val.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("allow.toml:{lineno}: expected a quoted string, got `{val}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: u32, func: &str) -> Finding {
+        Finding {
+            file: file.into(),
+            line,
+            rule,
+            function: func.into(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn parses_and_matches() {
+        let src = r#"
+# header comment
+[[allow]]
+rule = "PANIC001"
+path = "serve/cluster.rs"  # suffix match
+line = 42
+reason = "guard dropped on previous line"
+"#;
+        let es = parse(src).unwrap();
+        assert_eq!(es.len(), 1);
+        assert!(es[0].matches(&finding("PANIC001", "rust/src/serve/cluster.rs", 42, "f")));
+        assert!(!es[0].matches(&finding("PANIC001", "rust/src/serve/cluster.rs", 43, "f")));
+        assert!(!es[0].matches(&finding("LOCK001", "rust/src/serve/cluster.rs", 42, "f")));
+    }
+
+    #[test]
+    fn fn_scoped_entry() {
+        let src = "[[allow]]\nrule = \"LOCK002\"\npath = \"a.rs\"\nfn = \"T::f\"\nreason = \"x\"\n";
+        let es = parse(src).unwrap();
+        assert!(es[0].matches(&finding("LOCK002", "a.rs", 7, "T::f")));
+        assert!(!es[0].matches(&finding("LOCK002", "a.rs", 7, "T::g")));
+    }
+
+    #[test]
+    fn reason_is_required() {
+        let src = "[[allow]]\nrule = \"PANIC001\"\npath = \"a.rs\"\n";
+        assert!(parse(src).unwrap_err().contains("reason"));
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let src = "[[allow]]\nrule = \"X\"\npath = \"a.rs\"\nreason = \"r\"\nbogus = \"y\"\n";
+        assert!(parse(src).unwrap_err().contains("bogus"));
+    }
+
+    #[test]
+    fn empty_file_is_fine() {
+        assert!(parse("# nothing allowed\n").unwrap().is_empty());
+    }
+}

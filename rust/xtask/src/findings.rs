@@ -1,0 +1,91 @@
+//! Finding record + text/JSON serialization (hand-rolled; no serde).
+
+use std::fmt::Write as _;
+
+/// One analyzer finding.  `file` is repo-root-relative with `/` separators
+/// so findings are byte-identical across machines.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    /// Enclosing function (possibly `Type::name`), or "" at module scope.
+    pub function: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn text(&self) -> String {
+        let f = if self.function.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", self.function)
+        };
+        format!("{}:{}: {}{}: {}", self.file, self.line, self.rule, f, self.message)
+    }
+}
+
+fn esc(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Machine-readable report: kept to a stable, flat schema so CI and the
+/// perf-gate style tooling can consume it without a JSON library either.
+pub fn to_json(findings: &[Finding], allowed: usize) -> String {
+    let mut s = String::from("{\"version\":1,\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"rule\":\"");
+        esc(f.rule, &mut s);
+        s.push_str("\",\"file\":\"");
+        esc(&f.file, &mut s);
+        let _ = write!(s, "\",\"line\":{},\"function\":\"", f.line);
+        esc(&f.function, &mut s);
+        s.push_str("\",\"message\":\"");
+        esc(&f.message, &mut s);
+        s.push_str("\"}");
+    }
+    let _ = write!(s, "],\"allowed\":{allowed}}}");
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_quotes_and_controls() {
+        let f = Finding {
+            file: "a.rs".into(),
+            line: 3,
+            rule: "PANIC001",
+            function: "f".into(),
+            message: "call to `unwrap` on \"x\"\n".into(),
+        };
+        let j = to_json(&[f], 2);
+        assert!(j.contains("\\\"x\\\""));
+        assert!(j.contains("\\n"));
+        assert!(j.contains("\"allowed\":2"));
+        assert!(j.starts_with("{\"version\":1"));
+    }
+
+    #[test]
+    fn empty_report_is_valid() {
+        assert_eq!(to_json(&[], 0), "{\"version\":1,\"findings\":[],\"allowed\":0}\n");
+    }
+}

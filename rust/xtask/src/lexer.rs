@@ -1,0 +1,339 @@
+//! Minimal Rust lexer for the analyzer: identifiers, single-char puncts,
+//! string/char/number literals, with comments stripped but `analyze:allow`
+//! escape comments retained.  Line numbers are 1-based.
+//!
+//! This is deliberately *not* a full Rust grammar (no dependency budget for
+//! `syn` in hermetic builds — see README).  The rules only need a faithful
+//! token stream: comments and string contents must never be mistaken for
+//! code, lifetimes must not eat char literals, and every token must carry
+//! its source line.
+
+/// Token kind.  Multi-char operators are emitted as runs of single puncts
+/// (`::` is two `:` tokens); the rules match on short sequences, so this
+/// keeps the lexer trivial without losing anything they need.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct(char),
+    /// String literal (content without quotes; escapes left as-is).
+    Str,
+    /// Char / numeric literal (content irrelevant to every rule).
+    Lit,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct(c)
+    }
+}
+
+/// One `// analyze:allow(<rule>, <reason>)` escape comment.
+#[derive(Debug, Clone)]
+pub struct InlineAllow {
+    pub line: u32,
+    /// Escape kind: `panic`, `index`, `lock` or `bench`.
+    pub kind: String,
+    pub reason: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<InlineAllow>,
+}
+
+/// Parse an `analyze:allow(kind, reason)` marker out of a comment body.
+fn parse_allow(comment: &str, line: u32) -> Option<InlineAllow> {
+    let at = comment.find("analyze:allow(")?;
+    let rest = &comment[at + "analyze:allow(".len()..];
+    let close = rest.find(')')?;
+    let inner = &rest[..close];
+    let (kind, reason) = match inner.split_once(',') {
+        Some((k, r)) => (k.trim().to_string(), r.trim().to_string()),
+        None => (inner.trim().to_string(), String::new()),
+    };
+    if kind.is_empty() {
+        return None;
+    }
+    Some(InlineAllow { line, kind, reason })
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            if let Some(a) = parse_allow(&text, line) {
+                out.allows.push(a);
+            }
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let start = i;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let text: String = b[start..i.min(n)].iter().collect();
+            if let Some(a) = parse_allow(&text, start_line) {
+                out.allows.push(a);
+            }
+            continue;
+        }
+        // raw strings r"..." / r#"..."# / br#"..."# (b consumed as ident
+        // prefix below would split br; handle the b/r prefixes here)
+        if (c == 'r' || c == 'b') && is_raw_string_start(&b, i) {
+            let mut j = i;
+            while b[j] == 'b' || b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            // b[j] == '"'
+            j += 1;
+            let start_line = line;
+            let content_start = j;
+            loop {
+                if j >= n {
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                if b[j] == '"' {
+                    let mut k = j + 1;
+                    let mut h = 0;
+                    while k < n && b[k] == '#' && h < hashes {
+                        h += 1;
+                        k += 1;
+                    }
+                    if h == hashes {
+                        out.toks.push(Tok {
+                            kind: Kind::Str,
+                            text: b[content_start..j].iter().collect(),
+                            line: start_line,
+                        });
+                        j = k;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // plain / byte strings
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let start_line = line;
+            let content_start = j;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                if b[j] == '"' {
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: Kind::Str,
+                text: b[content_start..j.min(n)].iter().collect(),
+                line: start_line,
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // char literal vs lifetime: 'x' / '\n' are chars; 'a (no closing
+        // quote right after one name char) is a lifetime
+        if c == '\'' {
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                let start = i;
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            } else {
+                let mut j = i + 1;
+                if j < n && b[j] == '\\' {
+                    j += 1;
+                }
+                j += 1; // the char itself (approximate for \u{...}: scan on)
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: Kind::Lit, text: String::new(), line });
+                i = (j + 1).min(n);
+            }
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: Kind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // number (digits + anything ident-ish glued on: 0x1f, 1_000u64, 1e-3)
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                // a `..` range after a number is punctuation, not part of it
+                if b[i] == '.' && i + 1 < n && b[i + 1] == '.' {
+                    break;
+                }
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: Kind::Lit,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        out.toks.push(Tok { kind: Kind::Punct(c), text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// Is `b[i]` the start of a raw (byte) string: r" r#" br" b r-variants?
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    let mut saw_r = false;
+    while j < b.len() && (b[j] == 'b' || b[j] == 'r') {
+        if b[j] == 'r' {
+            saw_r = true;
+        }
+        j += 1;
+        if j - i > 2 {
+            return false;
+        }
+    }
+    if !saw_r {
+        return false;
+    }
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let l = lex("let a = \"x.lock()\"; // b.lock()\n/* c.lock() */ d");
+        let idents: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "a", "d"]);
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_chars() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Lifetime));
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Lit));
+    }
+
+    #[test]
+    fn allow_comments_are_collected() {
+        let l = lex("x(); // analyze:allow(panic, bounds checked above)\n");
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].kind, "panic");
+        assert_eq!(l.allows[0].reason, "bounds checked above");
+        assert_eq!(l.allows[0].line, 1);
+    }
+
+    #[test]
+    fn raw_strings_lex_as_one_literal() {
+        let l = lex("let s = r#\"a \" b\"#; y");
+        let strs: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, vec!["a \" b"]);
+        assert!(l.toks.last().map(|t| t.is_ident("y")).is_some_and(|b| b));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let l = lex("a\nb\n  c");
+        let lines: Vec<u32> = l.toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,239 @@
+//! `cargo xtask analyze` — the repo's project-specific static-analysis
+//! pass.  Four invariant families (see `rules/`): lock-order/deadlock
+//! (LOCK001/LOCK002), hot-path panics (PANIC001), cross-language ABI drift
+//! (ABI001–ABI003), and bench determinism (BENCH001).
+//!
+//! `repo_config()` is the committed policy: which files the lock graph
+//! spans, which functions are "hot", which files carry the flat ABI.
+//! `analyze()` runs that policy (or a fixture policy, in tests) against a
+//! repo root and returns sorted findings.
+
+pub mod allow;
+pub mod findings;
+pub mod lexer;
+pub mod model;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use findings::Finding;
+use rules::abi::AbiConfig;
+use rules::locks::LockGraph;
+use rules::panics::HotPath;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Files / directories (repo-relative) the lock analysis spans.
+    pub lock_roots: Vec<String>,
+    /// Designated hot paths for the panic lint.
+    pub hot_paths: Vec<HotPath>,
+    /// Files / directories holding *deterministic* bench legs.  The
+    /// wall-clock benches under `rust/benches/` are deliberately absent.
+    pub bench_roots: Vec<String>,
+    pub abi: Option<AbiConfig>,
+}
+
+/// The committed policy for this repository.
+pub fn repo_config() -> Config {
+    let strict = |file: &'static str, func: &'static str| HotPath {
+        file,
+        func,
+        strict_index: true,
+    };
+    // Dense math kernels: shapes are validated once by `ensure!` at program
+    // construction, and index-free rewrites would obscure the math — keep
+    // the unwrap/expect/panic ban but skip the indexing ban.
+    let kernel = |file: &'static str, func: &'static str| HotPath {
+        file,
+        func,
+        strict_index: false,
+    };
+    Config {
+        lock_roots: vec![
+            "rust/src/serve".into(),
+            "rust/src/runtime/state.rs".into(),
+        ],
+        hot_paths: vec![
+            // decode fast path
+            strict("rust/src/serve/engine.rs", "DecodeEngine::decode_step"),
+            strict("rust/src/serve/engine.rs", "DecodeEngine::decode_step_masked"),
+            strict("rust/src/serve/engine.rs", "DecodeEngine::decode_wave"),
+            strict("rust/src/serve/engine.rs", "DecodeEngine::reset_mems"),
+            strict("rust/src/serve/engine.rs", "DecodeEngine::argmax_rows"),
+            // continuous-batching scheduler
+            strict("rust/src/serve/scheduler.rs", "SlotScheduler::step"),
+            strict("rust/src/serve/scheduler.rs", "SlotScheduler::admit_queued"),
+            strict("rust/src/serve/scheduler.rs", "SlotLane::run_with"),
+            // worker pump
+            strict("rust/src/serve/worker.rs", "WorkerLane::run"),
+            strict("rust/src/serve/worker.rs", "WorkerLane::fire_ready"),
+            strict("rust/src/serve/worker.rs", "WorkerLane::drain_channel"),
+            // cluster replay
+            strict("rust/src/serve/cluster.rs", "Lane::execute"),
+            strict("rust/src/serve/cluster.rs", "Cluster::replay"),
+            strict("rust/src/serve/cluster.rs", "Cluster::replay_concurrent"),
+            // per-slot session state machine
+            strict("rust/src/serve/session.rs", "Session::feed"),
+            strict("rust/src/serve/session.rs", "Session::advance"),
+            // state store step loop
+            strict("rust/src/runtime/state.rs", "StateStore::run_plan"),
+            strict("rust/src/runtime/state.rs", "StateStore::run_plan_device"),
+            strict("rust/src/runtime/state.rs", "StateStore::run_plan_host"),
+            strict("rust/src/runtime/state.rs", "StateStore::apply_host_outputs"),
+            // hermetic bench replay legs
+            strict("rust/src/bench/harness.rs", "Harness::wave_overlapped"),
+            strict("rust/src/bench/harness.rs", "Harness::wave_serial"),
+            strict("rust/src/bench/harness.rs", "Harness::continuous"),
+            strict("rust/src/bench/harness.rs", "WaveLane::fire"),
+            // reference-backend decode kernels
+            kernel("rust/src/runtime/refback.rs", "gen_forward"),
+            kernel("rust/src/runtime/refback.rs", "mha_block"),
+            kernel("rust/src/runtime/refback.rs", "ffl_block"),
+            kernel("rust/src/runtime/refback.rs", "moe_block"),
+            kernel("rust/src/runtime/refback.rs", "RefProgram::run"),
+        ],
+        bench_roots: vec!["rust/src/bench".into()],
+        abi: Some(AbiConfig {
+            python: "python/compile/aot.py".into(),
+            rust_files: vec![
+                "rust/src/runtime/refback.rs".into(),
+                "rust/src/runtime/manifest.rs".into(),
+                "rust/src/serve/engine.rs".into(),
+            ],
+            core_prefixes: vec!["init_".into(), "gen_".into(), "gen_masked_".into()],
+            free_mask_files: vec![
+                "rust/src/runtime/refback.rs".into(),
+                "rust/src/runtime/manifest.rs".into(),
+                "rust/src/serve/engine.rs".into(),
+            ],
+            leaf_file: "rust/src/runtime/refback.rs".into(),
+            leaves: vec![
+                "params['emb']".into(),
+                "params['ln_f']['b']".into(),
+                "params['ln_f']['g']".into(),
+                "params['out_b']".into(),
+                "params['blocks'][{i}]".into(),
+            ],
+            py_anchors: vec!["tree_specs".into(), "keystr".into()],
+        }),
+    }
+}
+
+/// Collect `.rs` files under the given repo-relative roots (each a file or
+/// a directory), depth-first, lexicographically sorted, `/`-separated.
+fn collect_rs(root: &Path, roots: &[String]) -> io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for rel in roots {
+        let p = root.join(rel);
+        if p.is_file() {
+            out.push(rel.clone());
+        } else if p.is_dir() {
+            walk_dir(root, rel, &mut out)?;
+        } else {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("configured analysis root `{rel}` does not exist"),
+            ));
+        }
+    }
+    out.sort();
+    out.dedup();
+    Ok(out)
+}
+
+fn walk_dir(root: &Path, rel: &str, out: &mut Vec<String>) -> io::Result<()> {
+    let mut names: Vec<String> = Vec::new();
+    for entry in fs::read_dir(root.join(rel))? {
+        let entry = entry?;
+        if let Some(name) = entry.file_name().to_str() {
+            names.push(name.to_string());
+        }
+    }
+    names.sort();
+    for name in names {
+        let child_rel = format!("{rel}/{name}");
+        let child = root.join(&child_rel);
+        if child.is_dir() {
+            walk_dir(root, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child_rel);
+        }
+    }
+    Ok(())
+}
+
+fn read(root: &Path, rel: &str) -> io::Result<String> {
+    fs::read_to_string(root.join(rel)).map_err(|e| {
+        io::Error::new(e.kind(), format!("reading `{rel}`: {e}"))
+    })
+}
+
+/// Run the full analysis.  Findings are pre-allowlist (main applies
+/// `allow.toml`) but post-inline-escapes, sorted and deduplicated.
+pub fn analyze(root: &Path, cfg: &Config) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+
+    // LOCK001 / LOCK002
+    let mut graph = LockGraph::default();
+    for rel in collect_rs(root, &cfg.lock_roots)? {
+        let src = read(root, &rel)?;
+        let lexed = lexer::lex(&src);
+        let m = model::extract(&lexed);
+        rules::locks::scan_file(&rel, &lexed, &m, &mut graph, &mut findings);
+    }
+    findings.extend(rules::locks::cycle_findings(&graph));
+
+    // PANIC001 — lex each hot file once
+    let mut by_file: BTreeMap<&str, Vec<&HotPath>> = BTreeMap::new();
+    for hp in &cfg.hot_paths {
+        by_file.entry(hp.file).or_default().push(hp);
+    }
+    for (rel, hps) in by_file {
+        let src = read(root, rel)?;
+        let lexed = lexer::lex(&src);
+        let m = model::extract(&lexed);
+        for hp in hps {
+            for f in m.fns.iter().filter(|f| !f.in_tests && f.matches(hp.func)) {
+                rules::panics::scan_fn(rel, &lexed, &m, f, hp.strict_index, &mut findings);
+            }
+        }
+    }
+
+    // BENCH001
+    for rel in collect_rs(root, &cfg.bench_roots)? {
+        let src = read(root, &rel)?;
+        let lexed = lexer::lex(&src);
+        let m = model::extract(&lexed);
+        rules::bench::scan_file(&rel, &lexed, &m, &mut findings);
+    }
+
+    // ABI001–ABI003
+    if let Some(abi) = &cfg.abi {
+        let py = read(root, &abi.python)?;
+        let mut rust_lexed = Vec::new();
+        for rel in &abi.rust_files {
+            rust_lexed.push((rel.clone(), lexer::lex(&read(root, rel)?)));
+        }
+        rules::abi::check(abi, &py, &rust_lexed, &mut findings);
+    }
+
+    findings.sort();
+    findings.dedup();
+    Ok(findings)
+}
+
+/// Walk upward from `start` to the first directory that looks like the
+/// repo root (contains `rust/src/lib.rs`).
+pub fn find_root(start: &Path) -> Option<std::path::PathBuf> {
+    let mut cur = Some(start);
+    while let Some(d) = cur {
+        if d.join("rust/src/lib.rs").is_file() {
+            return Some(d.to_path_buf());
+        }
+        cur = d.parent();
+    }
+    None
+}

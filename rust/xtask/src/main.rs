@@ -1,0 +1,122 @@
+//! CLI: `cargo xtask analyze [--format text|json] [--root PATH]
+//! [--allow PATH] [--out PATH]`.
+//!
+//! Exit codes: 0 = clean (allowlisted findings may exist and are counted),
+//! 1 = non-allowlisted findings, 2 = usage / IO / config error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::{allow, findings, repo_config};
+
+struct Args {
+    format: String,
+    root: Option<PathBuf>,
+    allow: Option<PathBuf>,
+    out: Option<PathBuf>,
+}
+
+fn usage() -> &'static str {
+    "usage: cargo xtask analyze [--format text|json] [--root PATH] [--allow PATH] [--out PATH]\n\
+     see rust/xtask/README.md for the rule catalogue"
+}
+
+fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let mut it = argv.iter();
+    match it.next().map(String::as_str) {
+        Some("analyze") => {}
+        Some(other) => return Err(format!("unknown command `{other}`\n{}", usage())),
+        None => return Err(usage().to_string()),
+    }
+    let mut args = Args { format: "text".into(), root: None, allow: None, out: None };
+    while let Some(flag) = it.next() {
+        let mut val = || {
+            it.next()
+                .cloned()
+                .ok_or_else(|| format!("`{flag}` needs a value\n{}", usage()))
+        };
+        match flag.as_str() {
+            "--format" => {
+                args.format = val()?;
+                if args.format != "text" && args.format != "json" {
+                    return Err(format!("--format must be text or json, got `{}`", args.format));
+                }
+            }
+            "--root" => args.root = Some(PathBuf::from(val()?)),
+            "--allow" => args.allow = Some(PathBuf::from(val()?)),
+            "--out" => args.out = Some(PathBuf::from(val()?)),
+            other => return Err(format!("unknown flag `{other}`\n{}", usage())),
+        }
+    }
+    Ok(args)
+}
+
+fn run() -> Result<bool, String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv)?;
+
+    let root = match args.root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().map_err(|e| e.to_string())?;
+            xtask::find_root(&cwd)
+                .ok_or("could not find the repo root (no rust/src/lib.rs upward of cwd); pass --root")?
+        }
+    };
+
+    let allow_path = args.allow.unwrap_or_else(|| root.join("rust/xtask/allow.toml"));
+    let entries = if allow_path.is_file() {
+        let src = std::fs::read_to_string(&allow_path)
+            .map_err(|e| format!("reading {}: {e}", allow_path.display()))?;
+        allow::parse(&src)?
+    } else {
+        Vec::new()
+    };
+
+    let all = xtask::analyze(&root, &repo_config()).map_err(|e| e.to_string())?;
+    let (allowed, active): (Vec<_>, Vec<_>) =
+        all.into_iter().partition(|f| entries.iter().any(|e| e.matches(f)));
+
+    let report = match args.format.as_str() {
+        "json" => findings::to_json(&active, allowed.len()),
+        _ => {
+            let mut s = String::new();
+            for f in &active {
+                s.push_str(&f.text());
+                s.push('\n');
+            }
+            s.push_str(&format!(
+                "analyze: {} finding(s), {} allowlisted\n",
+                active.len(),
+                allowed.len()
+            ));
+            s
+        }
+    };
+    match &args.out {
+        Some(p) => std::fs::write(p, &report)
+            .map_err(|e| format!("writing {}: {e}", p.display()))?,
+        None => print!("{report}"),
+    }
+    if args.out.is_some() {
+        // keep a human-readable echo on stdout even when writing a file
+        println!(
+            "analyze: {} finding(s), {} allowlisted -> {}",
+            active.len(),
+            allowed.len(),
+            args.out.as_deref().map(|p| p.display().to_string()).unwrap_or_default()
+        );
+    }
+    Ok(active.is_empty())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Function / impl extraction over the token stream: enough structure for
+//! the rules to know "which function am I in" and "is this test code",
+//! without a full AST.
+
+use crate::lexer::{Kind, Lexed, Tok};
+
+/// One `fn` item with a body.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// Bare name (`step`).
+    pub name: String,
+    /// Impl-qualified name where known (`SlotScheduler::step`), else bare.
+    pub qualified: String,
+    /// Line of the `fn` keyword.
+    pub sig_line: u32,
+    /// Token-index range of the body, *excluding* the outer braces.
+    pub body: (usize, usize),
+    /// Inside a `mod tests { .. }` block (repo convention for unit tests).
+    pub in_tests: bool,
+}
+
+impl FnItem {
+    pub fn end_line(&self, toks: &[Tok]) -> u32 {
+        toks.get(self.body.1)
+            .or_else(|| toks.get(self.body.1.saturating_sub(1)))
+            .map_or(self.sig_line, |t| t.line)
+    }
+
+    /// Does this fn's body contain the given source line?
+    pub fn covers(&self, toks: &[Tok], line: u32) -> bool {
+        line >= self.sig_line && line <= self.end_line(toks)
+    }
+
+    pub fn matches(&self, pattern: &str) -> bool {
+        self.qualified == pattern || self.name == pattern
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Model {
+    pub fns: Vec<FnItem>,
+    /// Token-index ranges of `mod tests { .. }` bodies (braces excluded).
+    pub tests_ranges: Vec<(usize, usize)>,
+}
+
+impl Model {
+    pub fn in_tests(&self, idx: usize) -> bool {
+        self.tests_ranges.iter().any(|&(s, e)| idx >= s && idx < e)
+    }
+}
+
+/// Find the token index of the brace matching the `{` at `open`.
+/// Returns `toks.len()` when unbalanced (EOF), which callers treat as
+/// "rest of file" — safe for analysis purposes.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// Skip a balanced `<...>` generic list starting at `i` (which points at
+/// `<`).  Returns the index just past the matching `>`.
+fn skip_angles(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < toks.len() {
+        if toks[j].is_punct('<') {
+            depth += 1;
+        } else if toks[j].is_punct('>') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        } else if toks[j].is_punct('{') || toks[j].is_punct(';') {
+            // malformed / not actually generics — bail without consuming
+            return i + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// The self type of an `impl` header starting at `i` (the `impl` token),
+/// and the index of its opening `{`.  `impl fmt::Display for Cluster` →
+/// ("Cluster", idx-of-brace); `impl<T> Foo<T>` → ("Foo", ..).
+fn impl_header(toks: &[Tok], i: usize) -> Option<(String, usize)> {
+    let mut j = i + 1;
+    let mut name: Option<String> = None;
+    let mut frozen = false; // stop updating after `where`
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.is_punct('{') {
+            return name.map(|n| (n, j));
+        }
+        if t.is_punct(';') {
+            return None; // e.g. `impl Trait for T;` — not a thing, bail
+        }
+        if t.is_punct('<') {
+            j = skip_angles(toks, j);
+            continue;
+        }
+        if t.is_ident("for") {
+            name = None;
+            frozen = false;
+        } else if t.is_ident("where") {
+            frozen = true;
+        } else if t.kind == Kind::Ident && !frozen {
+            name = Some(t.text.clone());
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Extract fns and tests-mod ranges.  Bodies are not recursed into (nested
+/// fns/impls inside bodies are out of scope for every rule).
+pub fn extract(lexed: &Lexed) -> Model {
+    let toks = &lexed.toks;
+    let mut m = Model::default();
+    walk(toks, 0, toks.len(), None, false, &mut m);
+    m
+}
+
+fn walk(
+    toks: &[Tok],
+    start: usize,
+    end: usize,
+    impl_ty: Option<&str>,
+    in_tests: bool,
+    m: &mut Model,
+) {
+    let mut i = start;
+    while i < end {
+        let t = &toks[i];
+        // mod tests { .. } — record + descend so its fns are marked
+        if t.is_ident("mod")
+            && toks.get(i + 1).is_some_and(|n| n.is_ident("tests"))
+            && toks.get(i + 2).is_some_and(|b| b.is_punct('{'))
+        {
+            let close = match_brace(toks, i + 2);
+            m.tests_ranges.push((i + 3, close));
+            walk(toks, i + 3, close, impl_ty, true, m);
+            i = close + 1;
+            continue;
+        }
+        if t.is_ident("impl") {
+            if let Some((ty, open)) = impl_header(toks, i) {
+                let close = match_brace(toks, open);
+                walk(toks, open + 1, close, Some(&ty), in_tests, m);
+                i = close + 1;
+                continue;
+            }
+        }
+        if t.is_ident("fn") {
+            let sig_line = t.line;
+            let name = match toks.get(i + 1) {
+                Some(n) if n.kind == Kind::Ident => n.text.clone(),
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            };
+            // find the body `{` (depth-0 w.r.t. parens/angles) or a `;`
+            let mut j = i + 2;
+            let mut paren = 0i32;
+            let mut body = None;
+            while j < end {
+                let u = &toks[j];
+                if u.is_punct('(') || u.is_punct('[') {
+                    paren += 1;
+                } else if u.is_punct(')') || u.is_punct(']') {
+                    paren -= 1;
+                } else if u.is_punct('<') && paren == 0 {
+                    j = skip_angles(toks, j);
+                    continue;
+                } else if u.is_punct(';') && paren == 0 {
+                    break; // trait method declaration — no body
+                } else if u.is_punct('{') && paren == 0 {
+                    body = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(open) = body {
+                let close = match_brace(toks, open);
+                let qualified = match impl_ty {
+                    Some(ty) => format!("{ty}::{name}"),
+                    None => name.clone(),
+                };
+                m.fns.push(FnItem {
+                    name,
+                    qualified,
+                    sig_line,
+                    body: (open + 1, close),
+                    in_tests,
+                });
+                i = close + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Is a finding of escape-kind `kind` at `line` covered by an inline
+/// `// analyze:allow(kind, reason)` — either on the same / preceding line
+/// (statement-level) or on the line(s) just above the enclosing fn's
+/// signature (function-level)?
+pub fn inline_allowed(lexed: &Lexed, m: &Model, kind: &str, line: u32) -> bool {
+    for a in &lexed.allows {
+        if a.kind != kind {
+            continue;
+        }
+        if a.line == line || a.line + 1 == line {
+            return true;
+        }
+        // fn-level: the allow sits within two lines above the signature
+        // (room for other attributes) of a fn whose body spans `line`
+        for f in &m.fns {
+            if a.line + 2 >= f.sig_line
+                && a.line <= f.sig_line
+                && f.covers(&lexed.toks, line)
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn free_and_impl_fns() {
+        let src = "fn free() { 1 }\nimpl Foo { fn method(&self) -> u32 { 2 } }\n\
+                   impl fmt::Display for Bar { fn fmt(&self) {} }";
+        let l = lex(src);
+        let m = extract(&l);
+        let names: Vec<&str> = m.fns.iter().map(|f| f.qualified.as_str()).collect();
+        assert_eq!(names, vec!["free", "Foo::method", "Bar::fmt"]);
+        assert_eq!(m.fns[0].sig_line, 1);
+        assert_eq!(m.fns[1].sig_line, 2);
+    }
+
+    #[test]
+    fn generic_impl_and_fn() {
+        let src = "impl<T: Clone> Wrapper<T> where T: Send { fn get(&self) -> &T { &self.0 } }";
+        let m = extract(&lex(src));
+        assert_eq!(m.fns[0].qualified, "Wrapper::get");
+    }
+
+    #[test]
+    fn tests_mod_is_marked() {
+        let src = "fn real() {}\nmod tests { fn fake() { x.unwrap(); } }";
+        let m = extract(&lex(src));
+        assert!(!m.fns[0].in_tests);
+        assert!(m.fns[1].in_tests);
+    }
+
+    #[test]
+    fn trait_decl_without_body_is_skipped() {
+        let src = "trait T { fn a(&self); fn b(&self) { 1 } }";
+        let m = extract(&lex(src));
+        let names: Vec<&str> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["b"]);
+    }
+
+    #[test]
+    fn fn_level_allow_covers_whole_body() {
+        let src = "// analyze:allow(index, fixed-shape kernel)\nfn hot() {\n  a[0];\n}\n";
+        let l = lex(src);
+        let m = extract(&l);
+        assert!(inline_allowed(&l, &m, "index", 3));
+        assert!(!inline_allowed(&l, &m, "panic", 3));
+    }
+
+    #[test]
+    fn line_allow_covers_same_and_next_line() {
+        let src = "fn f() {\n  // analyze:allow(panic, checked)\n  x.unwrap();\n}";
+        let l = lex(src);
+        let m = extract(&l);
+        assert!(inline_allowed(&l, &m, "panic", 3));
+        assert!(!inline_allowed(&l, &m, "panic", 1));
+    }
+}

@@ -1,0 +1,280 @@
+//! ABI001/ABI002/ABI003 — cross-language flat-ABI drift between the JAX
+//! exporter (`python/compile/aot.py`) and the Rust runtime's view of the
+//! artifact (`runtime/refback.rs`, `runtime/manifest.rs`, `serve/engine.rs`).
+//!
+//! - ABI001: program-name *prefixes*.  Python side: the literal prefix of
+//!   every `self.export(f"...")` template (text before the first `{`).
+//!   Rust side: every string literal shaped like `prefix_{...}` plus every
+//!   `strip_prefix("prefix_")` argument in the configured ABI files.  The
+//!   configured core prefixes (`init_`, `gen_`, `gen_masked_`) must exist
+//!   on BOTH sides, and every rust prefix must exist on the python side —
+//!   so renaming `gen_masked_<arch>` in either language alone fails.
+//! - ABI002: the `free_mask` input group must be declared in aot.py and
+//!   referenced in every configured rust ABI file.
+//! - ABI003: flat-ABI leaf naming — refback's synthesized leaf templates
+//!   must keep the `params[...]` spelling aot.py derives via
+//!   `tree_specs`/`keystr` (anchors checked on the python side).
+
+use std::collections::BTreeMap;
+
+use crate::findings::Finding;
+use crate::lexer::{Kind, Lexed};
+
+#[derive(Debug, Clone)]
+pub struct AbiConfig {
+    /// Repo-relative path of the exporter (aot.py).
+    pub python: String,
+    /// Repo-relative rust ABI files (prefix extraction runs over all).
+    pub rust_files: Vec<String>,
+    /// Prefixes that must exist on both sides.
+    pub core_prefixes: Vec<String>,
+    /// Rust files that must reference the `free_mask` group.
+    pub free_mask_files: Vec<String>,
+    /// Rust file holding the synthesized leaf templates, and the required
+    /// leaf spellings.
+    pub leaf_file: String,
+    pub leaves: Vec<String>,
+    /// Substrings that must appear in the python exporter (the leaf-naming
+    /// machinery: `tree_specs`, `keystr`).
+    pub py_anchors: Vec<String>,
+}
+
+/// Program-name prefixes exported by aot.py: for each `self.export(`
+/// followed by an (f-)string, the template text before the first `{`.
+/// Templates that *start* with an interpolation (f"{prefix}eval") are
+/// dynamic and carry no literal prefix — ignored.
+pub fn py_prefixes(src: &str) -> BTreeMap<String, u32> {
+    let mut out = BTreeMap::new();
+    let bytes = src.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel) = src[search..].find("self.export(") {
+        let mut i = search + rel + "self.export(".len();
+        search = i;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i < bytes.len() && bytes[i] == b'f' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'"' {
+            continue;
+        }
+        i += 1;
+        let Some(endq) = src[i..].find('"') else { continue };
+        let template = &src[i..i + endq];
+        let prefix = template.split('{').next().unwrap_or("");
+        if !prefix.is_empty() {
+            let line = src[..i].matches('\n').count() as u32 + 1;
+            out.entry(prefix.to_string()).or_insert(line);
+        }
+    }
+    out
+}
+
+/// Is `s` shaped like a program-name template: `^[a-z][a-z0-9_]*_\{`?
+fn template_prefix(s: &str) -> Option<&str> {
+    let brace = s.find('{')?;
+    let head = &s[..brace];
+    if head.len() < 2 || !head.ends_with('_') {
+        return None;
+    }
+    let mut chars = head.chars();
+    let first = chars.next()?;
+    if !first.is_ascii_lowercase() {
+        return None;
+    }
+    if chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_') {
+        Some(head)
+    } else {
+        None
+    }
+}
+
+/// Prefixes referenced by one rust ABI file: `"prefix_{...}"` templates and
+/// `strip_prefix("prefix_")` arguments.
+pub fn rust_prefixes(lexed: &Lexed) -> BTreeMap<String, u32> {
+    let mut out = BTreeMap::new();
+    for (i, t) in lexed.toks.iter().enumerate() {
+        if t.kind != Kind::Str {
+            continue;
+        }
+        if let Some(p) = template_prefix(&t.text) {
+            out.entry(p.to_string()).or_insert(t.line);
+        }
+        // strip_prefix("gen_") — the Str is two tokens after the ident
+        if i >= 2
+            && lexed.toks[i - 1].is_punct('(')
+            && lexed.toks[i - 2].is_ident("strip_prefix")
+            && t.text.ends_with('_')
+        {
+            out.entry(t.text.clone()).or_insert(t.line);
+        }
+    }
+    out
+}
+
+fn file_finding(rule: &'static str, file: &str, line: u32, message: String) -> Finding {
+    Finding { file: file.to_string(), line, rule, function: String::new(), message }
+}
+
+/// Run all three ABI checks.  `read` abstracts file loading so fixtures can
+/// drive the rule; paths it receives are exactly those from the config.
+pub fn check(
+    cfg: &AbiConfig,
+    py_src: &str,
+    rust_lexed: &[(String, Lexed)],
+    findings: &mut Vec<Finding>,
+) {
+    let py = py_prefixes(py_src);
+    let mut rust: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    for (file, lexed) in rust_lexed {
+        for (p, line) in rust_prefixes(lexed) {
+            rust.entry(p).or_insert((file.clone(), line));
+        }
+    }
+
+    // ABI001: core prefixes on both sides; rust ⊆ python
+    for core in &cfg.core_prefixes {
+        if !py.contains_key(core) {
+            findings.push(file_finding(
+                "ABI001",
+                &cfg.python,
+                0,
+                format!("core program prefix `{core}` is no longer exported by the python side"),
+            ));
+        }
+        if !rust.contains_key(core) {
+            let anchor = cfg.rust_files.first().map(String::as_str).unwrap_or("");
+            findings.push(file_finding(
+                "ABI001",
+                anchor,
+                0,
+                format!("core program prefix `{core}` is no longer referenced by the rust side"),
+            ));
+        }
+    }
+    for (p, (file, line)) in &rust {
+        if !py.contains_key(p) {
+            findings.push(file_finding(
+                "ABI001",
+                file,
+                *line,
+                format!("rust references program prefix `{p}` that aot.py does not export"),
+            ));
+        }
+    }
+
+    // ABI002: free_mask group
+    if !py_src.contains("(\"free_mask\"") {
+        findings.push(file_finding(
+            "ABI002",
+            &cfg.python,
+            0,
+            "`(\"free_mask\", ...)` input is no longer declared by the masked-gen export"
+                .to_string(),
+        ));
+    }
+    for file in &cfg.free_mask_files {
+        let has = rust_lexed.iter().any(|(f, l)| {
+            f == file
+                && l.toks
+                    .iter()
+                    .any(|t| t.kind == Kind::Str && t.text.contains("free_mask"))
+        });
+        if !has {
+            findings.push(file_finding(
+                "ABI002",
+                file,
+                0,
+                "no reference to the `free_mask` input group — masked-decode ABI drift"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // ABI003: leaf naming
+    for leaf in &cfg.leaves {
+        let has = rust_lexed.iter().any(|(f, l)| {
+            f == &cfg.leaf_file
+                && l.toks
+                    .iter()
+                    .any(|t| t.kind == Kind::Str && t.text.contains(leaf.as_str()))
+        });
+        if !has {
+            findings.push(file_finding(
+                "ABI003",
+                &cfg.leaf_file,
+                0,
+                format!("flat-ABI leaf spelling `{leaf}` missing from the synthesized manifest"),
+            ));
+        }
+    }
+    for anchor in &cfg.py_anchors {
+        if !py_src.contains(anchor.as_str()) {
+            findings.push(file_finding(
+                "ABI003",
+                &cfg.python,
+                0,
+                format!("leaf-naming anchor `{anchor}` missing from the python exporter"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn py_prefix_extraction() {
+        let src = "\n  self.export(f\"init_{a}\", x)\n  self.export(\n      f\"train_{a}\", y)\n  self.export(f\"{prefix}eval\", z)\n";
+        let p = py_prefixes(src);
+        assert!(p.contains_key("init_"));
+        assert!(p.contains_key("train_"));
+        assert_eq!(p.len(), 2);
+        assert_eq!(p["init_"], 2);
+    }
+
+    #[test]
+    fn rust_prefix_extraction() {
+        let l = lex(
+            "fn f() { let a = format!(\"gen_masked_{arch}\"); let b = format!(\"BENCH_{}.json\", x); \
+             let c = format!(\"warning: gen_{x} bad\"); s.strip_prefix(\"init_\"); }",
+        );
+        let p = rust_prefixes(&l);
+        assert!(p.contains_key("gen_masked_"));
+        assert!(p.contains_key("init_"));
+        assert_eq!(p.len(), 2, "{p:?}");
+    }
+
+    #[test]
+    fn rename_on_either_side_fails() {
+        let cfg = AbiConfig {
+            python: "aot.py".into(),
+            rust_files: vec!["refback.rs".into()],
+            core_prefixes: vec!["gen_masked_".into()],
+            free_mask_files: vec![],
+            leaf_file: "refback.rs".into(),
+            leaves: vec![],
+            py_anchors: vec![],
+        };
+        let good_py = "self.export(f\"gen_masked_{a}\", x)";
+        let good_rs = lex("fn f() { format!(\"gen_masked_{arch}\") }");
+        let mut f = Vec::new();
+        check(&cfg, good_py, &[("refback.rs".into(), good_rs)], &mut f);
+        assert!(f.is_empty(), "{f:?}");
+
+        // renamed in python only
+        let mut f = Vec::new();
+        let rs = lex("fn f() { format!(\"gen_masked_{arch}\") }");
+        check(&cfg, "self.export(f\"gen_mask2_{a}\", x)", &[("refback.rs".into(), rs)], &mut f);
+        assert!(f.iter().any(|x| x.rule == "ABI001"));
+
+        // renamed in rust only
+        let mut f = Vec::new();
+        let rs = lex("fn f() { format!(\"gen_mask2_{arch}\") }");
+        check(&cfg, good_py, &[("refback.rs".into(), rs)], &mut f);
+        assert!(f.iter().any(|x| x.rule == "ABI001"));
+    }
+}

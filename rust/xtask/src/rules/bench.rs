@@ -1,0 +1,102 @@
+//! BENCH001 — determinism lint for the hermetic bench legs.
+//!
+//! Applies to configured deterministic sources (`rust/src/bench/`); the
+//! wall-clock benches under `rust/benches/` are explicitly exempt and never
+//! scanned.  Forbidden in scanned (non-test) code:
+//!
+//! - `Instant::now` / `SystemTime` — wall-clock reads make BENCH JSON
+//!   non-reproducible (the harness has its own virtual `bench::clock`);
+//! - `HashMap` / `HashSet` — iteration order varies run to run; use the
+//!   BTree variants;
+//! - `thread_rng` / `from_entropy` — unseeded RNG.
+//!
+//! Escape: `// analyze:allow(bench, reason)`.
+
+use crate::findings::Finding;
+use crate::lexer::{Kind, Lexed};
+use crate::model::{inline_allowed, Model};
+
+pub fn scan_file(file: &str, lexed: &Lexed, model: &Model, findings: &mut Vec<Finding>) {
+    let toks = &lexed.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || model.in_tests(i) {
+            continue;
+        }
+        let message = if t.text == "Instant"
+            && toks.get(i + 1).is_some_and(|u| u.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|u| u.is_punct(':'))
+            && toks.get(i + 3).is_some_and(|u| u.is_ident("now"))
+        {
+            Some("`Instant::now()` in a deterministic bench leg — use `bench::clock`")
+        } else if t.text == "SystemTime" {
+            Some("`SystemTime` in a deterministic bench leg")
+        } else if t.text == "HashMap" || t.text == "HashSet" {
+            Some("hash-map iteration order is nondeterministic — use the BTree variant")
+        } else if t.text == "thread_rng" || t.text == "from_entropy" {
+            Some("unseeded RNG in a deterministic bench leg — seed via `util::rng`")
+        } else {
+            None
+        };
+        if let Some(msg) = message {
+            if !inline_allowed(lexed, model, "bench", t.line) {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "BENCH001",
+                    function: enclosing(model, &lexed.toks, t.line),
+                    message: msg.to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn enclosing(model: &Model, toks: &[crate::lexer::Tok], line: u32) -> String {
+    model
+        .fns
+        .iter()
+        .find(|f| f.covers(toks, line))
+        .map(|f| f.qualified.clone())
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::model::extract;
+
+    fn run(src: &str) -> Vec<Finding> {
+        let l = lex(src);
+        let m = extract(&l);
+        let mut out = Vec::new();
+        scan_file("t.rs", &l, &m, &mut out);
+        out
+    }
+
+    #[test]
+    fn instant_now_flagged_but_type_use_is_fine() {
+        let f = run("fn f() { let t = Instant::now(); }");
+        assert_eq!(f.len(), 1);
+        assert!(run("fn f(t0: Instant) -> Instant { t0 }").is_empty());
+    }
+
+    #[test]
+    fn hashmap_flagged_anywhere_outside_tests() {
+        assert_eq!(run("use std::collections::HashMap;").len(), 1);
+        assert!(run("mod tests { use std::collections::HashMap; }").is_empty());
+    }
+
+    #[test]
+    fn inline_allow_suppresses() {
+        let f = run(
+            "fn f() {\n// analyze:allow(bench, epoch only anchors ignored submission stamps)\nlet t = Instant::now();\n}",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn unseeded_rng_flagged() {
+        assert_eq!(run("fn f() { let mut r = thread_rng(); }").len(), 1);
+    }
+}

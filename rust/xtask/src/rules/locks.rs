@@ -1,0 +1,414 @@
+//! LOCK001 / LOCK002 — lock-order and guard-across-blocking analysis.
+//!
+//! Model (documented limitations in README):
+//! - a lock *acquisition* is a zero-argument `.lock()` / `.read()` /
+//!   `.write()` call; the lock's identity is the textual receiver chain
+//!   with a leading `self.` stripped (`self.metrics.lock()` and
+//!   `metrics.lock()` are the same lock, a local alias is not);
+//! - a guard is *held* when the acquisition initializes a `let` binding;
+//!   it dies at end of scope or at an explicit `drop(guard)`;
+//! - every acquisition made while guards are held adds held→new edges to a
+//!   global acquisition graph; a cycle in that graph is LOCK001;
+//! - `.send(..)`, zero-arg `.recv()`, `.recv_timeout(..)` and zero-arg
+//!   `.join()` while a guard is held is LOCK002.
+
+use std::collections::BTreeMap;
+
+use crate::findings::Finding;
+use crate::lexer::{Kind, Lexed, Tok};
+use crate::model::{inline_allowed, FnItem, Model};
+
+/// Where an edge was observed, for reporting.
+#[derive(Debug, Clone)]
+pub struct EdgeSite {
+    pub file: String,
+    pub line: u32,
+    pub function: String,
+}
+
+/// Global acquisition graph: edges[held][acquired] = first site observed.
+#[derive(Debug, Default)]
+pub struct LockGraph {
+    pub edges: BTreeMap<String, BTreeMap<String, EdgeSite>>,
+}
+
+#[derive(Debug, Clone)]
+struct Held {
+    var: String,
+    lock: String,
+    depth: i32,
+}
+
+/// Is `toks[i]` the `.` of a zero-arg `.lock()`/`.read()`/`.write()`?
+fn acquisition_at(toks: &[Tok], i: usize) -> Option<&'static str> {
+    if !toks[i].is_punct('.') {
+        return None;
+    }
+    let name = toks.get(i + 1)?;
+    let method = ["lock", "read", "write"]
+        .iter()
+        .find(|m| name.is_ident(m))?;
+    if toks.get(i + 2)?.is_punct('(') && toks.get(i + 3)?.is_punct(')') {
+        Some(method)
+    } else {
+        None
+    }
+}
+
+/// Receiver chain ending just before `toks[dot]` (the method-call dot):
+/// `self.metrics.lock()` → "metrics"; unidentifiable receivers (`f().lock()`)
+/// get a unique anonymous id so they can never create spurious cycles.
+fn receiver(toks: &[Tok], dot: usize, file: &str) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut j = dot;
+    loop {
+        if j == 0 {
+            break;
+        }
+        let prev = &toks[j - 1];
+        if prev.kind != Kind::Ident {
+            break;
+        }
+        parts.push(&prev.text);
+        if j >= 2 && toks[j - 2].is_punct('.') {
+            j -= 2;
+        } else {
+            break;
+        }
+    }
+    parts.reverse();
+    if let Some(&"self") = parts.first() {
+        parts.remove(0);
+    }
+    if parts.is_empty() {
+        format!("<expr@{}:{}>", file, toks[dot].line)
+    } else {
+        parts.join(".")
+    }
+}
+
+/// A blocking call at `toks[i]` (the dot): returns its display name.
+fn blocking_at(toks: &[Tok], i: usize) -> Option<&'static str> {
+    if !toks[i].is_punct('.') {
+        return None;
+    }
+    let name = toks.get(i + 1)?;
+    let open = toks.get(i + 2)?;
+    if !open.is_punct('(') {
+        return None;
+    }
+    let zero_arg = toks.get(i + 3).is_some_and(|t| t.is_punct(')'));
+    if name.is_ident("send") || name.is_ident("recv_timeout") {
+        return Some(if name.is_ident("send") { "send" } else { "recv_timeout" });
+    }
+    if name.is_ident("recv") && zero_arg {
+        return Some("recv");
+    }
+    // `.join()` with zero args is JoinHandle::join; `join(sep)` is str::join
+    if name.is_ident("join") && zero_arg {
+        return Some("join");
+    }
+    None
+}
+
+/// Scan one file's functions, adding edges to `graph` and LOCK002 findings.
+pub fn scan_file(
+    file: &str,
+    lexed: &Lexed,
+    model: &Model,
+    graph: &mut LockGraph,
+    findings: &mut Vec<Finding>,
+) {
+    for f in &model.fns {
+        if f.in_tests {
+            continue;
+        }
+        scan_fn(file, lexed, model, f, graph, findings);
+    }
+}
+
+fn scan_fn(
+    file: &str,
+    lexed: &Lexed,
+    model: &Model,
+    f: &FnItem,
+    graph: &mut LockGraph,
+    findings: &mut Vec<Finding>,
+) {
+    let toks = &lexed.toks;
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0i32;
+    let mut paren = 0i32;
+    // a `let` statement being parsed: (pattern names, past `=` yet)
+    let mut pending_let: Option<(Vec<String>, bool)> = None;
+    let mut pending_lock: Option<String> = None;
+
+    let mut i = f.body.0;
+    while i < f.body.1 {
+        let t = &toks[i];
+        match &t.kind {
+            Kind::Punct('(') | Kind::Punct('[') => paren += 1,
+            Kind::Punct(')') | Kind::Punct(']') => paren -= 1,
+            Kind::Punct('{') => {
+                depth += 1;
+                // `if let Ok(g) = m.lock() {` — the guard lives in the new
+                // block, so bind it at the incremented depth
+                if pending_lock.is_some() {
+                    bind(&mut held, &mut pending_let, &mut pending_lock, depth);
+                }
+                pending_let = None;
+            }
+            Kind::Punct('}') => {
+                depth -= 1;
+                held.retain(|g| g.depth <= depth);
+            }
+            Kind::Punct(';') if paren == 0 => {
+                bind(&mut held, &mut pending_let, &mut pending_lock, depth);
+            }
+            Kind::Punct('=') => {
+                if let Some((_, past_eq)) = pending_let.as_mut() {
+                    *past_eq = true;
+                }
+            }
+            Kind::Ident => {
+                if t.text == "let" && paren == 0 {
+                    pending_let = Some((Vec::new(), false));
+                    pending_lock = None;
+                } else if t.text == "drop"
+                    && toks.get(i + 1).is_some_and(|u| u.is_punct('('))
+                    && toks.get(i + 3).is_some_and(|u| u.is_punct(')'))
+                {
+                    if let Some(Tok { kind: Kind::Ident, text, .. }) = toks.get(i + 2) {
+                        held.retain(|g| &g.var != text);
+                    }
+                } else if let Some((names, past_eq)) = pending_let.as_mut() {
+                    if !*past_eq
+                        && t.text != "mut"
+                        && t.text != "ref"
+                        && t.text != "_"
+                    {
+                        names.push(t.text.clone());
+                    }
+                }
+            }
+            _ => {}
+        }
+
+        if acquisition_at(toks, i).is_some() {
+            let lock = receiver(toks, i, file);
+            for g in &held {
+                graph
+                    .edges
+                    .entry(g.lock.clone())
+                    .or_default()
+                    .entry(lock.clone())
+                    .or_insert_with(|| EdgeSite {
+                        file: file.to_string(),
+                        line: t.line,
+                        function: f.qualified.clone(),
+                    });
+            }
+            if matches!(&pending_let, Some((_, true))) {
+                pending_lock = Some(lock);
+            }
+            i += 4; // past `. lock ( )`
+            continue;
+        }
+
+        if let Some(call) = blocking_at(toks, i) {
+            if !held.is_empty() && !inline_allowed(lexed, model, "lock", t.line) {
+                let guards: Vec<&str> =
+                    held.iter().map(|g| g.lock.as_str()).collect();
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "LOCK002",
+                    function: f.qualified.clone(),
+                    message: format!(
+                        "lock guard on `{}` held across blocking `.{}(..)` — \
+                         drop the guard first",
+                        guards.join("`, `"),
+                        call
+                    ),
+                });
+            }
+        }
+
+        i += 1;
+    }
+}
+
+fn bind(
+    held: &mut Vec<Held>,
+    pending_let: &mut Option<(Vec<String>, bool)>,
+    pending_lock: &mut Option<String>,
+    depth: i32,
+) {
+    if let (Some((names, _)), Some(lock)) = (pending_let.take(), pending_lock.take()) {
+        for var in names {
+            held.push(Held { var, lock: lock.clone(), depth });
+        }
+    }
+    *pending_let = None;
+    *pending_lock = None;
+}
+
+/// After all files are scanned: find cycles in the acquisition graph.
+pub fn cycle_findings(graph: &LockGraph) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut reported: Vec<Vec<String>> = Vec::new();
+    for start in graph.edges.keys() {
+        let mut stack: Vec<String> = Vec::new();
+        dfs(graph, start, &mut stack, &mut reported, &mut findings);
+    }
+    findings
+}
+
+fn dfs(
+    graph: &LockGraph,
+    node: &str,
+    stack: &mut Vec<String>,
+    reported: &mut Vec<Vec<String>>,
+    findings: &mut Vec<Finding>,
+) {
+    if let Some(pos) = stack.iter().position(|n| n == node) {
+        // cycle: stack[pos..] + back to node
+        let mut cycle: Vec<String> = stack[pos..].to_vec();
+        let mut key = cycle.clone();
+        key.sort();
+        if reported.contains(&key) {
+            return;
+        }
+        reported.push(key);
+        let from = stack.last().cloned().unwrap_or_else(|| node.to_string());
+        cycle.push(node.to_string());
+        let site = graph
+            .edges
+            .get(&from)
+            .and_then(|m| m.get(node))
+            .cloned()
+            .unwrap_or(EdgeSite { file: "<graph>".into(), line: 0, function: String::new() });
+        findings.push(Finding {
+            file: site.file,
+            line: site.line,
+            rule: "LOCK001",
+            function: site.function,
+            message: format!("lock acquisition cycle: {}", cycle.join(" -> ")),
+        });
+        return;
+    }
+    // depth cap: graphs here are tiny; anything deeper is pathological
+    if stack.len() > 64 {
+        return;
+    }
+    stack.push(node.to_string());
+    if let Some(next) = graph.edges.get(node) {
+        for n in next.keys() {
+            dfs(graph, n, stack, reported, findings);
+        }
+    }
+    stack.pop();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::model::extract;
+
+    fn run(src: &str) -> (LockGraph, Vec<Finding>) {
+        let l = lex(src);
+        let m = extract(&l);
+        let mut g = LockGraph::default();
+        let mut f = Vec::new();
+        scan_file("t.rs", &l, &m, &mut g, &mut f);
+        (g, f)
+    }
+
+    #[test]
+    fn edge_recorded_for_nested_acquisition() {
+        let (g, _) = run(
+            "fn f(&self) { let a = self.m1.lock().unwrap(); let b = self.m2.lock().unwrap(); }",
+        );
+        assert!(g.edges.get("m1").is_some_and(|m| m.contains_key("m2")));
+        assert!(g.edges.get("m2").is_none());
+    }
+
+    #[test]
+    fn cycle_detected_across_functions() {
+        let (g, _) = run(
+            "fn f(&self) { let a = self.m1.lock().unwrap(); let b = self.m2.lock().unwrap(); }\n\
+             fn g(&self) { let b = self.m2.lock().unwrap(); let a = self.m1.lock().unwrap(); }",
+        );
+        let cycles = cycle_findings(&g);
+        assert_eq!(cycles.len(), 1);
+        assert!(cycles[0].message.contains("m1"));
+        assert!(cycles[0].message.contains("m2"));
+    }
+
+    #[test]
+    fn guard_dies_at_scope_end() {
+        let (g, _) = run(
+            "fn f(&self) { { let a = self.m1.lock().unwrap(); } let b = self.m2.lock().unwrap(); }",
+        );
+        assert!(g.edges.get("m1").is_none());
+    }
+
+    #[test]
+    fn explicit_drop_releases() {
+        let (_, f) = run(
+            "fn f(&self) { let a = self.m.lock().unwrap(); drop(a); self.tx.send(1).unwrap(); }",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn send_under_guard_flags() {
+        let (_, f) =
+            run("fn f(&self) { let a = self.m.lock().unwrap(); self.tx.send(1).unwrap(); }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "LOCK002");
+        assert!(f[0].message.contains("`m`"));
+    }
+
+    #[test]
+    fn str_join_is_not_thread_join() {
+        let (_, f) = run(
+            "fn f(&self) { let a = self.m.lock().unwrap(); let s = parts.join(\", \"); drop(s); drop(a); }",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn temporary_acquisition_is_not_held() {
+        let (_, f) = run(
+            "fn f(&self) { self.m.lock().unwrap().push(1); self.tx.send(1).unwrap(); }",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn if_let_guard_scoped_to_block() {
+        let (g, f) = run(
+            "fn f(&self) { if let Ok(a) = self.m1.lock() { a.touch(); } let b = self.m2.lock().unwrap(); }",
+        );
+        assert!(g.edges.get("m1").is_none());
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn inline_allow_suppresses_lock002() {
+        let (_, f) = run(
+            "fn f(&self) { let a = self.m.lock().unwrap();\n// analyze:allow(lock, bounded channel, never blocks)\nself.tx.send(1).unwrap(); }",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn tests_mod_is_exempt() {
+        let (_, f) = run(
+            "mod tests { fn f(&self) { let a = self.m.lock().unwrap(); self.tx.send(1).unwrap(); } }",
+        );
+        assert!(f.is_empty());
+    }
+}

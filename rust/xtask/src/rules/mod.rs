@@ -1,0 +1,15 @@
+//! The rule catalogue.  Rule ids are stable API — CI artifacts and
+//! allow.toml entries reference them:
+//!
+//! - `LOCK001`  lock-acquisition cycle (potential deadlock)
+//! - `LOCK002`  lock guard held across a blocking channel/join call
+//! - `PANIC001` unwrap/expect/panic-macro/indexing in a designated hot path
+//! - `ABI001`   program-name prefix drift between aot.py and the Rust ABI
+//! - `ABI002`   free_mask input-group drift
+//! - `ABI003`   flat-ABI leaf-naming drift
+//! - `BENCH001` wall-clock / nondeterminism in a deterministic bench leg
+
+pub mod abi;
+pub mod bench;
+pub mod locks;
+pub mod panics;

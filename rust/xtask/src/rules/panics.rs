@@ -1,0 +1,236 @@
+//! PANIC001 — no panics in designated hot paths.
+//!
+//! Hot paths are configured per (file, function); within them the rule
+//! forbids `.unwrap(` / `.expect(`, the panicking macro family
+//! (`panic!`, `unreachable!`, `todo!`, `unimplemented!`, `assert*!` —
+//! `debug_assert*!` and anyhow's `ensure!`/`bail!` are fine: the former
+//! compiles out of release, the latter returns `Err`), and — where
+//! `strict_index` is set — direct `[..]` indexing.  Escapes:
+//! `// analyze:allow(panic, reason)` and `// analyze:allow(index, reason)`.
+
+use crate::findings::Finding;
+use crate::lexer::{Kind, Lexed, Tok};
+use crate::model::{inline_allowed, FnItem, Model};
+
+/// One designated hot path: `file` is a `/`-suffix of the repo-relative
+/// path; `func` matches the bare or `Type::`-qualified fn name.
+#[derive(Debug, Clone)]
+pub struct HotPath {
+    pub file: &'static str,
+    pub func: &'static str,
+    /// Also forbid direct indexing (off for dense math kernels whose
+    /// shapes are validated once at entry).
+    pub strict_index: bool,
+}
+
+const PANIC_MACROS: [&str; 7] = [
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+
+/// Keywords that, appearing before `[`, mean "not an index expression"
+/// (`for x in [..]`, `return [..]`, array-typed positions, …).
+const NON_INDEX_PREV: [&str; 16] = [
+    "in", "return", "break", "if", "while", "match", "else", "let", "mut",
+    "ref", "move", "loop", "continue", "for", "where", "as",
+];
+
+fn is_index_expr(toks: &[Tok], open: usize) -> bool {
+    let Some(prev) = open.checked_sub(1).and_then(|p| toks.get(p)) else {
+        return false;
+    };
+    match &prev.kind {
+        Kind::Ident => !NON_INDEX_PREV.contains(&prev.text.as_str()),
+        Kind::Punct(']') | Kind::Punct(')') => true,
+        _ => false,
+    }
+}
+
+/// Does the bracket pair starting at `open` contain a `..` range?  Range
+/// slicing (`&xs[a..b]`) is reported by a separate sweep in review — the
+/// mechanical rule sticks to single-element indexing, where `.get()` is
+/// always the drop-in fix.
+fn is_range_index(toks: &[Tok], open: usize) -> bool {
+    let mut depth = 0i32;
+    for j in open..toks.len() {
+        match toks[j].kind {
+            Kind::Punct('[') => depth += 1,
+            Kind::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return false;
+                }
+            }
+            Kind::Punct('.') if depth == 1 => {
+                if toks.get(j + 1).is_some_and(|t| t.is_punct('.')) {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+pub fn scan_fn(
+    file: &str,
+    lexed: &Lexed,
+    model: &Model,
+    f: &FnItem,
+    strict_index: bool,
+    findings: &mut Vec<Finding>,
+) {
+    let toks = &lexed.toks;
+    let mut i = f.body.0;
+    while i < f.body.1 {
+        let t = &toks[i];
+        // .unwrap( / .expect(
+        if t.is_punct('.') {
+            if let Some(m) = toks.get(i + 1) {
+                if (m.is_ident("unwrap") || m.is_ident("expect"))
+                    && toks.get(i + 2).is_some_and(|u| u.is_punct('('))
+                    && !inline_allowed(lexed, model, "panic", m.line)
+                {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: m.line,
+                        rule: "PANIC001",
+                        function: f.qualified.clone(),
+                        message: format!(
+                            "`.{}()` in hot path — propagate the error or add \
+                             `// analyze:allow(panic, reason)`",
+                            m.text
+                        ),
+                    });
+                    i += 3;
+                    continue;
+                }
+            }
+        }
+        // panic! / assert! family
+        if t.kind == Kind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(i + 1).is_some_and(|u| u.is_punct('!'))
+            && !inline_allowed(lexed, model, "panic", t.line)
+        {
+            findings.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "PANIC001",
+                function: f.qualified.clone(),
+                message: format!(
+                    "`{}!` in hot path — return an error (`ensure!`/`bail!`) instead",
+                    t.text
+                ),
+            });
+            i += 2;
+            continue;
+        }
+        // direct indexing
+        if strict_index
+            && t.is_punct('[')
+            && is_index_expr(toks, i)
+            && !is_range_index(toks, i)
+            && !inline_allowed(lexed, model, "index", t.line)
+        {
+            findings.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "PANIC001",
+                function: f.qualified.clone(),
+                message: "direct indexing in hot path — use `.get()`/iterators or add \
+                          `// analyze:allow(index, reason)`"
+                    .to_string(),
+            });
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::model::extract;
+
+    fn run(src: &str, func: &str, strict: bool) -> Vec<Finding> {
+        let l = lex(src);
+        let m = extract(&l);
+        let mut out = Vec::new();
+        for f in m.fns.iter().filter(|f| f.matches(func)) {
+            scan_fn("t.rs", &l, &m, f, strict, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn unwrap_and_expect_flagged() {
+        let f = run("fn hot(x: Option<u32>) { x.unwrap(); x.expect(\"y\"); }", "hot", false);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|f| f.rule == "PANIC001"));
+    }
+
+    #[test]
+    fn unwrap_or_else_is_fine() {
+        let f = run(
+            "fn hot(x: Option<u32>) { x.unwrap_or(0); x.unwrap_or_else(|| 1); x.unwrap_or_default(); }",
+            "hot",
+            false,
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn panic_macros_flagged_but_not_debug_assert() {
+        let f = run(
+            "fn hot() { assert!(true); debug_assert!(true); debug_assert_eq!(1, 1); panic!(\"x\"); }",
+            "hot",
+            false,
+        );
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn indexing_only_under_strict() {
+        let src = "fn hot(v: &[u32], i: usize) { let _a = v[i]; }";
+        assert_eq!(run(src, "hot", true).len(), 1);
+        assert!(run(src, "hot", false).is_empty());
+    }
+
+    #[test]
+    fn array_literals_attrs_and_ranges_not_flagged() {
+        let f = run(
+            "fn hot(v: &[u32]) { let a = [0u8; 4]; let s = &v[1..3]; for x in [1, 2] { let _ = x; } let _ = (a, s); }",
+            "hot",
+            true,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn chained_index_flagged() {
+        let f = run("fn hot(v: &[Vec<u32>]) { let _ = v[0][1]; }", "hot", true);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn inline_allow_works() {
+        let f = run(
+            "fn hot(x: Option<u32>) {\n  // analyze:allow(panic, invariant: set by caller)\n  x.unwrap();\n}",
+            "hot",
+            false,
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn only_configured_fn_is_scanned() {
+        let f = run("fn cold(x: Option<u32>) { x.unwrap(); }", "hot", false);
+        assert!(f.is_empty());
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration tests: each seeded-violation fixture must fire its rule,
+//! the clean fixture must stay silent under the harshest config, and the
+//! real repository must analyze clean under the committed policy +
+//! allowlist (the same gate CI enforces).
+
+use std::path::PathBuf;
+
+use xtask::rules::abi::AbiConfig;
+use xtask::rules::panics::HotPath;
+use xtask::{analyze, repo_config, Config};
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn empty() -> Config {
+    Config { lock_roots: vec![], hot_paths: vec![], bench_roots: vec![], abi: None }
+}
+
+fn abi_cfg(python: &str, refback: &str) -> AbiConfig {
+    AbiConfig {
+        python: python.into(),
+        rust_files: vec![refback.into()],
+        core_prefixes: vec!["init_".into(), "gen_".into(), "gen_masked_".into()],
+        free_mask_files: vec![refback.into()],
+        leaf_file: refback.into(),
+        leaves: vec!["params['emb']".into()],
+        py_anchors: vec!["tree_specs".into(), "keystr".into()],
+    }
+}
+
+#[test]
+fn lock_cycle_fires_lock001() {
+    let cfg = Config { lock_roots: vec!["lock_cycle.rs".into()], ..empty() };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert!(f.iter().any(|x| x.rule == "LOCK001"), "{f:?}");
+    let msg = &f.iter().find(|x| x.rule == "LOCK001").unwrap().message;
+    assert!(msg.contains("m1") && msg.contains("m2"), "{msg}");
+}
+
+#[test]
+fn lock_across_send_fires_lock002() {
+    let cfg = Config { lock_roots: vec!["lock_across_send.rs".into()], ..empty() };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "LOCK002");
+    assert_eq!(f[0].function, "Publisher::publish");
+    assert!(f[0].message.contains("metrics"), "{}", f[0].message);
+}
+
+#[test]
+fn hot_unwrap_fires_panic001_only_in_designated_fn() {
+    let cfg = Config {
+        hot_paths: vec![HotPath {
+            file: "hot_unwrap.rs",
+            func: "Decoder::decode",
+            strict_index: true,
+        }],
+        ..empty()
+    };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert!(f.iter().all(|x| x.rule == "PANIC001"), "{f:?}");
+    // one unwrap + one direct index in `decode`; `cold` must not appear
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().all(|x| x.function == "Decoder::decode"));
+}
+
+#[test]
+fn bench_instant_fires_bench001() {
+    let cfg = Config { bench_roots: vec!["bench_instant.rs".into()], ..empty() };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert!(f.iter().any(|x| x.rule == "BENCH001" && x.message.contains("Instant::now")), "{f:?}");
+    assert!(f.iter().any(|x| x.rule == "BENCH001" && x.message.contains("hash-map")), "{f:?}");
+}
+
+#[test]
+fn abi_good_is_clean() {
+    let cfg = Config {
+        abi: Some(abi_cfg("abi_good/aot.py", "abi_good/refback.rs")),
+        ..empty()
+    };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn abi_rename_in_python_alone_fires_abi001() {
+    let cfg = Config {
+        abi: Some(abi_cfg("abi_py_renamed/aot.py", "abi_good/refback.rs")),
+        ..empty()
+    };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert!(f.iter().any(|x| x.rule == "ABI001" && x.message.contains("gen_masked_")), "{f:?}");
+}
+
+#[test]
+fn abi_rename_in_rust_alone_fires_abi001() {
+    let cfg = Config {
+        abi: Some(abi_cfg("abi_good/aot.py", "abi_rs_renamed/refback.rs")),
+        ..empty()
+    };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    // both directions: the renamed prefix is unknown to python, and the
+    // core prefix is gone from rust
+    assert!(f.iter().any(|x| x.rule == "ABI001" && x.message.contains("gen_mask2_")), "{f:?}");
+    assert!(f.iter().any(|x| x.rule == "ABI001" && x.message.contains("gen_masked_")), "{f:?}");
+}
+
+#[test]
+fn clean_fixture_is_silent_under_harshest_config() {
+    let cfg = Config {
+        lock_roots: vec!["clean.rs".into()],
+        hot_paths: vec![HotPath { file: "clean.rs", func: "Clean::hot", strict_index: true }],
+        bench_roots: vec!["clean.rs".into()],
+        abi: None,
+    };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert!(f.is_empty(), "{f:?}");
+}
+
+/// The acceptance gate: the repository itself, under the committed policy
+/// and allowlist, has zero active findings.  This is exactly what
+/// `cargo xtask analyze` (tier-1 + CI `analyze` job) enforces.
+#[test]
+fn repo_is_clean_under_committed_policy() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let all = analyze(&root, &repo_config()).unwrap();
+    let allow_src =
+        std::fs::read_to_string(root.join("rust/xtask/allow.toml")).unwrap_or_default();
+    let entries = xtask::allow::parse(&allow_src).unwrap();
+    let active: Vec<_> = all
+        .into_iter()
+        .filter(|f| !entries.iter().any(|e| e.matches(f)))
+        .collect();
+    assert!(
+        active.is_empty(),
+        "repo has non-allowlisted findings:\n{}",
+        active.iter().map(|f| f.text()).collect::<Vec<_>>().join("\n")
+    );
+}

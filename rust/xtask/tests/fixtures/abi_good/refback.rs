@@ -1,0 +1,24 @@
+// Minimal rust mirror of the flat ABI.  Never compiled; lexed only.
+pub fn reference_manifest(name: &str, b: usize, v: usize, d: usize) -> Manifest {
+    let mut programs = Map::new();
+    programs.insert(format!("init_{name}"), init_spec());
+    programs.insert(format!("gen_{name}"), gen_spec(false));
+    programs.insert(format!("gen_masked_{name}"), gen_spec(true));
+    let mut inputs = Vec::new();
+    inputs.push(spec("free_mask", vec![b], DType::F32));
+    let mut out = Vec::new();
+    out.push(spec("params['emb']", vec![v, d], DType::F32));
+    Manifest { programs, inputs, out }
+}
+
+fn role_of(spec: &ProgramSpec) -> (&'static str, String) {
+    if let Some(a) = spec.name.strip_prefix("init_") {
+        ("init", a.to_string())
+    } else if let Some(a) = spec.name.strip_prefix("gen_masked_") {
+        ("gen_masked", a.to_string())
+    } else if let Some(a) = spec.name.strip_prefix("gen_") {
+        ("gen", a.to_string())
+    } else {
+        ("other", spec.name.clone())
+    }
+}

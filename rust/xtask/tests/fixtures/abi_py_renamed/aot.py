@@ -1,0 +1,22 @@
+# Seeded violation: the masked-gen program family was renamed on the
+# python side only (gen_masked_ -> gen_mask2_); the rust mirror still says
+# gen_masked_.  ABI001 must fire.
+import jax
+
+
+def tree_specs(tree, prefix):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(prefix + jax.tree_util.keystr(kp), v.shape) for kp, v in leaves]
+
+
+class Exporter:
+    def export_arch(self, aname, init_fn, gen_fn, gen_masked_fn, shapes):
+        s1, params, mems, x, mask_g = shapes
+        self.export(f"init_{aname}", init_fn, [("seed", s1)], ["params"])
+        self.export(f"gen_{aname}", gen_fn,
+                    [("params", params), ("mems", mems), ("x", x)],
+                    ["logits", "mems"])
+        self.export(f"gen_mask2_{aname}", gen_masked_fn,
+                    [("params", params), ("mems", mems), ("x", x),
+                     ("free_mask", mask_g)],
+                    ["logits", "mems"])

@@ -1,0 +1,14 @@
+// Seeded violation: the masked-gen program family was renamed on the rust
+// side only (gen_masked_ -> gen_mask2_); aot.py still exports gen_masked_.
+// ABI001 must fire.  Never compiled; lexed only.
+pub fn reference_manifest(name: &str, b: usize, v: usize, d: usize) -> Manifest {
+    let mut programs = Map::new();
+    programs.insert(format!("init_{name}"), init_spec());
+    programs.insert(format!("gen_{name}"), gen_spec(false));
+    programs.insert(format!("gen_mask2_{name}"), gen_spec(true));
+    let mut inputs = Vec::new();
+    inputs.push(spec("free_mask", vec![b], DType::F32));
+    let mut out = Vec::new();
+    out.push(spec("params['emb']", vec![v, d], DType::F32));
+    Manifest { programs, inputs, out }
+}

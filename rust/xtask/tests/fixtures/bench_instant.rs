@@ -1,0 +1,14 @@
+// Seeded violation: wall-clock read and hash-map state in a deterministic
+// bench leg.
+// Never compiled; lexed by the analyzer tests only.
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn deterministic_leg(ids: &[u64]) -> u64 {
+    let t0 = Instant::now();
+    let mut arrive: HashMap<u64, u64> = HashMap::new();
+    for (i, id) in ids.iter().enumerate() {
+        arrive.insert(*id, i as u64);
+    }
+    t0.elapsed().as_nanos() as u64 + arrive.len() as u64
+}

@@ -1,0 +1,36 @@
+// Negative control: near-misses for every rule.  The analyzer must report
+// NOTHING here even when this file is configured as a lock root, a bench
+// root, and a strict hot path.
+// Never compiled; lexed by the analyzer tests only.
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::Instant;
+
+struct Clean {
+    metrics: Mutex<Vec<u64>>,
+    tx: Sender<Vec<u64>>,
+}
+
+impl Clean {
+    // designated hot in the test config
+    fn hot(&self, xs: &[u64], t0: Instant) -> u64 {
+        // guard dropped before the send — fine
+        let snapshot = {
+            let guard = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+            guard.clone()
+        };
+        self.tx.send(snapshot).ok();
+        // non-panicking forms — fine
+        let first = xs.first().copied().unwrap_or(0);
+        debug_assert!(first < u64::MAX);
+        // range slicing and iterators, not single-element indexing — fine
+        let tail = &xs[1..];
+        let labels = ["a", "b"];
+        // str::join, not JoinHandle::join — fine even with a guard held
+        let held = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+        let joined = labels.join(",");
+        drop(held);
+        // Instant as a *type* is fine in a deterministic leg; ::now is not
+        first + tail.len() as u64 + joined.len() as u64 + t0.elapsed().as_nanos() as u64
+    }
+}

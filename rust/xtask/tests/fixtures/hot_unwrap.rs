@@ -1,0 +1,18 @@
+// Seeded violation: `.unwrap()` and direct indexing inside a function the
+// test config designates as a hot path.
+// Never compiled; lexed by the analyzer tests only.
+struct Decoder {
+    table: Vec<i32>,
+}
+
+impl Decoder {
+    fn decode(&self, xs: &[i32]) -> i32 {
+        let first = xs.first().unwrap();
+        self.table[*first as usize]
+    }
+
+    fn cold(&self, xs: &[i32]) -> i32 {
+        // not designated hot: the same patterns must NOT fire here
+        xs.first().copied().unwrap()
+    }
+}

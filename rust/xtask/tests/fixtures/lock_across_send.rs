@@ -1,0 +1,17 @@
+// Seeded violation: a lock guard stays live across a channel send — the
+// receiver may itself need the lock, and a bounded channel would deadlock.
+// Never compiled; lexed by the analyzer tests only.
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+struct Publisher {
+    metrics: Mutex<Vec<u64>>,
+    tx: Sender<Vec<u64>>,
+}
+
+impl Publisher {
+    fn publish(&self) {
+        let guard = self.metrics.lock().unwrap();
+        self.tx.send(guard.clone()).ok();
+    }
+}

@@ -1,0 +1,23 @@
+// Seeded violation: two functions acquire the same pair of mutexes in
+// opposite orders — the acquisition graph has the cycle m1 -> m2 -> m1.
+// Never compiled; lexed by the analyzer tests only.
+use std::sync::Mutex;
+
+struct Shared {
+    m1: Mutex<u32>,
+    m2: Mutex<u32>,
+}
+
+impl Shared {
+    fn forward(&self) -> u32 {
+        let a = self.m1.lock().unwrap();
+        let b = self.m2.lock().unwrap();
+        *a + *b
+    }
+
+    fn backward(&self) -> u32 {
+        let b = self.m2.lock().unwrap();
+        let a = self.m1.lock().unwrap();
+        *a - *b
+    }
+}

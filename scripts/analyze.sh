@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Project-specific static analysis: lock order, panic paths, cross-language
+# ABI drift, bench determinism.  Thin wrapper over the xtask binary so the
+# pass is runnable from the repo root without remembering the cargo
+# incantation:
+#
+#   scripts/analyze.sh                      # human-readable findings
+#   scripts/analyze.sh --format json        # machine-readable (CI artifact)
+#   scripts/analyze.sh --format json --out findings.json
+#
+# Exit codes: 0 clean, 1 non-allowlisted findings, 2 analyzer error.
+# Rules, allowlist format and escape hatches: rust/xtask/README.md.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+exec cargo run --quiet --package xtask -- analyze "$@"

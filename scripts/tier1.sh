@@ -53,6 +53,9 @@ else
 fi
 suite build cargo build --release
 suite test cargo test -q
+# project-specific static analysis (lock order, panic paths, ABI drift,
+# bench determinism) — see rust/xtask/README.md; allowlist: rust/xtask/allow.toml
+suite analyze cargo run --quiet --package xtask -- analyze
 # hermetic serve smoke: the whole CLI serve path (router, workers, wave +
 # continuous policies, masked resets) over the pure-Rust reference backend
 suite serve-smoke cargo run --release --quiet -- serve --backend ref \
