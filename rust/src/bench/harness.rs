@@ -24,6 +24,12 @@
 //! - **continuous / overlapped** — per-lane `SlotScheduler` loop: admit due
 //!   arrivals between steps, step while there is work, jump when idle; each
 //!   executed step costs `step_ticks`.
+//! - **speculative / overlapped** ([`Harness::run_speculative_leg`]) —
+//!   per-lane `SpecScheduler` round loop: admit due arrivals between
+//!   rounds; a round that drafted `k` steps costs `k × draft.step_ticks +
+//!   step_ticks` — the `k` verify positions are position-parallel on real
+//!   hardware, so the target's cost is charged **once per round** while the
+//!   sequential draft pays per step.
 //! - **wave / serial** — all lanes share one clock (decode blocks
 //!   admission, the `Cluster::replay` baseline): arrivals are processed in
 //!   trace order, the clock jumps to each arrival, and after every
@@ -42,8 +48,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::{Engine, ExecMode, StateStore};
 use crate::serve::{
-    BatchWave, DecodeEngine, Router, RouterPolicy, ServeMetrics, ServePolicy, SlotExecutor,
-    SlotScheduler, TimedRequest, VariantInfo,
+    BatchWave, DecodeEngine, DraftDivergence, Router, RouterPolicy, ServeMetrics, ServePolicy,
+    SlotExecutor, SlotScheduler, SpecScheduler, TimedRequest, VariantInfo,
 };
 
 use super::clock::{arrival_tick, StepClock};
@@ -96,6 +102,21 @@ impl Scenario {
         )
     }
 }
+
+/// Parameters of one speculative leg: which variant drafts (with its
+/// virtual per-step cost), the per-round draft depth, and the probability
+/// of a seeded draft error (the acceptance-rate axis — see
+/// `serve::speculative::DraftDivergence`).
+#[derive(Debug, Clone)]
+pub struct SpecParams {
+    pub draft: LaneSpec,
+    pub draft_k: usize,
+    pub divergence: f64,
+}
+
+/// Seed-mixing constant for the draft-error stream, shared with the Python
+/// baseline mirror (`scripts/bench_baseline.py`).
+pub const DIVERGENCE_SEED_XOR: u64 = 0xD1FF;
 
 /// One completed request in virtual time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -211,8 +232,43 @@ impl<'a> Harness<'a> {
             (ServePolicy::Continuous, Concurrency::Serial) => {
                 bail!("serial replay is wave-only (the cluster has no serial continuous path)")
             }
+            (ServePolicy::Speculative, _) => {
+                bail!("speculative legs carry draft parameters — use run_speculative_leg")
+            }
         };
-        let mut samples = samples;
+        self.finish_leg(name, policy, concurrency, exec, samples, metrics, wall)
+    }
+
+    /// Replay one speculative leg (always overlapped: one round loop per
+    /// lane).  The draft engine named by `params` is bound fresh per lane.
+    pub fn run_speculative_leg(
+        &self,
+        name: &str,
+        exec: ExecMode,
+        params: &SpecParams,
+    ) -> Result<Leg> {
+        let (samples, metrics, wall) = self.speculative(exec, params)?;
+        self.finish_leg(
+            name,
+            ServePolicy::Speculative,
+            Concurrency::Overlapped,
+            exec,
+            samples,
+            metrics,
+            wall,
+        )
+    }
+
+    fn finish_leg(
+        &self,
+        name: &str,
+        policy: ServePolicy,
+        concurrency: Concurrency,
+        exec: ExecMode,
+        mut samples: Vec<Sample>,
+        metrics: ServeMetrics,
+        wall: u64,
+    ) -> Result<Leg> {
         samples.sort_by_key(|s| (s.done_tick, s.id));
         anyhow::ensure!(
             samples.len() == self.scenario.trace.len(),
@@ -359,6 +415,71 @@ impl<'a> Harness<'a> {
                     clock.advance((sched.metrics.steps - s0) * spec.step_ticks);
                     let done = clock.now();
                     for r in rs {
+                        let at = *arrive
+                            .get(&r.id)
+                            .context("response for an unrouted request")?;
+                        samples.push(Sample { id: r.id, arrive_tick: at, done_tick: done });
+                    }
+                } else if let Some((_, at)) = sub.get(i) {
+                    clock.at_least(*at);
+                } else {
+                    break;
+                }
+            }
+            metrics.merge(&sched.metrics);
+            wall = wall.max(clock.now());
+        }
+        Ok((samples, metrics, wall))
+    }
+
+    fn speculative(
+        &self,
+        exec: ExecMode,
+        params: &SpecParams,
+    ) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        let mut samples = Vec::new();
+        let mut metrics = ServeMetrics::default();
+        let mut wall = 0u64;
+        // the scheduler tracks wall submission Instants we ignore; one epoch
+        // keeps them harmlessly constant
+        // analyze:allow(bench, single wall epoch never read back; the virtual StepClock is authoritative)
+        let epoch = Instant::now();
+        for (spec, sub) in self.scenario.lanes.iter().zip(&self.routed) {
+            let arrive: BTreeMap<u64, u64> = sub.iter().map(|(q, at)| (q.id, *at)).collect();
+            let tde = DecodeEngine::new(self.engine, &spec.arch)?;
+            let mut tst = tde.init_state(0)?;
+            tst.set_mode(exec);
+            let dde = DecodeEngine::new(self.engine, &params.draft.arch)?;
+            let mut dst = dde.init_state(0)?;
+            dst.set_mode(exec);
+            let mut sched =
+                SpecScheduler::new(spec.arch.clone(), (tde, tst), (dde, dst), params.draft_k)?;
+            if params.divergence > 0.0 {
+                sched.set_divergence(Some(DraftDivergence::new(
+                    self.scenario.seed ^ DIVERGENCE_SEED_XOR,
+                    params.divergence,
+                )));
+            }
+            let mut clock = StepClock::new();
+            let mut i = 0usize;
+            loop {
+                while let Some((q, at)) = sub.get(i) {
+                    if *at > clock.now() {
+                        break;
+                    }
+                    sched.submit(q.clone(), epoch);
+                    i += 1;
+                }
+                if sched.has_work() {
+                    let rd = sched.round()?;
+                    // position-parallel verify: the sequential draft pays
+                    // per drafted step, the target once per nonzero round
+                    clock.advance(
+                        rd.spec_steps * params.draft.step_ticks
+                            + u64::from(rd.spec_steps > 0) * spec.step_ticks,
+                    );
+                    let done = clock.now();
+                    for r in rd.responses {
                         let at = *arrive
                             .get(&r.id)
                             .context("response for an unrouted request")?;

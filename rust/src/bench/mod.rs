@@ -33,6 +33,12 @@ pub mod report;
 pub mod scenarios;
 
 pub use clock::{arrival_tick, StepClock};
-pub use harness::{trimmed_latencies, Concurrency, Harness, LaneSpec, Leg, Sample, Scenario};
+pub use harness::{
+    trimmed_latencies, Concurrency, Harness, LaneSpec, Leg, Sample, Scenario, SpecParams,
+    DIVERGENCE_SEED_XOR,
+};
 pub use report::{env_fingerprint, LegReport, Report, Summary, BENCH_SCHEMA};
-pub use scenarios::{bench_cfg, fleet_engine, run_named, run_suite, DEFAULT_SEED, HERMETIC_SUITE};
+pub use scenarios::{
+    bench_cfg, fleet_engine, run_named, run_suite, DEFAULT_SEED, HERMETIC_SUITE,
+    SPEC_DRAFT_TICKS, SPEC_TARGET_TICKS,
+};

@@ -21,6 +21,9 @@
 //!     "requests": 64, "tokens_out": 580, "waves": 17, "steps": 500,
 //!     "wall_ticks": 520, "occupancy": 0.70,
 //!     "bytes_synced": 167936, "bytes_per_token": 289.5,
+//!     "tokens_drafted": 0, "tokens_accepted": 0, "tokens_rejected": 0,
+//!     "acceptance_rate": 0.0,          // speculative legs only (zero
+//!                                      // elsewhere; absent keys read as 0)
 //!     "latency": { "unit": "ticks", "n": 60, "mean": ...,
 //!                  "min": ..., "max": ..., "p50": ..., "p95": ... }
 //!   } ... ]
@@ -136,6 +139,14 @@ pub struct LegReport {
     pub occupancy: f64,
     pub bytes_synced: u64,
     pub bytes_per_token: f64,
+    /// Speculative-decode accounting: zero on non-speculative legs (the
+    /// fields are always serialised, so a leg's schema does not depend on
+    /// its policy; missing keys read back as zero for pre-speculative
+    /// reports).
+    pub tokens_drafted: u64,
+    pub tokens_accepted: u64,
+    pub tokens_rejected: u64,
+    pub acceptance_rate: f64,
     pub latency: Summary,
 }
 
@@ -158,6 +169,10 @@ impl LegReport {
             occupancy: leg.metrics.occupancy(),
             bytes_synced: leg.metrics.bytes_synced,
             bytes_per_token: leg.metrics.bytes_per_token(),
+            tokens_drafted: leg.metrics.tokens_drafted,
+            tokens_accepted: leg.metrics.tokens_accepted,
+            tokens_rejected: leg.metrics.tokens_rejected,
+            acceptance_rate: leg.metrics.acceptance_rate(),
             latency: Summary::of("ticks", &lat),
         }
     }
@@ -176,6 +191,10 @@ impl LegReport {
             ("occupancy", Json::Num(self.occupancy)),
             ("bytes_synced", Json::Num(self.bytes_synced as f64)),
             ("bytes_per_token", Json::Num(self.bytes_per_token)),
+            ("tokens_drafted", Json::Num(self.tokens_drafted as f64)),
+            ("tokens_accepted", Json::Num(self.tokens_accepted as f64)),
+            ("tokens_rejected", Json::Num(self.tokens_rejected as f64)),
+            ("acceptance_rate", Json::Num(self.acceptance_rate)),
             ("latency", self.latency.to_json()),
         ])
     }
@@ -185,6 +204,7 @@ impl LegReport {
             Ok(j.req(k)?.as_str().context(k.to_string())?.to_string())
         };
         let f = |k: &str| -> Result<f64> { Ok(j.req(k)?.as_f64().context(k.to_string())?) };
+        let opt = |k: &str| -> f64 { j.get(k).and_then(Json::as_f64).unwrap_or(0.0) };
         Ok(LegReport {
             name: s("name")?,
             policy: s("policy")?,
@@ -198,20 +218,31 @@ impl LegReport {
             occupancy: f("occupancy")?,
             bytes_synced: f("bytes_synced")? as u64,
             bytes_per_token: f("bytes_per_token")?,
+            // absent in pre-speculative reports: read as zero, don't fail
+            tokens_drafted: opt("tokens_drafted") as u64,
+            tokens_accepted: opt("tokens_accepted") as u64,
+            tokens_rejected: opt("tokens_rejected") as u64,
+            acceptance_rate: opt("acceptance_rate"),
             latency: Summary::from_json(j.req("latency")?)?,
         })
     }
 
     /// One aligned table row (see [`Report::render`]).
     pub fn render_row(&self) -> String {
+        let accept = if self.tokens_drafted > 0 {
+            format!("{:6.2}", self.acceptance_rate)
+        } else {
+            format!("{:>6}", "-")
+        };
         format!(
-            "{:14} {:5} {:6} {:7} {:7} {:6.2} {:8.1} {:8.1} {:10.0}",
+            "{:14} {:5} {:6} {:7} {:7} {:6.2} {} {:8.1} {:8.1} {:10.0}",
             self.name,
             self.requests,
             self.steps,
             self.wall_ticks,
             self.waves,
             self.occupancy,
+            accept,
             self.latency.p50,
             self.latency.p95,
             self.bytes_per_token,
@@ -343,7 +374,7 @@ impl Report {
             1e6 / self.ticks_per_sec
         );
         out.push_str(
-            "  leg            reqs  steps    wall   waves  occup  p50-tk   p95-tk      B/tok\n",
+            "  leg            reqs  steps    wall   waves  occup accept  p50-tk   p95-tk      B/tok\n",
         );
         for leg in &self.legs {
             out.push_str("  ");
@@ -377,6 +408,7 @@ fn policy_str(p: ServePolicy) -> &'static str {
     match p {
         ServePolicy::Wave => "wave",
         ServePolicy::Continuous => "continuous",
+        ServePolicy::Speculative => "speculative",
     }
 }
 

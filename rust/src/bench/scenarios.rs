@@ -22,6 +22,13 @@
 //!   overlapped wall ≈ max lane work.
 //! - [`residency`] — resident-vs-roundtrip exec A/B on the continuous
 //!   path: identical schedule, orders-of-magnitude different bytes/token.
+//! - [`speculative`] — plain-continuous vs speculative decode on a 3-tick
+//!   lane drafted by a 1-tick same-arch twin, sweeping draft depth
+//!   (k ∈ {2, 4, 8}) and seeded draft-error rate (the acceptance axis):
+//!   at full acceptance k = 8 buys 8 tokens for 8·1 + 3 ticks vs 24 plain.
+//! - [`bursty`] — wave-vs-continuous under a bursty (two-phase Poisson)
+//!   arrival process: long quiet stretches punctuated by dense bursts, the
+//!   diurnal shape where deadline-fired partial waves pay worst.
 
 use std::path::{Path, PathBuf};
 
@@ -31,11 +38,18 @@ use crate::runtime::{refback, Engine, ExecMode, ModelConfig};
 use crate::serve::{Arrival, ServePolicy, WorkloadGen};
 use crate::util::rng::Rng;
 
-use super::harness::{Concurrency, Harness, LaneSpec, Scenario};
+use super::harness::{Concurrency, Harness, LaneSpec, Scenario, SpecParams};
 use super::report::Report;
 
 /// Scenario names in suite order.
-pub const HERMETIC_SUITE: &[&str] = &["coordinator", "serve_fleet", "residency"];
+pub const HERMETIC_SUITE: &[&str] =
+    &["coordinator", "serve_fleet", "residency", "speculative", "bursty"];
+
+/// Virtual per-step cost of the speculative scenario's draft engine (the
+/// target lane costs `SPEC_TARGET_TICKS`) — the 3:1 grade a real
+/// cheap-variant draft would have.  Mirrored by scripts/bench_baseline.py.
+pub const SPEC_DRAFT_TICKS: u64 = 1;
+pub const SPEC_TARGET_TICKS: u64 = 3;
 
 /// Default seed for the committed baseline (CI runs exactly this).
 pub const DEFAULT_SEED: u64 = 42;
@@ -145,6 +159,43 @@ pub fn residency(seed: u64) -> Scenario {
     }
 }
 
+/// Plain-continuous vs speculative decode A/B (see module docs).  Burst
+/// arrivals keep every slot busy, so the legs compare pure decode
+/// schedules: tokens per wall-tick is the headline axis.
+pub fn speculative(seed: u64) -> Scenario {
+    let gen = WorkloadGen::new(bench_cfg().vocab); // Burst: everything at t=0
+    let trace = gen.generate(48, seed);
+    Scenario {
+        name: "speculative".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(1, SPEC_TARGET_TICKS),
+        trace,
+    }
+}
+
+/// Wave-vs-continuous under bursty two-phase Poisson arrivals (see module
+/// docs).  The only scenario with stochastic arrival *gaps*: both phases'
+/// exponential draws come from the same seeded stream the Python mirror
+/// replays.
+pub fn bursty(seed: u64) -> Scenario {
+    let gen = WorkloadGen::bursty(bench_cfg().vocab);
+    let trace = gen.generate(48, seed);
+    Scenario {
+        name: "bursty".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(1, 1),
+        trace,
+    }
+}
+
 /// Run one named scenario end to end, returning its report.
 pub fn run_named(name: &str, seed: u64) -> Result<Report> {
     match name {
@@ -191,6 +242,48 @@ pub fn run_named(name: &str, seed: u64) -> Result<Report> {
                     ServePolicy::Continuous,
                     Concurrency::Overlapped,
                     ExecMode::Roundtrip,
+                )?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        "speculative" => {
+            let engine = fleet_engine(1)?;
+            let h = Harness::new(&engine, speculative(seed))?;
+            let draft = LaneSpec {
+                arch: refback::fleet_arch_name(0),
+                step_ticks: SPEC_DRAFT_TICKS,
+                quality: 1.0,
+            };
+            let sp = |draft_k: usize, divergence: f64| SpecParams {
+                draft: draft.clone(),
+                draft_k,
+                divergence,
+            };
+            let legs = vec![
+                h.run_leg(
+                    "continuous",
+                    ServePolicy::Continuous,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
+                )?,
+                h.run_speculative_leg("spec_k2", ExecMode::Auto, &sp(2, 0.0))?,
+                h.run_speculative_leg("spec_k4", ExecMode::Auto, &sp(4, 0.0))?,
+                h.run_speculative_leg("spec_k8", ExecMode::Auto, &sp(8, 0.0))?,
+                h.run_speculative_leg("spec_k4_div10", ExecMode::Auto, &sp(4, 0.10))?,
+                h.run_speculative_leg("spec_k4_div50", ExecMode::Auto, &sp(4, 0.50))?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        "bursty" => {
+            let engine = fleet_engine(1)?;
+            let h = Harness::new(&engine, bursty(seed))?;
+            let legs = vec![
+                h.run_leg("wave", ServePolicy::Wave, Concurrency::Overlapped, ExecMode::Auto)?,
+                h.run_leg(
+                    "continuous",
+                    ServePolicy::Continuous,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
                 )?,
             ];
             Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))

@@ -160,6 +160,8 @@ fn run() -> Result<()> {
                 realtime: args.has("realtime"),
                 rps: args.get_f64("rps", 0.0)?,
                 exec_mode,
+                draft_k: args.get_usize("draft-k", 4)?,
+                adaptive_sla_ms: args.get_f64("adaptive-sla-ms", 0.0)?,
             };
             serve_demo(&engine, n_req, &arch_flag, seed, &opts)?;
         }
@@ -248,6 +250,11 @@ fn run() -> Result<()> {
             let mut cluster = Cluster::new(&engine, &names, seed)?;
             cluster.set_max_wait(Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64));
             cluster.set_exec_mode(exec_mode);
+            cluster.set_draft_k(args.get_usize("draft-k", 4)?);
+            let adaptive_sla_ms = args.get_f64("adaptive-sla-ms", 0.0)?;
+            if adaptive_sla_ms > 0.0 {
+                cluster.set_adaptive_sla(Some(adaptive_sla_ms / 1e3));
+            }
             let mut gen = match args.get_or("trace", "burst").as_str() {
                 "burst" => WorkloadGen::new(engine.manifest.config.vocab),
                 "bursty" => WorkloadGen::bursty(engine.manifest.config.vocab),
@@ -374,6 +381,10 @@ struct ServeOpts {
     rps: f64,
     /// Device-resident decode (default) or forced per-token host roundtrip.
     exec_mode: ExecMode,
+    /// Per-round draft depth under `--policy speculative`.
+    draft_k: usize,
+    /// Rolling-p95 SLA in ms for adaptive degradation (0 = off).
+    adaptive_sla_ms: f64,
 }
 
 fn parse_exec_mode(s: &str) -> Result<ExecMode> {
@@ -391,20 +402,30 @@ fn serve_policies(s: &str) -> Result<Vec<planer::serve::ServePolicy>> {
     Ok(match s {
         "wave" => vec![ServePolicy::Wave],
         "continuous" => vec![ServePolicy::Continuous],
+        "speculative" => vec![ServePolicy::Speculative],
         "ab" => vec![ServePolicy::Wave, ServePolicy::Continuous],
-        other => bail!("unknown --policy '{other}' (wave|continuous|ab)"),
+        other => bail!("unknown --policy '{other}' (wave|continuous|speculative|ab)"),
     })
 }
 
 /// Surface per-lane policy fallbacks (variants whose artifact predates
-/// `gen_masked_<arch>` serve waves even under `--policy continuous`).
+/// `gen_masked_<arch>` serve waves even under `--policy continuous`, and
+/// the draft-less cheapest lane under `--policy speculative`).
 fn print_lane_policies(cluster: &planer::serve::Cluster<'_>) {
     use planer::serve::ServePolicy;
-    if cluster.serve_policy() == ServePolicy::Continuous {
-        for (name, p) in cluster.lane_policies() {
-            if p != ServePolicy::Continuous {
-                println!("  note: {name} lacks gen_masked_{name} — wave fallback");
+    let wanted = cluster.serve_policy();
+    if wanted == ServePolicy::Wave {
+        return;
+    }
+    for (name, p) in cluster.lane_policies() {
+        match p {
+            ServePolicy::Wave => {
+                println!("  note: {name} lacks gen_masked_{name} — wave fallback")
             }
+            ServePolicy::Continuous if wanted == ServePolicy::Speculative => {
+                println!("  note: {name} has no cheaper draft variant — continuous fallback")
+            }
+            _ => {}
         }
     }
 }
@@ -448,6 +469,10 @@ fn serve_demo(
     let mut cluster = Cluster::new(engine, &names, seed)?;
     cluster.set_max_wait(opts.max_wait);
     cluster.set_exec_mode(opts.exec_mode);
+    cluster.set_draft_k(opts.draft_k);
+    if opts.adaptive_sla_ms > 0.0 {
+        cluster.set_adaptive_sla(Some(opts.adaptive_sla_ms / 1e3));
+    }
 
     // bimodal-SLA workload so the router actually spreads traffic
     let mut gen = WorkloadGen::bimodal_sla(engine.manifest.config.vocab, 0.05, 2.0);
@@ -531,25 +556,32 @@ USAGE: planer <cmd> [flags]
   search   --target 0.65 --epochs 10 --steps 20 [--iso] [--name found]
   train    --arch baseline --steps 200 [--balance 0.01]
   serve    --requests 12 [--arch auto] [--workers N] [--max-wait-ms 5]
-           [--mode concurrent|serial|ab] [--policy wave|continuous|ab]
-           [--rps R] [--realtime]
+           [--mode concurrent|serial|ab]
+           [--policy wave|continuous|speculative|ab] [--draft-k 4]
+           [--adaptive-sla-ms MS] [--rps R] [--realtime]
            (one decode worker per variant; --mode ab replays the same trace
-            serially then concurrently; --policy picks wave batching or
-            continuous slot scheduling — 'ab' replays under both; variants
-            without gen_masked_<arch> fall back to waves)
+            serially then concurrently; --policy picks wave batching,
+            continuous slot scheduling, or speculative decode — the fleet's
+            cheapest variant drafts --draft-k tokens per round and each
+            lane verifies them batched; 'ab' replays wave then continuous;
+            variants without gen_masked_<arch> fall back to waves;
+            --adaptive-sla-ms degrades admissions to cheaper variants while
+            a lane's rolling p95 exceeds the SLA)
   profile
   compile  --name <arch> --arch-json <path> [--config tiny]
   archs
   bench    fig1|fig2|fig4|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|table1|all-static
   bench    --suite hermetic --backend ref [--out DIR] [--seed N]
            (deterministic serve A/B suite — wave-vs-continuous,
-            serial-vs-concurrent, resident-vs-roundtrip — over the
-            reference backend on a virtual step-clock; writes one
+            serial-vs-concurrent, resident-vs-roundtrip, speculative draft
+            depth × acceptance, bursty arrivals — over the reference
+            backend on a virtual step-clock; writes one
             BENCH_<scenario>.json per scenario for the CI perf gate)
   roofline | ablation
   serve-trace --requests 16 [--variants 3] [--trace burst|bursty|bimodal]
-              [--mode concurrent|serial|ab] [--policy wave|continuous|ab]
-              [--max-wait-ms 2] [--rps R] [--realtime]
+              [--mode concurrent|serial|ab]
+              [--policy wave|continuous|speculative|ab] [--draft-k 4]
+              [--adaptive-sla-ms MS] [--max-wait-ms 2] [--rps R] [--realtime]
 
 global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
           --exec resident|roundtrip   (device-resident state, the default,

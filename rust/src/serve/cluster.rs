@@ -18,10 +18,15 @@
 //! Workers overlap decode across variants — the serial baseline (`replay`)
 //! decodes them one at a time.  Per [`ServePolicy`], a worker is either a
 //! deadline-aware *wave* pump (`WorkerLane` + `WaveBatcher`: partial waves
-//! never wait past `max_wait`) or a *continuous* slot scheduler
+//! never wait past `max_wait`), a *continuous* slot scheduler
 //! (`SlotLane` + `SlotScheduler` over `gen_masked_<arch>`: per-step
-//! admission into free slots, per-slot retirement, masked memory reset).
+//! admission into free slots, per-slot retirement, masked memory reset),
+//! or a *speculative* round scheduler (`SpecLane` + `SpecScheduler`: the
+//! fleet's cheapest variant drafts `draft_k` tokens per slot, the lane's
+//! own engine verifies them batched — same stream, fewer expensive steps).
 //! Lanes whose artifact predates the free_mask ABI fall back to waves.
+//! With `set_adaptive_sla`, admission additionally runs degrade/recover
+//! hysteresis over each lane's rolling p95 (`router::AdaptiveRouter`).
 //!
 //! Shutdown is a graceful drain: when the trace ends the admission side
 //! drops its senders, each worker force-fires whatever is still queued,
@@ -39,15 +44,20 @@ use crate::runtime::{Engine, ExecMode, StateStore};
 
 use super::batcher::{BatchWave, WaveBatcher};
 use super::engine::{DecodeEngine, ServeMetrics};
-use super::router::{Router, RouterPolicy, VariantInfo};
+use super::router::{AdaptiveRouter, Router, RouterPolicy, VariantInfo};
 use super::scheduler::{SlotExecutor, SlotLane, SlotScheduler};
-use super::worker::{admit, LaneSender, WaveExecutor, WorkerLane};
+use super::speculative::{SpecLane, SpecScheduler};
+use super::worker::{admit, admit_adaptive, LaneHealth, LaneSender, WaveExecutor, WorkerLane};
 use super::workload::TimedRequest;
 use super::Response;
 
 /// Default partial-wave deadline (overridable via `set_max_wait` /
 /// `planer serve --max-wait-ms`).
 pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
+
+/// Default per-round draft depth under [`ServePolicy::Speculative`]
+/// (overridable via `set_draft_k` / `planer serve --draft-k`).
+pub const DEFAULT_DRAFT_K: usize = 4;
 
 /// Lock the shared metrics map, recovering from poison: the map holds
 /// plain cloned snapshots, so a publisher that panicked mid-`insert`
@@ -72,6 +82,16 @@ pub enum ServePolicy {
     /// (`serve::scheduler`).  Lanes whose artifact predates the free_mask
     /// ABI silently fall back to [`ServePolicy::Wave`].
     Continuous,
+    /// Speculative decoding: every lane pairs with the fleet's *cheapest*
+    /// variant as its draft — the draft proposes `draft_k` tokens per slot,
+    /// the lane's own engine verifies all of them in batched masked steps,
+    /// and the first mismatch falls back to the target's own token
+    /// (`serve::speculative`; the committed stream is exactly the plain
+    /// continuous stream).  The cheapest lane has nothing cheaper to draft
+    /// from and runs [`ServePolicy::Continuous`]; lanes without
+    /// `gen_masked_<arch>` (or whose slot width differs from the draft's)
+    /// fall back as under the continuous policy.
+    Speculative,
 }
 
 /// One variant's decode resources.  Owned by the cluster between runs and
@@ -145,6 +165,16 @@ pub struct Cluster<'a> {
     metrics: Arc<Mutex<HashMap<String, ServeMetrics>>>,
     max_wait: Duration,
     policy: ServePolicy,
+    /// The artifact engine, kept so speculative replays can bind fresh
+    /// draft/target pairs per run.
+    engine: &'a Engine,
+    /// Memory-init seed shared by every lane (and the speculative pairs).
+    seed: i32,
+    /// Per-round draft depth under [`ServePolicy::Speculative`].
+    draft_k: usize,
+    /// Cluster-wide p95 SLA (seconds) driving adaptive degradation; `None`
+    /// routes with the plain SLA-fit router.
+    adaptive_sla: Option<f64>,
 }
 
 impl<'a> Cluster<'a> {
@@ -199,6 +229,10 @@ impl<'a> Cluster<'a> {
             )),
             max_wait: DEFAULT_MAX_WAIT,
             policy: ServePolicy::default(),
+            engine,
+            seed,
+            draft_k: DEFAULT_DRAFT_K,
+            adaptive_sla: None,
         })
     }
 
@@ -217,14 +251,59 @@ impl<'a> Cluster<'a> {
         self.policy
     }
 
+    /// Per-round draft depth for speculative lanes on the next replay.
+    pub fn set_draft_k(&mut self, k: usize) {
+        self.draft_k = k.max(1);
+    }
+
+    pub fn draft_k(&self) -> usize {
+        self.draft_k
+    }
+
+    /// Enable (`Some(sla_secs)`) or disable (`None`) adaptive SLA
+    /// degradation for the next concurrent replay: when a lane's rolling
+    /// p95 drifts past the SLA, new admissions route to the next-cheaper
+    /// variant; the lane recovers once its p95 drops below
+    /// `RECOVER_FRACTION × sla` (see `serve::router::AdaptiveRouter`).
+    pub fn set_adaptive_sla(&mut self, sla: Option<f64>) {
+        self.adaptive_sla = sla;
+    }
+
+    pub fn adaptive_sla(&self) -> Option<f64> {
+        self.adaptive_sla
+    }
+
     /// The policy each lane would actually run under the current setting —
-    /// surfaces per-variant fallbacks (old artifacts) to the CLI/benches.
+    /// surfaces per-variant fallbacks (old artifacts, the draft-less
+    /// cheapest lane) to the CLI/benches.
     pub fn lane_policies(&self) -> Vec<(String, ServePolicy)> {
+        // quality rank is list order, so the last lane is the fleet's
+        // cheapest variant — the designated draft for everyone else
+        let draft_ok = self
+            .lanes
+            .last()
+            .is_some_and(|d| d.engine.has_masked());
+        let n = self.lanes.len();
         self.lanes
             .iter()
-            .map(|l| {
+            .enumerate()
+            .map(|(i, l)| {
                 let p = match self.policy {
                     ServePolicy::Continuous if l.engine.has_masked() => ServePolicy::Continuous,
+                    ServePolicy::Speculative if !l.engine.has_masked() => ServePolicy::Wave,
+                    ServePolicy::Speculative
+                        if i + 1 < n
+                            && draft_ok
+                            && self
+                                .lanes
+                                .last()
+                                .is_some_and(|d| d.engine.width == l.engine.width) =>
+                    {
+                        ServePolicy::Speculative
+                    }
+                    // the cheapest lane (or a width-mismatched pairing)
+                    // still serves — just without a draft
+                    ServePolicy::Speculative => ServePolicy::Continuous,
                     _ => ServePolicy::Wave,
                 };
                 (l.name.clone(), p)
@@ -335,9 +414,12 @@ impl<'a> Cluster<'a> {
     /// (admission) thread through per-lane channels.  Under the wave policy
     /// workers fire full waves immediately and partial waves on the
     /// `max_wait` deadline; under the continuous policy each worker runs a
-    /// `SlotScheduler` that admits arrivals into free slots between steps
-    /// (lanes without `gen_masked_<arch>` fall back to waves).  Either way
-    /// workers drain gracefully when admission ends.  Responses are
+    /// `SlotScheduler` that admits arrivals into free slots between steps;
+    /// under the speculative policy each worker runs a `SpecScheduler`
+    /// drafting with the fleet's cheapest variant (per-lane fallbacks per
+    /// [`Self::lane_policies`]).  With `set_adaptive_sla` armed, admission
+    /// runs the degrade/recover hysteresis over each lane's live rolling
+    /// p95.  Workers drain gracefully when admission ends.  Responses are
     /// returned sorted by request id (cross-variant completion order is
     /// nondeterministic).
     pub fn replay_concurrent(
@@ -346,58 +428,135 @@ impl<'a> Cluster<'a> {
         realtime: bool,
     ) -> Result<Vec<Response>> {
         self.reset_metrics();
+        let plans: Vec<ServePolicy> =
+            self.lane_policies().into_iter().map(|(_, p)| p).collect();
+        let draft_arch = self.lanes.last().map(|l| l.name.clone());
         // split borrows up front: the scope closure must not capture `self`
         // itself (lanes are lent &mut to workers while router/metrics are
         // shared with the admission side)
-        let Cluster { router, lanes, metrics, max_wait, policy } = self;
+        let Cluster {
+            router,
+            lanes,
+            metrics,
+            max_wait,
+            policy: _,
+            engine,
+            seed,
+            draft_k,
+            adaptive_sla,
+        } = self;
         let router: &Router = router;
         let metrics: &Arc<Mutex<HashMap<String, ServeMetrics>>> = metrics;
         let max_wait = *max_wait;
-        let policy = *policy;
+        let engine: &Engine = engine;
+        let seed = *seed;
+        let draft_k = *draft_k;
+        let adaptive_sla = *adaptive_sla;
+
+        // bind fresh draft/verify pairs for speculative lanes up front —
+        // binding can fail, worker threads should not (the lane's resident
+        // engine state is unused under this policy; each replay speculates
+        // from freshly-initialised memories on both sides)
+        let mut spec_scheds: Vec<Option<SpecScheduler<'a>>> =
+            Vec::with_capacity(lanes.len());
+        for (lane, plan) in lanes.iter().zip(&plans) {
+            if *plan == ServePolicy::Speculative {
+                let d_arch = draft_arch
+                    .as_deref()
+                    .context("speculative policy on an empty fleet")?;
+                let tde = DecodeEngine::new(engine, &lane.name)?;
+                let tst = tde.init_state(seed)?;
+                let dde = DecodeEngine::new(engine, d_arch)?;
+                let dst = dde.init_state(seed)?;
+                spec_scheds.push(Some(SpecScheduler::new(
+                    lane.name.clone(),
+                    (tde, tst),
+                    (dde, dst),
+                    draft_k,
+                )?));
+            } else {
+                spec_scheds.push(None);
+            }
+        }
+
+        // one rolling-latency window per lane when adaptive degradation is
+        // armed; lane threads feed them, admission reads them
+        let healths: Option<HashMap<String, LaneHealth>> = adaptive_sla.map(|_| {
+            lanes
+                .iter()
+                .map(|l| (l.name.clone(), LaneHealth::default()))
+                .collect()
+        });
+
         let mut responses = Vec::new();
         let mut errors: Vec<anyhow::Error> = Vec::new();
 
         std::thread::scope(|s| {
             let mut senders: HashMap<String, LaneSender> = HashMap::new();
             let mut handles = Vec::new();
-            for lane in lanes.iter_mut() {
+            for ((lane, plan), spec) in lanes.iter_mut().zip(&plans).zip(spec_scheds) {
                 let (sender, rx, gauge) = LaneSender::channel();
                 senders.insert(lane.name.clone(), sender);
                 let name = lane.name.clone();
                 let join_name = lane.name.clone();
                 let width = lane.engine.width;
-                let continuous =
-                    policy == ServePolicy::Continuous && lane.engine.has_masked();
+                let plan = *plan;
+                let health = healths.as_ref().and_then(|h| h.get(&lane.name)).cloned();
                 let shared = Arc::clone(metrics);
                 let handle = s.spawn(move || -> Result<Vec<Response>> {
-                    if continuous {
-                        let scheduler =
-                            SlotScheduler::new(name.clone(), LaneSlotExecutor { lane });
-                        let mut worker = SlotLane::new(name.clone(), scheduler);
-                        worker.depth = gauge;
-                        let (rs, mut scheduler) = worker.run_with(rx, |m| {
-                            lock_metrics(&shared).insert(name.clone(), m.clone());
-                        })?;
-                        // hand the final metrics back to the lane so the
-                        // cluster's own accumulator matches the map
-                        let m = scheduler.metrics.clone();
-                        scheduler.executor.lane.metrics = m;
-                        Ok(rs)
-                    } else {
-                        let mut worker = WorkerLane::new(
-                            name,
-                            WaveBatcher::new(width, max_wait),
-                            LaneExecutor { lane, shared },
-                        );
-                        worker.depth = gauge;
-                        let (rs, _exec) = worker.run(rx)?;
-                        Ok(rs)
+                    match (plan, spec) {
+                        (ServePolicy::Speculative, Some(scheduler)) => {
+                            let mut worker = SpecLane::new(name.clone(), scheduler);
+                            worker.depth = gauge;
+                            worker.health = health;
+                            let (rs, scheduler) = worker.run_with(rx, |m| {
+                                lock_metrics(&shared).insert(name.clone(), m.clone());
+                            })?;
+                            // hand the final metrics back to the lane so the
+                            // cluster's own accumulator matches the map
+                            lane.metrics = scheduler.metrics.clone();
+                            Ok(rs)
+                        }
+                        (ServePolicy::Continuous, _) => {
+                            let scheduler =
+                                SlotScheduler::new(name.clone(), LaneSlotExecutor { lane });
+                            let mut worker = SlotLane::new(name.clone(), scheduler);
+                            worker.depth = gauge;
+                            worker.health = health;
+                            let (rs, mut scheduler) = worker.run_with(rx, |m| {
+                                lock_metrics(&shared).insert(name.clone(), m.clone());
+                            })?;
+                            // hand the final metrics back to the lane so the
+                            // cluster's own accumulator matches the map
+                            let m = scheduler.metrics.clone();
+                            scheduler.executor.lane.metrics = m;
+                            Ok(rs)
+                        }
+                        _ => {
+                            let mut worker = WorkerLane::new(
+                                name,
+                                WaveBatcher::new(width, max_wait),
+                                LaneExecutor { lane, shared },
+                            );
+                            worker.depth = gauge;
+                            worker.health = health;
+                            let (rs, _exec) = worker.run(rx)?;
+                            Ok(rs)
+                        }
                     }
                 });
                 handles.push((join_name, handle));
             }
 
-            admit(trace, router, &senders, realtime);
+            match (adaptive_sla, &healths) {
+                (Some(sla), Some(hs)) => {
+                    let mut adaptive = AdaptiveRouter::new(router.clone(), sla);
+                    admit_adaptive(trace, &mut adaptive, &senders, hs, realtime);
+                }
+                _ => {
+                    admit(trace, router, &senders, realtime);
+                }
+            }
             // graceful drain: closing the channels tells every worker to
             // fire its remaining partials (or finish its live slots) and
             // return
@@ -424,8 +583,17 @@ impl<'a> Cluster<'a> {
         // thread mid-serve, and the publishers must not wait on it
         let snapshot = lock_metrics(&self.metrics).clone();
         let mut out = String::from(
-            "variant      reqs waves  steps  occup     p50      p95     tok/s   sync-B/tok\n",
+            "variant      reqs waves  steps  occup accept     p50      p95     tok/s   sync-B/tok\n",
         );
+        // acceptance prints "-" for lanes that never drafted (wave or
+        // continuous), so the column reads as a speculative-only signal
+        let accept = |m: &ServeMetrics| {
+            if m.tokens_drafted > 0 {
+                format!("{:6.2}", m.acceptance_rate())
+            } else {
+                format!("{:>6}", "-")
+            }
+        };
         // lane order (quality rank), not HashMap order: stable reports
         let mut total = ServeMetrics::default();
         for lane in &self.lanes {
@@ -435,12 +603,13 @@ impl<'a> Cluster<'a> {
             }
             total.merge(m);
             out.push_str(&format!(
-                "{:12} {:4} {:5} {:6} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
+                "{:12} {:4} {:5} {:6} {:6.2} {} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
                 lane.name,
                 m.requests,
                 m.waves,
                 m.steps,
                 m.occupancy(),
+                accept(m),
                 m.p50() * 1e3,
                 m.p95() * 1e3,
                 m.throughput_tok_s(),
@@ -449,12 +618,13 @@ impl<'a> Cluster<'a> {
         }
         if total.requests > 0 {
             out.push_str(&format!(
-                "{:12} {:4} {:5} {:6} {:6.2} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
+                "{:12} {:4} {:5} {:6} {:6.2} {} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
                 "TOTAL",
                 total.requests,
                 total.waves,
                 total.steps,
                 total.occupancy(),
+                accept(&total),
                 total.p50() * 1e3,
                 total.p95() * 1e3,
                 total.throughput_tok_s(),

@@ -134,6 +134,14 @@ pub struct ServeMetrics {
     /// Host↔device bytes moved by decode (uploads of `x` + logits fetches;
     /// in roundtrip mode, the whole state per token — the A/B counter).
     pub bytes_synced: u64,
+    /// Speculative decoding: tokens proposed by the draft engine (0 on the
+    /// non-speculative policies).
+    pub tokens_drafted: u64,
+    /// Drafted tokens the target's verify step confirmed.
+    pub tokens_accepted: u64,
+    /// Drafted tokens rejected at or after a verify mismatch
+    /// (`tokens_drafted - tokens_accepted`).
+    pub tokens_rejected: u64,
 }
 
 impl ServeMetrics {
@@ -173,6 +181,17 @@ impl ServeMetrics {
         }
     }
 
+    /// Fraction of drafted tokens the target confirmed — the speculation
+    /// figure of merit (0.0 when nothing was drafted, e.g. on the
+    /// non-speculative policies).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.tokens_drafted > 0 {
+            self.tokens_accepted as f64 / self.tokens_drafted as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Fold another variant's (or worker's) metrics into this one.  The
     /// occupancy numerator/denominator sum directly, so the merged
     /// occupancy stays step-weighted across lanes.
@@ -185,6 +204,9 @@ impl ServeMetrics {
         self.tokens_out += other.tokens_out;
         self.busy_secs += other.busy_secs;
         self.bytes_synced += other.bytes_synced;
+        self.tokens_drafted += other.tokens_drafted;
+        self.tokens_accepted += other.tokens_accepted;
+        self.tokens_rejected += other.tokens_rejected;
         self.latencies.merge(&other.latencies);
     }
 }
@@ -306,6 +328,11 @@ impl<'a> DecodeEngine<'a> {
     /// — the prerequisite for the continuous-batching policy.
     pub fn has_masked(&self) -> bool {
         self.masked.is_some()
+    }
+
+    /// Vocabulary size of the decode head (rows of a logits batch).
+    pub fn vocab(&self) -> usize {
+        self.vocab
     }
 
     /// The cached `gen_<arch>` program (shared with callers that would
@@ -643,6 +670,9 @@ mod tests {
             busy_secs: 1.0,
             latencies: reservoir_of(&[0.5]),
             bytes_synced: 100,
+            tokens_drafted: 10,
+            tokens_accepted: 9,
+            tokens_rejected: 1,
         };
         let b = ServeMetrics {
             waves: 3,
@@ -654,6 +684,9 @@ mod tests {
             busy_secs: 2.0,
             latencies: reservoir_of(&[0.1, 0.2]),
             bytes_synced: 50,
+            tokens_drafted: 10,
+            tokens_accepted: 1,
+            tokens_rejected: 9,
         };
         a.merge(&b);
         assert_eq!(a.waves, 4);
@@ -661,9 +694,18 @@ mod tests {
         assert_eq!(a.requests, 5);
         assert_eq!(a.tokens_out, 20);
         assert_eq!(a.bytes_synced, 150);
+        assert_eq!(a.tokens_drafted, 20);
+        assert_eq!(a.tokens_accepted, 10);
+        assert_eq!(a.tokens_rejected, 10);
+        assert!((a.acceptance_rate() - 0.5).abs() < 1e-12);
         assert!((a.occupancy() - 100.0 / 160.0).abs() < 1e-12);
         assert_eq!(a.latencies.samples().len(), 3);
         assert_eq!(a.latencies.seen(), 3);
+    }
+
+    #[test]
+    fn acceptance_rate_is_zero_when_nothing_was_drafted() {
+        assert_eq!(ServeMetrics::default().acceptance_rate(), 0.0);
     }
 
     #[test]

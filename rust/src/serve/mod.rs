@@ -1,11 +1,12 @@
 //! Serving stack: SLA-aware router + concurrent per-variant decode workers
-//! running either wave batching or continuous (slot-based) batching.
+//! running wave, continuous (slot-based), or speculative batching.
 //!
 //! PLANER's product is a *set* of latency/quality variants of one model
-//! (50%–95% targets).  The serving layer exploits that: requests carry a
-//! latency budget; the router picks the best variant whose profiled latency
-//! fits (breaking quality ties by lane depth), and each variant's worker
-//! batches concurrent requests over the AOT decode program.
+//! (50%–95% targets).  The serving layer exploits that twice: requests
+//! carry a latency budget the router matches against each variant's
+//! profiled latency (breaking quality ties by lane depth), and the
+//! quality-graded fleet pairs with *itself* for speculative decoding — the
+//! cheapest variant drafts, the expensive ones verify.
 //!
 //! Concurrency model (`cluster::Cluster`):
 //! - an **admission thread** replays the trace, routes each request via
@@ -13,7 +14,7 @@
 //!   channel (a [`worker::LaneSender`], whose in-flight gauge feeds the
 //!   router's load tiebreak);
 //! - one **decode worker** per variant owns that variant's [`DecodeEngine`]
-//!   and `StateStore`, and runs one of two batching policies
+//!   and `StateStore`, and runs one of three batching policies
 //!   ([`cluster::ServePolicy`]):
 //!   - **wave** ([`worker::WorkerLane`] + [`WaveBatcher`]): fixed-membership
 //!     waves over `gen_<arch>` — full waves fire immediately, partial waves
@@ -27,17 +28,45 @@
 //!     joining slots' TXL memories on-device — no drain, no head-of-line
 //!     blocking behind a long batch-mate.  Artifacts predating the
 //!     free_mask ABI fall back to the wave policy per lane;
+//!   - **speculative** ([`speculative::SpecLane`] +
+//!     [`speculative::SpecScheduler`]): continuous batching's slot model,
+//!     but each round the fleet's cheapest variant drafts `draft_k` tokens
+//!     per slot and the lane's own engine verifies all of them in batched
+//!     masked steps, committing the accepted prefix plus the first
+//!     mismatch's corrected token.  Under greedy decoding the committed
+//!     stream is *exactly* the plain continuous stream — draft quality
+//!     moves throughput, never tokens (rust/tests/speculative_serve.rs).
+//!     The cheapest lane, having nothing cheaper to draft from, runs
+//!     continuous; masked-ABI and width fallbacks follow the continuous
+//!     rules ([`Cluster::lane_policies`]).  A rejected slot's target
+//!     memories are spliced back to the last-correct snapshot; the draft's
+//!     are re-synced too when the archs match, and otherwise carry bounded
+//!     drift (≤ `mem_len` steps) that only lowers acceptance;
 //! - shutdown is a **graceful drain**: closing the admission channels makes
 //!   every worker flush its queue (partial waves / live slots included)
 //!   before joining.
 //!
-//! Both worker loops are generic over executor traits
+//! # Adaptive SLA degradation
+//!
+//! `Cluster::set_adaptive_sla(Some(sla))` arms a degradation ladder on the
+//! admission side ([`router::AdaptiveRouter`] + [`worker::LaneHealth`]):
+//! every lane thread feeds its response latencies into a rolling window,
+//! and admission re-reads each lane's rolling p95 before routing.  A lane
+//! whose p95 drifts past the SLA is marked degraded — new admissions skip
+//! it and fall through to the next-cheaper variant — and recovers once its
+//! p95 drops below [`router::RECOVER_FRACTION`] × SLA.  The asymmetric
+//! band is hysteresis: a lane hovering at the boundary cannot flap
+//! degrade/recover on alternating samples.  In-flight requests are never
+//! re-routed; degradation only bends *new* admissions.
+//!
+//! The worker loops are generic over executor traits
 //! ([`worker::WaveExecutor`], [`scheduler::SlotExecutor`]), so batching,
 //! deadline, FIFO-admission, slot-reuse and completion invariants are
 //! tested without XLA artifacts (rust/tests/{concurrent,continuous}_serve.rs),
-//! and `cargo bench --bench coordinator` A/Bs the two policies over real
+//! and `cargo bench --bench coordinator` A/Bs the policies over real
 //! reference-backend decode math on a deterministic virtual step-clock
-//! (`crate::bench` — the same run CI gates via `BENCH_coordinator.json`).
+//! (`crate::bench` — the same run CI gates via `BENCH_coordinator.json`;
+//! `BENCH_speculative.json` sweeps draft depth × acceptance).
 //!
 //! # Backend selection
 //!
@@ -67,16 +96,20 @@ pub mod engine;
 pub mod router;
 pub mod scheduler;
 pub mod session;
+pub mod speculative;
 pub mod worker;
 
 pub use batcher::{wave_shape, BatchWave, WaveBatcher, WaveShape};
 pub use cluster::{Cluster, ServePolicy};
 pub use workload::{Arrival, TimedRequest, WorkloadGen};
 pub use engine::{percentile, DecodeEngine, LatencyReservoir, ServeMetrics};
-pub use router::{Router, RouterPolicy, VariantInfo};
+pub use router::{AdaptiveRouter, RollingP95, Router, RouterPolicy, VariantInfo, RECOVER_FRACTION};
 pub use scheduler::{SlotExecutor, SlotLane, SlotScheduler};
-pub use session::{Session, SessionState};
-pub use worker::{admit, DepthGauge, LaneSender, WaveExecutor, WorkerLane};
+pub use session::{Session, SessionState, SpecCheckpoint};
+pub use speculative::{DraftDivergence, RoundOutcome, SpecLane, SpecScheduler};
+pub use worker::{
+    admit, admit_adaptive, DepthGauge, LaneHealth, LaneSender, WaveExecutor, WorkerLane,
+};
 
 /// A generation request.
 #[derive(Debug, Clone)]

@@ -4,7 +4,18 @@
 //! sends a request to the *highest quality* (slowest) variant whose latency
 //! fits the request's SLA — PLANER's whole point is that those cheap
 //! variants exist at iso-accuracy.
+//!
+//! [`AdaptiveRouter`] adds load-adaptive degradation on top: each lane's
+//! rolling p95 (fed by the lanes' `worker::LaneHealth` windows) is compared
+//! against an operating SLA with **asymmetric hysteresis** — a lane degrades
+//! when its p95 exceeds the SLA and only recovers once it drops below
+//! [`RECOVER_FRACTION`]·SLA, so a boundary workload cannot flap admissions
+//! between variants.  Degraded lanes are skipped by routing, falling through
+//! to the next-cheaper variant (fastest lane as the floor).
 
+use std::collections::BTreeMap;
+
+use super::engine::percentile;
 use super::Request;
 
 /// A served architecture variant and its profile.
@@ -25,6 +36,7 @@ pub enum RouterPolicy {
     FastestAlways,
 }
 
+#[derive(Debug, Clone)]
 pub struct Router {
     pub variants: Vec<VariantInfo>,
     pub policy: RouterPolicy,
@@ -60,11 +72,29 @@ impl Router {
     /// wins — under bursty traffic the old first-fit rule piled every
     /// SLA-equivalent request onto one lane while its twins sat idle.
     pub fn route_loaded(&self, r: &Request, load: impl Fn(&str) -> usize) -> &str {
+        self.route_allowed(r, load, |_| true)
+    }
+
+    /// [`Self::route_loaded`] restricted to lanes `allowed` admits (the
+    /// adaptive path masks out degraded lanes).  Disallowed variants are
+    /// invisible to the quality scan — routing falls through to the best
+    /// *allowed* quality tier — and the infeasible-SLA floor is the fastest
+    /// allowed lane (the globally fastest one when everything is masked:
+    /// the router must always answer).
+    pub fn route_allowed(
+        &self,
+        r: &Request,
+        load: impl Fn(&str) -> usize,
+        allowed: impl Fn(&str) -> bool,
+    ) -> &str {
         match self.policy {
-            RouterPolicy::FastestAlways => self.fastest(),
+            RouterPolicy::FastestAlways => self.fastest(&allowed),
             RouterPolicy::QualityWithinSla => {
                 let mut best: Option<&VariantInfo> = None;
                 for v in &self.variants {
+                    if !allowed(&v.name) {
+                        continue;
+                    }
                     // variants are sorted by quality descending
                     if let Some(b) = best {
                         if v.quality != b.quality {
@@ -80,19 +110,130 @@ impl Router {
                 match best {
                     Some(v) => &v.name,
                     // nothing fits: degrade to the fastest
-                    None => self.fastest(),
+                    None => self.fastest(&allowed),
                 }
             }
         }
     }
 
-    fn fastest(&self) -> &str {
-        &self
-            .variants
+    fn fastest(&self, allowed: &impl Fn(&str) -> bool) -> &str {
+        let by_latency =
+            |a: &&VariantInfo, b: &&VariantInfo| a.token_latency.total_cmp(&b.token_latency);
+        self.variants
             .iter()
-            .min_by(|a, b| a.token_latency.total_cmp(&b.token_latency))
-            .unwrap()
-            .name
+            .filter(|v| allowed(&v.name))
+            .min_by(by_latency)
+            .or_else(|| self.variants.iter().min_by(by_latency))
+            .map(|v| v.name.as_str())
+            .expect("router has at least one variant")
+    }
+}
+
+/// Recovery threshold as a fraction of the operating SLA: a degraded lane
+/// only re-admits once its rolling p95 drops below `0.8 × SLA`.  The gap
+/// between the degrade threshold (1.0×) and this one is the hysteresis dead
+/// band that prevents flapping.
+pub const RECOVER_FRACTION: f64 = 0.8;
+
+/// Fixed-capacity ring of recent per-request latencies with an on-demand
+/// nearest-rank p95 — the rolling window behind adaptive degradation.
+#[derive(Debug, Clone)]
+pub struct RollingP95 {
+    cap: usize,
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl RollingP95 {
+    pub fn new(cap: usize) -> RollingP95 {
+        assert!(cap > 0, "rolling window needs capacity");
+        RollingP95 { cap, buf: Vec::new(), next: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else if let Some(slot) = self.buf.get_mut(self.next) {
+            *slot = x;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// p95 over the current window (`None` until something was observed).
+    pub fn p95(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(percentile(&self.buf, 0.95))
+        }
+    }
+}
+
+impl Default for RollingP95 {
+    fn default() -> RollingP95 {
+        // ~4 continuous-batch widths of completions: reacts within a few
+        // rounds without tripping on a single outlier
+        RollingP95::new(32)
+    }
+}
+
+/// SLA-adaptive wrapper over [`Router`]: tracks a per-lane degraded flag
+/// with asymmetric hysteresis and routes around degraded lanes.  The
+/// latency windows themselves live with the lanes
+/// (`worker::LaneHealth`); callers feed observed p95s through
+/// [`Self::observe_p95`] before routing (see `worker::admit_adaptive`).
+pub struct AdaptiveRouter {
+    pub inner: Router,
+    /// Operating SLA (seconds) the per-lane rolling p95 is held against.
+    pub sla: f64,
+    degraded: BTreeMap<String, bool>,
+}
+
+impl AdaptiveRouter {
+    pub fn new(inner: Router, sla: f64) -> AdaptiveRouter {
+        assert!(sla > 0.0, "adaptive routing needs a positive SLA");
+        AdaptiveRouter { inner, sla, degraded: BTreeMap::new() }
+    }
+
+    /// Update one lane's degraded flag from its current rolling p95:
+    /// degrade at `p95 > SLA`, recover at `p95 < RECOVER_FRACTION · SLA`,
+    /// hold in between (the dead band).
+    pub fn observe_p95(&mut self, lane: &str, p95: f64) {
+        let d = self.degraded.entry(lane.to_string()).or_default();
+        if *d {
+            if p95 < RECOVER_FRACTION * self.sla {
+                *d = false;
+            }
+        } else if p95 > self.sla {
+            *d = true;
+        }
+    }
+
+    pub fn degraded(&self, lane: &str) -> bool {
+        self.degraded.get(lane).copied().unwrap_or(false)
+    }
+
+    /// Lanes currently marked degraded (report/introspection hook).
+    pub fn degraded_lanes(&self) -> Vec<&str> {
+        self.degraded
+            .iter()
+            .filter(|(_, &d)| d)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// Route around degraded lanes: new admissions fall through to the
+    /// next-cheaper healthy variant, bottoming out at the fastest lane.
+    pub fn route_loaded(&self, r: &Request, load: impl Fn(&str) -> usize) -> &str {
+        self.inner.route_allowed(r, load, |v| !self.degraded(v))
     }
 }
 
@@ -208,6 +349,70 @@ mod tests {
         );
         // 10 tokens: slow-twin estimates 100 > 15, fit-twin 10 <= 15
         assert_eq!(r.route_loaded(&req(15.0), |v| if v == "fit-twin" { 9 } else { 0 }), "fit-twin");
+    }
+
+    #[test]
+    fn rolling_p95_window_evicts_oldest() {
+        let mut w = RollingP95::new(4);
+        assert_eq!(w.p95(), None);
+        for x in [1.0, 2.0, 3.0, 100.0] {
+            w.push(x);
+        }
+        assert_eq!(w.p95(), Some(100.0));
+        // four more pushes evict the whole old window, outlier included
+        for _ in 0..4 {
+            w.push(5.0);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.p95(), Some(5.0));
+    }
+
+    #[test]
+    fn adaptive_hysteresis_does_not_flap() {
+        let mut ar = AdaptiveRouter::new(router(), 100.0);
+        assert!(!ar.degraded("baseline"));
+
+        // p95 over the SLA: degrade
+        ar.observe_p95("baseline", 101.0);
+        assert!(ar.degraded("baseline"));
+
+        // a boundary workload oscillating inside the dead band
+        // (0.8·SLA ..= SLA) must not flap the flag in either direction
+        for p95 in [99.0, 81.0, 100.0, 80.0] {
+            ar.observe_p95("baseline", p95);
+            assert!(ar.degraded("baseline"), "recovered early at p95 {p95}");
+            ar.observe_p95("planer80", p95);
+            assert!(!ar.degraded("planer80"), "degraded early at p95 {p95}");
+        }
+
+        // only below RECOVER_FRACTION·SLA does the lane recover
+        ar.observe_p95("baseline", 79.0);
+        assert!(!ar.degraded("baseline"));
+        // and the band still does not re-degrade it
+        ar.observe_p95("baseline", 100.0);
+        assert!(!ar.degraded("baseline"));
+    }
+
+    #[test]
+    fn adaptive_routes_around_degraded_lanes() {
+        let mut ar = AdaptiveRouter::new(router(), 100.0);
+        let q = req(1000.0);
+        assert_eq!(ar.route_loaded(&q, |_| 0), "baseline");
+
+        // best lane over SLA: new admissions fall to the next-cheaper lane
+        ar.observe_p95("baseline", 150.0);
+        assert_eq!(ar.route_loaded(&q, |_| 0), "planer80");
+
+        // everything degraded: the fastest lane is the floor (the router
+        // must still answer)
+        ar.observe_p95("planer80", 150.0);
+        ar.observe_p95("planer50", 150.0);
+        assert_eq!(ar.degraded_lanes(), vec!["baseline", "planer50", "planer80"]);
+        assert_eq!(ar.route_loaded(&q, |_| 0), "planer50");
+
+        // recovery restores quality-first routing
+        ar.observe_p95("baseline", 10.0);
+        assert_eq!(ar.route_loaded(&q, |_| 0), "baseline");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use anyhow::Result;
 
 use super::engine::ServeMetrics;
 use super::session::Session;
-use super::worker::DepthGauge;
+use super::worker::{DepthGauge, LaneHealth};
 use super::{Request, Response};
 
 /// Executes one continuous-batch decode step.  Implemented by the cluster
@@ -210,11 +210,27 @@ pub struct SlotLane<E: SlotExecutor> {
     /// In-flight gauge shared with the admission side's `LaneSender` (the
     /// router's load-aware tiebreak reads it); decremented per response.
     pub depth: DepthGauge,
+    /// Rolling-latency window shared with the admission side's adaptive
+    /// router (`None` when adaptive degradation is off).
+    pub health: Option<LaneHealth>,
 }
 
 impl<E: SlotExecutor> SlotLane<E> {
     pub fn new(name: impl Into<String>, scheduler: SlotScheduler<E>) -> Self {
-        SlotLane { name: name.into(), scheduler, depth: DepthGauge::default() }
+        SlotLane {
+            name: name.into(),
+            scheduler,
+            depth: DepthGauge::default(),
+            health: None,
+        }
+    }
+
+    fn observe(&self, rs: &[Response]) {
+        if let Some(h) = &self.health {
+            for r in rs {
+                h.observe(r.latency);
+            }
+        }
     }
 
     /// Lane main loop: drain the admission channel between steps (in-flight
@@ -241,6 +257,7 @@ impl<E: SlotExecutor> SlotLane<E> {
             if self.scheduler.has_work() {
                 let rs = self.scheduler.step()?;
                 self.depth.sub(rs.len());
+                self.observe(&rs);
                 out.extend(rs);
                 if self.scheduler.metrics.steps >= published_at + PUBLISH_EVERY_STEPS {
                     published_at = self.scheduler.metrics.steps;
@@ -258,6 +275,7 @@ impl<E: SlotExecutor> SlotLane<E> {
         while self.scheduler.has_work() {
             let rs = self.scheduler.step()?;
             self.depth.sub(rs.len());
+            self.observe(&rs);
             out.extend(rs);
         }
         // final snapshot so trailing steps' occupancy/counters land even

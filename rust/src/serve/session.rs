@@ -52,6 +52,17 @@ pub struct Session {
     state: Option<SessionInner>,
 }
 
+/// Bookkeeping snapshot taken before a speculative draft burst
+/// ([`Session::checkpoint`]); [`Session::rollback`] restores the session to
+/// it bitwise.  Free slots snapshot as `None` and stay free — a draft burst
+/// never admits or retires, so the occupancy of a slot cannot change
+/// between checkpoint and rollback.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecCheckpoint {
+    /// `(phase, tokens.len(), last_token)` of the occupied slot, if any.
+    state: Option<(Phase, usize, i32)>,
+}
+
 #[derive(Debug)]
 struct SessionInner {
     request: Request,
@@ -148,6 +159,78 @@ impl Session {
             variant: variant.to_string(),
         })
     }
+
+    /// Steps until this slot retires on its own schedule: remaining prompt
+    /// steps plus remaining generated tokens (0 for a free slot).  The
+    /// speculative scheduler caps a round's draft depth at the batch
+    /// maximum so no draft step is provably useless.
+    pub fn steps_remaining(&self) -> usize {
+        match &self.state {
+            None => 0,
+            Some(s) => match s.phase {
+                // `prompt_steps - cursor` prompt feeds, the last of which
+                // emits generated token #1, then `n_gen - 1` decode feeds.
+                Phase::Prefill { cursor } => {
+                    (s.prompt_steps().saturating_sub(cursor)) + s.request.n_gen.saturating_sub(1)
+                }
+                Phase::Decode { .. } => s.request.n_gen.saturating_sub(s.tokens.len()),
+            },
+        }
+    }
+
+    /// Snapshot the slot's phase/token bookkeeping (speculation cursor).
+    pub fn checkpoint(&self) -> SpecCheckpoint {
+        SpecCheckpoint {
+            state: self
+                .state
+                .as_ref()
+                .map(|s| (s.phase, s.tokens.len(), s.last_token)),
+        }
+    }
+
+    /// Optimistic advance during a draft burst: identical phase/token
+    /// bookkeeping to [`Session::advance`], except the session **never
+    /// retires** (so [`Session::rollback`] always finds the slot occupied)
+    /// and may run past `n_gen` (the rollback truncates the overshoot).
+    /// Returns whether the token was consumed as a generated token (a
+    /// drafted token); mid-prompt steps consume nothing and return `false`.
+    pub fn spec_advance(&mut self, token: i32) -> bool {
+        let Some(s) = self.state.as_mut() else { return false };
+        match s.phase {
+            Phase::Prefill { cursor } => {
+                if cursor + 1 < s.prompt_steps() {
+                    s.phase = Phase::Prefill { cursor: cursor + 1 };
+                    return false;
+                }
+                s.tokens.push(token);
+                s.last_token = token;
+                s.phase = Phase::Decode { generated: 1 };
+            }
+            Phase::Decode { generated } => {
+                s.tokens.push(token);
+                s.last_token = token;
+                s.phase = Phase::Decode { generated: generated + 1 };
+            }
+        }
+        true
+    }
+
+    /// Undo every [`Session::spec_advance`] since `cp` was taken: restore
+    /// the phase, truncate the token buffer to its checkpointed length and
+    /// restore the feedback token.  The slot's request, submission instant
+    /// and already-committed tokens are untouched, so the restore is
+    /// bitwise (asserted in rust/tests/speculative_serve.rs).
+    pub fn rollback(&mut self, cp: &SpecCheckpoint) {
+        match (self.state.as_mut(), &cp.state) {
+            (Some(s), Some((phase, n_tokens, last))) => {
+                s.phase = *phase;
+                s.tokens.truncate(*n_tokens);
+                s.last_token = *last;
+            }
+            (None, None) => {}
+            _ => debug_assert!(false, "rollback across an admit or retire"),
+        }
+    }
 }
 
 impl SessionInner {
@@ -215,6 +298,72 @@ mod tests {
         assert_eq!(s.feed(), 3);
         let r = s.advance(9, Instant::now(), "v").expect("done in one step");
         assert_eq!(r.tokens, vec![9]);
+        assert!(s.is_free());
+    }
+
+    #[test]
+    fn steps_remaining_counts_prompt_and_decode() {
+        let mut s = Session::free();
+        assert_eq!(s.steps_remaining(), 0);
+        s.admit(req(vec![10, 11], 2), Instant::now());
+        // 2 prompt feeds (second emits token #1) + 1 decode feed
+        assert_eq!(s.steps_remaining(), 3);
+        s.advance(0, Instant::now(), "v");
+        assert_eq!(s.steps_remaining(), 2);
+        s.advance(42, Instant::now(), "v");
+        assert_eq!(s.steps_remaining(), 1);
+        assert!(s.advance(43, Instant::now(), "v").is_some());
+        assert_eq!(s.steps_remaining(), 0);
+    }
+
+    #[test]
+    fn spec_advance_rolls_back_to_the_checkpoint() {
+        let mut s = Session::free();
+        s.admit(req(vec![10, 11], 4), Instant::now());
+        // commit one real token first: prompt steps, then one decode
+        assert!(s.advance(0, Instant::now(), "v").is_none());
+        assert!(s.advance(42, Instant::now(), "v").is_none());
+        let cp = s.checkpoint();
+        let before = s.state();
+        let feed_before = s.feed();
+
+        // draft burst: three optimistic tokens, all consumed
+        assert!(s.spec_advance(50));
+        assert!(s.spec_advance(51));
+        assert!(s.spec_advance(52));
+        assert_eq!(s.state(), SessionState::Decode { generated: 4 });
+        assert_eq!(s.feed(), 52);
+
+        s.rollback(&cp);
+        assert_eq!(s.state(), before);
+        assert_eq!(s.feed(), feed_before);
+        assert_eq!(s.request_id(), Some(7));
+    }
+
+    #[test]
+    fn spec_advance_crosses_prefill_and_never_retires() {
+        let mut s = Session::free();
+        s.admit(req(vec![10, 11], 2), Instant::now());
+        let cp = s.checkpoint();
+        // mid-prompt draft step consumes nothing
+        assert!(!s.spec_advance(90));
+        // final prompt step emits token #1, next overshoots n_gen without
+        // retiring
+        assert!(s.spec_advance(91));
+        assert!(s.spec_advance(92));
+        assert!(s.spec_advance(93));
+        assert!(!s.is_free(), "spec_advance must never retire");
+        s.rollback(&cp);
+        assert_eq!(s.state(), SessionState::Prefill { cursor: 0 });
+        assert_eq!(s.feed(), 10);
+    }
+
+    #[test]
+    fn free_slot_checkpoint_roundtrip_is_a_noop() {
+        let mut s = Session::free();
+        let cp = s.checkpoint();
+        assert!(!s.spec_advance(5));
+        s.rollback(&cp);
         assert!(s.is_free());
     }
 }

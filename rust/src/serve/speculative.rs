@@ -1,0 +1,579 @@
+//! Speculative decoding rounds: a cheap **draft** engine proposes `k`
+//! tokens per slot, the expensive **target** engine verifies all `k`, and
+//! every committed token is — unconditionally — the target's own greedy
+//! output.
+//!
+//! # Why exactness is unconditional
+//!
+//! Greedy decoding makes verification a prefix property, not a probability:
+//! the target's output `o[t]` at verify step `t` is its true greedy token
+//! whenever the *inputs* at steps `0..=t` were correct.  Step inputs are
+//! prompt tokens (always correct) or the previous token fed back; feeding
+//! the draft's token `d[t-1]` is correct exactly when `d[t-1] == o[t-1]`.
+//! So a round commits the leading run of verify outputs up to **and
+//! including** the first mismatching step — the mismatch step's own output
+//! was still computed from a correct prefix, and it *is* the token plain
+//! decode would have produced from the last accepted token.  That token is
+//! the "fall back to normal decode" step, fused into the verify batch.
+//! Draft quality therefore moves only the schedule (acceptance rate),
+//! never the stream (asserted against the solo-target oracle in
+//! rust/tests/speculative_serve.rs).
+//!
+//! # One round over the slot batch
+//!
+//! 1. admit queued requests into free slots (FIFO, same as
+//!    [`super::scheduler::SlotScheduler`]);
+//! 2. checkpoint every [`Session`]'s phase/token cursor;
+//! 3. **draft**: `k` masked steps on the draft engine, feeding the real
+//!    sessions and advancing them optimistically
+//!    ([`Session::spec_advance`]); the fed inputs are recorded per step;
+//! 4. roll every session back to its checkpoint;
+//! 5. **verify**: `k` masked steps on the target engine over the recorded
+//!    inputs; after any step where a slot first mismatches, the target's
+//!    TXL memories are snapshotted to host;
+//! 6. commit each slot's accepted prefix through the normal
+//!    [`Session::advance`] (retirement, truncation and responses behave
+//!    exactly as in plain continuous batching);
+//! 7. repair the target memories: a slot that rejected at step `m` gets its
+//!    `[L, slot, M, D]` slice restored from the post-step-`m` snapshot, so
+//!    the next round starts from memories that saw only committed tokens.
+//!
+//! Verify steps past a slot's mismatch feed it wrong inputs, which is why
+//! step 7 exists; slots that accept everything keep the live device state
+//! and a fully-accepting round does no host sync at all.
+//!
+//! The **draft** memories are repaired too when draft and target share an
+//! arch (the repaired literal is uploaded to both stores).  A cross-arch
+//! draft can't absorb the target's memories; after a rejection its TXL
+//! window holds rejected tokens for up to `mem_len` steps — bounded drift
+//! that lowers acceptance but, per the invariant above, cannot corrupt the
+//! stream.
+//!
+//! # Cost model
+//!
+//! On real hardware the `k` verify positions run position-parallel in one
+//! batched step, so the hermetic bench charges the target's `step_ticks`
+//! **once per round** and the draft's per draft step
+//! (`bench::Harness::speculative`).  At full acceptance on a 3-tick target
+//! with a 1-tick draft that is `k` tokens per `k + 3` ticks vs `3k` plain —
+//! 2.18× at `k = 8`.
+//!
+//! [`DraftDivergence`] injects seeded draft errors (for the bench's
+//! acceptance-rate axis): with probability `p` a drafted token is flipped to
+//! the next vocab id, which guarantees a mismatch there without touching
+//! the verified stream.  The flip stream draws once per (step, slot) so the
+//! Python baseline mirror can replay the schedule exactly.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal, StateStore, TensorSpec};
+use crate::util::rng::Rng;
+
+use super::engine::{DecodeEngine, ServeMetrics};
+use super::session::{Session, SpecCheckpoint};
+use super::worker::{DepthGauge, LaneHealth};
+use super::{Request, Response};
+
+/// Seeded draft-error injector: flips a drafted token to `(tok + 1) % vocab`
+/// with probability `p`, forcing a rejection at that position.  Draws one
+/// uniform per (draft step, slot) — live or free — so the stream depends
+/// only on the seed and the round shapes, never on decode values.
+#[derive(Debug)]
+pub struct DraftDivergence {
+    rng: Rng,
+    p: f64,
+}
+
+impl DraftDivergence {
+    pub fn new(seed: u64, p: f64) -> DraftDivergence {
+        DraftDivergence { rng: Rng::new(seed), p }
+    }
+
+    fn flip(&mut self) -> bool {
+        self.rng.f64() < self.p
+    }
+}
+
+/// One engine + its decode state (either side of the draft/verify pair).
+struct SpecHalf<'a> {
+    de: DecodeEngine<'a>,
+    st: StateStore,
+}
+
+impl SpecHalf<'_> {
+    fn step(&mut self, x: &[i32], reset: &[bool]) -> Result<Vec<i32>> {
+        let logits = self.de.decode_step_masked(&mut self.st, x, reset)?;
+        Ok(self.de.argmax_rows(&logits))
+    }
+}
+
+/// What one speculative round did (the bench harness turns this into
+/// virtual ticks; the lane pump only forwards the responses).
+#[derive(Debug, Default)]
+pub struct RoundOutcome {
+    pub responses: Vec<Response>,
+    /// Draft steps executed this round (also the verify depth); 0 when the
+    /// round had no live slots.  The bench charges
+    /// `spec_steps × draft_ticks + target_ticks` when nonzero.
+    pub spec_steps: u64,
+}
+
+/// Draft/verify round scheduler over `width` persistent slots — the
+/// speculative counterpart of [`super::scheduler::SlotScheduler`].  Both
+/// engines must expose the masked gen program at the same batch width.
+pub struct SpecScheduler<'a> {
+    /// Variant name stamped on every response (the *target* lane's name —
+    /// the stream is the target's, the draft only accelerates it).
+    pub variant: String,
+    target: SpecHalf<'a>,
+    draft: SpecHalf<'a>,
+    draft_k: usize,
+    divergence: Option<DraftDivergence>,
+    /// Same arch on both sides ⇒ the repaired target memories are valid
+    /// draft memories too, so rejection rounds re-sync the draft for free.
+    resync_draft: bool,
+    slots: Vec<Session>,
+    queue: VecDeque<(Request, Instant)>,
+    /// Slots admitted since the last round — masked-reset by the first
+    /// draft *and* first verify step of the next round.
+    reset: Vec<bool>,
+    pub metrics: ServeMetrics,
+    bytes_seen: u64,
+}
+
+impl<'a> SpecScheduler<'a> {
+    /// Build from an already-initialised target and draft pair.  `draft_k`
+    /// is the per-round draft depth (clamped to each round's useful
+    /// maximum).
+    pub fn new(
+        variant: impl Into<String>,
+        target: (DecodeEngine<'a>, StateStore),
+        draft: (DecodeEngine<'a>, StateStore),
+        draft_k: usize,
+    ) -> Result<SpecScheduler<'a>> {
+        let (tde, tst) = target;
+        let (dde, dst) = draft;
+        anyhow::ensure!(draft_k > 0, "speculative decode needs draft_k >= 1");
+        anyhow::ensure!(
+            tde.width == dde.width,
+            "draft width {} != target width {}",
+            dde.width,
+            tde.width
+        );
+        anyhow::ensure!(
+            tde.has_masked() && dde.has_masked(),
+            "speculative decode needs gen_masked_<arch> on both sides"
+        );
+        let width = tde.width;
+        let resync_draft = tde.arch_name == dde.arch_name;
+        let target = SpecHalf { de: tde, st: tst };
+        let draft = SpecHalf { de: dde, st: dst };
+        let bytes_seen =
+            target.st.stats().total_bytes() + draft.st.stats().total_bytes();
+        Ok(SpecScheduler {
+            variant: variant.into(),
+            target,
+            draft,
+            draft_k,
+            divergence: None,
+            resync_draft,
+            slots: (0..width).map(|_| Session::free()).collect(),
+            queue: VecDeque::new(),
+            reset: vec![false; width],
+            metrics: ServeMetrics::default(),
+            bytes_seen,
+        })
+    }
+
+    /// Install a seeded draft-error injector (bench acceptance-rate axis).
+    pub fn set_divergence(&mut self, d: Option<DraftDivergence>) {
+        self.divergence = d;
+    }
+
+    pub fn width(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn draft_k(&self) -> usize {
+        self.draft_k
+    }
+
+    /// Queue a request for admission at the next round boundary.
+    pub fn submit(&mut self, r: Request, submitted: Instant) {
+        self.queue.push_back((r, submitted));
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_free()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(|s| !s.is_free())
+    }
+
+    /// Request ids per slot, in slot order (test/introspection hook).
+    pub fn slot_ids(&self) -> Vec<Option<u64>> {
+        self.slots.iter().map(|s| s.request_id()).collect()
+    }
+
+    /// FIFO admission into free slots — identical semantics to
+    /// `SlotScheduler::admit_queued` (zero-token requests answer
+    /// immediately and never occupy a slot).
+    fn admit_queued(&mut self, out: &mut Vec<Response>) {
+        while let Some((r, _)) = self.queue.front() {
+            if r.n_gen == 0 {
+                let Some((r, submitted)) = self.queue.pop_front() else { break };
+                let latency = Instant::now().duration_since(submitted).as_secs_f64();
+                self.metrics.requests += 1;
+                self.metrics.latencies.push(latency);
+                out.push(Response {
+                    id: r.id,
+                    tokens: Vec::new(),
+                    latency,
+                    variant: self.variant.clone(),
+                });
+                continue;
+            }
+            let Some(slot) = self.slots.iter().position(Session::is_free) else {
+                break;
+            };
+            let Some((r, submitted)) = self.queue.pop_front() else { break };
+            if let (Some(s), Some(reset)) =
+                (self.slots.get_mut(slot), self.reset.get_mut(slot))
+            {
+                s.admit(r, submitted);
+                *reset = true;
+            }
+        }
+    }
+
+    /// Useful draft depth this round: the deepest any live slot can go
+    /// before retiring, clamped to `draft_k`.
+    fn round_depth(&self) -> usize {
+        self.slots
+            .iter()
+            .map(Session::steps_remaining)
+            .max()
+            .unwrap_or(0)
+            .min(self.draft_k)
+    }
+
+    /// One speculative round (see module docs).  Returns the completed
+    /// responses and the executed draft depth.
+    pub fn round(&mut self) -> Result<RoundOutcome> {
+        let mut out = Vec::new();
+        self.admit_queued(&mut out);
+        let k = self.round_depth();
+        if k == 0 {
+            return Ok(RoundOutcome { responses: out, spec_steps: 0 });
+        }
+        let width = self.slots.len();
+        let live = self.live();
+        let t0 = Instant::now();
+
+        // the admission resets apply to the first step of BOTH phases
+        let round_reset = self.reset.clone();
+        let no_reset = vec![false; width];
+        self.reset.fill(false);
+
+        let cps: Vec<SpecCheckpoint> =
+            self.slots.iter().map(Session::checkpoint).collect();
+        let live0: Vec<bool> = self.slots.iter().map(|s| !s.is_free()).collect();
+
+        // ---- draft phase: k optimistic steps on the real sessions ----
+        let vocab = self.draft.de.vocab() as i32;
+        let mut xs: Vec<Vec<i32>> = Vec::with_capacity(k);
+        // per step, per slot: the drafted token, if the session consumed the
+        // step's output as a generated token (None on mid-prompt steps and
+        // free slots)
+        let mut drafted: Vec<Vec<Option<i32>>> = Vec::with_capacity(k);
+        for t in 0..k {
+            let x: Vec<i32> = self.slots.iter().map(Session::feed).collect();
+            let reset = if t == 0 { &round_reset } else { &no_reset };
+            let toks = self.draft.step(&x, reset)?;
+            anyhow::ensure!(
+                toks.len() == width,
+                "draft returned {} tokens for width {width}",
+                toks.len()
+            );
+            let flips: Vec<bool> = match self.divergence.as_mut() {
+                Some(d) => (0..width).map(|_| d.flip()).collect(),
+                None => no_reset.clone(),
+            };
+            let mut row = Vec::with_capacity(width);
+            for ((s, &raw), &flip) in self.slots.iter_mut().zip(&toks).zip(&flips) {
+                let tok = if flip { (raw + 1).rem_euclid(vocab.max(1)) } else { raw };
+                row.push(if s.spec_advance(tok) { Some(tok) } else { None });
+            }
+            xs.push(x);
+            drafted.push(row);
+        }
+
+        // ---- rollback: undo the optimistic cursor moves ----
+        for (s, cp) in self.slots.iter_mut().zip(&cps) {
+            s.rollback(cp);
+        }
+
+        // ---- verify phase: k target steps over the recorded inputs ----
+        let mut outs: Vec<Vec<i32>> = Vec::with_capacity(k);
+        // per slot: first verify step whose drafted token mismatched
+        let mut mismatch_at: Vec<Option<usize>> = vec![None; width];
+        // post-step host snapshots of the target mems, only at steps where
+        // some slot first mismatched (and the live final state won't do)
+        let mut snaps: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+        for (t, x) in xs.iter().enumerate() {
+            let reset = if t == 0 { &round_reset } else { &no_reset };
+            let o = self.target.step(x, reset)?;
+            anyhow::ensure!(
+                o.len() == width,
+                "target returned {} tokens for width {width}",
+                o.len()
+            );
+            let mut need_snap = false;
+            let row = drafted.get(t).map(Vec::as_slice).unwrap_or(&[]);
+            for ((mm, d), &ot) in mismatch_at.iter_mut().zip(row).zip(&o) {
+                if mm.is_none() && d.is_some_and(|dt| dt != ot) {
+                    *mm = Some(t);
+                    if t + 1 < k {
+                        need_snap = true;
+                    }
+                }
+            }
+            outs.push(o);
+            if need_snap {
+                let lits = self.target.st.host_group("mems")?;
+                let lit = lits.first().context("mems group is empty")?;
+                snaps.insert(t, literal::to_f32s(lit)?);
+            }
+        }
+
+        // ---- commit: accepted prefix (+ the mismatch step's correction
+        // token) through the normal advance path ----
+        let done = Instant::now();
+        let mut drafted_n = 0u64;
+        let mut accepted_n = 0u64;
+        for (idx, ((s, &was_live), mm)) in self
+            .slots
+            .iter_mut()
+            .zip(&live0)
+            .zip(&mismatch_at)
+            .enumerate()
+        {
+            if !was_live {
+                continue;
+            }
+            for (t, row) in drafted.iter().enumerate() {
+                if let Some(Some(_)) = row.get(idx) {
+                    drafted_n += 1;
+                    let accepted_here = match mm {
+                        None => true,
+                        Some(m) => t < *m,
+                    };
+                    if accepted_here {
+                        accepted_n += 1;
+                    }
+                }
+            }
+            let commit = mm.map_or(k, |m| m + 1);
+            for o in outs.iter().take(commit) {
+                let Some(&tok) = o.get(idx) else { break };
+                if s.is_free() {
+                    break; // retired mid-commit: drop the tail
+                }
+                if let Some(r) = s.advance(tok, done, &self.variant) {
+                    self.metrics.requests += 1;
+                    self.metrics.tokens_out += r.tokens.len();
+                    self.metrics.latencies.push(r.latency);
+                    out.push(r);
+                }
+            }
+        }
+        self.metrics.tokens_drafted += drafted_n;
+        self.metrics.tokens_accepted += accepted_n;
+        self.metrics.tokens_rejected += drafted_n.saturating_sub(accepted_n);
+
+        // ---- repair the target mems for slots that rejected early ----
+        self.splice_mems(k, &live0, &mismatch_at, &snaps)?;
+
+        self.metrics.busy_secs += t0.elapsed().as_secs_f64();
+        let steps = 2 * k as u64; // draft + verify program steps
+        self.metrics.steps += steps;
+        self.metrics.slot_steps += steps * width as u64;
+        self.metrics.live_slot_steps += steps * live as u64;
+        let bytes =
+            self.target.st.stats().total_bytes() + self.draft.st.stats().total_bytes();
+        self.metrics.bytes_synced += bytes.saturating_sub(self.bytes_seen);
+        self.bytes_seen = bytes;
+
+        Ok(RoundOutcome { responses: out, spec_steps: k as u64 })
+    }
+
+    /// Overwrite each early-rejecting slot's `[L, slot, M, D]` memory slice
+    /// with its last-correct snapshot and upload the repaired tensor (to
+    /// the draft too, when the archs match).  No-op when every live slot
+    /// kept the final device state.
+    fn splice_mems(
+        &mut self,
+        k: usize,
+        live0: &[bool],
+        mismatch_at: &[Option<usize>],
+        snaps: &BTreeMap<usize, Vec<f32>>,
+    ) -> Result<()> {
+        let needs: Vec<(usize, usize)> = live0
+            .iter()
+            .zip(mismatch_at)
+            .enumerate()
+            .filter_map(|(idx, (&was_live, mm))| match mm {
+                Some(m) if was_live && m + 1 < k => Some((idx, *m)),
+                _ => None,
+            })
+            .collect();
+        if needs.is_empty() {
+            return Ok(());
+        }
+        let spec = self.mems_spec()?;
+        let (layers, slot_chunk, layer_stride) = mems_geometry(&spec, self.slots.len())?;
+        let base = self.target.st.host_group("mems")?;
+        let mut flat =
+            literal::to_f32s(base.first().context("mems group is empty")?)?;
+        for (idx, m) in needs {
+            let snap = snaps
+                .get(&m)
+                .with_context(|| format!("missing mems snapshot for step {m}"))?;
+            for l in 0..layers {
+                let off = l * layer_stride + idx * slot_chunk;
+                let dst = flat
+                    .get_mut(off..off + slot_chunk)
+                    .context("mems slice out of bounds")?;
+                let src = snap
+                    .get(off..off + slot_chunk)
+                    .context("mems snapshot slice out of bounds")?;
+                dst.copy_from_slice(src);
+            }
+        }
+        let lit = literal::literal_from_f32s(&spec, &flat)?;
+        self.target.st.set_group("mems", vec![lit]);
+        if self.resync_draft {
+            let lit = literal::literal_from_f32s(&spec, &flat)?;
+            self.draft.st.set_group("mems", vec![lit]);
+        }
+        Ok(())
+    }
+
+    /// The target gen program's mems tensor spec (`[L, B, M, D]`).
+    fn mems_spec(&self) -> Result<TensorSpec> {
+        let spec = &self.target.de.gen_program().spec;
+        let (a, _) = spec
+            .in_group("mems")
+            .with_context(|| format!("no mems group in {}", spec.name))?;
+        spec.inputs
+            .get(a)
+            .cloned()
+            .context("mems group has no input spec")
+    }
+}
+
+/// Per-slot splice geometry from the mems spec: `(L, M·D, B·M·D)`.
+fn mems_geometry(spec: &TensorSpec, width: usize) -> Result<(usize, usize, usize)> {
+    let (layers, batch) = match spec.shape.as_slice() {
+        [l, b, rest @ ..] if !rest.is_empty() => (*l, *b),
+        other => anyhow::bail!("mems shape {other:?} is not [L, B, M, D]"),
+    };
+    anyhow::ensure!(
+        batch == width,
+        "mems batch dim {batch} != slot width {width}"
+    );
+    let slot_chunk: usize = spec.shape.iter().skip(2).product();
+    Ok((layers, slot_chunk, batch * slot_chunk))
+}
+
+/// One variant's speculative lane: round scheduler + admission channel pump
+/// (the speculative counterpart of `scheduler::SlotLane`).
+pub struct SpecLane<'a> {
+    pub name: String,
+    pub scheduler: SpecScheduler<'a>,
+    /// In-flight gauge shared with the admission side's `LaneSender`;
+    /// decremented per response.
+    pub depth: DepthGauge,
+    /// Rolling-latency window shared with the admission side's adaptive
+    /// router (`None` when adaptive degradation is off).
+    pub health: Option<LaneHealth>,
+}
+
+impl<'a> SpecLane<'a> {
+    pub fn new(name: impl Into<String>, scheduler: SpecScheduler<'a>) -> SpecLane<'a> {
+        SpecLane {
+            name: name.into(),
+            scheduler,
+            depth: DepthGauge::default(),
+            health: None,
+        }
+    }
+
+    fn observe(&self, rs: &[Response]) {
+        if let Some(h) = &self.health {
+            for r in rs {
+                h.observe(r.latency);
+            }
+        }
+    }
+
+    /// Lane main loop: drain the admission channel between rounds, round
+    /// while there is work, block when idle, finish everything in flight
+    /// once the channel closes.  `publish` runs with the lane's metrics at
+    /// most once per `PUBLISH_EVERY_STEPS` executed steps plus once at
+    /// shutdown, matching `SlotLane::run_with`.
+    pub fn run_with(
+        mut self,
+        rx: Receiver<(Request, Instant)>,
+        mut publish: impl FnMut(&ServeMetrics),
+    ) -> Result<(Vec<Response>, SpecScheduler<'a>)> {
+        let mut out = Vec::new();
+        let mut published_at = 0u64;
+        loop {
+            while let Ok((r, t)) = rx.try_recv() {
+                self.scheduler.submit(r, t);
+            }
+            if self.scheduler.has_work() {
+                let rd = self.scheduler.round()?;
+                self.depth.sub(rd.responses.len());
+                self.observe(&rd.responses);
+                out.extend(rd.responses);
+                let steps = self.scheduler.metrics.steps;
+                if steps >= published_at + super::scheduler::PUBLISH_EVERY_STEPS {
+                    published_at = steps;
+                    publish(&self.scheduler.metrics);
+                }
+            } else {
+                match rx.recv() {
+                    Ok((r, t)) => self.scheduler.submit(r, t),
+                    Err(_) => break,
+                }
+            }
+        }
+        while self.scheduler.has_work() {
+            let rd = self.scheduler.round()?;
+            self.depth.sub(rd.responses.len());
+            self.observe(&rd.responses);
+            out.extend(rd.responses);
+        }
+        publish(&self.scheduler.metrics);
+        Ok((out, self.scheduler))
+    }
+
+    /// `run_with` without a metrics observer (tests/benches).
+    pub fn run(
+        self,
+        rx: Receiver<(Request, Instant)>,
+    ) -> Result<(Vec<Response>, SpecScheduler<'a>)> {
+        self.run_with(rx, |_| {})
+    }
+}

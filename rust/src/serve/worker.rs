@@ -21,13 +21,13 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{BatchWave, WaveBatcher};
-use super::router::Router;
+use super::router::{AdaptiveRouter, RollingP95, Router};
 use super::workload::TimedRequest;
 use super::{Request, Response};
 
@@ -95,6 +95,31 @@ impl LaneSender {
     }
 }
 
+/// Shared rolling-latency window for one lane: the lane side pushes each
+/// response's latency ([`Self::observe`]); the admission side reads the
+/// rolling p95 to drive the [`AdaptiveRouter`]'s degrade/recover
+/// hysteresis.  Cheap to clone (an `Arc` around the ring).
+#[derive(Debug, Clone, Default)]
+pub struct LaneHealth(Arc<Mutex<RollingP95>>);
+
+impl LaneHealth {
+    fn ring(&self) -> std::sync::MutexGuard<'_, RollingP95> {
+        // a panicking holder can only leave a stale latency sample behind —
+        // health data stays usable, so recover instead of poisoning serve
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one completed request's latency (seconds).
+    pub fn observe(&self, latency: f64) {
+        self.ring().push(latency);
+    }
+
+    /// Rolling p95 over the window (`None` until something completed).
+    pub fn p95(&self) -> Option<f64> {
+        self.ring().p95()
+    }
+}
+
 /// Executes one decode wave.  Implemented by the cluster over
 /// `DecodeEngine` + `StateStore`, and by mock executors in tests/benches.
 pub trait WaveExecutor {
@@ -120,11 +145,28 @@ pub struct WorkerLane<E: WaveExecutor> {
     /// decremented per response.  Defaults to a private gauge when the lane
     /// is driven without one (direct tests).
     pub depth: DepthGauge,
+    /// Rolling-latency window shared with the admission side's adaptive
+    /// router (`None` when adaptive degradation is off).
+    pub health: Option<LaneHealth>,
 }
 
 impl<E: WaveExecutor> WorkerLane<E> {
     pub fn new(name: impl Into<String>, batcher: WaveBatcher, executor: E) -> Self {
-        WorkerLane { name: name.into(), batcher, executor, depth: DepthGauge::default() }
+        WorkerLane {
+            name: name.into(),
+            batcher,
+            executor,
+            depth: DepthGauge::default(),
+            health: None,
+        }
+    }
+
+    fn observe(&self, rs: &[Response]) {
+        if let Some(h) = &self.health {
+            for r in rs {
+                h.observe(r.latency);
+            }
+        }
     }
 
     /// Fire every currently-ready wave: full waves, and partial waves whose
@@ -133,6 +175,7 @@ impl<E: WaveExecutor> WorkerLane<E> {
         while let Some(w) = self.batcher.next_wave(Instant::now()) {
             let rs = self.executor.execute_wave(&w)?;
             self.depth.sub(rs.len());
+            self.observe(&rs);
             out.extend(rs);
         }
         Ok(())
@@ -182,6 +225,7 @@ impl<E: WaveExecutor> WorkerLane<E> {
                             while let Some(w) = self.batcher.force_wave() {
                                 let rs = self.executor.execute_wave(&w)?;
                                 self.depth.sub(rs.len());
+                                self.observe(&rs);
                                 out.extend(rs);
                             }
                             break;
@@ -222,6 +266,49 @@ pub fn admit(
         }
         let variant =
             router.route_loaded(&tr.request, |v| lanes.get(v).map_or(0, LaneSender::depth));
+        if let Some(lane) = lanes.get(variant) {
+            if lane.send(tr.request.clone(), Instant::now()) {
+                admitted += 1;
+            }
+        }
+    }
+    admitted
+}
+
+/// [`admit`] with adaptive SLA degradation: before each route, every lane's
+/// rolling p95 (read from its [`LaneHealth`] window, fed live by the lane
+/// threads) is pushed through the [`AdaptiveRouter`]'s degrade/recover
+/// hysteresis, and routing skips lanes currently marked degraded — new
+/// admissions fall through to the next-cheaper variant and climb back when
+/// pressure drops.  In-flight requests are never re-routed.
+pub fn admit_adaptive(
+    trace: &[TimedRequest],
+    router: &mut AdaptiveRouter,
+    lanes: &HashMap<String, LaneSender>,
+    healths: &HashMap<String, LaneHealth>,
+    realtime: bool,
+) -> usize {
+    let start = Instant::now();
+    let mut admitted = 0;
+    for tr in trace {
+        if realtime {
+            let due = start + Duration::from_secs_f64(tr.at);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        // deterministic refresh order (sorted lane names) so two admissions
+        // under identical windows flip flags identically
+        let mut names: Vec<&String> = healths.keys().collect();
+        names.sort();
+        for name in names {
+            if let Some(p95) = healths.get(name).and_then(LaneHealth::p95) {
+                router.observe_p95(name, p95);
+            }
+        }
+        let variant = router
+            .route_loaded(&tr.request, |v| lanes.get(v).map_or(0, LaneSender::depth));
         if let Some(lane) = lanes.get(variant) {
             if lane.send(tr.request.clone(), Instant::now()) {
                 admitted += 1;

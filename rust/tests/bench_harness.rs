@@ -139,6 +139,73 @@ fn suite_scenarios_hold_their_ab_claims() {
     assert_eq!(r.steps, t.steps);
 }
 
+/// The speculative scenario's headline: at high acceptance, draft/verify
+/// rounds buy >=1.5x token throughput over plain continuous decode on the
+/// same 3-tick lane (the virtual-clock analogue of the paper-style
+/// speculative speedup; token identity is asserted separately in
+/// rust/tests/speculative_serve.rs).
+#[test]
+fn speculative_scenario_holds_its_throughput_claims() {
+    let rep = run_named("speculative", DEFAULT_SEED).unwrap();
+    let cont = rep.leg("continuous").unwrap();
+    assert_eq!(cont.tokens_drafted, 0, "the plain leg must not speculate");
+    for name in ["spec_k2", "spec_k4", "spec_k8", "spec_k4_div10", "spec_k4_div50"] {
+        let leg = rep.leg(name).unwrap();
+        assert_eq!(leg.requests, rep.requests, "{name}: lost requests");
+        assert_eq!(leg.tokens_out, cont.tokens_out, "{name}: token volume changed");
+        assert!(leg.tokens_drafted > 0, "{name}: no speculation happened");
+        assert_eq!(
+            leg.tokens_drafted,
+            leg.tokens_accepted + leg.tokens_rejected,
+            "{name}: draft accounting must conserve"
+        );
+    }
+    // a same-arch draft with no injected errors is never rejected
+    for name in ["spec_k2", "spec_k4", "spec_k8"] {
+        let leg = rep.leg(name).unwrap();
+        assert_eq!(leg.acceptance_rate, 1.0, "{name}: same-arch draft must fully accept");
+    }
+    // the injected-error axis orders acceptance
+    let (d10, d50) = (rep.leg("spec_k4_div10").unwrap(), rep.leg("spec_k4_div50").unwrap());
+    assert!(d10.acceptance_rate < 1.0 && d50.acceptance_rate < d10.acceptance_rate);
+
+    // headline + monotonicity, on the virtual clock (tokens per wall tick)
+    let thr = |l: &planer::bench::LegReport| l.tokens_out as f64 / l.wall_ticks as f64;
+    let (k2, k4, k8) = (
+        rep.leg("spec_k2").unwrap(),
+        rep.leg("spec_k4").unwrap(),
+        rep.leg("spec_k8").unwrap(),
+    );
+    assert!(
+        thr(k8) >= 1.5 * thr(cont),
+        "spec_k8 throughput {:.3} tok/tick !>= 1.5x continuous {:.3}",
+        thr(k8),
+        thr(cont)
+    );
+    assert!(thr(k4) > thr(k2) && thr(k8) > thr(k4), "deeper drafts must help at full acceptance");
+    assert!(thr(d10) > thr(d50), "rejections must cost schedule, monotonically in error rate");
+}
+
+/// The bursty scenario's claim: under two-phase Poisson arrivals,
+/// continuous batching beats the deadline-fired wave schedule on p95 (the
+/// partial waves a quiet phase strands are exactly its weakness).
+#[test]
+fn bursty_scenario_survives_burst_admission() {
+    let rep = run_named("bursty", DEFAULT_SEED).unwrap();
+    let (wave, cont) = (rep.leg("wave").unwrap(), rep.leg("continuous").unwrap());
+    assert_eq!(wave.requests, rep.requests, "wave lost requests");
+    assert_eq!(cont.requests, rep.requests, "continuous lost requests");
+    assert_eq!(wave.tokens_out, cont.tokens_out, "policies must emit the same token volume");
+    assert!(
+        cont.latency.p95 < wave.latency.p95,
+        "continuous p95 {} !< wave p95 {} under bursty arrivals",
+        cont.latency.p95,
+        wave.latency.p95
+    );
+    assert_eq!(wave.tokens_drafted, 0);
+    assert_eq!(cont.tokens_drafted, 0);
+}
+
 /// The committed baseline matches what this build actually measures, leg by
 /// leg, within the gate's threshold — the in-repo cross-check of
 /// `scripts/bench_baseline.py` (which seeded it) against the real harness.

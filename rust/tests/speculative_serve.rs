@@ -1,0 +1,320 @@
+//! Hermetic speculative-decoding properties over the reference backend:
+//! the draft/verify/rollback round machinery of
+//! `planer::serve::speculative`, with **zero XLA artifacts**.
+//!
+//! The load-bearing claim is *exactness*: greedy speculative decoding is a
+//! schedule optimisation, never a stream change.  Every test here pins the
+//! speculative token streams against the same solo one-request-per-wave
+//! oracle used by rust/tests/ref_serve.rs, across seeds, draft depths,
+//! draft archs (same-arch and cross-arch) and injected draft-error rates —
+//! including the degenerate edges where every drafted token is rejected
+//! (acceptance 0) and where none is (acceptance 1).
+//!
+//! Determinism preconditions are the same as ref_serve.rs: pure reference
+//! forward, equal-length prompts, MoE capacity admitting every choice, so
+//! per-request streams are scheduling-independent and comparable exactly.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use planer::bench::fleet_engine;
+use planer::runtime::refback::fleet_arch_name;
+use planer::runtime::{Engine, StateStore};
+use planer::serve::{
+    BatchWave, Cluster, DecodeEngine, DraftDivergence, Request, Response, ServeMetrics,
+    ServePolicy, Session, SpecLane, SpecScheduler, TimedRequest,
+};
+
+fn req(id: u64, prompt: Vec<i32>, n_gen: usize) -> TimedRequest {
+    TimedRequest {
+        at: 0.0,
+        request: Request { id, prompt, n_gen, sla: f64::INFINITY },
+    }
+}
+
+/// Equal 3-token prompts (parity precondition), bimodal n_gen so rounds
+/// mix mid-prompt, decoding and retiring slots.
+fn trace(n: usize) -> Vec<TimedRequest> {
+    (0..n)
+        .map(|i| {
+            let p = vec![
+                (1 + i % 5) as i32,
+                (3 + i % 7) as i32,
+                (2 + i % 11) as i32,
+            ];
+            let n_gen = if i % 2 == 0 { 1 } else { 6 + i % 3 };
+            req(i as u64, p, n_gen)
+        })
+        .collect()
+}
+
+/// One request decoded alone (one-request wave, fresh memories): the
+/// scheduling-independent reference stream for that request.
+fn solo_oracle(de: &DecodeEngine, st: &mut StateStore, r: &Request) -> Vec<i32> {
+    let wave = BatchWave { requests: vec![(r.clone(), Instant::now())] };
+    let mut m = ServeMetrics::default();
+    let rs = de.decode_wave(st, &wave, &mut m).unwrap();
+    rs.into_iter().next().unwrap().tokens
+}
+
+fn oracle_streams(engine: &Engine, arch: &str, seed: i32, trace: &[TimedRequest]) -> Vec<Vec<i32>> {
+    let de = DecodeEngine::new(engine, arch).unwrap();
+    let mut st = de.init_state(seed).unwrap();
+    trace.iter().map(|t| solo_oracle(&de, &mut st, &t.request)).collect()
+}
+
+fn spec_scheduler<'a>(
+    engine: &'a Engine,
+    target_arch: &str,
+    draft_arch: &str,
+    seed: i32,
+    draft_k: usize,
+) -> SpecScheduler<'a> {
+    let tde = DecodeEngine::new(engine, target_arch).unwrap();
+    let tst = tde.init_state(seed).unwrap();
+    let dde = DecodeEngine::new(engine, draft_arch).unwrap();
+    let dst = dde.init_state(seed).unwrap();
+    SpecScheduler::new(target_arch, (tde, tst), (dde, dst), draft_k).unwrap()
+}
+
+/// Submit the whole trace up front, round until drained, return per-id
+/// token streams plus the scheduler's metrics.
+fn spec_run(mut sched: SpecScheduler, trace: &[TimedRequest]) -> (Vec<Vec<i32>>, ServeMetrics) {
+    let now = Instant::now();
+    for t in trace {
+        sched.submit(t.request.clone(), now);
+    }
+    let mut tokens: Vec<Vec<i32>> = vec![Vec::new(); trace.len()];
+    let mut answered = 0usize;
+    while sched.has_work() {
+        for r in sched.round().unwrap().responses {
+            assert!(tokens[r.id as usize].is_empty(), "req {} answered twice", r.id);
+            tokens[r.id as usize] = r.tokens;
+            answered += 1;
+        }
+    }
+    assert_eq!(answered, trace.len(), "requests lost in the round loop");
+    (tokens, sched.metrics)
+}
+
+/// The core exactness sweep: speculative greedy streams are token-identical
+/// to the solo-target oracle for every seed, draft depth, draft arch and
+/// injected draft-error rate.  Draft quality moves only the acceptance
+/// rate, never the stream.
+#[test]
+fn speculative_streams_match_the_solo_oracle_for_every_seed_and_depth() {
+    let engine = fleet_engine(2).unwrap();
+    let target = fleet_arch_name(0);
+    let trace = trace(10);
+    for seed in [0, 7] {
+        let expected = oracle_streams(&engine, &target, seed, &trace);
+        for draft in [fleet_arch_name(0), fleet_arch_name(1)] {
+            for draft_k in [1, 4, 8] {
+                for divergence in [0.0, 0.3, 1.0] {
+                    let mut sched = spec_scheduler(&engine, &target, &draft, seed, draft_k);
+                    if divergence > 0.0 {
+                        sched.set_divergence(Some(DraftDivergence::new(99, divergence)));
+                    }
+                    let (tokens, m) = spec_run(sched, &trace);
+                    for (i, want) in expected.iter().enumerate() {
+                        assert_eq!(
+                            &tokens[i], want,
+                            "seed {seed} draft {draft} k={draft_k} p={divergence}: \
+                             req {i} diverged from the solo oracle"
+                        );
+                    }
+                    assert_eq!(
+                        m.tokens_drafted,
+                        m.tokens_accepted + m.tokens_rejected,
+                        "draft accounting must conserve"
+                    );
+                    assert!(m.tokens_drafted > 0, "no speculation happened");
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance-rate edges.  Same-arch draft with no injected errors agrees
+/// with the target at every position — acceptance exactly 1.0, zero host
+/// mem syncs beyond the steady metering.  With p=1.0 every drafted token is
+/// flipped away from the target's output — acceptance exactly 0.0 (plain
+/// decode at 2× step cost), and the stream *still* matches the oracle.
+#[test]
+fn acceptance_rate_edges_are_exact() {
+    let engine = fleet_engine(1).unwrap();
+    let target = fleet_arch_name(0);
+    let trace = trace(8);
+    let expected = oracle_streams(&engine, &target, 0, &trace);
+
+    // p = 0 (no injector): same-arch draft is the target, bit for bit
+    let (tokens, m) = spec_run(spec_scheduler(&engine, &target, &target, 0, 4), &trace);
+    assert_eq!(tokens, expected);
+    assert!(m.tokens_drafted > 0);
+    assert_eq!(m.tokens_rejected, 0, "same-arch draft must never be rejected");
+    assert_eq!(m.acceptance_rate(), 1.0);
+
+    // p = 1: every consumed draft step flips => first drafted token of
+    // every round rejects, nothing is ever accepted
+    let mut sched = spec_scheduler(&engine, &target, &target, 0, 4);
+    sched.set_divergence(Some(DraftDivergence::new(5, 1.0)));
+    let (tokens, m) = spec_run(sched, &trace);
+    assert_eq!(tokens, expected, "total rejection must not corrupt the stream");
+    assert!(m.tokens_drafted > 0);
+    assert_eq!(m.tokens_accepted, 0, "a flipped token can never match the target");
+    assert_eq!(m.acceptance_rate(), 0.0);
+}
+
+/// Empty prompts ride the BOS seeding path through a speculative round.
+#[test]
+fn empty_prompts_decode_identically_under_speculation() {
+    let engine = fleet_engine(1).unwrap();
+    let target = fleet_arch_name(0);
+    let trace: Vec<TimedRequest> = (0..4).map(|i| req(i, vec![], 3)).collect();
+    let expected = oracle_streams(&engine, &target, 0, &trace);
+    let (tokens, _) = spec_run(spec_scheduler(&engine, &target, &target, 0, 4), &trace);
+    assert_eq!(tokens, expected, "BOS-seeded speculative streams must match the oracle");
+}
+
+/// Rollback restores slot state bitwise: at every point of a session's
+/// lifecycle, checkpoint → overshooting draft burst → rollback leaves the
+/// session observably identical to a twin that never speculated, and the
+/// twin-identical remainder of the decode produces the same response.
+#[test]
+fn rollback_restores_slot_state_bitwise() {
+    let t0 = Instant::now();
+    for plen in [0usize, 3] {
+        let prompt: Vec<i32> = (0..plen as i32).map(|i| i + 1).collect();
+        let n_gen = 4;
+        let total = prompt.len().max(1) + n_gen - 1;
+        for stop in 0..total {
+            let r = Request { id: 9, prompt: prompt.clone(), n_gen, sla: f64::INFINITY };
+            let mut a = Session::free();
+            let mut b = Session::free();
+            a.admit(r.clone(), t0);
+            b.admit(r, t0);
+            for t in 0..stop {
+                let tok = (5 + t) as i32;
+                assert!(a.advance(tok, t0, "v").is_none());
+                assert!(b.advance(tok, t0, "v").is_none());
+            }
+
+            // draft burst on `a` only, overshooting well past n_gen
+            let cp = a.checkpoint();
+            for t in 0..(total + 3) {
+                a.spec_advance(100 + t as i32);
+            }
+            a.rollback(&cp);
+
+            assert_eq!(a.state(), b.state(), "plen {plen} stop {stop}: phase");
+            assert_eq!(a.feed(), b.feed(), "plen {plen} stop {stop}: feedback token");
+            assert_eq!(a.steps_remaining(), b.steps_remaining(), "plen {plen} stop {stop}");
+            assert_eq!(a.request_id(), b.request_id());
+
+            // the committed token buffer must be intact: finishing both
+            // sessions identically yields identical responses
+            let (mut ra, mut rb) = (None, None);
+            for t in stop..total {
+                let tok = (5 + t) as i32;
+                ra = a.advance(tok, t0, "v");
+                rb = b.advance(tok, t0, "v");
+            }
+            let (ra, rb) = (ra.unwrap(), rb.unwrap());
+            assert_eq!(ra.tokens, rb.tokens, "plen {plen} stop {stop}: committed tokens");
+            assert_eq!(ra.tokens.len(), n_gen);
+            assert!(a.is_free() && b.is_free());
+        }
+    }
+
+    // free slots checkpoint as free, ignore drafts and stay free
+    let mut f = Session::free();
+    let cp = f.checkpoint();
+    assert!(!f.spec_advance(3), "a free slot must not consume a draft");
+    f.rollback(&cp);
+    assert!(f.is_free());
+    assert_eq!(f.steps_remaining(), 0);
+}
+
+/// Channel-close drain conservation: a SpecLane whose admission channel
+/// closes mid-speculation (live slots + queued requests) finishes every
+/// request in flight, exactly once, with oracle-identical streams.
+#[test]
+fn spec_lane_drains_everything_in_flight_on_close() {
+    let engine = fleet_engine(2).unwrap();
+    let target = fleet_arch_name(0);
+    let trace = trace(11); // width 4: closure leaves live slots + a queue
+    let expected = oracle_streams(&engine, &target, 0, &trace);
+
+    let sched = spec_scheduler(&engine, &target, &fleet_arch_name(1), 0, 4);
+    let lane = SpecLane::new(target.clone(), sched);
+    let (tx, rx) = mpsc::channel();
+    let (responses, sched) = std::thread::scope(|s| {
+        let h = s.spawn(move || lane.run(rx).unwrap());
+        for t in &trace {
+            tx.send((t.request.clone(), Instant::now())).unwrap();
+        }
+        drop(tx); // close while the lane is still speculating
+        h.join().unwrap()
+    });
+
+    assert!(!sched.has_work(), "drain must leave no live or queued work");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), trace.len(), "duplicate or lost responses on drain");
+    for r in &responses {
+        assert_eq!(r.tokens.len(), trace[r.id as usize].request.n_gen);
+        assert_eq!(
+            r.tokens, expected[r.id as usize],
+            "drain: req {} diverged from the solo oracle",
+            r.id
+        );
+    }
+    let m = &sched.metrics;
+    assert_eq!(m.requests, trace.len());
+    assert_eq!(m.tokens_drafted, m.tokens_accepted + m.tokens_rejected);
+}
+
+/// End-to-end cluster wiring: under `ServePolicy::Speculative` the best
+/// lane drafts with the cheapest lane's arch, the cheapest lane itself
+/// falls back to continuous, and the full replay answers the same streams
+/// as a continuous replay of the same trace — speculation changes the
+/// schedule, not the output.
+#[test]
+fn speculative_policy_replay_matches_continuous_exactly() {
+    let engine = fleet_engine(2).unwrap();
+    let names = vec![fleet_arch_name(0), fleet_arch_name(1)];
+    let trace = trace(12);
+    let mut cluster = Cluster::new(&engine, &names, 0).unwrap();
+    cluster.set_max_wait(Duration::from_millis(1));
+
+    cluster.set_serve_policy(ServePolicy::Speculative);
+    let plans = cluster.lane_policies();
+    assert_eq!(plans[0].1, ServePolicy::Speculative, "best lane must speculate");
+    assert_eq!(
+        plans[1].1,
+        ServePolicy::Continuous,
+        "the cheapest lane has no cheaper draft and must fall back"
+    );
+
+    let spec = cluster.replay_concurrent(&trace, false).unwrap();
+    assert_eq!(spec.len(), trace.len());
+    let mut total = ServeMetrics::default();
+    for (_, m) in cluster.metrics_snapshot() {
+        total.merge(&m);
+    }
+    assert!(total.tokens_drafted > 0, "the speculative lane never sped anything up");
+    assert_eq!(total.tokens_drafted, total.tokens_accepted + total.tokens_rejected);
+    let rate = total.acceptance_rate();
+    assert!((0.0..=1.0).contains(&rate), "acceptance rate {rate} out of bounds");
+
+    cluster.set_serve_policy(ServePolicy::Continuous);
+    let cont = cluster.replay_concurrent(&trace, false).unwrap();
+
+    // infinite SLAs route every request to the best lane under both
+    // policies, so the full (id, variant, tokens) sets must agree exactly
+    let key = |rs: &[Response]| -> Vec<(u64, String, Vec<i32>)> {
+        rs.iter().map(|r| (r.id, r.variant.clone(), r.tokens.clone())).collect()
+    };
+    assert_eq!(key(&spec), key(&cont), "speculative replay changed the served streams");
+}

@@ -75,9 +75,26 @@ pub fn repo_config() -> Config {
             strict("rust/src/serve/cluster.rs", "Lane::execute"),
             strict("rust/src/serve/cluster.rs", "Cluster::replay"),
             strict("rust/src/serve/cluster.rs", "Cluster::replay_concurrent"),
-            // per-slot session state machine
+            // per-slot session state machine (incl. speculation cursor)
             strict("rust/src/serve/session.rs", "Session::feed"),
             strict("rust/src/serve/session.rs", "Session::advance"),
+            strict("rust/src/serve/session.rs", "Session::spec_advance"),
+            strict("rust/src/serve/session.rs", "Session::rollback"),
+            strict("rust/src/serve/session.rs", "Session::checkpoint"),
+            strict("rust/src/serve/session.rs", "Session::steps_remaining"),
+            // speculative draft/verify rounds
+            strict("rust/src/serve/speculative.rs", "SpecScheduler::round"),
+            strict("rust/src/serve/speculative.rs", "SpecScheduler::admit_queued"),
+            strict("rust/src/serve/speculative.rs", "SpecScheduler::splice_mems"),
+            strict("rust/src/serve/speculative.rs", "SpecLane::run_with"),
+            strict("rust/src/serve/speculative.rs", "mems_geometry"),
+            // adaptive SLA admission
+            strict("rust/src/serve/router.rs", "Router::route_allowed"),
+            strict("rust/src/serve/router.rs", "AdaptiveRouter::observe_p95"),
+            strict("rust/src/serve/router.rs", "AdaptiveRouter::route_loaded"),
+            strict("rust/src/serve/worker.rs", "admit_adaptive"),
+            strict("rust/src/serve/worker.rs", "LaneHealth::observe"),
+            strict("rust/src/serve/worker.rs", "LaneHealth::p95"),
             // state store step loop
             strict("rust/src/runtime/state.rs", "StateStore::run_plan"),
             strict("rust/src/runtime/state.rs", "StateStore::run_plan_device"),
@@ -87,6 +104,7 @@ pub fn repo_config() -> Config {
             strict("rust/src/bench/harness.rs", "Harness::wave_overlapped"),
             strict("rust/src/bench/harness.rs", "Harness::wave_serial"),
             strict("rust/src/bench/harness.rs", "Harness::continuous"),
+            strict("rust/src/bench/harness.rs", "Harness::speculative"),
             strict("rust/src/bench/harness.rs", "WaveLane::fire"),
             // reference-backend decode kernels
             kernel("rust/src/runtime/refback.rs", "gen_forward"),

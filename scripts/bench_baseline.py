@@ -8,13 +8,18 @@ or wall clock.  That makes every gated number computable outside Rust, as
 long as this file mirrors, operation for operation:
 
   - util::rng::Rng            (xoshiro256** + SplitMix64 seeding)
-  - serve::workload::WorkloadGen.generate  (Uniform/Burst arrivals only —
-    the hermetic scenarios avoid Poisson precisely so no libm call enters
-    the trace and this mirror stays bit-exact across platforms)
+  - serve::workload::WorkloadGen.generate  (Uniform/Burst arrivals, plus
+    the bursty scenario's two-phase Poisson; its exponential draws call
+    math.log, which on the CI platform is the same glibc log() behind
+    Rust's f64::ln — and any cross-platform ulp drift moves arrival ticks
+    by at most one, far inside the gate's 15% threshold)
   - serve::router::Router::route (QualityWithinSla, load-blind)
   - the wave schedule (batcher::WaveShape / BatchWave::step_usage and the
     harness event loops in bench/harness.rs)
   - serve::scheduler::SlotScheduler + serve::session::Session
+  - serve::speculative::SpecScheduler round schedule (draft/verify depth,
+    mismatch positions from the seeded DraftDivergence flip stream —
+    value-free: consumption and flips never look at decode outputs)
   - runtime::state::StateStore byte metering (SyncStats), via the tensor
     shapes of runtime::refback's synthesized manifest
 
@@ -73,6 +78,10 @@ class Rng:
     def below(self, n):
         return self.next_u64() % n
 
+    def exponential(self, lam):
+        # util/rng.rs::exponential: -f64().max(1e-300).ln() / lambda
+        return -math.log(max(self.f64(), 1e-300)) / lam
+
 
 def rotl(x, k):
     return ((x << k) | (x >> (64 - k))) & MASK
@@ -80,15 +89,32 @@ def rotl(x, k):
 
 # ------------------------------------------------------- serve::workload
 def generate(n, seed, gap_s, pmin, pmax, gmin, gmax, vocab, tight_frac,
-             sla_tight, sla_loose):
+             sla_tight, sla_loose, bursty=None):
     """WorkloadGen::generate for Uniform (gap_s > 0) / Burst (gap_s == 0)
-    arrivals; draw order matches workload.rs exactly: plen, glen, prompt
-    tokens, sla."""
+    arrivals, or BurstyPoisson when `bursty=(rps, burst_rps, mean_phase_s)`;
+    draw order matches workload.rs exactly: [initial phase draw,] per
+    request: gap draw(s), plen, glen, prompt tokens, sla."""
     rng = Rng(seed)
     t = 0.0
+    in_burst = False
+    phase_left = rng.exponential(1.0 / bursty[2]) if bursty else 0.0
     out = []
     for rid in range(n):
-        t += gap_s
+        if bursty:
+            rps, burst_rps, mean_phase_s = bursty
+            gap = 0.0
+            while True:
+                draw = rng.exponential(burst_rps if in_burst else rps)
+                if draw <= phase_left:
+                    phase_left -= draw
+                    gap += draw
+                    break
+                gap += phase_left
+                in_burst = not in_burst
+                phase_left = rng.exponential(1.0 / mean_phase_s)
+            t += gap
+        else:
+            t += gap_s
         plen = pmin + rng.below(pmax - pmin + 1)
         glen = gmin + rng.below(gmax - gmin + 1)
         for _ in range(plen):
@@ -177,6 +203,8 @@ class Metrics:
         self.requests = 0
         self.tokens = 0
         self.bytes = 0
+        self.drafted = 0
+        self.accepted = 0
 
     def merge(self, o):
         self.waves += o.waves
@@ -186,6 +214,8 @@ class Metrics:
         self.requests += o.requests
         self.tokens += o.tokens
         self.bytes += o.bytes
+        self.drafted += o.drafted
+        self.accepted += o.accepted
 
 
 class Clock:
@@ -322,6 +352,109 @@ def sim_continuous(sub, width, step_ticks, samples):
     return sched, clock.now
 
 
+# ------------------------------------------- serve::speculative round sim
+class SpecSim:
+    """SpecScheduler's round schedule (serve/speculative.rs), value-free:
+    round depth, per-step draft consumption and the seeded flip stream fully
+    determine the commit schedule — decode outputs never enter it.  A slot
+    admitted with prompt P and gen G retires after max(P,1)+G-1 committed
+    steps; a draft step consumes (drafts) a token whenever the slot's
+    committed step count has reached max(P,1)-1, overshooting past
+    retirement by design (session.rs::spec_advance).  With the scenario's
+    same-arch draft, a drafted token mismatches the target's output exactly
+    when its flip fired, so mismatch positions are pure RNG."""
+
+    def __init__(self, width, draft_k, divergence, flip_seed):
+        self.width = width
+        self.draft_k = draft_k
+        self.slots = [None] * width  # [req, arrive_tick, steps_taken]
+        self.queue = []
+        self.m = Metrics()
+        self.flips = Rng(flip_seed) if divergence > 0.0 else None
+        self.p = divergence
+
+    def submit(self, entry):
+        self.queue.append(entry)
+
+    def has_work(self):
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    @staticmethod
+    def total_steps(req):
+        return max(req["plen"], 1) + req["n_gen"] - 1
+
+    def round(self, clock, draft_ticks, target_ticks, samples):
+        # admit FIFO into lowest free slots (speculative.rs::admit_queued);
+        # n_gen == 0 never occurs in the hermetic traces (gen_min >= 2)
+        while self.queue and None in self.slots:
+            slot = self.slots.index(None)
+            req, at = self.queue.pop(0)
+            self.slots[slot] = [req, at, 0]
+        remaining = [0 if s is None else self.total_steps(s[0]) - s[2]
+                     for s in self.slots]
+        k = min(self.draft_k, max(remaining, default=0))
+        if k == 0:
+            return
+        live = sum(1 for s in self.slots if s is not None)
+
+        # draft phase: the flip stream draws once per (step, slot) — live or
+        # free — and a flip on a consumed step is that slot's first mismatch
+        mismatch = [None] * self.width
+        for t in range(k):
+            row = ([self.flips.f64() < self.p for _ in range(self.width)]
+                   if self.flips else [False] * self.width)
+            for i, s in enumerate(self.slots):
+                if s is None or s[2] + t < max(s[0]["plen"], 1) - 1:
+                    continue  # free slot / mid-prompt step: nothing drafted
+                self.m.drafted += 1
+                if mismatch[i] is None and row[i]:
+                    mismatch[i] = t
+                if mismatch[i] is None or t < mismatch[i]:
+                    self.m.accepted += 1
+
+        # position-parallel verify: k draft steps + one target round
+        # (bench/harness.rs::Harness::speculative)
+        clock.now += k * draft_ticks + target_ticks
+
+        # commit the accepted prefix + the mismatch step's correction token,
+        # capped at retirement ("retired mid-commit: drop the tail")
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            commit = k if mismatch[i] is None else mismatch[i] + 1
+            s[2] += min(commit, self.total_steps(s[0]) - s[2])
+            if s[2] >= self.total_steps(s[0]):
+                req = s[0]
+                self.m.requests += 1
+                self.m.tokens += req["n_gen"]
+                samples.append((clock.now, req["id"], s[1]))
+                self.slots[i] = None
+
+        # speculative.rs::round: draft + verify program steps
+        self.m.steps += 2 * k
+        self.m.cap += 2 * k * self.width
+        self.m.live += 2 * k * live
+
+
+def sim_speculative(sub, width, draft_k, divergence, flip_seed, draft_ticks,
+                    target_ticks, samples):
+    """bench/harness.rs::Harness::speculative, one lane."""
+    sim = SpecSim(width, draft_k, divergence, flip_seed)
+    clock = Clock()
+    i = 0
+    while True:
+        while i < len(sub) and sub[i][1] <= clock.now:
+            sim.submit(sub[i])
+            i += 1
+        if sim.has_work():
+            sim.round(clock, draft_ticks, target_ticks, samples)
+        elif i < len(sub):
+            clock.at_least(sub[i][1])
+        else:
+            break
+    return sim, clock.now
+
+
 # --------------------------------------------------- byte model (refback)
 # bench_cfg() in rust/src/bench/scenarios.rs
 CFG = dict(vocab=17, d_model=8, n_slots=4, d_inner=12, n_heads_full=2,
@@ -423,6 +556,10 @@ TICKS_PER_SEC = 1000.0
 MAX_WAIT = 6
 WARMUP = 4
 WIDTH = CFG["batch"]
+# scenarios.rs: SPEC_DRAFT_TICKS / SPEC_TARGET_TICKS / DIVERGENCE_SEED_XOR
+SPEC_DRAFT_TICKS = 1
+SPEC_TARGET_TICKS = 3
+DIVERGENCE_SEED_XOR = 0xD1FF
 
 
 def routed_subtraces(trace, lanes):
@@ -438,6 +575,7 @@ def leg_result(name, m, samples, wall):
                 waves=m.waves, steps=m.steps, wall_ticks=wall,
                 occupancy=occ, bytes_synced=m.bytes,
                 bytes_per_token=m.bytes / m.tokens if m.tokens else 0.0,
+                drafted=m.drafted, accepted=m.accepted,
                 latency=summarize(samples, WARMUP))
 
 
@@ -515,6 +653,56 @@ def scenario_residency(seed):
     return dict(scenario="residency", requests=len(trace), legs=legs)
 
 
+def scenario_speculative(seed):
+    """scenarios.rs::speculative: 1 lane at 3 ticks/step, Burst arrivals,
+    plain-continuous vs speculative rounds drafted at 1 tick/step, sweeping
+    draft depth and the seeded draft-error rate."""
+    trace = generate(48, seed, gap_s=0.0, pmin=2, pmax=12, gmin=2, gmax=8,
+                     vocab=CFG["vocab"], tight_frac=0.5, sla_tight=0.25,
+                     sla_loose=float("inf"))
+    lanes = [dict(token_latency=SPEC_TARGET_TICKS / TICKS_PER_SEC)]
+    sub = routed_subtraces(trace, lanes)[0]
+
+    samples = []
+    sched, wall = sim_continuous(sub, WIDTH, SPEC_TARGET_TICKS, samples)
+    sched.m.bytes = continuous_resident_bytes(fleet_blocks(0), sched.m.steps,
+                                              sched.admission_steps)
+    legs = [leg_result("continuous", sched.m, samples, wall)]
+    for name, k, p in (("spec_k2", 2, 0.0), ("spec_k4", 4, 0.0),
+                       ("spec_k8", 8, 0.0), ("spec_k4_div10", 4, 0.10),
+                       ("spec_k4_div50", 4, 0.50)):
+        samples = []
+        sim, wall = sim_speculative(sub, WIDTH, k, p,
+                                    seed ^ DIVERGENCE_SEED_XOR,
+                                    SPEC_DRAFT_TICKS, SPEC_TARGET_TICKS,
+                                    samples)
+        # byte accounting is irrelevant to the gated p95 and left at zero
+        legs.append(leg_result(name, sim.m, samples, wall))
+    return dict(scenario="speculative", requests=len(trace), legs=legs)
+
+
+def scenario_bursty(seed):
+    """scenarios.rs::bursty: 1 lane, two-phase Poisson arrivals (5 rps quiet
+    / 500 rps burst, 0.5 s mean phases), wave vs continuous."""
+    trace = generate(48, seed, gap_s=0.0, pmin=2, pmax=12, gmin=2, gmax=8,
+                     vocab=CFG["vocab"], tight_frac=0.5, sla_tight=0.25,
+                     sla_loose=float("inf"), bursty=(5.0, 500.0, 0.5))
+    lanes = [dict(token_latency=1 / TICKS_PER_SEC)]
+    sub = routed_subtraces(trace, lanes)[0]
+
+    samples = []
+    m, wall = sim_wave_overlapped(sub, WIDTH, 1, MAX_WAIT, samples)
+    m.bytes = wave_resident_bytes(m.steps)
+    wave = leg_result("wave", m, samples, wall)
+
+    samples = []
+    sched, wall = sim_continuous(sub, WIDTH, 1, samples)
+    sched.m.bytes = continuous_resident_bytes(fleet_blocks(0), sched.m.steps,
+                                              sched.admission_steps)
+    cont = leg_result("continuous", sched.m, samples, wall)
+    return dict(scenario="bursty", requests=len(trace), legs=[wave, cont])
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seed", type=int, default=42,
@@ -525,16 +713,22 @@ def main():
     args = ap.parse_args()
 
     results = [scenario_coordinator(args.seed), scenario_serve_fleet(args.seed),
-               scenario_residency(args.seed)]
+               scenario_residency(args.seed), scenario_speculative(args.seed),
+               scenario_bursty(args.seed)]
     for res in results:
         print(f"\nscenario {res['scenario']} ({res['requests']} reqs"
               + (f", lane loads {res['lane_loads']}" if "lane_loads" in res else "")
               + "):")
         for leg in res["legs"]:
             lat = leg["latency"]
-            print(f"  {leg['name']:11} steps {leg['steps']:5} wall {leg['wall_ticks']:6}"
+            accept = (f" accept {leg['accepted'] / leg['drafted']:.3f}"
+                      if leg.get("drafted") else "")
+            thr = (f" tok/tick {leg['tokens_out'] / leg['wall_ticks']:.3f}"
+                   if leg["wall_ticks"] else "")
+            print(f"  {leg['name']:13} steps {leg['steps']:5} wall {leg['wall_ticks']:6}"
                   f" occup {leg['occupancy']:.3f} p50 {lat['p50']:7.1f}"
-                  f" p95 {lat['p95']:7.1f} B/tok {leg['bytes_per_token']:8.1f}")
+                  f" p95 {lat['p95']:7.1f} B/tok {leg['bytes_per_token']:8.1f}"
+                  f"{thr}{accept}")
 
     if args.write:
         baseline = {
