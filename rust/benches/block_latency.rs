@@ -130,6 +130,7 @@ fn resident_ab(engine: &Engine) -> anyhow::Result<()> {
             bytes_synced: bytes,
             bytes_per_token: bytes as f64 / steps as f64,
             latency: Summary::of("ms", &[wall * 1e3 / steps as f64]),
+            ..LegReport::default()
         };
         let report = Report {
             schema: BENCH_SCHEMA,

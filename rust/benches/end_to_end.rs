@@ -83,6 +83,7 @@ fn wall_leg(
         bytes_synced: total.bytes_synced,
         bytes_per_token: total.bytes_per_token(),
         latency: Summary::of("ms", &lat_ms),
+        ..LegReport::default()
     }
 }
 

@@ -36,20 +36,39 @@
 //!   admission lanes (in quality order) fire due waves to a fixpoint.
 //!   Deadlines expiring strictly between arrivals fire at the next
 //!   admission or at drain — time only moves on arrivals and decode.
+//! - **paged / overlapped** ([`Harness::run_paged_leg`]) — the continuous
+//!   loop, but session memories live in a per-lane
+//!   [`crate::runtime::PagePool`] (`MemLayout::Paged`) driven by
+//!   [`PagedScheduler`].  Admission is eager (every arrival's pages are
+//!   allocated on submit, spilling idle sessions LRU-first), so the pool's
+//!   `sessions_peak` counts every concurrently admitted session while slot
+//!   width stays a pure compute knob.  With `pool capacity ≥ width` the
+//!   binding schedule — and therefore every sample — is bit-identical to
+//!   the slotted continuous leg; only the byte/pool counters differ.
+//! - **adaptive / overlapped** ([`Harness::run_adaptive_leg`]) — the
+//!   continuous loop under *dynamic* routing: each arrival is routed at its
+//!   arrival tick through an [`AdaptiveRouter`] fed by per-lane rolling-p95
+//!   windows (the virtual mirror of `worker::admit_adaptive`, including the
+//!   sorted-name flag refresh), after every lane has decoded up to that
+//!   tick.  The `static` twin replays the same trace through the load-blind
+//!   base router, so the pair A/Bs degrade-then-recover under overload.
 //!
 //! Requests are routed once, up front, by the load-blind `Router::route`
 //! (the load-aware tiebreak reads live queue depths, which are a wall-clock
 //! artifact the virtual replay deliberately does not model).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{Engine, ExecMode, StateStore};
+use crate::runtime::{Engine, ExecMode, PagePool, StateStore};
+use crate::serve::speculative::mems_geometry;
 use crate::serve::{
-    BatchWave, DecodeEngine, DraftDivergence, Router, RouterPolicy, ServeMetrics, ServePolicy,
-    SlotExecutor, SlotScheduler, SpecScheduler, TimedRequest, VariantInfo,
+    AdaptiveRouter, BatchWave, DecodeEngine, DraftDivergence, PagedScheduler, PoolAdmission,
+    RollingP95, Router, RouterPolicy, ServeMetrics, ServePolicy, SlotExecutor, SlotScheduler,
+    SpecScheduler, TimedRequest, VariantInfo,
 };
 
 use super::clock::{arrival_tick, StepClock};
@@ -237,6 +256,55 @@ impl<'a> Harness<'a> {
             }
         };
         self.finish_leg(name, policy, concurrency, exec, samples, metrics, wall)
+    }
+
+    /// Replay one paged-layout continuous leg (always overlapped).  The
+    /// admission loop is [`Harness::continuous`]'s, but each lane's session
+    /// memories live in a fresh [`PagePool`] of `(page_size, pool_pages)`
+    /// geometry instead of the batch lanes — see the module docs for the
+    /// bit-identity contract with the slotted leg.
+    pub fn run_paged_leg(
+        &self,
+        name: &str,
+        exec: ExecMode,
+        page_size: usize,
+        pool_pages: usize,
+    ) -> Result<Leg> {
+        let (samples, metrics, wall) = self.paged(exec, page_size, pool_pages)?;
+        self.finish_leg(
+            name,
+            ServePolicy::Continuous,
+            Concurrency::Overlapped,
+            exec,
+            samples,
+            metrics,
+            wall,
+        )
+    }
+
+    /// Replay one adaptive-degradation continuous leg (always overlapped).
+    /// `adaptive = true` routes each arrival through an [`AdaptiveRouter`]
+    /// holding every lane's rolling p95 against `sla` (seconds, virtual);
+    /// `adaptive = false` is the static twin: same trace, same lanes, same
+    /// clocks, load-blind quality-first routing.  Degrade/recover flag
+    /// transitions land in the leg metrics.
+    pub fn run_adaptive_leg(
+        &self,
+        name: &str,
+        exec: ExecMode,
+        sla: f64,
+        adaptive: bool,
+    ) -> Result<Leg> {
+        let (samples, metrics, wall) = self.adaptive(exec, sla, adaptive)?;
+        self.finish_leg(
+            name,
+            ServePolicy::Continuous,
+            Concurrency::Overlapped,
+            exec,
+            samples,
+            metrics,
+            wall,
+        )
     }
 
     /// Replay one speculative leg (always overlapped: one round loop per
@@ -432,6 +500,204 @@ impl<'a> Harness<'a> {
         Ok((samples, metrics, wall))
     }
 
+    fn paged(
+        &self,
+        exec: ExecMode,
+        page_size: usize,
+        pool_pages: usize,
+    ) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        let mut samples = Vec::new();
+        let mut metrics = ServeMetrics::default();
+        let mut wall = 0u64;
+        // the scheduler tracks wall submission Instants we ignore; one epoch
+        // keeps them harmlessly constant
+        // analyze:allow(bench, single wall epoch never read back; the virtual StepClock is authoritative)
+        let epoch = Instant::now();
+        for (spec, sub) in self.scenario.lanes.iter().zip(&self.routed) {
+            let arrive: BTreeMap<u64, u64> = sub.iter().map(|(q, at)| (q.id, *at)).collect();
+            let de = DecodeEngine::new(self.engine, &spec.arch)?;
+            anyhow::ensure!(
+                de.has_masked(),
+                "lane '{}': paged leg needs gen_masked_{}",
+                spec.arch,
+                spec.arch
+            );
+            let mut st = de.init_state(0)?;
+            st.set_mode(exec);
+            let lane_exec = RefSlotExec { de, st };
+            let (layers, chunk) = lane_exec
+                .mems_shape()
+                .context("paged leg needs a mems group in the gen program")?;
+            let pool = PagePool::new(page_size, pool_pages, layers, chunk)?;
+            let mut sched = PagedScheduler::new(spec.arch.clone(), lane_exec, pool)?;
+            let mut clock = StepClock::new();
+            let mut i = 0usize;
+            loop {
+                while let Some((q, at)) = sub.get(i) {
+                    if *at > clock.now() {
+                        break;
+                    }
+                    let adm = sched.submit(q.clone(), epoch);
+                    anyhow::ensure!(
+                        !matches!(adm, PoolAdmission::Shed(_)),
+                        "paged leg shed request {} — the pool cannot cover the trace",
+                        q.id
+                    );
+                    i += 1;
+                }
+                if sched.has_work() {
+                    let s0 = sched.metrics.steps;
+                    let rs = sched.step()?;
+                    clock.advance((sched.metrics.steps - s0) * spec.step_ticks);
+                    let done = clock.now();
+                    for r in rs {
+                        let at = *arrive
+                            .get(&r.id)
+                            .context("response for an unrouted request")?;
+                        samples.push(Sample { id: r.id, arrive_tick: at, done_tick: done });
+                    }
+                } else if let Some((_, at)) = sub.get(i) {
+                    clock.at_least(*at);
+                } else {
+                    break;
+                }
+            }
+            metrics.merge(&sched.metrics);
+            wall = wall.max(clock.now());
+        }
+        Ok((samples, metrics, wall))
+    }
+
+    fn adaptive(
+        &self,
+        exec: ExecMode,
+        sla: f64,
+        adaptive: bool,
+    ) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        struct AdLane<'e> {
+            arch: String,
+            step_ticks: u64,
+            sched: SlotScheduler<RefSlotExec<'e>>,
+            clock: StepClock,
+            health: RollingP95,
+        }
+
+        /// Step `lane` while it has work and its clock is before `upto`
+        /// (`None` = drain), recording samples and feeding the lane's
+        /// rolling window in virtual seconds.
+        fn pump(
+            lane: &mut AdLane<'_>,
+            upto: Option<u64>,
+            tps: f64,
+            arrive: &BTreeMap<u64, u64>,
+            samples: &mut Vec<Sample>,
+        ) -> Result<()> {
+            while lane.sched.has_work() && upto.map_or(true, |t| lane.clock.now() < t) {
+                let s0 = lane.sched.metrics.steps;
+                let rs = lane.sched.step()?;
+                lane.clock.advance((lane.sched.metrics.steps - s0) * lane.step_ticks);
+                let done = lane.clock.now();
+                for r in rs {
+                    let at = *arrive
+                        .get(&r.id)
+                        .context("response for an unrouted request")?;
+                    samples.push(Sample { id: r.id, arrive_tick: at, done_tick: done });
+                    lane.health.push((done - at) as f64 / tps);
+                }
+            }
+            Ok(())
+        }
+
+        let tps = self.scenario.ticks_per_sec;
+        // the scheduler tracks wall submission Instants we ignore; one epoch
+        // keeps them harmlessly constant
+        // analyze:allow(bench, single wall epoch never read back; the virtual StepClock is authoritative)
+        let epoch = Instant::now();
+        let mut lanes = Vec::new();
+        for spec in &self.scenario.lanes {
+            let de = DecodeEngine::new(self.engine, &spec.arch)?;
+            anyhow::ensure!(
+                de.has_masked(),
+                "lane '{}': adaptive leg needs gen_masked_{}",
+                spec.arch,
+                spec.arch
+            );
+            let mut st = de.init_state(0)?;
+            st.set_mode(exec);
+            lanes.push(AdLane {
+                arch: spec.arch.clone(),
+                step_ticks: spec.step_ticks,
+                sched: SlotScheduler::new(spec.arch.clone(), RefSlotExec { de, st }),
+                clock: StepClock::new(),
+                health: RollingP95::default(),
+            });
+        }
+        let base = self.scenario.router();
+        let mut router = AdaptiveRouter::new(self.scenario.router(), sla);
+        let (mut degrades, mut recovers) = (0u64, 0u64);
+        let arrive: BTreeMap<u64, u64> = self
+            .scenario
+            .trace
+            .iter()
+            .map(|tr| (tr.request.id, arrival_tick(tr.at, tps)))
+            .collect();
+        // deterministic flag-refresh order, mirroring admit_adaptive
+        let mut order: Vec<(String, usize)> =
+            lanes.iter().enumerate().map(|(i, l)| (l.arch.clone(), i)).collect();
+        order.sort();
+        let mut samples = Vec::new();
+        for tr in &self.scenario.trace {
+            let at = arrival_tick(tr.at, tps);
+            // 1. every lane decodes up to the arrival instant, so admission
+            //    sees each window as of `at` — the virtual analogue of lane
+            //    threads running ahead of the admission thread
+            for lane in lanes.iter_mut() {
+                pump(lane, Some(at), tps, &arrive, &mut samples)?;
+            }
+            // 2. refresh degraded flags (sorted lane names), counting
+            //    transitions for the leg summary
+            if adaptive {
+                for (name, li) in &order {
+                    let Some(p95) = lanes.get(*li).and_then(|l| l.health.p95()) else {
+                        continue;
+                    };
+                    let before = router.degraded(name);
+                    router.observe_p95(name, p95);
+                    match (before, router.degraded(name)) {
+                        (false, true) => degrades += 1,
+                        (true, false) => recovers += 1,
+                        _ => {}
+                    }
+                }
+            }
+            // 3. route at the arrival tick and submit
+            let variant = if adaptive {
+                router.route_loaded(&tr.request, |_| 0).to_string()
+            } else {
+                base.route(&tr.request).to_string()
+            };
+            let li = lanes
+                .iter()
+                .position(|l| l.arch == variant)
+                .context("router picked an unknown lane")?;
+            let lane = lanes.get_mut(li).context("lane index out of range")?;
+            if !lane.sched.has_work() {
+                lane.clock.at_least(at);
+            }
+            lane.sched.submit(tr.request.clone(), epoch);
+        }
+        let mut metrics = ServeMetrics::default();
+        let mut wall = 0u64;
+        for lane in lanes.iter_mut() {
+            pump(lane, None, tps, &arrive, &mut samples)?;
+            metrics.merge(&lane.sched.metrics);
+            wall = wall.max(lane.clock.now());
+        }
+        metrics.degrade_events = degrades;
+        metrics.recover_events = recovers;
+        Ok((samples, metrics, wall))
+    }
+
     fn speculative(
         &self,
         exec: ExecMode,
@@ -569,6 +835,22 @@ impl SlotExecutor for RefSlotExec<'_> {
 
     fn bytes_synced(&self) -> u64 {
         self.st.stats().total_bytes()
+    }
+
+    fn mems_shape(&self) -> Option<(usize, usize)> {
+        let spec = &self.de.gen_program().spec;
+        let (a, _) = spec.in_group("mems")?;
+        let t = spec.inputs.get(a)?;
+        mems_geometry(t, self.de.width).ok().map(|(l, chunk, _)| (l, chunk))
+    }
+
+    fn read_mems(&mut self) -> Result<Vec<f32>> {
+        self.st.device_read_f32("mems")
+    }
+
+    fn write_mems(&mut self, flat: &[f32]) -> Result<()> {
+        let prog = Arc::clone(self.de.gen_program());
+        self.st.device_write_f32(&prog, "mems", flat)
     }
 }
 

@@ -39,6 +39,7 @@ pub use harness::{
 };
 pub use report::{env_fingerprint, LegReport, Report, Summary, BENCH_SCHEMA};
 pub use scenarios::{
-    bench_cfg, fleet_engine, run_named, run_suite, DEFAULT_SEED, HERMETIC_SUITE,
-    SPEC_DRAFT_TICKS, SPEC_TARGET_TICKS,
+    adaptive_arrival, bench_cfg, fleet_engine, run_named, run_suite, ADAPTIVE_SLA,
+    DEFAULT_SEED, HERMETIC_SUITE, PAGING_PAGE_SIZE, PAGING_POOL_PAGES, SPEC_DRAFT_TICKS,
+    SPEC_TARGET_TICKS,
 };

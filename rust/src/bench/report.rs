@@ -24,6 +24,10 @@
 //!     "tokens_drafted": 0, "tokens_accepted": 0, "tokens_rejected": 0,
 //!     "acceptance_rate": 0.0,          // speculative legs only (zero
 //!                                      // elsewhere; absent keys read as 0)
+//!     "pool_spill_bytes": 0, "pool_promote_bytes": 0,
+//!     "pool_spills": 0, "pool_promotes": 0, "sessions_peak": 0,
+//!     "pool_deferred": 0, "pool_shed": 0,  // paged-layout legs only
+//!     "degrade_events": 0, "recover_events": 0, // adaptive legs only
 //!     "latency": { "unit": "ticks", "n": 60, "mean": ...,
 //!                  "min": ..., "max": ..., "p50": ..., "p95": ... }
 //!   } ... ]
@@ -62,6 +66,12 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Summary {
+        Summary::of("ticks", &[])
+    }
 }
 
 impl Summary {
@@ -124,8 +134,10 @@ impl Summary {
     }
 }
 
-/// One leg's report entry.
-#[derive(Debug, Clone, PartialEq)]
+/// One leg's report entry.  `Default` is the all-zero entry (wall-clock
+/// bench writers fill in what they measure and leave the rest, so adding a
+/// counter field does not break them).
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct LegReport {
     pub name: String,
     pub policy: String,
@@ -147,6 +159,18 @@ pub struct LegReport {
     pub tokens_accepted: u64,
     pub tokens_rejected: u64,
     pub acceptance_rate: f64,
+    /// Paged-layout accounting: zero on slotted legs (same always-serialised
+    /// / absent-reads-zero convention as the speculative fields above).
+    pub pool_spill_bytes: u64,
+    pub pool_promote_bytes: u64,
+    pub pool_spills: u64,
+    pub pool_promotes: u64,
+    pub sessions_peak: u64,
+    pub pool_deferred: u64,
+    pub pool_shed: u64,
+    /// Adaptive-degradation accounting: zero on non-adaptive legs.
+    pub degrade_events: u64,
+    pub recover_events: u64,
     pub latency: Summary,
 }
 
@@ -173,6 +197,15 @@ impl LegReport {
             tokens_accepted: leg.metrics.tokens_accepted,
             tokens_rejected: leg.metrics.tokens_rejected,
             acceptance_rate: leg.metrics.acceptance_rate(),
+            pool_spill_bytes: leg.metrics.pool_spill_bytes,
+            pool_promote_bytes: leg.metrics.pool_promote_bytes,
+            pool_spills: leg.metrics.pool_spills,
+            pool_promotes: leg.metrics.pool_promotes,
+            sessions_peak: leg.metrics.sessions_peak,
+            pool_deferred: leg.metrics.pool_deferred,
+            pool_shed: leg.metrics.pool_shed,
+            degrade_events: leg.metrics.degrade_events,
+            recover_events: leg.metrics.recover_events,
             latency: Summary::of("ticks", &lat),
         }
     }
@@ -195,6 +228,15 @@ impl LegReport {
             ("tokens_accepted", Json::Num(self.tokens_accepted as f64)),
             ("tokens_rejected", Json::Num(self.tokens_rejected as f64)),
             ("acceptance_rate", Json::Num(self.acceptance_rate)),
+            ("pool_spill_bytes", Json::Num(self.pool_spill_bytes as f64)),
+            ("pool_promote_bytes", Json::Num(self.pool_promote_bytes as f64)),
+            ("pool_spills", Json::Num(self.pool_spills as f64)),
+            ("pool_promotes", Json::Num(self.pool_promotes as f64)),
+            ("sessions_peak", Json::Num(self.sessions_peak as f64)),
+            ("pool_deferred", Json::Num(self.pool_deferred as f64)),
+            ("pool_shed", Json::Num(self.pool_shed as f64)),
+            ("degrade_events", Json::Num(self.degrade_events as f64)),
+            ("recover_events", Json::Num(self.recover_events as f64)),
             ("latency", self.latency.to_json()),
         ])
     }
@@ -223,6 +265,16 @@ impl LegReport {
             tokens_accepted: opt("tokens_accepted") as u64,
             tokens_rejected: opt("tokens_rejected") as u64,
             acceptance_rate: opt("acceptance_rate"),
+            // absent in pre-paging / pre-adaptive reports: same convention
+            pool_spill_bytes: opt("pool_spill_bytes") as u64,
+            pool_promote_bytes: opt("pool_promote_bytes") as u64,
+            pool_spills: opt("pool_spills") as u64,
+            pool_promotes: opt("pool_promotes") as u64,
+            sessions_peak: opt("sessions_peak") as u64,
+            pool_deferred: opt("pool_deferred") as u64,
+            pool_shed: opt("pool_shed") as u64,
+            degrade_events: opt("degrade_events") as u64,
+            recover_events: opt("recover_events") as u64,
             latency: Summary::from_json(j.req("latency")?)?,
         })
     }

@@ -29,6 +29,19 @@
 //! - [`bursty`] — wave-vs-continuous under a bursty (two-phase Poisson)
 //!   arrival process: long quiet stretches punctuated by dense bursts, the
 //!   diurnal shape where deadline-fired partial waves pay worst.
+//! - [`paging`] — slotted-vs-paged memory layout on the continuous path:
+//!   48 burst arrivals over 4 slots with a pool that holds 6 resident
+//!   sessions, so every session is admitted eagerly (12× the slot width
+//!   concurrently live, `sessions_peak`) and idle sessions spill/promote
+//!   through `SyncStats`.  The schedule — and p95 — is bit-identical
+//!   across the legs by construction; the paged leg adds only byte/pool
+//!   counters.
+//! - [`adaptive`] — static-vs-adaptive SLA degradation on a 2-lane fleet
+//!   (3-tick best-quality lane, 1-tick cheap lane) under a gentle → dense
+//!   burst → gentle trace: the static leg pins everything on the slow
+//!   lane and eats the burst backlog; the adaptive leg degrades overloaded
+//!   lanes mid-burst (then recovers the cheap lane once its window
+//!   refills), keeping p95 bounded.
 
 use std::path::{Path, PathBuf};
 
@@ -42,8 +55,15 @@ use super::harness::{Concurrency, Harness, LaneSpec, Scenario, SpecParams};
 use super::report::Report;
 
 /// Scenario names in suite order.
-pub const HERMETIC_SUITE: &[&str] =
-    &["coordinator", "serve_fleet", "residency", "speculative", "bursty"];
+pub const HERMETIC_SUITE: &[&str] = &[
+    "coordinator",
+    "serve_fleet",
+    "residency",
+    "speculative",
+    "bursty",
+    "paging",
+    "adaptive",
+];
 
 /// Virtual per-step cost of the speculative scenario's draft engine (the
 /// target lane costs `SPEC_TARGET_TICKS`) — the 3:1 grade a real
@@ -53,6 +73,44 @@ pub const SPEC_TARGET_TICKS: u64 = 3;
 
 /// Default seed for the committed baseline (CI runs exactly this).
 pub const DEFAULT_SEED: u64 = 42;
+
+/// Pool geometry of the paging scenario's paged leg, over the fleet arch's
+/// 4 memory layers: `6 pages × 4 rows / 4 layers = 6` resident sessions —
+/// ≥ the 4-slot width (so the binding schedule matches the slotted leg
+/// exactly) and ≪ the 48 admitted sessions (so spill traffic is real).
+/// Mirrored by scripts/bench_baseline.py.
+pub const PAGING_PAGE_SIZE: usize = 4;
+pub const PAGING_POOL_PAGES: usize = 6;
+
+/// Adaptive scenario: per-step tick costs of the two lanes and the rolling
+/// p95 SLA (virtual seconds) the adaptive leg holds them against.
+pub const ADAPTIVE_SLOW_TICKS: u64 = 3;
+pub const ADAPTIVE_FAST_TICKS: u64 = 1;
+pub const ADAPTIVE_SLA: f64 = 0.1;
+
+/// Adaptive scenario trace phases: `GENTLE_HEAD` arrivals at `GENTLE_GAP_S`
+/// gaps, then `BURST_N` at `BURST_GAP_S`, then `GENTLE_TAIL` gentle again
+/// (enough completions for the cheap lane's 32-sample window to refill and
+/// recover).  Mirrored by scripts/bench_baseline.py.
+pub const ADAPTIVE_GENTLE_HEAD: usize = 16;
+pub const ADAPTIVE_BURST_N: usize = 192;
+pub const ADAPTIVE_GENTLE_TAIL: usize = 64;
+pub const ADAPTIVE_GENTLE_GAP_S: f64 = 0.012;
+pub const ADAPTIVE_BURST_GAP_S: f64 = 0.001;
+
+/// Arrival offset of the `i`-th adaptive-scenario request (the three-phase
+/// schedule above, laid out back to back).
+pub fn adaptive_arrival(i: usize) -> f64 {
+    let head_end = ADAPTIVE_GENTLE_HEAD as f64 * ADAPTIVE_GENTLE_GAP_S;
+    let burst_end = head_end + ADAPTIVE_BURST_N as f64 * ADAPTIVE_BURST_GAP_S;
+    if i < ADAPTIVE_GENTLE_HEAD {
+        i as f64 * ADAPTIVE_GENTLE_GAP_S
+    } else if i < ADAPTIVE_GENTLE_HEAD + ADAPTIVE_BURST_N {
+        head_end + (i - ADAPTIVE_GENTLE_HEAD) as f64 * ADAPTIVE_BURST_GAP_S
+    } else {
+        burst_end + (i - ADAPTIVE_GENTLE_HEAD - ADAPTIVE_BURST_N) as f64 * ADAPTIVE_GENTLE_GAP_S
+    }
+}
 
 /// The serve-shaped reference config every hermetic scenario uses: small
 /// enough that a full suite is a sub-second CPU run, wide enough (batch 4)
@@ -196,6 +254,60 @@ pub fn bursty(seed: u64) -> Scenario {
     }
 }
 
+/// Slotted-vs-paged memory-layout A/B (see module docs).  Burst arrivals
+/// maximise concurrent admissions: with eager pool admission every one of
+/// the 48 sessions is resident-or-spilled from t=0.
+pub fn paging(seed: u64) -> Scenario {
+    let gen = WorkloadGen::new(bench_cfg().vocab); // Burst: everything at t=0
+    let trace = gen.generate(48, seed);
+    Scenario {
+        name: "paging".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(1, 1),
+        trace,
+    }
+}
+
+/// Static-vs-adaptive SLA-degradation A/B (see module docs).  The trace is
+/// a Uniform-gap draw whose arrival offsets are re-laid onto the
+/// three-phase gentle/burst/gentle schedule ([`adaptive_arrival`]) —
+/// Uniform gaps consume no RNG draws, so prompts/lengths/SLAs are
+/// untouched by the re-lay.
+pub fn adaptive(seed: u64) -> Scenario {
+    let n = ADAPTIVE_GENTLE_HEAD + ADAPTIVE_BURST_N + ADAPTIVE_GENTLE_TAIL;
+    let mut gen = WorkloadGen::new(bench_cfg().vocab);
+    gen.arrival = Arrival::Uniform { gap_s: ADAPTIVE_GENTLE_GAP_S };
+    let mut trace = gen.generate(n, seed);
+    for (i, tr) in trace.iter_mut().enumerate() {
+        tr.at = adaptive_arrival(i);
+    }
+    Scenario {
+        name: "adaptive".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: vec![
+            LaneSpec {
+                arch: refback::fleet_arch_name(0),
+                step_ticks: ADAPTIVE_SLOW_TICKS,
+                quality: 2.0,
+            },
+            LaneSpec {
+                arch: refback::fleet_arch_name(1),
+                step_ticks: ADAPTIVE_FAST_TICKS,
+                quality: 1.0,
+            },
+        ],
+        trace,
+    }
+}
+
 /// Run one named scenario end to end, returning its report.
 pub fn run_named(name: &str, seed: u64) -> Result<Report> {
     match name {
@@ -285,6 +397,29 @@ pub fn run_named(name: &str, seed: u64) -> Result<Report> {
                     Concurrency::Overlapped,
                     ExecMode::Auto,
                 )?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        "paging" => {
+            let engine = fleet_engine(1)?;
+            let h = Harness::new(&engine, paging(seed))?;
+            let legs = vec![
+                h.run_leg(
+                    "slotted",
+                    ServePolicy::Continuous,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
+                )?,
+                h.run_paged_leg("paged", ExecMode::Auto, PAGING_PAGE_SIZE, PAGING_POOL_PAGES)?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
+        }
+        "adaptive" => {
+            let engine = fleet_engine(2)?;
+            let h = Harness::new(&engine, adaptive(seed))?;
+            let legs = vec![
+                h.run_adaptive_leg("static", ExecMode::Auto, ADAPTIVE_SLA, false)?,
+                h.run_adaptive_leg("adaptive", ExecMode::Auto, ADAPTIVE_SLA, true)?,
             ];
             Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
         }

@@ -162,6 +162,9 @@ fn run() -> Result<()> {
                 exec_mode,
                 draft_k: args.get_usize("draft-k", 4)?,
                 adaptive_sla_ms: args.get_f64("adaptive-sla-ms", 0.0)?,
+                mem_layout: args.get_or("mem-layout", "slotted"),
+                page_size: args.get_usize("page-size", 4)?,
+                pool_pages: args.get_usize("pool-pages", 0)?,
             };
             serve_demo(&engine, n_req, &arch_flag, seed, &opts)?;
         }
@@ -255,6 +258,14 @@ fn run() -> Result<()> {
             if adaptive_sla_ms > 0.0 {
                 cluster.set_adaptive_sla(Some(adaptive_sla_ms / 1e3));
             }
+            cluster.set_mem_layout(planer::serve::MemLayout::parse(
+                &args.get_or("mem-layout", "slotted"),
+            )?);
+            cluster.set_pool_geometry(
+                args.get_usize("page-size", 4)?,
+                args.get_usize("pool-pages", 0)?,
+            );
+            cluster.check_pool_geometry()?;
             let mut gen = match args.get_or("trace", "burst").as_str() {
                 "burst" => WorkloadGen::new(engine.manifest.config.vocab),
                 "bursty" => WorkloadGen::bursty(engine.manifest.config.vocab),
@@ -385,6 +396,12 @@ struct ServeOpts {
     draft_k: usize,
     /// Rolling-p95 SLA in ms for adaptive degradation (0 = off).
     adaptive_sla_ms: f64,
+    /// "slotted" (default) or "paged" (session memories in a page pool).
+    mem_layout: String,
+    /// Rows per pool page under `--mem-layout paged`.
+    page_size: usize,
+    /// Pool pages per lane (0 = auto-size to 4x the slot width).
+    pool_pages: usize,
 }
 
 fn parse_exec_mode(s: &str) -> Result<ExecMode> {
@@ -473,6 +490,10 @@ fn serve_demo(
     if opts.adaptive_sla_ms > 0.0 {
         cluster.set_adaptive_sla(Some(opts.adaptive_sla_ms / 1e3));
     }
+    cluster.set_mem_layout(planer::serve::MemLayout::parse(&opts.mem_layout)?);
+    cluster.set_pool_geometry(opts.page_size, opts.pool_pages);
+    // fail fast on a pool that cannot hold even one session's memories
+    cluster.check_pool_geometry()?;
 
     // bimodal-SLA workload so the router actually spreads traffic
     let mut gen = WorkloadGen::bimodal_sla(engine.manifest.config.vocab, 0.05, 2.0);
@@ -559,6 +580,7 @@ USAGE: planer <cmd> [flags]
            [--mode concurrent|serial|ab]
            [--policy wave|continuous|speculative|ab] [--draft-k 4]
            [--adaptive-sla-ms MS] [--rps R] [--realtime]
+           [--mem-layout slotted|paged] [--page-size 4] [--pool-pages N]
            (one decode worker per variant; --mode ab replays the same trace
             serially then concurrently; --policy picks wave batching,
             continuous slot scheduling, or speculative decode — the fleet's
@@ -566,7 +588,12 @@ USAGE: planer <cmd> [flags]
             lane verifies them batched; 'ab' replays wave then continuous;
             variants without gen_masked_<arch> fall back to waves;
             --adaptive-sla-ms degrades admissions to cheaper variants while
-            a lane's rolling p95 exceeds the SLA)
+            a lane's rolling p95 exceeds the SLA;
+            --mem-layout paged moves session TXL memories into a per-lane
+            page pool — slot width becomes a pure compute knob, idle
+            sessions spill to host LRU-first, and admission defers/sheds
+            on true exhaustion; --pool-pages 0 auto-sizes, and a pool too
+            small for one session is rejected before serving starts)
   profile
   compile  --name <arch> --arch-json <path> [--config tiny]
   archs
@@ -582,6 +609,7 @@ USAGE: planer <cmd> [flags]
               [--mode concurrent|serial|ab]
               [--policy wave|continuous|speculative|ab] [--draft-k 4]
               [--adaptive-sla-ms MS] [--max-wait-ms 2] [--rps R] [--realtime]
+              [--mem-layout slotted|paged] [--page-size 4] [--pool-pages N]
 
 global:   --artifacts DIR --corpus char:N|word:N|file:P --seed N --out DIR
           --exec resident|roundtrip   (device-resident state, the default,

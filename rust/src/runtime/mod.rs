@@ -54,6 +54,35 @@
 //! backend keeps the metering identical (it reports what a real device
 //! *would* move), so byte-level assertions hold hermetically in CI.
 //!
+//! # Residency and paging (session memories beyond slot width)
+//!
+//! The decode batch's `mems` group holds `width` sessions' TXL memories —
+//! which caps concurrency at slot width as long as memories live only
+//! there.  The [`pool`] module breaks that cap: a [`pool::PagePool`] owns
+//! a paged device arena (fixed-size pages of per-layer `[M, D]` rows) and
+//! a per-session page table, so **slot count becomes a compute-batch
+//! knob** while thousands of sessions stay admitted.  The lifecycle:
+//!
+//! 1. **admit** — a session gets `layers` zeroed rows when it *arrives*
+//!    (not when it gets a slot); when the arena is full the LRU idle
+//!    session's rows **spill** to host (metered — this is real host
+//!    traffic) and the pool sheds with a typed [`pool::PoolExhausted`]
+//!    once everything left is pinned;
+//! 2. **gather/scatter** — each scheduler step copies the slotted
+//!    sessions' rows into the batch `mems` and back
+//!    ([`StateStore::device_read_f32`] / [`StateStore::device_write_f32`])
+//!    — an on-device copy, deliberately unmetered;
+//! 3. **promote** — a spilled session returning to a slot is copied back
+//!    bitwise (metered, host → device);
+//! 4. **free** — retirement returns rows to the free list; rows are
+//!    zeroed on reallocation so a reused page never leaks a prior
+//!    session's memories (property-tested against a leaky negative
+//!    control in `pool::tests`).
+//!
+//! The serving layer drives this through `serve::paged::PagedScheduler`
+//! (`MemLayout::Paged`); the slotted path is unchanged and remains the
+//! default.
+//!
 //! # Key facts (verified against xla_extension 0.5.1)
 //!
 //! - interchange is HLO *text*; `HloModuleProto::from_text_file` reassigns
@@ -79,6 +108,7 @@ pub mod checkpoint;
 pub mod engine;
 pub mod literal;
 pub mod manifest;
+pub mod pool;
 pub mod program;
 pub mod refback;
 pub mod state;
@@ -88,6 +118,7 @@ pub use backend::{Backend, DeviceBuf, ExecOutputs, ProgramBody, RefTensor};
 pub use engine::Engine;
 pub use literal::{DType, TensorValue};
 pub use manifest::{Manifest, ModelConfig, ProgramSpec, TensorSpec};
+pub use pool::{PagePool, PageRef, PoolExhausted};
 pub use program::{PjrtBackend, Program};
 pub use refback::RefBackend;
 pub use state::{ExecMode, StateStore, SyncStats};

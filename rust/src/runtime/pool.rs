@@ -1,0 +1,575 @@
+//! Paged TXL-memory pool: session-resident memory decoupled from slots.
+//!
+//! `StateStore` binds one contiguous `mems` group per compute batch, so
+//! before this module concurrency was hard-capped at slot width: a session
+//! not occupying a slot had nowhere to keep its Transformer-XL memories.
+//! The pool breaks that coupling the way vLLM's PagedAttention breaks the
+//! KV-cache/batch coupling:
+//!
+//! - a [`PagePool`] owns one flat **device arena** carved into fixed-size
+//!   pages of `page_size` *rows*, where a row is one layer's `[M, D]`
+//!   memory for one session (`row_elems = M·D` f32s);
+//! - a **page table** maps each session id to its `layers` rows, in layer
+//!   order (rows may land anywhere in the arena — the table is the only
+//!   place the ordering lives);
+//! - sessions are **admitted** ([`PagePool::admit`]) when they arrive, not
+//!   when they get a slot; rows are zeroed on allocation so a reused row
+//!   can never leak a prior session's memories (the paged analogue of the
+//!   `free_mask` reset — property-tested with a deliberately leaky
+//!   negative control);
+//! - when the arena is full, the **LRU** idle session's rows are
+//!   **spilled** to a host buffer — that copy crosses the device boundary
+//!   for real, so it is metered through the pool's own [`SyncStats`] —
+//!   and **promoted** back (bitwise) when the session next needs a slot;
+//! - sessions currently bound to a compute slot are **pinned** and never
+//!   spill; when every resident session is pinned and the free list can't
+//!   cover a new session, [`admit`](PagePool::admit) fails with the typed
+//!   [`PoolExhausted`] so the serving layer can defer or shed instead of
+//!   dying mid-decode.
+//!
+//! Per-step gather/scatter between the pool and the compute batch
+//! (`serve::paged::PagedScheduler` + `StateStore::device_read_f32` /
+//! `device_write_f32`) is an on-device copy and deliberately unmetered —
+//! only spill/promote traffic shows up in bytes-per-token, which is
+//! exactly what a real device would pay.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt;
+
+use anyhow::{ensure, Context, Result};
+
+use super::state::SyncStats;
+
+/// One row of the arena: `(page, row-within-page)`.  The arena offset is
+/// `(page · page_size + row) · row_elems`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageRef {
+    pub page: usize,
+    pub row: usize,
+}
+
+/// Typed admission rejection: the arena cannot hold another session even
+/// after spilling everything spillable.  The serving layer turns this into
+/// a deferral (bounded queue) or a shed — never a panic mid-decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Rows one session needs (= layers).
+    pub needed_rows: usize,
+    /// Rows free at the moment of rejection.
+    pub free_rows: usize,
+    /// Resident sessions pinned to slots (unspillable).
+    pub pinned_sessions: usize,
+}
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "page pool exhausted: need {} rows, {} free, {} sessions pinned",
+            self.needed_rows, self.free_rows, self.pinned_sessions
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Fixed-size paged arena + per-session page table (see module docs).
+pub struct PagePool {
+    page_size: usize,
+    n_pages: usize,
+    /// Elements per row = M·D (one layer's memory for one session).
+    row_elems: usize,
+    /// Rows per session = TXL layer count.
+    layers: usize,
+    /// The device arena: `n_pages · page_size` rows of `row_elems` f32s.
+    arena: Vec<f32>,
+    /// Free-row stack (LIFO — deterministic reuse order).
+    free: Vec<PageRef>,
+    /// Session → its `layers` rows, in layer order.
+    table: BTreeMap<u64, Vec<PageRef>>,
+    /// Spilled sessions' memories, layer-major, bitwise-exact.
+    spilled: BTreeMap<u64, Vec<f32>>,
+    /// Resident sessions in recency order (front = coldest → next victim).
+    lru: VecDeque<u64>,
+    /// Sessions bound to compute slots: never spilled.
+    pinned: BTreeSet<u64>,
+    /// Spill/promote traffic.  Gather/scatter to the compute batch is an
+    /// on-device copy and never lands here.
+    pub stats: SyncStats,
+    /// Zero rows on allocation (isolation).  Off only in the leaky
+    /// negative-control constructor used by the property tests.
+    zero_on_alloc: bool,
+    spills: u64,
+    promotes: u64,
+    /// High-water mark of tracked sessions (resident + spilled) — the
+    /// "concurrent sessions" number the paging bench reports.
+    sessions_peak: usize,
+}
+
+impl PagePool {
+    /// Build a pool of `n_pages` pages of `page_size` rows, where each
+    /// session needs `layers` rows of `row_elems` f32s.  Fails when the
+    /// whole arena cannot hold even one session (the CLI validation
+    /// surfaces this before serving starts — see
+    /// `serve::paged::validate_pool_geometry`).
+    pub fn new(page_size: usize, n_pages: usize, layers: usize, row_elems: usize) -> Result<Self> {
+        ensure!(page_size > 0, "page_size must be positive");
+        ensure!(n_pages > 0, "pool_pages must be positive");
+        ensure!(layers > 0 && row_elems > 0, "degenerate memory geometry");
+        let rows = page_size * n_pages;
+        ensure!(
+            rows >= layers,
+            "pool of {n_pages} pages x {page_size} rows = {rows} rows cannot hold one \
+             session ({layers} layers)"
+        );
+        // free stack: reverse row order so allocation proceeds from
+        // (page 0, row 0) upward — deterministic and easy to reason about
+        let mut free = Vec::with_capacity(rows);
+        for page in (0..n_pages).rev() {
+            for row in (0..page_size).rev() {
+                free.push(PageRef { page, row });
+            }
+        }
+        Ok(PagePool {
+            page_size,
+            n_pages,
+            row_elems,
+            layers,
+            arena: vec![0.0; rows * row_elems],
+            free,
+            table: BTreeMap::new(),
+            spilled: BTreeMap::new(),
+            lru: VecDeque::new(),
+            pinned: BTreeSet::new(),
+            stats: SyncStats::default(),
+            zero_on_alloc: true,
+            spills: 0,
+            promotes: 0,
+            sessions_peak: 0,
+        })
+    }
+
+    /// Negative control for the isolation property tests: identical pool,
+    /// but freshly-allocated rows keep whatever the previous occupant
+    /// left behind.  Never use outside tests.
+    #[doc(hidden)]
+    pub fn new_leaky(
+        page_size: usize,
+        n_pages: usize,
+        layers: usize,
+        row_elems: usize,
+    ) -> Result<Self> {
+        let mut p = Self::new(page_size, n_pages, layers, row_elems)?;
+        p.zero_on_alloc = false;
+        Ok(p)
+    }
+
+    /// How many sessions the arena can hold resident at once.
+    pub fn session_capacity(&self) -> usize {
+        (self.page_size * self.n_pages) / self.layers
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    /// Sessions with rows in the arena.
+    pub fn resident_count(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Sessions the pool tracks (resident + spilled).
+    pub fn session_count(&self) -> usize {
+        self.table.len() + self.spilled.len()
+    }
+
+    /// High-water mark of [`Self::session_count`].
+    pub fn sessions_peak(&self) -> usize {
+        self.sessions_peak
+    }
+
+    /// Spill events so far.
+    pub fn spill_count(&self) -> u64 {
+        self.spills
+    }
+
+    /// Promote events so far.
+    pub fn promote_count(&self) -> u64 {
+        self.promotes
+    }
+
+    pub fn is_resident(&self, sid: u64) -> bool {
+        self.table.contains_key(&sid)
+    }
+
+    pub fn is_spilled(&self, sid: u64) -> bool {
+        self.spilled.contains_key(&sid)
+    }
+
+    /// Bytes one session's memories occupy (= one spill/promote transfer).
+    fn session_bytes(&self) -> u64 {
+        4 * (self.layers * self.row_elems) as u64
+    }
+
+    /// Mark `sid` most-recently-used.
+    pub fn touch(&mut self, sid: u64) {
+        if let Some(pos) = self.lru.iter().position(|&s| s == sid) {
+            self.lru.remove(pos);
+            self.lru.push_back(sid);
+        }
+    }
+
+    /// Pin a resident session to a compute slot: it cannot be spilled
+    /// until [`Self::unpin`].
+    pub fn pin(&mut self, sid: u64) -> Result<()> {
+        ensure!(self.table.contains_key(&sid), "pin: session {sid} not resident");
+        self.pinned.insert(sid);
+        self.touch(sid);
+        Ok(())
+    }
+
+    pub fn unpin(&mut self, sid: u64) {
+        self.pinned.remove(&sid);
+    }
+
+    /// Admit a session: allocate (and zero) its `layers` rows, spilling
+    /// LRU idle sessions as needed.  Promotes instead when `sid` is
+    /// currently spilled; a no-op (LRU touch) when already resident.
+    /// The typed [`PoolExhausted`] means even spilling everything
+    /// spillable cannot make room — the caller defers or sheds.
+    pub fn admit(&mut self, sid: u64) -> std::result::Result<(), PoolExhausted> {
+        if self.table.contains_key(&sid) {
+            self.touch(sid);
+            return Ok(());
+        }
+        if self.spilled.contains_key(&sid) {
+            return self.promote_spilled(sid);
+        }
+        self.reserve_rows()?;
+        let mut rows = Vec::with_capacity(self.layers);
+        for _ in 0..self.layers {
+            if let Some(r) = self.free.pop() {
+                if self.zero_on_alloc {
+                    let a = self.row_offset(r);
+                    if let Some(slot) = self.arena.get_mut(a..a + self.row_elems) {
+                        slot.fill(0.0);
+                    }
+                }
+                rows.push(r);
+            }
+        }
+        self.table.insert(sid, rows);
+        self.lru.push_back(sid);
+        self.sessions_peak = self.sessions_peak.max(self.session_count());
+        Ok(())
+    }
+
+    /// Drop a session entirely (retirement): rows back to the free list,
+    /// spilled copy (if any) discarded.
+    pub fn free(&mut self, sid: u64) {
+        if let Some(rows) = self.table.remove(&sid) {
+            self.free.extend(rows);
+        }
+        self.spilled.remove(&sid);
+        self.pinned.remove(&sid);
+        if let Some(pos) = self.lru.iter().position(|&s| s == sid) {
+            self.lru.remove(pos);
+        }
+    }
+
+    /// Spill a resident, unpinned session's rows to a host buffer
+    /// (metered: this copy crosses the device boundary for real).
+    pub fn spill(&mut self, sid: u64) -> Result<()> {
+        ensure!(!self.pinned.contains(&sid), "spill: session {sid} is pinned");
+        let rows = self
+            .table
+            .remove(&sid)
+            .with_context(|| format!("spill: session {sid} not resident"))?;
+        let mut host = Vec::with_capacity(self.layers * self.row_elems);
+        for r in &rows {
+            let a = self.row_offset(*r);
+            host.extend_from_slice(&self.arena[a..a + self.row_elems]);
+        }
+        self.free.extend(rows);
+        if let Some(pos) = self.lru.iter().position(|&s| s == sid) {
+            self.lru.remove(pos);
+        }
+        self.spilled.insert(sid, host);
+        self.stats.bytes_to_host += self.session_bytes();
+        self.spills += 1;
+        Ok(())
+    }
+
+    /// Promote a spilled session back into the arena, bitwise (metered:
+    /// host → device).  Spills LRU idle sessions to make room.
+    pub fn promote(&mut self, sid: u64) -> Result<()> {
+        ensure!(self.spilled.contains_key(&sid), "promote: session {sid} not spilled");
+        self.promote_spilled(sid).map_err(anyhow::Error::new)
+    }
+
+    /// Make a spilled or absent session resident; admitting when unknown.
+    /// The scheduler's slot-admission path: pin after this succeeds.
+    pub fn ensure_resident(&mut self, sid: u64) -> std::result::Result<(), PoolExhausted> {
+        self.admit(sid)
+    }
+
+    /// One session's memories, layer-major `[layers · row_elems]`.
+    /// Unmetered: the gather into the compute batch is an on-device copy.
+    pub fn read_rows(&self, sid: u64) -> Result<Vec<f32>> {
+        let rows = self
+            .table
+            .get(&sid)
+            .with_context(|| format!("read_rows: session {sid} not resident"))?;
+        let mut out = Vec::with_capacity(self.layers * self.row_elems);
+        for r in rows {
+            let a = self.row_offset(*r);
+            out.extend_from_slice(&self.arena[a..a + self.row_elems]);
+        }
+        Ok(out)
+    }
+
+    /// Overwrite one session's memories from a layer-major slice.
+    /// Unmetered: the scatter back from the compute batch is on-device.
+    pub fn write_rows(&mut self, sid: u64, vals: &[f32]) -> Result<()> {
+        let rows = self
+            .table
+            .get(&sid)
+            .with_context(|| format!("write_rows: session {sid} not resident"))?
+            .clone();
+        ensure!(
+            vals.len() == self.layers * self.row_elems,
+            "write_rows: session {sid} holds {} elements, got {}",
+            self.layers * self.row_elems,
+            vals.len()
+        );
+        for (l, r) in rows.iter().enumerate() {
+            let a = self.row_offset(*r);
+            let src = &vals[l * self.row_elems..(l + 1) * self.row_elems];
+            if let Some(dst) = self.arena.get_mut(a..a + self.row_elems) {
+                dst.copy_from_slice(src);
+            }
+        }
+        Ok(())
+    }
+
+    fn row_offset(&self, r: PageRef) -> usize {
+        (r.page * self.page_size + r.row) * self.row_elems
+    }
+
+    /// Free enough rows for one session, spilling LRU unpinned sessions.
+    fn reserve_rows(&mut self) -> std::result::Result<(), PoolExhausted> {
+        while self.free.len() < self.layers {
+            let victim = self.lru.iter().find(|s| !self.pinned.contains(s)).copied();
+            let Some(v) = victim else {
+                return Err(PoolExhausted {
+                    needed_rows: self.layers,
+                    free_rows: self.free.len(),
+                    pinned_sessions: self.pinned.len(),
+                });
+            };
+            // spill cannot fail here: the victim is resident and unpinned
+            // by construction, but a bug must not panic the decode path
+            if self.spill(v).is_err() {
+                return Err(PoolExhausted {
+                    needed_rows: self.layers,
+                    free_rows: self.free.len(),
+                    pinned_sessions: self.pinned.len(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Internal: `sid` is known-spilled; reserve rows and copy back.
+    fn promote_spilled(&mut self, sid: u64) -> std::result::Result<(), PoolExhausted> {
+        self.reserve_rows()?;
+        let Some(host) = self.spilled.remove(&sid) else {
+            // known-spilled by the callers; treat a miss as exhaustion
+            // rather than panicking on the decode path
+            return Err(PoolExhausted {
+                needed_rows: self.layers,
+                free_rows: self.free.len(),
+                pinned_sessions: self.pinned.len(),
+            });
+        };
+        let mut rows = Vec::with_capacity(self.layers);
+        for l in 0..self.layers {
+            if let Some(r) = self.free.pop() {
+                let a = self.row_offset(r);
+                let src = &host[l * self.row_elems..(l + 1) * self.row_elems];
+                if let Some(dst) = self.arena.get_mut(a..a + self.row_elems) {
+                    dst.copy_from_slice(src);
+                }
+                rows.push(r);
+            }
+        }
+        self.table.insert(sid, rows);
+        self.lru.push_back(sid);
+        self.stats.bytes_to_device += self.session_bytes();
+        self.promotes += 1;
+        self.sessions_peak = self.sessions_peak.max(self.session_count());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 layers × 4 elems/row; 2 pages × 2 rows = capacity 2 sessions.
+    fn tiny() -> PagePool {
+        PagePool::new(2, 2, 2, 4).unwrap()
+    }
+
+    fn pattern(sid: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| sid as f32 * 100.0 + i as f32).collect()
+    }
+
+    #[test]
+    fn geometry_that_cannot_hold_one_session_is_rejected() {
+        let e = PagePool::new(1, 2, 3, 4).unwrap_err();
+        assert!(e.to_string().contains("cannot hold one session"), "{e}");
+        assert!(PagePool::new(1, 3, 3, 4).is_ok());
+    }
+
+    #[test]
+    fn freed_and_reallocated_rows_never_leak_prior_memories() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        p.write_rows(1, &pattern(1, 8)).unwrap();
+        p.free(1);
+        p.admit(2).unwrap();
+        assert_eq!(p.read_rows(2).unwrap(), vec![0.0; 8], "reused rows leaked");
+    }
+
+    #[test]
+    fn leaky_allocator_negative_control_does_leak() {
+        // proves the isolation test above has teeth: with zero-on-alloc
+        // disabled the prior session's memories ARE visible
+        let mut p = PagePool::new_leaky(2, 2, 2, 4).unwrap();
+        p.admit(1).unwrap();
+        p.write_rows(1, &pattern(1, 8)).unwrap();
+        p.free(1);
+        p.admit(2).unwrap();
+        assert_eq!(p.read_rows(2).unwrap(), pattern(1, 8), "leaky control failed to leak");
+    }
+
+    #[test]
+    fn spill_promote_roundtrip_is_bitwise_and_metered() {
+        let mut p = tiny();
+        p.admit(7).unwrap();
+        let v = pattern(7, 8);
+        p.write_rows(7, &v).unwrap();
+        p.spill(7).unwrap();
+        assert!(p.is_spilled(7) && !p.is_resident(7));
+        assert_eq!(p.stats.bytes_to_host, 32, "spill = 8 f32s = 32 bytes");
+        p.promote(7).unwrap();
+        assert!(p.is_resident(7) && !p.is_spilled(7));
+        assert_eq!(p.stats.bytes_to_device, 32);
+        assert_eq!(p.read_rows(7).unwrap(), v, "round-trip not bitwise");
+        assert_eq!(p.spill_count(), 1);
+        assert_eq!(p.promote_count(), 1);
+    }
+
+    #[test]
+    fn admission_beyond_capacity_spills_the_lru_session() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        p.admit(2).unwrap();
+        p.write_rows(1, &pattern(1, 8)).unwrap();
+        // pool full (capacity 2): admitting 3 must spill 1 (the coldest)
+        p.admit(3).unwrap();
+        assert!(p.is_spilled(1), "LRU victim should be session 1");
+        assert!(p.is_resident(2) && p.is_resident(3));
+        // promoting 1 back spills the new coldest (2) and restores bits
+        p.admit(1).unwrap();
+        assert!(p.is_spilled(2));
+        assert_eq!(p.read_rows(1).unwrap(), pattern(1, 8));
+    }
+
+    #[test]
+    fn touch_reorders_the_spill_victim() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        p.admit(2).unwrap();
+        p.touch(1); // 1 is now hottest → 2 becomes the victim
+        p.admit(3).unwrap();
+        assert!(p.is_spilled(2) && p.is_resident(1));
+    }
+
+    #[test]
+    fn pinned_sessions_are_never_spilled() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        p.admit(2).unwrap();
+        p.pin(1).unwrap();
+        p.admit(3).unwrap();
+        assert!(p.is_resident(1), "pinned session was spilled");
+        assert!(p.is_spilled(2));
+        // pin the rest: a 4th session has nothing to evict → typed shed
+        p.pin(3).unwrap();
+        let e = p.admit(4).unwrap_err();
+        assert_eq!(e.needed_rows, 2);
+        assert_eq!(e.pinned_sessions, 2);
+        // unpinning makes room again
+        p.unpin(1);
+        p.admit(4).unwrap();
+        assert!(p.is_spilled(1));
+    }
+
+    #[test]
+    fn free_releases_rows_and_forgets_spilled_copies() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        p.admit(2).unwrap();
+        p.spill(1).unwrap();
+        p.free(1);
+        assert!(!p.is_spilled(1) && !p.is_resident(1));
+        p.free(2);
+        p.admit(3).unwrap();
+        p.admit(4).unwrap();
+        assert_eq!(p.resident_count(), 2);
+    }
+
+    #[test]
+    fn sessions_peak_counts_spilled_sessions_as_concurrent() {
+        let mut p = tiny();
+        for sid in 0..5 {
+            p.admit(sid).unwrap();
+        }
+        // capacity is 2 resident, but all 5 are tracked concurrently
+        assert_eq!(p.resident_count(), 2);
+        assert_eq!(p.session_count(), 5);
+        assert_eq!(p.sessions_peak(), 5);
+    }
+
+    #[test]
+    fn write_rows_rejects_wrong_lengths() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        assert!(p.write_rows(1, &[0.0; 7]).is_err());
+        assert!(p.write_rows(2, &[0.0; 8]).is_err(), "unknown session");
+    }
+
+    #[test]
+    fn admit_is_idempotent_for_resident_sessions() {
+        let mut p = tiny();
+        p.admit(1).unwrap();
+        p.write_rows(1, &pattern(1, 8)).unwrap();
+        p.admit(1).unwrap();
+        assert_eq!(p.read_rows(1).unwrap(), pattern(1, 8));
+        assert_eq!(p.session_count(), 1);
+    }
+}

@@ -172,6 +172,74 @@ impl StateStore {
         self.groups.contains_key(name)
     }
 
+    /// Flat f32 view of a group *without* touching the [`SyncStats`]
+    /// meters or the host cache.  This models an **on-device copy** (DMA):
+    /// the paged-memory pool (`runtime::pool`) gathers sessions' TXL pages
+    /// into the compute batch every step, and that traffic never crosses
+    /// the host boundary on real hardware — only spill/promote does, and
+    /// those are metered by the pool itself.  Cold-path host reads that
+    /// *should* be metered go through [`Self::host_group`] instead.
+    pub fn device_read_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let group = self
+            .groups
+            .get(name)
+            .with_context(|| format!("group '{name}' not in store"))?;
+        let mut vals = Vec::new();
+        if let Some(lits) = &group.host {
+            for l in lits {
+                vals.extend(literal::to_f32s(l)?);
+            }
+        } else {
+            let bufs = group
+                .device
+                .as_ref()
+                .with_context(|| format!("group '{name}' has neither home"))?;
+            for b in bufs {
+                let lit = b
+                    .to_literal()
+                    .with_context(|| format!("reading group '{name}'"))?;
+                vals.extend(literal::to_f32s(&lit)?);
+            }
+        }
+        Ok(vals)
+    }
+
+    /// Overwrite a group from a flat f32 slice, leaving it device-resident
+    /// and — like [`Self::device_read_f32`] — unmetered: the scatter back
+    /// from the compute batch into the paged pool is an on-device copy.
+    /// Tensor shapes come from `prog`'s input specs for the group; `vals`
+    /// must hold exactly the group's total element count.
+    pub fn device_write_f32(&mut self, prog: &Program, name: &str, vals: &[f32]) -> Result<()> {
+        let (a, b) = prog
+            .spec
+            .in_group(name)
+            .with_context(|| format!("group '{name}' not in {}", prog.spec.name))?;
+        let specs = prog
+            .spec
+            .inputs
+            .get(a..b)
+            .with_context(|| format!("group '{name}' out of spec bounds"))?;
+        let total: usize = specs.iter().map(|s| s.element_count()).sum();
+        anyhow::ensure!(
+            vals.len() == total,
+            "group '{name}' holds {total} elements, got {}",
+            vals.len()
+        );
+        let mut bufs = Vec::with_capacity(specs.len());
+        let mut off = 0;
+        for s in specs {
+            let n = s.element_count();
+            let chunk = vals
+                .get(off..off + n)
+                .with_context(|| format!("group '{name}' slice out of bounds"))?;
+            let lit = literal::literal_from_f32s(s, chunk)?;
+            bufs.push(prog.upload(&lit).map(Arc::new)?);
+            off += n;
+        }
+        self.set_device_group(name, bufs);
+        Ok(())
+    }
+
     /// Zero-fill a group from a program's input specs (optimizer state,
     /// initial memories).
     pub fn zero_group(&mut self, prog: &Program, name: &str) -> Result<()> {

@@ -40,13 +40,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::{Engine, ExecMode, StateStore};
+use crate::runtime::{Engine, ExecMode, PagePool, StateStore};
 
 use super::batcher::{BatchWave, WaveBatcher};
 use super::engine::{DecodeEngine, ServeMetrics};
+use super::paged::{validate_pool_geometry, MemLayout, PagedLane, PagedScheduler};
 use super::router::{AdaptiveRouter, Router, RouterPolicy, VariantInfo};
 use super::scheduler::{SlotExecutor, SlotLane, SlotScheduler};
-use super::speculative::{SpecLane, SpecScheduler};
+use super::speculative::{mems_geometry, SpecLane, SpecScheduler};
 use super::worker::{admit, admit_adaptive, LaneHealth, LaneSender, WaveExecutor, WorkerLane};
 use super::workload::TimedRequest;
 use super::Response;
@@ -58,6 +59,44 @@ pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
 /// Default per-round draft depth under [`ServePolicy::Speculative`]
 /// (overridable via `set_draft_k` / `planer serve --draft-k`).
 pub const DEFAULT_DRAFT_K: usize = 4;
+
+/// Default page size (rows per page) under `MemLayout::Paged`
+/// (overridable via `set_pool_geometry` / `planer serve --page-size`).
+pub const DEFAULT_PAGE_SIZE: usize = 4;
+
+/// `pool_pages == 0` means auto-size: enough pages for
+/// [`AUTO_POOL_SESSIONS_PER_SLOT`] × slot-width sessions.
+pub const AUTO_POOL_SESSIONS_PER_SLOT: usize = 4;
+
+/// Build a lane's page pool: auto-size when `pool_pages` is 0, validate
+/// the geometry either way (the CLI surfaces the same validation before
+/// serving starts).
+fn build_pool(
+    page_size: usize,
+    pool_pages: usize,
+    layers: usize,
+    row_elems: usize,
+    width: usize,
+) -> Result<PagePool> {
+    let pages = if pool_pages == 0 {
+        (AUTO_POOL_SESSIONS_PER_SLOT * width * layers).div_ceil(page_size)
+    } else {
+        pool_pages
+    };
+    validate_pool_geometry(page_size, pages, layers)?;
+    PagePool::new(page_size, pages, layers, row_elems)
+}
+
+/// `(layers, M·D)` of a lane's decode-batch mems — the pool row geometry.
+fn lane_mems_geometry(de: &DecodeEngine, width: usize) -> Result<(usize, usize)> {
+    let spec = &de.gen_program().spec;
+    let (a, _) = spec
+        .in_group("mems")
+        .with_context(|| format!("no mems group in {}", spec.name))?;
+    let t = spec.inputs.get(a).context("mems group has no input spec")?;
+    let (layers, chunk, _) = mems_geometry(t, width)?;
+    Ok((layers, chunk))
+}
 
 /// Lock the shared metrics map, recovering from poison: the map holds
 /// plain cloned snapshots, so a publisher that panicked mid-`insert`
@@ -155,6 +194,22 @@ impl SlotExecutor for LaneSlotExecutor<'_, '_> {
     fn bytes_synced(&self) -> u64 {
         self.lane.state.stats().total_bytes()
     }
+
+    fn mems_shape(&self) -> Option<(usize, usize)> {
+        let spec = &self.lane.engine.gen_program().spec;
+        let (a, _) = spec.in_group("mems")?;
+        let t = spec.inputs.get(a)?;
+        mems_geometry(t, self.width()).ok().map(|(l, chunk, _)| (l, chunk))
+    }
+
+    fn read_mems(&mut self) -> Result<Vec<f32>> {
+        self.lane.state.device_read_f32("mems")
+    }
+
+    fn write_mems(&mut self, flat: &[f32]) -> Result<()> {
+        let prog = Arc::clone(self.lane.engine.gen_program());
+        self.lane.state.device_write_f32(&prog, "mems", flat)
+    }
 }
 
 pub struct Cluster<'a> {
@@ -175,6 +230,14 @@ pub struct Cluster<'a> {
     /// Cluster-wide p95 SLA (seconds) driving adaptive degradation; `None`
     /// routes with the plain SLA-fit router.
     adaptive_sla: Option<f64>,
+    /// Where session TXL memories live for continuous/speculative lanes
+    /// (wave lanes reset whole batches per wave and ignore this — a wave
+    /// run is identical under either layout by construction).
+    mem_layout: MemLayout,
+    /// Rows per pool page under [`MemLayout::Paged`].
+    page_size: usize,
+    /// Pool pages per lane (0 = auto-size, see [`build_pool`]).
+    pool_pages: usize,
 }
 
 impl<'a> Cluster<'a> {
@@ -233,7 +296,44 @@ impl<'a> Cluster<'a> {
             seed,
             draft_k: DEFAULT_DRAFT_K,
             adaptive_sla: None,
+            mem_layout: MemLayout::default(),
+            page_size: DEFAULT_PAGE_SIZE,
+            pool_pages: 0,
         })
+    }
+
+    /// Memory layout for continuous/speculative lanes on the next
+    /// concurrent replay (see `serve::paged`).
+    pub fn set_mem_layout(&mut self, l: MemLayout) {
+        self.mem_layout = l;
+    }
+
+    pub fn mem_layout(&self) -> MemLayout {
+        self.mem_layout
+    }
+
+    /// Pool geometry under [`MemLayout::Paged`]: rows per page and pages
+    /// per lane (`pool_pages == 0` auto-sizes to
+    /// [`AUTO_POOL_SESSIONS_PER_SLOT`] × width sessions).
+    pub fn set_pool_geometry(&mut self, page_size: usize, pool_pages: usize) {
+        self.page_size = page_size.max(1);
+        self.pool_pages = pool_pages;
+    }
+
+    /// Pre-flight the configured pool geometry against every lane, so
+    /// `planer serve --mem-layout paged` fails fast with a clear error
+    /// instead of mid-decode.  No-op under the slotted layout or when the
+    /// pool auto-sizes.
+    pub fn check_pool_geometry(&self) -> Result<()> {
+        if self.mem_layout != MemLayout::Paged || self.pool_pages == 0 {
+            return Ok(());
+        }
+        for lane in &self.lanes {
+            let (layers, _) = lane_mems_geometry(&lane.engine, lane.engine.width)?;
+            validate_pool_geometry(self.page_size, self.pool_pages, layers)
+                .with_context(|| format!("lane '{}'", lane.name))?;
+        }
+        Ok(())
     }
 
     pub fn set_policy(&mut self, p: RouterPolicy) {
@@ -444,6 +544,9 @@ impl<'a> Cluster<'a> {
             seed,
             draft_k,
             adaptive_sla,
+            mem_layout,
+            page_size,
+            pool_pages,
         } = self;
         let router: &Router = router;
         let metrics: &Arc<Mutex<HashMap<String, ServeMetrics>>> = metrics;
@@ -452,6 +555,9 @@ impl<'a> Cluster<'a> {
         let seed = *seed;
         let draft_k = *draft_k;
         let adaptive_sla = *adaptive_sla;
+        let mem_layout = *mem_layout;
+        let page_size = *page_size;
+        let pool_pages = *pool_pages;
 
         // bind fresh draft/verify pairs for speculative lanes up front —
         // binding can fail, worker threads should not (the lane's resident
@@ -468,12 +574,26 @@ impl<'a> Cluster<'a> {
                 let tst = tde.init_state(seed)?;
                 let dde = DecodeEngine::new(engine, d_arch)?;
                 let dst = dde.init_state(seed)?;
-                spec_scheds.push(Some(SpecScheduler::new(
+                // pool geometry comes from the target before it moves into
+                // the scheduler; the pool attaches right after
+                let pool_geom = match mem_layout {
+                    MemLayout::Paged => {
+                        Some((lane_mems_geometry(&tde, tde.width)?, tde.width))
+                    }
+                    MemLayout::Slotted => None,
+                };
+                let mut sched = SpecScheduler::new(
                     lane.name.clone(),
                     (tde, tst),
                     (dde, dst),
                     draft_k,
-                )?));
+                )?;
+                if let Some(((layers, chunk), width)) = pool_geom {
+                    sched.set_pool(build_pool(
+                        page_size, pool_pages, layers, chunk, width,
+                    )?)?;
+                }
+                spec_scheds.push(Some(sched));
             } else {
                 spec_scheds.push(None);
             }
@@ -515,6 +635,26 @@ impl<'a> Cluster<'a> {
                             // hand the final metrics back to the lane so the
                             // cluster's own accumulator matches the map
                             lane.metrics = scheduler.metrics.clone();
+                            Ok(rs)
+                        }
+                        (ServePolicy::Continuous, _) if mem_layout == MemLayout::Paged => {
+                            let exec = LaneSlotExecutor { lane };
+                            let (layers, chunk) = exec.mems_shape().context(
+                                "paged layout needs a mems group in the gen program",
+                            )?;
+                            let pool =
+                                build_pool(page_size, pool_pages, layers, chunk, width)?;
+                            let scheduler = PagedScheduler::new(name.clone(), exec, pool)?;
+                            let mut worker = PagedLane::new(name.clone(), scheduler);
+                            worker.depth = gauge;
+                            worker.health = health;
+                            let (rs, mut scheduler) = worker.run_with(rx, |m| {
+                                lock_metrics(&shared).insert(name.clone(), m.clone());
+                            })?;
+                            // hand the final metrics back to the lane so the
+                            // cluster's own accumulator matches the map
+                            let m = scheduler.metrics.clone();
+                            scheduler.executor.lane.metrics = m;
                             Ok(rs)
                         }
                         (ServePolicy::Continuous, _) => {

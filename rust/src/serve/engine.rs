@@ -142,6 +142,29 @@ pub struct ServeMetrics {
     /// Drafted tokens rejected at or after a verify mismatch
     /// (`tokens_drafted - tokens_accepted`).
     pub tokens_rejected: u64,
+    /// Paged memory pool (`MemLayout::Paged` only — all zero on the
+    /// slotted layout): bytes spilled device → host when idle sessions'
+    /// pages were evicted.
+    pub pool_spill_bytes: u64,
+    /// Bytes promoted host → device when spilled sessions resumed.
+    pub pool_promote_bytes: u64,
+    /// Spill events (sessions evicted to host).
+    pub pool_spills: u64,
+    /// Promote events (sessions restored to the arena).
+    pub pool_promotes: u64,
+    /// High-water mark of concurrent sessions the pool tracked (resident +
+    /// spilled) — the paging bench's ≥10×-slots headline.  Merged by max,
+    /// not sum: lanes share no pool.
+    pub sessions_peak: u64,
+    /// Admissions deferred because the pool was momentarily exhausted
+    /// (retried and admitted later).
+    pub pool_deferred: u64,
+    /// Admissions shed with a typed rejection (deferral queue full).
+    pub pool_shed: u64,
+    /// Adaptive SLA ladder: lane degrade transitions observed.
+    pub degrade_events: u64,
+    /// Adaptive SLA ladder: lane recover transitions observed.
+    pub recover_events: u64,
 }
 
 impl ServeMetrics {
@@ -207,6 +230,17 @@ impl ServeMetrics {
         self.tokens_drafted += other.tokens_drafted;
         self.tokens_accepted += other.tokens_accepted;
         self.tokens_rejected += other.tokens_rejected;
+        self.pool_spill_bytes += other.pool_spill_bytes;
+        self.pool_promote_bytes += other.pool_promote_bytes;
+        self.pool_spills += other.pool_spills;
+        self.pool_promotes += other.pool_promotes;
+        // lanes own disjoint pools, so cross-lane concurrency doesn't sum —
+        // the merged view keeps the largest single-pool high-water mark
+        self.sessions_peak = self.sessions_peak.max(other.sessions_peak);
+        self.pool_deferred += other.pool_deferred;
+        self.pool_shed += other.pool_shed;
+        self.degrade_events += other.degrade_events;
+        self.recover_events += other.recover_events;
         self.latencies.merge(&other.latencies);
     }
 }
@@ -673,6 +707,8 @@ mod tests {
             tokens_drafted: 10,
             tokens_accepted: 9,
             tokens_rejected: 1,
+            sessions_peak: 12,
+            ..Default::default()
         };
         let b = ServeMetrics {
             waves: 3,
@@ -687,6 +723,8 @@ mod tests {
             tokens_drafted: 10,
             tokens_accepted: 1,
             tokens_rejected: 9,
+            sessions_peak: 7,
+            ..Default::default()
         };
         a.merge(&b);
         assert_eq!(a.waves, 4);
@@ -699,6 +737,8 @@ mod tests {
         assert_eq!(a.tokens_rejected, 10);
         assert!((a.acceptance_rate() - 0.5).abs() < 1e-12);
         assert!((a.occupancy() - 100.0 / 160.0).abs() < 1e-12);
+        // pool peaks take the max (disjoint pools), not the sum
+        assert_eq!(a.sessions_peak, 12);
         assert_eq!(a.latencies.samples().len(), 3);
         assert_eq!(a.latencies.seen(), 3);
     }

@@ -46,6 +46,23 @@
 //!   every worker flush its queue (partial waves / live slots included)
 //!   before joining.
 //!
+//! # Memory layout: slotted vs paged
+//!
+//! Orthogonally to the batching policy, [`paged::MemLayout`] picks where
+//! session TXL memories live.  **Slotted** (default): in the batch `mems`
+//! lanes, so admitted sessions are capped at slot width.  **Paged**
+//! (`--mem-layout paged`): in a `runtime::pool::PagePool` — a paged device
+//! arena with per-session page tables, LRU spill-to-host and bitwise
+//! promotion — making slot width a pure compute knob while 10–100× more
+//! sessions stay admitted, each holding its memories from arrival to
+//! retirement.  [`paged::PagedScheduler`] drives the continuous policy
+//! that way (gather pages → masked step → scatter pages, with eager
+//! admission, a bounded deferral queue and typed shedding on true
+//! exhaustion); `SpecScheduler::set_pool` does the same for speculative
+//! rounds (splice-by-page).  Committed token streams are bit-identical
+//! across layouts (rust/tests/ref_serve.rs); only residency and byte
+//! traffic move, which `BENCH_paging.json` tracks hermetically.
+//!
 //! # Adaptive SLA degradation
 //!
 //! `Cluster::set_adaptive_sla(Some(sla))` arms a degradation ladder on the
@@ -93,6 +110,7 @@ pub mod batcher;
 pub mod cluster;
 pub mod workload;
 pub mod engine;
+pub mod paged;
 pub mod router;
 pub mod scheduler;
 pub mod session;
@@ -103,6 +121,9 @@ pub use batcher::{wave_shape, BatchWave, WaveBatcher, WaveShape};
 pub use cluster::{Cluster, ServePolicy};
 pub use workload::{Arrival, TimedRequest, WorkloadGen};
 pub use engine::{percentile, DecodeEngine, LatencyReservoir, ServeMetrics};
+pub use paged::{
+    validate_pool_geometry, MemLayout, PagedLane, PagedScheduler, PoolAdmission,
+};
 pub use router::{AdaptiveRouter, RollingP95, Router, RouterPolicy, VariantInfo, RECOVER_FRACTION};
 pub use scheduler::{SlotExecutor, SlotLane, SlotScheduler};
 pub use session::{Session, SessionState, SpecCheckpoint};

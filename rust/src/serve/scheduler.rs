@@ -53,6 +53,29 @@ pub trait SlotExecutor {
     fn bytes_synced(&self) -> u64 {
         0
     }
+
+    /// Geometry of the decode batch's TXL `mems` group as
+    /// `(layers, slot_elems)` where `slot_elems = M·D` — the paged
+    /// scheduler's prerequisite for gathering pool rows into the batch.
+    /// `None` (the default) means the executor does not expose its
+    /// memories and can only serve `MemLayout::Slotted`.
+    fn mems_shape(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Flat `[layers · width · slot_elems]` view of the decode batch's TXL
+    /// memories (layer-major, then slot).  Only called when
+    /// [`Self::mems_shape`] returned `Some`; the default is unreachable on
+    /// the slotted path.
+    fn read_mems(&mut self) -> Result<Vec<f32>> {
+        anyhow::bail!("executor does not expose TXL memories (mems_shape is None)")
+    }
+
+    /// Overwrite the decode batch's TXL memories from a flat layer-major
+    /// slice (inverse of [`Self::read_mems`]).
+    fn write_mems(&mut self, _flat: &[f32]) -> Result<()> {
+        anyhow::bail!("executor does not expose TXL memories (mems_shape is None)")
+    }
 }
 
 /// Owns `width` persistent decode slots and a FIFO admission queue; runs the

@@ -63,6 +63,20 @@
 //! the next vocab id, which guarantees a mismatch there without touching
 //! the verified stream.  The flip stream draws once per (step, slot) so the
 //! Python baseline mirror can replay the schedule exactly.
+//!
+//! # Paged layout (`MemLayout::Paged`)
+//!
+//! With a [`PagePool`] attached ([`SpecScheduler::set_pool`]), the *target*
+//! session memories live in the pool between rounds: slot binding promotes
+//! and pins a session's pages, the verify phase gathers them into the
+//! batch `mems`, and the round's end scatters each slot's (post-splice)
+//! `[M, D]` rows back into that session's pages — so the memory repair is
+//! effectively *splice-by-page*: a rejected slot's rows are restored into
+//! its own pages and nobody else's.  The draft store is untouched by the
+//! pool (its drift is already tolerated and resynced), and because slot
+//! binding keeps the identical FIFO schedule and the pool holds at least
+//! `width` sessions, the committed streams are bit-identical to the
+//! slotted layout (asserted in rust/tests/ref_serve.rs).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::Receiver;
@@ -70,7 +84,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{literal, StateStore, TensorSpec};
+use crate::runtime::{literal, PagePool, StateStore, TensorSpec};
 use crate::util::rng::Rng;
 
 use super::engine::{DecodeEngine, ServeMetrics};
@@ -143,6 +157,12 @@ pub struct SpecScheduler<'a> {
     reset: Vec<bool>,
     pub metrics: ServeMetrics,
     bytes_seen: u64,
+    /// Paged layout: the target sessions' TXL memories between rounds.
+    /// `None` (default) keeps the slotted layout.
+    pool: Option<PagePool>,
+    /// Pool traffic already folded into `metrics.bytes_synced` (eager
+    /// admission spills between rounds, so this is a watermark).
+    pool_bytes_seen: u64,
 }
 
 impl<'a> SpecScheduler<'a> {
@@ -186,12 +206,44 @@ impl<'a> SpecScheduler<'a> {
             reset: vec![false; width],
             metrics: ServeMetrics::default(),
             bytes_seen,
+            pool: None,
+            pool_bytes_seen: 0,
         })
     }
 
     /// Install a seeded draft-error injector (bench acceptance-rate axis).
     pub fn set_divergence(&mut self, d: Option<DraftDivergence>) {
         self.divergence = d;
+    }
+
+    /// Attach a [`PagePool`] (`MemLayout::Paged`, see module docs).  The
+    /// pool's geometry must match the target's mems and hold at least
+    /// `width` sessions, so slot binding can never stall the round.
+    pub fn set_pool(&mut self, pool: PagePool) -> Result<()> {
+        let spec = self.mems_spec()?;
+        let (layers, slot_chunk, _) = mems_geometry(&spec, self.slots.len())?;
+        anyhow::ensure!(
+            pool.layers() == layers && pool.row_elems() == slot_chunk,
+            "pool geometry ({} layers x {} elems) does not match the target mems \
+             ({layers} x {slot_chunk})",
+            pool.layers(),
+            pool.row_elems()
+        );
+        anyhow::ensure!(
+            pool.session_capacity() >= self.slots.len(),
+            "pool holds {} sessions but the speculative batch has {} slots \
+             (raise --pool-pages)",
+            pool.session_capacity(),
+            self.slots.len()
+        );
+        self.pool_bytes_seen = pool.stats.total_bytes();
+        self.pool = Some(pool);
+        Ok(())
+    }
+
+    /// The attached pool, if any (bench/test introspection).
+    pub fn pool(&self) -> Option<&PagePool> {
+        self.pool.as_ref()
     }
 
     pub fn width(&self) -> usize {
@@ -202,8 +254,18 @@ impl<'a> SpecScheduler<'a> {
         self.draft_k
     }
 
-    /// Queue a request for admission at the next round boundary.
+    /// Queue a request for admission at the next round boundary.  With a
+    /// pool attached, the session's pages are allocated eagerly (the
+    /// "admitted at arrival" model); a transient failure is retried at
+    /// slot binding, where capacity >= width guarantees success — the
+    /// deferral/shed admission-control machinery lives in
+    /// `paged::PagedScheduler`, not here.
     pub fn submit(&mut self, r: Request, submitted: Instant) {
+        if r.n_gen > 0 {
+            if let Some(pool) = self.pool.as_mut() {
+                let _ = pool.admit(r.id);
+            }
+        }
         self.queue.push_back((r, submitted));
     }
 
@@ -245,6 +307,15 @@ impl<'a> SpecScheduler<'a> {
             let Some(slot) = self.slots.iter().position(Session::is_free) else {
                 break;
             };
+            let sid = r.id;
+            if let Some(pool) = self.pool.as_mut() {
+                // promote (if spilled) and pin for the slot's lifetime;
+                // capacity >= width makes failure impossible here, but a
+                // failure must stall FIFO admission, not drop the head
+                if pool.admit(sid).is_err() || pool.pin(sid).is_err() {
+                    break;
+                }
+            }
             let Some((r, submitted)) = self.queue.pop_front() else { break };
             if let (Some(s), Some(reset)) =
                 (self.slots.get_mut(slot), self.reset.get_mut(slot))
@@ -253,6 +324,78 @@ impl<'a> SpecScheduler<'a> {
                 *reset = true;
             }
         }
+    }
+
+    /// Gather every bound session's pool rows into the target's batch
+    /// `mems` (no-op without a pool).  On-device copy — unmetered.
+    fn gather_pool_mems(&mut self) -> Result<()> {
+        if self.pool.is_none() {
+            return Ok(());
+        }
+        let spec = self.mems_spec()?;
+        let (layers, slot_chunk, layer_stride) = mems_geometry(&spec, self.slots.len())?;
+        let mut flat = self.target.st.device_read_f32("mems")?;
+        let sids: Vec<Option<u64>> = self.slots.iter().map(Session::request_id).collect();
+        let Some(pool) = self.pool.as_mut() else { return Ok(()) };
+        for (slot, sid) in sids.iter().enumerate() {
+            let Some(sid) = *sid else { continue };
+            let rows = pool.read_rows(sid)?;
+            for l in 0..layers {
+                let src = rows
+                    .get(l * slot_chunk..(l + 1) * slot_chunk)
+                    .context("pool row shorter than a layer")?;
+                let off = l * layer_stride + slot * slot_chunk;
+                let dst = flat
+                    .get_mut(off..off + slot_chunk)
+                    .context("target mems shorter than its geometry")?;
+                dst.copy_from_slice(src);
+            }
+            pool.touch(sid);
+        }
+        self.target
+            .st
+            .device_write_f32(self.target.de.gen_program(), "mems", &flat)
+    }
+
+    /// Scatter each still-bound slot's (post-splice) mems lane back into
+    /// its session's pages — splice-by-page (no-op without a pool).
+    fn scatter_pool_mems(&mut self) -> Result<()> {
+        if self.pool.is_none() {
+            return Ok(());
+        }
+        let spec = self.mems_spec()?;
+        let (layers, slot_chunk, layer_stride) = mems_geometry(&spec, self.slots.len())?;
+        let flat = self.target.st.device_read_f32("mems")?;
+        let sids: Vec<Option<u64>> = self.slots.iter().map(Session::request_id).collect();
+        let Some(pool) = self.pool.as_mut() else { return Ok(()) };
+        for (slot, sid) in sids.iter().enumerate() {
+            let Some(sid) = *sid else { continue };
+            let mut rows = vec![0.0f32; layers * slot_chunk];
+            for l in 0..layers {
+                let off = l * layer_stride + slot * slot_chunk;
+                let src = flat
+                    .get(off..off + slot_chunk)
+                    .context("target mems shorter than its geometry")?;
+                if let Some(dst) = rows.get_mut(l * slot_chunk..(l + 1) * slot_chunk) {
+                    dst.copy_from_slice(src);
+                }
+            }
+            pool.write_rows(sid, &rows)?;
+        }
+        Ok(())
+    }
+
+    /// Fold the pool's counters into the metrics (no-op without a pool).
+    fn sync_pool_metrics(&mut self) {
+        let Some(pool) = self.pool.as_ref() else { return };
+        let pool_bytes = pool.stats.total_bytes();
+        self.metrics.bytes_synced += pool_bytes.saturating_sub(self.pool_bytes_seen);
+        self.pool_bytes_seen = pool_bytes;
+        self.metrics.pool_spill_bytes = pool.stats.bytes_to_host;
+        self.metrics.pool_promote_bytes = pool.stats.bytes_to_device;
+        self.metrics.pool_spills = pool.spill_count();
+        self.metrics.pool_promotes = pool.promote_count();
+        self.metrics.sessions_peak = pool.sessions_peak() as u64;
     }
 
     /// Useful draft depth this round: the deepest any live slot can go
@@ -273,6 +416,7 @@ impl<'a> SpecScheduler<'a> {
         self.admit_queued(&mut out);
         let k = self.round_depth();
         if k == 0 {
+            self.sync_pool_metrics();
             return Ok(RoundOutcome { responses: out, spec_steps: 0 });
         }
         let width = self.slots.len();
@@ -323,6 +467,9 @@ impl<'a> SpecScheduler<'a> {
         }
 
         // ---- verify phase: k target steps over the recorded inputs ----
+        // paged layout: assemble the target batch from the bound sessions'
+        // pages first (memories that saw only committed tokens)
+        self.gather_pool_mems()?;
         let mut outs: Vec<Vec<i32>> = Vec::with_capacity(k);
         // per slot: first verify step whose drafted token mismatched
         let mut mismatch_at: Vec<Option<usize>> = vec![None; width];
@@ -370,6 +517,7 @@ impl<'a> SpecScheduler<'a> {
             if !was_live {
                 continue;
             }
+            let sid = s.request_id();
             for (t, row) in drafted.iter().enumerate() {
                 if let Some(Some(_)) = row.get(idx) {
                     drafted_n += 1;
@@ -395,6 +543,13 @@ impl<'a> SpecScheduler<'a> {
                     out.push(r);
                 }
             }
+            if s.is_free() {
+                // retired this round: release the session's pages
+                if let (Some(sid), Some(pool)) = (sid, self.pool.as_mut()) {
+                    pool.unpin(sid);
+                    pool.free(sid);
+                }
+            }
         }
         self.metrics.tokens_drafted += drafted_n;
         self.metrics.tokens_accepted += accepted_n;
@@ -402,6 +557,9 @@ impl<'a> SpecScheduler<'a> {
 
         // ---- repair the target mems for slots that rejected early ----
         self.splice_mems(k, &live0, &mismatch_at, &snaps)?;
+        // paged layout: land each surviving slot's repaired lane back in
+        // its own session's pages (splice-by-page)
+        self.scatter_pool_mems()?;
 
         self.metrics.busy_secs += t0.elapsed().as_secs_f64();
         let steps = 2 * k as u64; // draft + verify program steps
@@ -412,6 +570,7 @@ impl<'a> SpecScheduler<'a> {
             self.target.st.stats().total_bytes() + self.draft.st.stats().total_bytes();
         self.metrics.bytes_synced += bytes.saturating_sub(self.bytes_seen);
         self.bytes_seen = bytes;
+        self.sync_pool_metrics();
 
         Ok(RoundOutcome { responses: out, spec_steps: k as u64 })
     }
@@ -481,8 +640,10 @@ impl<'a> SpecScheduler<'a> {
     }
 }
 
-/// Per-slot splice geometry from the mems spec: `(L, M·D, B·M·D)`.
-fn mems_geometry(spec: &TensorSpec, width: usize) -> Result<(usize, usize, usize)> {
+/// Per-slot splice geometry from a `[L, B, M, D]` mems spec:
+/// `(L, M·D, B·M·D)` — shared with the paged layout (the pool's row size
+/// is the `M·D` slot chunk; see `serve::paged` and `bench::harness`).
+pub fn mems_geometry(spec: &TensorSpec, width: usize) -> Result<(usize, usize, usize)> {
     let (layers, batch) = match spec.shape.as_slice() {
         [l, b, rest @ ..] if !rest.is_empty() => (*l, *b),
         other => anyhow::bail!("mems shape {other:?} is not [L, B, M, D]"),

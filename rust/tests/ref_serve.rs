@@ -18,8 +18,8 @@ use std::time::{Duration, Instant};
 use planer::runtime::manifest::Block;
 use planer::runtime::{Engine, ModelConfig, StateStore};
 use planer::serve::{
-    BatchWave, Cluster, DecodeEngine, Request, ServeMetrics, ServePolicy, SlotExecutor,
-    SlotScheduler, TimedRequest, WaveBatcher,
+    BatchWave, Cluster, DecodeEngine, MemLayout, Request, ServeMetrics, ServePolicy,
+    SlotExecutor, SlotScheduler, TimedRequest, WaveBatcher,
 };
 
 fn serve_cfg() -> ModelConfig {
@@ -243,6 +243,89 @@ fn continuous_beats_wave_occupancy_deterministically() {
     // hand-simulated bound for this trace: 59 live slot-steps over 33
     // 2-wide steps = 0.894 (only the drain tail idles)
     assert!(occ_c > 0.85, "with instant backfill, continuous should stay near-full: {occ_c:.3}");
+}
+
+/// The paged memory layout is invisible to token streams: under every
+/// policy, with a pool that actually overcommits (capacity 3 sessions over
+/// width 2, eagerly admitting a 14-request trace), per-request streams
+/// match the slotted layout and the solo oracle bit for bit.  Because the
+/// pool spills and promotes live TXL memories mid-decode, stream identity
+/// here *is* the end-to-end bitwise spill→promote round-trip proof over
+/// real decode math — any corrupted row would change a downstream token.
+#[test]
+fn paged_layout_streams_match_slotted_and_the_solo_oracle() {
+    let (engine, names) = ref_engine(2);
+    let trace = trace(14);
+
+    // oracle: every request alone on the best-quality lane (the router
+    // sends the whole loose-SLA trace there)
+    let de = DecodeEngine::new(&engine, &names[0]).unwrap();
+    let mut st = de.init_state(0).unwrap();
+    let expected: Vec<Vec<i32>> = trace
+        .iter()
+        .map(|t| solo_oracle(&de, &mut st, &t.request))
+        .collect();
+
+    let mut cluster = Cluster::new(&engine, &names, 0).unwrap();
+    cluster.set_max_wait(Duration::from_millis(1));
+    for policy in [ServePolicy::Wave, ServePolicy::Continuous, ServePolicy::Speculative] {
+        cluster.set_serve_policy(policy);
+        for layout in [MemLayout::Slotted, MemLayout::Paged] {
+            cluster.set_mem_layout(layout);
+            // 6 pages x 2 rows = 12 rows = 3 resident sessions over the
+            // 4-layer archs: > width (binding never stalls) and << the 14
+            // admitted sessions (idle ones churn through spill/promote)
+            cluster.set_pool_geometry(2, 6);
+            cluster.check_pool_geometry().unwrap();
+            let responses = cluster.replay_concurrent(&trace, false).unwrap();
+            assert_eq!(responses.len(), trace.len(), "{policy:?}/{layout:?}: conservation");
+            for r in &responses {
+                assert_eq!(
+                    r.tokens, expected[r.id as usize],
+                    "{policy:?}/{layout:?}: req {} diverged from the solo oracle",
+                    r.id
+                );
+            }
+            if layout == MemLayout::Paged && policy != ServePolicy::Wave {
+                let mut total = ServeMetrics::default();
+                for (_, m) in cluster.metrics_snapshot() {
+                    total.merge(&m);
+                }
+                assert!(
+                    total.pool_spills > 0 && total.pool_promotes > 0,
+                    "{policy:?}: overcommit produced no spill traffic \
+                     (spills {}, promotes {})",
+                    total.pool_spills,
+                    total.pool_promotes
+                );
+                assert!(total.pool_spill_bytes > 0 && total.pool_promote_bytes > 0);
+                assert!(
+                    total.sessions_peak > 2,
+                    "eager admission must hold more sessions than the 2 slots, peak {}",
+                    total.sessions_peak
+                );
+            }
+        }
+    }
+}
+
+/// A pool too small for even one session's TXL memories is rejected up
+/// front with an error naming the flag to raise (the `planer serve`
+/// geometry pre-flight).
+#[test]
+fn cluster_rejects_a_pool_too_small_for_one_session() {
+    let (engine, names) = ref_engine(1);
+    let mut cluster = Cluster::new(&engine, &names, 0).unwrap();
+    cluster.set_mem_layout(MemLayout::Paged);
+    cluster.set_pool_geometry(1, 2); // 2 rows < the archs' 4 layers
+    let err = cluster.check_pool_geometry().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("cannot hold one"), "unhelpful geometry error: {msg}");
+    assert!(msg.contains("--pool-pages"), "the error must name the flag to raise: {msg}");
+
+    // the same geometry under the slotted layout is a non-issue
+    cluster.set_mem_layout(MemLayout::Slotted);
+    cluster.check_pool_geometry().unwrap();
 }
 
 /// Empty prompts ride the BOS seeding path on both policies.

@@ -55,6 +55,7 @@ pub fn repo_config() -> Config {
         lock_roots: vec![
             "rust/src/serve".into(),
             "rust/src/runtime/state.rs".into(),
+            "rust/src/runtime/pool.rs".into(),
         ],
         hot_paths: vec![
             // decode fast path
@@ -100,11 +101,35 @@ pub fn repo_config() -> Config {
             strict("rust/src/runtime/state.rs", "StateStore::run_plan_device"),
             strict("rust/src/runtime/state.rs", "StateStore::run_plan_host"),
             strict("rust/src/runtime/state.rs", "StateStore::apply_host_outputs"),
+            strict("rust/src/runtime/state.rs", "StateStore::device_read_f32"),
+            strict("rust/src/runtime/state.rs", "StateStore::device_write_f32"),
+            // paged TXL-memory pool (per-step gather/scatter hot path)
+            strict("rust/src/runtime/pool.rs", "PagePool::admit"),
+            strict("rust/src/runtime/pool.rs", "PagePool::free"),
+            strict("rust/src/runtime/pool.rs", "PagePool::touch"),
+            strict("rust/src/runtime/pool.rs", "PagePool::spill"),
+            strict("rust/src/runtime/pool.rs", "PagePool::promote"),
+            strict("rust/src/runtime/pool.rs", "PagePool::ensure_resident"),
+            strict("rust/src/runtime/pool.rs", "PagePool::read_rows"),
+            strict("rust/src/runtime/pool.rs", "PagePool::write_rows"),
+            strict("rust/src/runtime/pool.rs", "PagePool::reserve_rows"),
+            strict("rust/src/runtime/pool.rs", "PagePool::promote_spilled"),
+            strict("rust/src/serve/paged.rs", "PagedScheduler::submit"),
+            strict("rust/src/serve/paged.rs", "PagedScheduler::step"),
+            strict("rust/src/serve/paged.rs", "PagedScheduler::admit_queued"),
+            strict("rust/src/serve/paged.rs", "PagedScheduler::retry_deferred"),
+            strict("rust/src/serve/paged.rs", "PagedScheduler::gather_mems"),
+            strict("rust/src/serve/paged.rs", "PagedScheduler::scatter_mems"),
+            strict("rust/src/serve/paged.rs", "PagedLane::run_with"),
+            strict("rust/src/serve/speculative.rs", "SpecScheduler::gather_pool_mems"),
+            strict("rust/src/serve/speculative.rs", "SpecScheduler::scatter_pool_mems"),
             // hermetic bench replay legs
             strict("rust/src/bench/harness.rs", "Harness::wave_overlapped"),
             strict("rust/src/bench/harness.rs", "Harness::wave_serial"),
             strict("rust/src/bench/harness.rs", "Harness::continuous"),
             strict("rust/src/bench/harness.rs", "Harness::speculative"),
+            strict("rust/src/bench/harness.rs", "Harness::paged"),
+            strict("rust/src/bench/harness.rs", "Harness::adaptive"),
             strict("rust/src/bench/harness.rs", "WaveLane::fire"),
             // reference-backend decode kernels
             kernel("rust/src/runtime/refback.rs", "gen_forward"),

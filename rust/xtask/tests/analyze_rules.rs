@@ -49,6 +49,18 @@ fn lock_across_send_fires_lock002() {
 }
 
 #[test]
+fn lock_across_spill_fires_lock002() {
+    // pool-spill shape of the same hazard: the page-table guard must be
+    // dropped before the spilled rows go down a channel
+    let cfg = Config { lock_roots: vec!["lock_across_spill.rs".into()], ..empty() };
+    let f = analyze(&fixtures(), &cfg).unwrap();
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "LOCK002");
+    assert_eq!(f[0].function, "SpillPump::spill_idle");
+    assert!(f[0].message.contains("pages"), "{}", f[0].message);
+}
+
+#[test]
 fn hot_unwrap_fires_panic001_only_in_designated_fn() {
     let cfg = Config {
         hot_paths: vec![HotPath {

@@ -1,0 +1,18 @@
+// Seeded violation: the page-pool guard stays live while the spilled
+// rows are pushed down a channel — the promote path on the other end
+// takes the same lock, and a bounded channel turns that into deadlock.
+// Never compiled; lexed by the analyzer tests only.
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+struct SpillPump {
+    pages: Mutex<Vec<f32>>,
+    to_host: Sender<Vec<f32>>,
+}
+
+impl SpillPump {
+    fn spill_idle(&self) {
+        let rows = self.pages.lock().unwrap();
+        self.to_host.send(rows.clone()).ok();
+    }
+}

@@ -129,6 +129,70 @@ def arrival_tick(at_secs, ticks_per_sec):
     return int(math.ceil(at_secs * ticks_per_sec))
 
 
+# ------------------------------------------------ runtime::pool (PagePool)
+class PoolSim:
+    """PagePool (runtime/pool.rs) at schedule level: LRU spill order, pin
+    semantics, sessions-peak and the spill/promote counters.  Each crossing
+    moves `session_bytes = 4 * layers * row_elems` bytes (pool.rs::
+    session_bytes); row contents never affect the schedule."""
+
+    def __init__(self, page_size, n_pages, layers, row_elems):
+        self.rows_free = page_size * n_pages
+        self.layers = layers
+        self.session_bytes = 4 * layers * row_elems
+        self.resident = set()
+        self.spilled = set()
+        self.pinned = set()
+        self.lru = []  # front = least recently used (pool.rs VecDeque)
+        self.spills = 0
+        self.promotes = 0
+        self.peak = 0
+
+    def touch(self, sid):
+        if sid in self.resident:
+            self.lru.remove(sid)
+            self.lru.append(sid)
+
+    def _reserve(self):
+        # pool.rs::reserve_rows: spill LRU unpinned until a session fits;
+        # the hermetic scenario keeps capacity > width so this never fails
+        while self.rows_free < self.layers:
+            victim = next(s for s in self.lru if s not in self.pinned)
+            self.resident.discard(victim)
+            self.lru.remove(victim)
+            self.spilled.add(victim)
+            self.rows_free += self.layers
+            self.spills += 1
+
+    def admit(self, sid):
+        """pool.rs::admit: touch when resident, promote when spilled,
+        allocate otherwise."""
+        if sid in self.resident:
+            self.touch(sid)
+            return
+        promote = sid in self.spilled
+        self._reserve()
+        self.spilled.discard(sid)
+        self.resident.add(sid)
+        self.lru.append(sid)
+        self.rows_free -= self.layers
+        if promote:
+            self.promotes += 1
+        self.peak = max(self.peak, len(self.resident) + len(self.spilled))
+
+    def pin(self, sid):
+        self.pinned.add(sid)
+        self.touch(sid)
+
+    def free(self, sid):
+        if sid in self.resident:
+            self.resident.discard(sid)
+            self.lru.remove(sid)
+            self.rows_free += self.layers
+        self.spilled.discard(sid)
+        self.pinned.discard(sid)
+
+
 # --------------------------------------------------------- serve::router
 def route(lanes, req):
     """Router::route, QualityWithinSla with zero load: first lane (quality
@@ -139,6 +203,52 @@ def route(lanes, req):
         if est(lane) <= req["sla"]:
             return i
     return min(range(len(lanes)), key=lambda i: lanes[i]["token_latency"])
+
+
+def route_allowed(lanes, req, allowed):
+    """Router::route_allowed (QualityWithinSla, load = 0): the best allowed
+    quality tier whose estimate fits the SLA; the fastest allowed lane (the
+    globally fastest when everything is masked) as the infeasible floor.
+    `lanes` carry explicit `quality`, sorted descending (scenario order)."""
+    best = None
+    for i, lane in enumerate(lanes):
+        if not allowed(i):
+            continue
+        if best is not None:
+            if lane["quality"] != lanes[best]["quality"]:
+                break  # past the winning quality tier
+            # load(v) < load(best) is always false at zero load
+        elif lane["token_latency"] * (req["plen"] + req["n_gen"]) <= req["sla"]:
+            best = i
+    if best is not None:
+        return best
+    pool = [i for i in range(len(lanes)) if allowed(i)] or list(range(len(lanes)))
+    return min(pool, key=lambda i: lanes[i]["token_latency"])
+
+
+# --------------------------------------- serve::router adaptive machinery
+RECOVER_FRACTION = 0.8  # router.rs::RECOVER_FRACTION
+ROLL_CAP = 32           # router.rs::RollingP95::default
+
+
+class Rolling:
+    """RollingP95 (router.rs): fixed-capacity overwrite ring, nearest-rank
+    p95 over the current window, None until something was observed."""
+
+    def __init__(self, cap=ROLL_CAP):
+        self.cap = cap
+        self.buf = []
+        self.next = 0
+
+    def push(self, x):
+        if len(self.buf) < self.cap:
+            self.buf.append(x)
+        else:
+            self.buf[self.next] = x
+        self.next = (self.next + 1) % self.cap
+
+    def p95(self):
+        return percentile(self.buf, 0.95) if self.buf else None
 
 
 # ------------------------------------------------- wave schedule (batcher.rs)
@@ -350,6 +460,107 @@ def sim_continuous(sub, width, step_ticks, samples):
         else:
             break
     return sched, clock.now
+
+
+def sim_paged(sub, width, step_ticks, page_size, pool_pages, layers, row_elems,
+              samples):
+    """bench/harness.rs::Harness::paged, one lane: the slotted schedule with
+    pool admission at submit (paged.rs::PagedScheduler::submit — eager,
+    spilling idle LRU sessions), promote+pin at slot binding and free at
+    retirement.  Capacity > width keeps binding infallible, so the executed
+    schedule is byte-identical to sim_continuous — only the pool counters
+    and spill/promote bytes differ."""
+    pool = PoolSim(page_size, pool_pages, layers, row_elems)
+    sched = SlotSim(width)
+    clock = Clock()
+    i = 0
+    while True:
+        while i < len(sub) and sub[i][1] <= clock.now:
+            pool.admit(sub[i][0]["id"])  # eager admission, n_gen >= 2 always
+            sched.submit(sub[i])
+            i += 1
+        if sched.has_work():
+            before = [None if s is None else s[0]["id"] for s in sched.slots]
+            sched.step(clock, step_ticks, samples)
+            after = [None if s is None else s[0]["id"] for s in sched.slots]
+            # lowest-free-slot admission makes slot order == FIFO binding
+            # order, so replaying the transitions in slot order reproduces
+            # the pool's exact promote/spill sequence; a slot never retires
+            # and rebinds within one step (min 3 executed steps per request)
+            for sid in after:
+                if sid is not None and sid not in before:
+                    pool.admit(sid)  # ensure_resident: promotes if spilled
+                    pool.pin(sid)
+            for sid in before:
+                if sid is not None and sid not in after:
+                    pool.free(sid)  # retired: unpin + drop the pages
+        elif i < len(sub):
+            clock.at_least(sub[i][1])
+        else:
+            break
+    return sched, pool, clock.now
+
+
+def sim_adaptive(trace, specs, sla, adaptive):
+    """bench/harness.rs::Harness::adaptive: one slot scheduler + clock +
+    rolling latency window per lane; every lane pumped to each arrival
+    instant, degraded flags refreshed in sorted lane-name order (the
+    worker.rs::admit_adaptive order) before routing at zero load.  The
+    static twin skips the refresh and routes quality-first, load-blind."""
+    lanes = [dict(spec=s, sched=SlotSim(WIDTH), clock=Clock(), health=Rolling())
+             for s in specs]
+    order = sorted((s["name"], i) for i, s in enumerate(specs))
+    degraded = {}
+    degrades = recovers = 0
+    samples = []
+
+    def pump(lane, upto):
+        while lane["sched"].has_work() and (upto is None
+                                            or lane["clock"].now < upto):
+            n0 = len(samples)
+            lane["sched"].step(lane["clock"], lane["spec"]["step_ticks"],
+                               samples)
+            for done, _rid, at in samples[n0:]:
+                lane["health"].push((done - at) / TICKS_PER_SEC)
+
+    for r in trace:
+        at = arrival_tick(r["at"], TICKS_PER_SEC)
+        for lane in lanes:
+            pump(lane, at)
+        if adaptive:
+            for name, li in order:
+                p95 = lanes[li]["health"].p95()
+                if p95 is None:
+                    continue
+                before = degraded.get(name, False)
+                # router.rs::AdaptiveRouter::observe_p95 hysteresis
+                if before:
+                    if p95 < RECOVER_FRACTION * sla:
+                        degraded[name] = False
+                elif p95 > sla:
+                    degraded[name] = True
+                after = degraded.get(name, False)
+                degrades += (not before) and after
+                recovers += before and not after
+            li = route_allowed(specs, r,
+                               lambda i: not degraded.get(specs[i]["name"],
+                                                          False))
+        else:
+            li = route_allowed(specs, r, lambda i: True)
+        lane = lanes[li]
+        if not lane["sched"].has_work():
+            lane["clock"].at_least(at)
+        lane["sched"].submit((r, at))
+    m = Metrics()
+    wall = 0
+    lane_usage = []
+    for lane in lanes:
+        pump(lane, None)
+        m.merge(lane["sched"].m)
+        wall = max(wall, lane["clock"].now)
+        lane_usage.append((lane["sched"].m.steps,
+                           lane["sched"].admission_steps))
+    return m, samples, wall, degrades, recovers, lane_usage
 
 
 # ------------------------------------------- serve::speculative round sim
@@ -703,6 +914,95 @@ def scenario_bursty(seed):
     return dict(scenario="bursty", requests=len(trace), legs=[wave, cont])
 
 
+# scenarios.rs paging / adaptive constants
+PAGING_PAGE_SIZE = 4
+PAGING_POOL_PAGES = 6
+ADAPTIVE_SLOW_TICKS = 3
+ADAPTIVE_FAST_TICKS = 1
+ADAPTIVE_SLA = 0.1
+ADAPTIVE_GENTLE_HEAD = 16
+ADAPTIVE_BURST_N = 192
+ADAPTIVE_GENTLE_TAIL = 64
+ADAPTIVE_GENTLE_GAP_S = 0.012
+ADAPTIVE_BURST_GAP_S = 0.001
+
+
+def adaptive_arrival(i):
+    """scenarios.rs::adaptive_arrival: gentle head, hard burst, gentle
+    tail, laid back to back."""
+    head_end = ADAPTIVE_GENTLE_HEAD * ADAPTIVE_GENTLE_GAP_S
+    burst_end = head_end + ADAPTIVE_BURST_N * ADAPTIVE_BURST_GAP_S
+    if i < ADAPTIVE_GENTLE_HEAD:
+        return i * ADAPTIVE_GENTLE_GAP_S
+    if i < ADAPTIVE_GENTLE_HEAD + ADAPTIVE_BURST_N:
+        return head_end + (i - ADAPTIVE_GENTLE_HEAD) * ADAPTIVE_BURST_GAP_S
+    return burst_end + (i - ADAPTIVE_GENTLE_HEAD
+                        - ADAPTIVE_BURST_N) * ADAPTIVE_GENTLE_GAP_S
+
+
+def scenario_paging(seed):
+    """scenarios.rs::paging: 1 lane, Burst arrivals (48 sessions vs 4
+    slots), slotted continuous vs the paged pool at 4-row pages x 6 pages
+    (capacity 6 sessions).  Capacity > width makes the schedules (and the
+    gated p95) identical; the paged leg adds the pool's spill/promote
+    traffic on top of the executor bytes."""
+    trace = generate(48, seed, gap_s=0.0, pmin=2, pmax=12, gmin=2, gmax=8,
+                     vocab=CFG["vocab"], tight_frac=0.5, sla_tight=0.25,
+                     sla_loose=float("inf"))
+    lanes = [dict(token_latency=1 / TICKS_PER_SEC)]
+    sub = routed_subtraces(trace, lanes)[0]
+
+    samples = []
+    sched, wall = sim_continuous(sub, WIDTH, 1, samples)
+    sched.m.bytes = continuous_resident_bytes(fleet_blocks(0), sched.m.steps,
+                                              sched.admission_steps)
+    slotted = leg_result("slotted", sched.m, samples, wall)
+
+    # mems [L, B, M, D]: a session's per-layer row is M * D elements
+    samples = []
+    sched, pool, wall = sim_paged(sub, WIDTH, 1, PAGING_PAGE_SIZE,
+                                  PAGING_POOL_PAGES, CFG["n_slots"],
+                                  CFG["mem_len"] * CFG["d_model"], samples)
+    sched.m.bytes = (continuous_resident_bytes(fleet_blocks(0), sched.m.steps,
+                                               sched.admission_steps)
+                     + (pool.spills + pool.promotes) * pool.session_bytes)
+    paged = leg_result("paged", sched.m, samples, wall)
+    paged["sessions_peak"] = pool.peak
+    paged["pool_spills"] = pool.spills
+    paged["pool_promotes"] = pool.promotes
+    return dict(scenario="paging", requests=len(trace), legs=[slotted, paged])
+
+
+def scenario_adaptive(seed):
+    """scenarios.rs::adaptive: 2 lanes (fleet00 quality 2.0 at 3 ticks,
+    fleet01 quality 1.0 at 1 tick), three-phase gentle/burst/gentle trace,
+    static quality-first routing vs the AdaptiveRouter holding each lane's
+    rolling p95 against a 0.1 s SLA."""
+    n = ADAPTIVE_GENTLE_HEAD + ADAPTIVE_BURST_N + ADAPTIVE_GENTLE_TAIL
+    trace = generate(n, seed, gap_s=ADAPTIVE_GENTLE_GAP_S, pmin=2, pmax=12,
+                     gmin=2, gmax=8, vocab=CFG["vocab"], tight_frac=0.5,
+                     sla_tight=0.25, sla_loose=float("inf"))
+    for i, r in enumerate(trace):  # Uniform gaps consume no RNG draws
+        r["at"] = adaptive_arrival(i)
+    specs = [
+        dict(name="fleet00", step_ticks=ADAPTIVE_SLOW_TICKS,
+             token_latency=ADAPTIVE_SLOW_TICKS / TICKS_PER_SEC, quality=2.0),
+        dict(name="fleet01", step_ticks=ADAPTIVE_FAST_TICKS,
+             token_latency=ADAPTIVE_FAST_TICKS / TICKS_PER_SEC, quality=1.0),
+    ]
+    legs = []
+    for name, adaptive in (("static", False), ("adaptive", True)):
+        m, samples, wall, dg, rc, usage = sim_adaptive(trace, specs,
+                                                       ADAPTIVE_SLA, adaptive)
+        m.bytes = sum(continuous_resident_bytes(fleet_blocks(k), steps, adm)
+                      for k, (steps, adm) in enumerate(usage) if steps)
+        leg = leg_result(name, m, samples, wall)
+        leg["degrade_events"] = dg
+        leg["recover_events"] = rc
+        legs.append(leg)
+    return dict(scenario="adaptive", requests=len(trace), legs=legs)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seed", type=int, default=42,
@@ -714,7 +1014,8 @@ def main():
 
     results = [scenario_coordinator(args.seed), scenario_serve_fleet(args.seed),
                scenario_residency(args.seed), scenario_speculative(args.seed),
-               scenario_bursty(args.seed)]
+               scenario_bursty(args.seed), scenario_paging(args.seed),
+               scenario_adaptive(args.seed)]
     for res in results:
         print(f"\nscenario {res['scenario']} ({res['requests']} reqs"
               + (f", lane loads {res['lane_loads']}" if "lane_loads" in res else "")
@@ -725,6 +1026,15 @@ def main():
                       if leg.get("drafted") else "")
             thr = (f" tok/tick {leg['tokens_out'] / leg['wall_ticks']:.3f}"
                    if leg["wall_ticks"] else "")
+            extra = ""
+            if "sessions_peak" in leg:
+                extra = (f" sessions {leg['sessions_peak']}"
+                         f" spill/promote {leg['pool_spills']}"
+                         f"/{leg['pool_promotes']}")
+            if "degrade_events" in leg:
+                extra = (f" degrade {leg['degrade_events']}"
+                         f" recover {leg['recover_events']}")
+            thr += extra
             print(f"  {leg['name']:13} steps {leg['steps']:5} wall {leg['wall_ticks']:6}"
                   f" occup {leg['occupancy']:.3f} p50 {lat['p50']:7.1f}"
                   f" p95 {lat['p95']:7.1f} B/tok {leg['bytes_per_token']:8.1f}"
