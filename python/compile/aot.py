@@ -25,6 +25,10 @@ per architecture (presets + any --arch JSONs):
     gen_masked_<a>   params,mems,x,free_mask[B] -> logits,mems
                 (decode step that zeroes masked lanes' memories first —
                  per-slot session reset for continuous batching)
+    for conversion presets (archs named moefied_<route>) the two decode
+    programs are spelled gen_moefied_<route> / gen_masked_moefied_<route> —
+    same final names, but the literal prefix is the cross-language ABI
+    contract xtask's ABI001 pins against refback::moefied_gen_program
 search space (paper space + iso-parameter ablation space):
     search_init, search_weight_step, search_arch_step, search_eval
     (prefix ``searchiso_`` for the ablation space)
@@ -224,9 +228,20 @@ class ProgramExporter:
                 params, arch, cfg_gen, x, mems, jax.random.PRNGKey(0), False)
             return (logits, new_mems)
 
-        self.export(f"gen_{aname}", gen_fn,
-                    [("params", params_abs), ("mems", mems_g), ("x", x_g)],
-                    ["logits", "mems"])
+        gen_groups = [("params", params_abs), ("mems", mems_g), ("x", x_g)]
+        if aname.startswith("moefied_"):
+            # conversion presets pin the `gen_moefied_<route>` decode-program
+            # family the Rust coordinator derives via
+            # refback::moefied_gen_program.  xtask's ABI001 checks this
+            # literal prefix on both sides, so spell it here instead of going
+            # through the generic f"gen_{aname}" template — the final
+            # artifact names are identical either way.
+            route = aname[len("moefied_"):]
+            self.export(f"gen_moefied_{route}", gen_fn, gen_groups,
+                        ["logits", "mems"])
+        else:
+            self.export(f"gen_{aname}", gen_fn, gen_groups,
+                        ["logits", "mems"])
 
         # masked decode: same single-token step, but a per-slot free_mask
         # zeroes the flagged lanes' memories before the forward, so the
@@ -241,10 +256,15 @@ class ProgramExporter:
                 params, arch, cfg_gen, x, cleared, jax.random.PRNGKey(0), False)
             return (logits, new_mems)
 
-        self.export(f"gen_masked_{aname}", gen_masked_fn,
-                    [("params", params_abs), ("mems", mems_g), ("x", x_g),
-                     ("free_mask", mask_g)],
-                    ["logits", "mems"])
+        masked_groups = [("params", params_abs), ("mems", mems_g), ("x", x_g),
+                         ("free_mask", mask_g)]
+        if aname.startswith("moefied_"):
+            route = aname[len("moefied_"):]
+            self.export(f"gen_masked_moefied_{route}", gen_masked_fn,
+                        masked_groups, ["logits", "mems"])
+        else:
+            self.export(f"gen_masked_{aname}", gen_masked_fn,
+                        masked_groups, ["logits", "mems"])
 
     # ------------------------------------------------------- search programs
 

@@ -7,6 +7,15 @@ An architecture is a JSON list of block dicts, one per backbone slot:
     {"type": "ffl"}                      # inner = cfg.d_inner
     {"type": "sffl"}                     # iso-param scaled FFL, inner = cfg.sffl_inner
     {"type": "moe",  "top_k": 1|2}       # cfg.n_experts experts
+    {"type": "moefied", "experts": E, "route": "full"}           # converted FFL
+    {"type": "moefied", "experts": E, "route": "topk", "k": K}
+    {"type": "moefied", "experts": E, "route": "dynk", "tau_bp": T}
+
+`moefied` blocks are dense FFLs split into E disjoint neuron groups by the
+dense→MoE converter (rust/src/arch/convert.rs); experts combine as an
+unweighted sum with the shared output bias added once, so full activation
+reproduces the source FFL.  `dynk` selects, per token, the smallest prefix
+of gate-ranked experts whose cumulative gate mass reaches tau_bp/10000.
 
 The same encoding round-trips through artifacts/archs/*.json to the Rust
 `arch` module.  Option *indices* into SEARCH_OPTIONS are the contract between
@@ -48,6 +57,14 @@ def option_name(o: dict) -> str:
         return f"mha{o['heads']}"
     if t == "moe":
         return f"moe_t{o['top_k']}"
+    if t == "moefied":
+        # matches rust Block::name so manifests render identically
+        e, r = o["experts"], o["route"]
+        if r == "topk":
+            return f"moefied{e}_t{o['k']}"
+        if r == "dynk":
+            return f"moefied{e}_d{o['tau_bp']}"
+        return f"moefied{e}_full"
     return t
 
 
@@ -141,6 +158,27 @@ def planer(cfg, target: float) -> list[dict]:
     return out
 
 
+# Default dynamic-k gate-mass threshold (basis points) — mirrors
+# rust/src/runtime/refback.rs DEFAULT_DYNK_TAU_BP.
+DYNK_TAU_BP = 5_000
+
+
+def moefied(cfg, route: str) -> list[dict]:
+    """Dense→MoE conversion preset: the baseline with every FFL slot split
+    into cfg.n_experts experts, one arch per routing mode.  Mirrors the Rust
+    reference backend's `preset_archs` (`moefied_full` is the parity witness
+    whose logits match `baseline` at the same seed)."""
+    e = cfg.n_experts
+    block: dict = {"type": "moefied", "experts": e, "route": route}
+    if route == "topk":
+        block["k"] = min(2, e)
+    elif route == "dynk":
+        block["tau_bp"] = DYNK_TAU_BP
+    elif route != "full":
+        raise ValueError(f"unknown moefied route {route}")
+    return [dict(block) if o["type"] == "ffl" else o for o in baseline(cfg)]
+
+
 def presets(cfg) -> dict[str, list[dict]]:
     ps = {
         "baseline": baseline(cfg),
@@ -151,6 +189,10 @@ def presets(cfg) -> dict[str, list[dict]]:
         "planer80": planer(cfg, 0.80),
         "planer95": planer(cfg, 0.95),
     }
+    # conversion presets need the dense hidden layer to partition evenly
+    if cfg.n_experts >= 1 and cfg.d_inner % cfg.n_experts == 0:
+        for route in ("full", "topk", "dynk"):
+            ps["moefied_" + route] = moefied(cfg, route)
     return {k: [clamp_heads(o, cfg) for o in v] for k, v in ps.items()}
 
 

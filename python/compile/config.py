@@ -39,6 +39,9 @@ class ModelConfig:
     balance_coef: float = 0.01    # Switch-style aux-loss weight (paper Eq. 4)
     train_steps: int = 2000       # lr-schedule horizon baked into train HLOs
     warmup_steps: int = 200
+    bos_id: int = 0               # BOS/pad token id the serving engine feeds
+                                  # into unused wave slots and short-prompt
+                                  # padding (rust/src/serve/engine.rs)
 
     @property
     def tokens(self) -> int:

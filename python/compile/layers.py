@@ -120,6 +120,25 @@ def init_moe(key, cfg):
     }
 
 
+def init_moefied(key, cfg, experts: int):
+    """Converted dense FFL (dense→MoE).  Experts partition the dense hidden
+    layer (inner width d_inner/E each); b2 stays the *shared* dense output
+    bias, added once per token — the exact-parity carrier.  Shapes mirror
+    the Rust reference manifest (runtime/refback.rs param_specs)."""
+    d, e = cfg.d_model, experts
+    he = cfg.d_inner // max(e, 1)
+    ks = jax.random.split(key, 3)
+    std = cfg.init_std
+    return {
+        "ln": init_ln(d),
+        "wg": _norm_init(ks[0], (d, e), std),
+        "w1": _norm_init(ks[1], (e, d, he), std),
+        "b1": jnp.zeros((e, he)),
+        "w2": _norm_init(ks[2], (e, he, d), std),
+        "b2": jnp.zeros((d,)),
+    }
+
+
 def init_block(key, option: dict, cfg):
     t = option["type"]
     if t == "skip":
@@ -132,6 +151,8 @@ def init_block(key, option: dict, cfg):
         return init_ffl(key, cfg, cfg.sffl_inner)
     if t == "moe":
         return init_moe(key, cfg)
+    if t == "moefied":
+        return init_moefied(key, cfg, option["experts"])
     raise ValueError(f"unknown block type {t}")
 
 
@@ -190,6 +211,49 @@ def apply_moe(p, x, mem, cfg, key, train, top_k: int):
     return x + y, balance.astype(x.dtype)
 
 
+def apply_moefied(p, x, mem, cfg, key, train, option: dict):
+    """Converted (MoEfied) FFL with residual, mirroring refback's
+    `moefied_block`: softmax gate, experts taken in gate order, and the
+    selected experts combined as an **unweighted sum** with the shared b2
+    added once — so full activation reproduces the source dense FFL up to
+    f32 reassociation.  Routes: "full" (all E), "topk" (fixed k), "dynk"
+    (per-token smallest prefix whose gate mass reaches tau_bp/10000).
+
+    The lowered HLO computes every expert densely and masks — correct for
+    the reference mirror; the sparse win is realised by the Rust serve path.
+    """
+    b, t, d = x.shape
+    n = b * t
+    e = option["experts"]
+    xn = layer_norm(p["ln"], x).reshape(n, d)
+    probs = jax.nn.softmax(xn @ p["wg"], axis=-1)                    # [n,E]
+    route = option["route"]
+    if route == "full":
+        sel = jnp.ones((n, e), x.dtype)
+    else:
+        # rank experts by gate probability; argsort is stable, so ties go
+        # to the lower index — the same convention as the Rust argmax loop
+        order = jnp.argsort(-probs, axis=-1)                         # [n,E]
+        if route == "topk":
+            sel_ranked = (jnp.arange(e)[None, :] < option["k"]).astype(x.dtype)
+            sel_ranked = jnp.broadcast_to(sel_ranked, (n, e))
+        elif route == "dynk":
+            tau = option["tau_bp"] / 10000.0
+            ranked_p = jnp.take_along_axis(probs, order, axis=-1)
+            # rank j runs iff the gate mass *before* it is still short of tau
+            mass_before = jnp.cumsum(ranked_p, axis=-1) - ranked_p
+            sel_ranked = (mass_before < tau).astype(x.dtype)
+        else:
+            raise ValueError(f"unknown moefied route {route}")
+        sel = jnp.zeros((n, e), x.dtype).at[
+            jnp.arange(n)[:, None], order].set(sel_ranked)
+    hid = jax.nn.relu(jnp.einsum("nd,edh->neh", xn, p["w1"]) + p["b1"][None])
+    per_expert = jnp.einsum("neh,ehd->ned", hid, p["w2"])
+    y = jnp.sum(per_expert * sel[:, :, None], axis=1) + p["b2"][None, :]
+    y = dropout(y.reshape(b, t, d), cfg.dropout, key, train)
+    return x + y, jnp.asarray(0.0, x.dtype)
+
+
 def apply_block(option: dict, p, x, mem, cfg, key, train):
     t = option["type"]
     if t == "skip":
@@ -200,6 +264,8 @@ def apply_block(option: dict, p, x, mem, cfg, key, train):
         return apply_ffl(p, x, mem, cfg, key, train)
     if t == "moe":
         return apply_moe(p, x, mem, cfg, key, train, option["top_k"])
+    if t == "moefied":
+        return apply_moefied(p, x, mem, cfg, key, train, option)
     raise ValueError(f"unknown block type {t}")
 
 
@@ -225,4 +291,10 @@ def block_flops(option: dict, cfg, batch: int) -> float:
         gate = 2.0 * n * d * cfg.n_experts
         expert = 4.0 * (k * n) * d * cfg.d_inner
         return gate + expert
+    if ty == "moefied":
+        # the lowered HLO runs every expert and masks, so its arithmetic
+        # cost is gate + the full dense FFL regardless of route; the
+        # route-dependent sparse cost lives in the Rust latency table
+        # (latency/table.rs moefied_latency)
+        return 2.0 * n * d * option["experts"] + 4.0 * n * d * cfg.d_inner
     raise ValueError(ty)

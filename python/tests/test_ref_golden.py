@@ -35,6 +35,8 @@ from compile.config import ModelConfig
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests",
                        "fixtures", "ref_golden.json")
+FIXTURE_MOEFIED = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                               "tests", "fixtures", "ref_golden_moefied.json")
 
 # Tiny but fully representative: every block type the serving ABI can see,
 # 2 lanes, short memory.  d_model must be even (sinusoid halves).
@@ -43,6 +45,17 @@ CFG = ModelConfig(vocab=13, d_model=8, n_slots=5, d_inner=16, n_heads_full=2,
                   capacity_factor=2.0)
 ARCH = [{"type": "mha", "heads": 2}, {"type": "ffl"}, {"type": "moe", "top_k": 2},
         {"type": "skip"}, {"type": "sffl"}]
+
+# Conversion-routing fixture: every moefied route in one arch.  tau_bp=7000
+# with the (boosted, see test) gate makes dynamic-k genuinely per-token —
+# the exported trace must contain both k=1 and k=2 tokens.
+ARCH_MOEFIED = [
+    {"type": "mha", "heads": 2},
+    {"type": "moefied", "experts": 2, "route": "dynk", "tau_bp": 7000},
+    {"type": "moefied", "experts": 2, "route": "topk", "k": 1},
+    {"type": "skip"},
+    {"type": "moefied", "experts": 2, "route": "full"},
+]
 
 
 # ---------------------------------------------------------------- mirror
@@ -139,10 +152,43 @@ def _moe(p, h, cfg, top_k):
     return out
 
 
-N_LEAVES = {"skip": 0, "mha": 8, "ffl": 6, "sffl": 6, "moe": 7}
+def _moefied(p, h, opt, meter=None):
+    """Mirror of refback::moefied_block: softmax gate, experts in gate order
+    (stable ranking, ties to the lower index), selected experts summed
+    *unweighted*, shared b2 added once per token."""
+    b1, b2, ln_b, ln_g, w1, w2, wg = p
+    E = opt["experts"]
+    out = h.copy()
+    for n in range(h.shape[0]):
+        xn = _ln(h[n], ln_g, ln_b)
+        probs = _softmax(xn @ wg).astype(np.float32)
+        order = np.argsort(-probs, kind="stable")
+        route = opt["route"]
+        if route == "full":
+            k = E
+        elif route == "topk":
+            k = min(opt["k"], E)
+        else:  # dynk: smallest prefix whose gate mass reaches tau
+            tau = np.float32(opt["tau_bp"] / 10000.0)
+            mass, k = np.float32(0.0), 0
+            for e in order:
+                k += 1
+                mass += probs[e]
+                if mass >= tau:
+                    break
+        if meter is not None:
+            meter.append(int(k))
+        for e in order[:k]:
+            hid = np.maximum(xn @ w1[e] + b1[e], 0.0)
+            out[n] = out[n] + hid @ w2[e]
+        out[n] = out[n] + b2
+    return out
 
 
-def mirror_gen_step(cfg, arch, flat, mems, x, free_mask=None):
+N_LEAVES = {"skip": 0, "mha": 8, "ffl": 6, "sffl": 6, "moe": 7, "moefied": 7}
+
+
+def mirror_gen_step(cfg, arch, flat, mems, x, free_mask=None, meter=None):
     """Flat params + mems [L,B,M,D] + x [B] -> (logits [B,V], new_mems)."""
     L, B, M, D = mems.shape
     mems = mems.astype(np.float32).copy()
@@ -171,6 +217,8 @@ def mirror_gen_step(cfg, arch, flat, mems, x, free_mask=None):
             h = _ffl(block_p[l], h)
         elif t == "moe":
             h = _moe(block_p[l], h, cfg, opt["top_k"])
+        elif t == "moefied":
+            h = _moefied(block_p[l], h, opt, meter)
     logits = np.stack([_ln(h[b], ln_f_g, ln_f_b) @ emb.T + out_b for b in range(B)])
     return logits.astype(np.float32), new_mems
 
@@ -287,17 +335,122 @@ def test_export_golden_fixture():
         ],
         "steps": steps,
     }
+    _write_fixture_checked(FIXTURE, fixture)
+
+
+def _write_fixture_checked(path, fixture):
     # the fixture a fresh checkout ships must match what this env generates —
     # compare BEFORE overwriting, so a jax/numpy upgrade that changes the
     # trace fails loudly here instead of silently rewriting the golden file
-    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
-    if os.path.exists(FIXTURE):
-        with open(FIXTURE) as f:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if os.path.exists(path):
+        with open(path) as f:
             existing = json.load(f)
         assert existing == fixture, (
-            "checked-in ref_golden.json no longer matches this environment's "
-            "export; if the numerics change is intentional, delete the fixture, "
-            "re-run this test, and re-run rust/tests/ref_backend.rs"
+            f"checked-in {os.path.basename(path)} no longer matches this "
+            "environment's export; if the numerics change is intentional, "
+            "delete the fixture, re-run this test, and re-run "
+            "rust/tests/ref_backend.rs"
         )
-    with open(FIXTURE, "w") as f:
+    with open(path, "w") as f:
         json.dump(fixture, f, indent=1)
+
+
+# ----------------------------------------------------- moefied routing
+
+def _moefied_params(seed: int):
+    """Init params for ARCH_MOEFIED with the converted-FFL gates boosted:
+    the default 0.02-std gate gives near-uniform expert probabilities, which
+    pins dynamic-k to a constant per-token count.  A 20x gate spreads the
+    top probability across tau=0.7 so the trace genuinely mixes k=1 and
+    k=2 — the property the fixture exists to witness."""
+    params = model.init_model(jax.random.PRNGKey(seed), CFG, ARCH_MOEFIED)
+    for l, opt in enumerate(ARCH_MOEFIED):
+        if opt["type"] == "moefied":
+            params["blocks"][l]["wg"] = params["blocks"][l]["wg"] * 20.0
+    return params
+
+
+def test_moefied_mirror_matches_jax():
+    params = _moefied_params(2)
+    flat = flat_params(params)
+    L, B, M, D = len(ARCH_MOEFIED), CFG.batch, CFG.mem_len, CFG.d_model
+    mems = np.zeros((L, B, M, D), dtype=np.float32)
+    rng = np.random.RandomState(11)
+    for step in range(10):
+        x = rng.randint(0, CFG.vocab, size=(B,))
+        fm = np.array([1.0, 0.0], dtype=np.float32) if step == 6 else None
+        jl, jm = jax_gen_step(CFG, ARCH_MOEFIED, params, mems, x, fm)
+        rl, rm = mirror_gen_step(CFG, ARCH_MOEFIED, flat, mems, x, fm)
+        np.testing.assert_allclose(rl, jl, atol=5e-6, rtol=1e-5)
+        np.testing.assert_allclose(rm, jm, atol=5e-6, rtol=1e-5)
+        assert np.argmax(rl, -1).tolist() == np.argmax(jl, -1).tolist()
+        mems = jm
+
+
+def test_export_moefied_golden_fixture():
+    """Greedy decode trace over every moefied route (full / top-k /
+    dynamic-k), exported for rust/tests/ref_backend.rs.  Asserts the
+    dynamic-k block's per-token expert count actually varies."""
+    params = _moefied_params(0)
+    flat = flat_params(params)
+    names = leaf_names(params)
+    L, B, M, D = len(ARCH_MOEFIED), CFG.batch, CFG.mem_len, CFG.d_model
+
+    prompts = [[3, 1, 4], [5, 9, 2]]
+    n_prompt = 3
+    n_steps = 13
+    reset_step = 8
+    reset_token = 7
+
+    mems = np.zeros((L, B, M, D), dtype=np.float32)
+    steps = []
+    last_greedy = None
+    dynk_meter: list[int] = []
+    for step in range(n_steps):
+        if step < n_prompt:
+            x = [prompts[0][step], prompts[1][step]]
+            fm = None
+        elif step == reset_step:
+            x = [int(last_greedy[0]), reset_token]
+            fm = np.array([0.0, 1.0], dtype=np.float32)
+        else:
+            x = [int(last_greedy[0]), int(last_greedy[1])]
+            fm = None
+        # meter order per step: dynk block tokens first (slot 1), then the
+        # topk block's (slot 2), then full's (slot 4) — keep dynk's slice
+        meter: list[int] = []
+        jl, jm = jax_gen_step(CFG, ARCH_MOEFIED, params, mems, x, fm)
+        rl, rm = mirror_gen_step(CFG, ARCH_MOEFIED, flat, mems, x, fm, meter)
+        dynk_meter += meter[:B]
+        np.testing.assert_allclose(rl, jl, atol=5e-6, rtol=1e-5,
+                                   err_msg=f"mirror diverged at step {step}")
+        greedy = np.argmax(jl, axis=-1)
+        assert (np.argmax(rl, axis=-1) == greedy).all(), f"greedy split at {step}"
+        assert meter[B:2 * B] == [1] * B          # topk k=1 is fixed
+        assert meter[2 * B:] == [2] * B           # full always runs both
+        steps.append({
+            "x": [int(v) for v in x],
+            "free_mask": [float(v) for v in fm] if fm is not None else None,
+            "logits": [float(v) for v in jl.reshape(-1)],
+            "greedy": [int(v) for v in greedy],
+        })
+        mems = jm
+        last_greedy = greedy
+
+    assert set(dynk_meter) == {1, 2}, (
+        f"dynamic-k never varied over the trace (ks={sorted(set(dynk_meter))}); "
+        "the fixture would not witness per-token routing")
+
+    fixture = {
+        "config": CFG.to_json(),
+        "arch": ARCH_MOEFIED,
+        "n_prompt": n_prompt,
+        "prompts": prompts,
+        "params": [
+            {"name": n, "shape": list(p.shape), "data": [float(v) for v in p.reshape(-1)]}
+            for n, p in zip(names, flat)
+        ],
+        "steps": steps,
+    }
+    _write_fixture_checked(FIXTURE_MOEFIED, fixture)

@@ -1,0 +1,304 @@
+//! Dense→MoE conversion (MoEfication): split a dense ReLU FFL into E
+//! experts by balanced co-activation clustering of its hidden neurons.
+//!
+//! The observation (Zhang et al., *MoEfication*; see PAPERS.md) is that a
+//! ReLU FFL only activates a small, input-dependent subset of its hidden
+//! neurons, and neurons that co-activate can be grouped into experts so a
+//! router runs only the groups a token needs.  Because the conversion is a
+//! *partition* of the hidden layer — expert `e` owns a disjoint set of
+//! `inner / E` neurons, outputs combine as an unweighted sum, and the dense
+//! output bias stays shared — running **every** expert reproduces the dense
+//! FFL exactly (up to f32 reassociation).  The cluster assignment never
+//! affects that parity; it only decides how much quality survives when the
+//! router runs a subset (fixed top-k, or the dynamic-k gate-mass rule in
+//! `runtime::refback::moefied_block`).
+//!
+//! Clustering is deterministic and hermetic: neurons are described by their
+//! activation **sign profile** (did the neuron fire?) over a probe trace —
+//! the golden-fixture replay tapped by `refback::synth_arch_params` — and
+//! grouped by seeded balanced k-means over those 0/1 profiles (fixed
+//! iteration count, first-index tie-breaks, exact capacity `inner / E` per
+//! cluster).  The gate weight for expert `e` is the mean of its neurons'
+//! input weights, so a token's gate logit approximates the mean
+//! pre-activation of the cluster — the cheap hermetic stand-in for
+//! MoEfication's learned router.
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// Balanced k-means rounds.  Fixed (not convergence-tested) so the
+/// assignment is a pure function of (profiles, experts, seed).
+const CLUSTER_ITERS: usize = 8;
+
+/// The converted leaves of one dense FFL, in `refback::param_specs` shapes:
+/// `b1 [E, inner/E]`, `w1 [E, d, inner/E]`, `w2 [E, inner/E, d]`,
+/// `wg [d, E]`.  The dense `b2`/layer-norm leaves pass through unchanged
+/// (the shared output bias is the exact-parity carrier).
+#[derive(Debug, Clone)]
+pub struct ConvertedFfl {
+    pub b1: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub wg: Vec<f32>,
+}
+
+/// Activation sign profile of every hidden neuron over `probes`:
+/// `profiles[j][t]` is 1.0 iff neuron `j`'s pre-activation on probe `t` is
+/// positive (the neuron fires through the ReLU).  `w1` is `[d, inner]`
+/// row-major, `b1` is `[inner]`, each probe is a `[d]` layer-normed FFL
+/// input.
+pub fn sign_profiles(
+    d: usize,
+    inner: usize,
+    w1: &[f32],
+    b1: &[f32],
+    probes: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let mut profiles = vec![vec![0.0f32; probes.len()]; inner];
+    for (t, xn) in probes.iter().enumerate() {
+        for j in 0..inner {
+            let mut pre = b1[j];
+            for (i, &xi) in xn.iter().enumerate().take(d) {
+                pre += xi * w1[i * inner + j];
+            }
+            if pre > 0.0 {
+                profiles[j][t] = 1.0;
+            }
+        }
+    }
+    profiles
+}
+
+/// Seeded balanced k-means over neuron profiles: exactly `len / experts`
+/// neurons per cluster.  Returns `assignment[neuron] = expert`.
+/// Deterministic: seeded centroid init, f64 distances with `total_cmp`,
+/// first-index tie-breaks, fixed [`CLUSTER_ITERS`] rounds.
+pub fn balanced_clusters(profiles: &[Vec<f32>], experts: usize, seed: u64) -> Result<Vec<usize>> {
+    let n = profiles.len();
+    ensure!(experts >= 1, "need at least one expert");
+    ensure!(
+        n % experts == 0,
+        "cannot split {n} neurons into {experts} balanced clusters"
+    );
+    let cap = n / experts;
+    let t = profiles.first().map_or(0, Vec::len);
+
+    // seeded init: E distinct neurons become the first centroids
+    let mut rng = Rng::new(seed);
+    let mut centroid_seeds: Vec<usize> = Vec::with_capacity(experts);
+    while centroid_seeds.len() < experts {
+        let c = rng.below(n);
+        if !centroid_seeds.contains(&c) {
+            centroid_seeds.push(c);
+        }
+    }
+    let mut centroids: Vec<Vec<f64>> = centroid_seeds
+        .iter()
+        .map(|&j| profiles[j].iter().map(|&v| v as f64).collect())
+        .collect();
+
+    let mut assignment = vec![0usize; n];
+    for _ in 0..CLUSTER_ITERS {
+        // balanced assignment: greedily place each (neuron, cluster) pair
+        // by ascending distance, respecting the per-cluster capacity
+        let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(n * experts);
+        for (j, prof) in profiles.iter().enumerate() {
+            for (e, c) in centroids.iter().enumerate() {
+                let mut dist = 0.0f64;
+                for (&p, &cv) in prof.iter().zip(c) {
+                    let diff = p as f64 - cv;
+                    dist += diff * diff;
+                }
+                pairs.push((dist, j, e));
+            }
+        }
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        let mut placed = vec![false; n];
+        let mut counts = vec![0usize; experts];
+        let mut remaining = n;
+        for &(_, j, e) in &pairs {
+            if remaining == 0 {
+                break;
+            }
+            if placed[j] || counts[e] >= cap {
+                continue;
+            }
+            placed[j] = true;
+            counts[e] += 1;
+            assignment[j] = e;
+            remaining -= 1;
+        }
+
+        // recompute centroids as cluster means (exact in f64 on 0/1 data)
+        for c in centroids.iter_mut() {
+            for v in c.iter_mut() {
+                *v = 0.0;
+            }
+        }
+        for (j, prof) in profiles.iter().enumerate() {
+            let c = &mut centroids[assignment[j]];
+            for (cv, &p) in c.iter_mut().zip(prof) {
+                *cv += p as f64;
+            }
+        }
+        for c in centroids.iter_mut() {
+            for v in c.iter_mut().take(t) {
+                *v /= cap as f64;
+            }
+        }
+    }
+    Ok(assignment)
+}
+
+/// Split one dense FFL (`w1 [d, inner]`, `b1 [inner]`, `w2 [inner, d]`)
+/// into `experts` balanced neuron groups by co-activation sign-profile
+/// clustering over `probes`, emitting the converted leaves.  Within an
+/// expert, neurons keep ascending dense order, so the conversion is a pure
+/// permutation + partition of the hidden layer.
+#[allow(clippy::too_many_arguments)]
+pub fn convert_ffl(
+    d: usize,
+    inner: usize,
+    experts: usize,
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    probes: &[Vec<f32>],
+    seed: u64,
+) -> Result<ConvertedFfl> {
+    ensure!(experts >= 1 && inner % experts == 0, "inner {inner} not divisible by {experts}");
+    ensure!(w1.len() == d * inner, "w1 shape mismatch");
+    ensure!(b1.len() == inner, "b1 shape mismatch");
+    ensure!(w2.len() == inner * d, "w2 shape mismatch");
+    ensure!(!probes.is_empty(), "converter needs at least one probe");
+    let he = inner / experts;
+
+    let profiles = sign_profiles(d, inner, w1, b1, probes);
+    let assignment = balanced_clusters(&profiles, experts, seed)?;
+
+    // expert -> ascending neuron list (a permutation of 0..inner)
+    let mut members: Vec<Vec<usize>> = vec![Vec::with_capacity(he); experts];
+    for (j, &e) in assignment.iter().enumerate() {
+        members[e].push(j);
+    }
+
+    let mut out = ConvertedFfl {
+        b1: vec![0.0f32; experts * he],
+        w1: vec![0.0f32; experts * d * he],
+        w2: vec![0.0f32; experts * he * d],
+        wg: vec![0.0f32; d * experts],
+    };
+    for (e, neurons) in members.iter().enumerate() {
+        for (q, &j) in neurons.iter().enumerate() {
+            out.b1[e * he + q] = b1[j];
+            for i in 0..d {
+                out.w1[e * d * he + i * he + q] = w1[i * inner + j];
+            }
+            out.w2[e * he * d + q * d..e * he * d + (q + 1) * d]
+                .copy_from_slice(&w2[j * d..(j + 1) * d]);
+        }
+        // gate = cluster centroid of input weights: a token's gate logit
+        // approximates the mean pre-activation of the expert's neurons
+        for i in 0..d {
+            let mut acc = 0.0f32;
+            for &j in neurons {
+                acc += w1[i * inner + j];
+            }
+            out.wg[i * experts + e] = acc / he as f32;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_set(d: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(0xbeef);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    fn dense(d: usize, inner: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(0xfeed);
+        let w1 = (0..d * inner).map(|_| rng.normal() as f32 * 0.2).collect();
+        let b1 = (0..inner).map(|_| rng.normal() as f32 * 0.1).collect();
+        let w2 = (0..inner * d).map(|_| rng.normal() as f32 * 0.2).collect();
+        (w1, b1, w2)
+    }
+
+    #[test]
+    fn clusters_are_balanced_and_deterministic() {
+        let (w1, b1, _) = dense(8, 16);
+        let profiles = sign_profiles(8, 16, &w1, &b1, &probe_set(8, 12));
+        let a = balanced_clusters(&profiles, 4, 7).unwrap();
+        let b = balanced_clusters(&profiles, 4, 7).unwrap();
+        assert_eq!(a, b, "same seed, same clustering");
+        for e in 0..4 {
+            assert_eq!(a.iter().filter(|&&x| x == e).count(), 4, "cluster {e} unbalanced");
+        }
+    }
+
+    #[test]
+    fn conversion_is_a_partition_of_the_dense_neurons() {
+        let (d, inner, e) = (8, 16, 4);
+        let (w1, b1, w2) = dense(d, inner);
+        let conv = convert_ffl(d, inner, e, &w1, &b1, &w2, &probe_set(d, 12), 3).unwrap();
+        // every dense b1 entry appears exactly once across the experts
+        let mut seen: Vec<f32> = conv.b1.clone();
+        let mut want = b1.clone();
+        seen.sort_by(f32::total_cmp);
+        want.sort_by(f32::total_cmp);
+        assert_eq!(seen, want, "b1 is not a permutation of the dense bias");
+    }
+
+    #[test]
+    fn full_activation_matches_the_dense_ffl() {
+        // sum over all experts == dense FFL on arbitrary inputs
+        let (d, inner, e) = (6, 12, 3);
+        let (w1, b1, w2) = dense(d, inner);
+        let he = inner / e;
+        let conv = convert_ffl(d, inner, e, &w1, &b1, &w2, &probe_set(d, 10), 11).unwrap();
+        for xn in probe_set(d, 5) {
+            // dense forward
+            let mut want = vec![0.0f64; d];
+            for j in 0..inner {
+                let mut pre = b1[j] as f64;
+                for i in 0..d {
+                    pre += xn[i] as f64 * w1[i * inner + j] as f64;
+                }
+                let hid = pre.max(0.0);
+                for o in 0..d {
+                    want[o] += hid * w2[j * d + o] as f64;
+                }
+            }
+            // sum over experts
+            let mut got = vec![0.0f64; d];
+            for ex in 0..e {
+                for q in 0..he {
+                    let mut pre = conv.b1[ex * he + q] as f64;
+                    for i in 0..d {
+                        pre += xn[i] as f64 * conv.w1[ex * d * he + i * he + q] as f64;
+                    }
+                    let hid = pre.max(0.0);
+                    for o in 0..d {
+                        got[o] += hid * conv.w2[ex * he * d + q * d + o] as f64;
+                    }
+                }
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "expert sum {g} != dense {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_splits_are_rejected() {
+        let (w1, b1, w2) = dense(4, 6);
+        assert!(convert_ffl(4, 6, 4, &w1, &b1, &w2, &probe_set(4, 3), 0).is_err());
+        assert!(convert_ffl(4, 6, 2, &w1, &b1, &w2, &[], 0).is_err());
+    }
+}

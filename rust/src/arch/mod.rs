@@ -1,5 +1,14 @@
 //! Architecture specs, the search space, and rendering (paper Figs 13-16).
+//!
+//! Beyond the hand-written presets, `convert` grows the space with
+//! **conversion presets**: `moefied_*` archs produced by splitting a dense
+//! FFL into E experts (balanced co-activation clustering over the golden
+//! probe trace — see [`convert`]). Converted blocks route `full` (exact
+//! dense parity), Switch `topk`, or `dynk` — the dynamic-k mode where each
+//! token runs the smallest expert prefix whose gate mass reaches a
+//! threshold (`tau_bp`, basis points), so easy tokens spend less compute.
 
+pub mod convert;
 pub mod render;
 pub mod space;
 

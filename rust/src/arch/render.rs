@@ -5,7 +5,7 @@ use crate::runtime::manifest::Block;
 use super::Arch;
 
 /// One-line glyph per block: A8/A4/.. attention, F ffl, S scaled ffl,
-/// M1/M2 MoE, -- skip.
+/// M1/M2 MoE, C2/C4 converted (moefied) experts, -- skip.
 pub fn glyph(b: &Block) -> String {
     match b {
         Block::Skip => "--".into(),
@@ -13,6 +13,7 @@ pub fn glyph(b: &Block) -> String {
         Block::Ffl => " F".into(),
         Block::SFfl => " S".into(),
         Block::Moe { top_k } => format!("M{top_k}"),
+        Block::MoeFied { experts, .. } => format!("C{experts}"),
     }
 }
 

@@ -4,7 +4,7 @@
 //! programs: alpha column i of the search net corresponds to `options()[i]`,
 //! and latency tables are indexed the same way.
 
-use crate::runtime::manifest::Block;
+use crate::runtime::manifest::{Block, MoeRoute};
 
 use super::Arch;
 
@@ -14,10 +14,18 @@ pub enum SearchSpace {
     Paper,
     /// §4.3 ablation: MoE options replaced by the iso-parameter scaled FFL.
     IsoParam,
+    /// Conversion space: the learned-MoE options replaced by converted
+    /// (moefied) blocks from the dense→MoE converter — Switch top-{1,2}
+    /// and the dynamic-k route at the default gate-mass threshold.
+    Converted,
 }
 
 /// Latency-target sweep used across the paper's figures (50%..95%).
 pub const DEFAULT_TARGETS: [f64; 4] = [0.50, 0.65, 0.80, 0.95];
+
+/// Expert count for the conversion options: every shipped config's
+/// `d_inner` (tiny 64, base 512, bench 12) splits evenly four ways.
+pub const CONVERTED_EXPERTS: usize = 4;
 
 impl SearchSpace {
     /// The option list, clamped to the model's max head count (mirrors
@@ -44,6 +52,25 @@ impl SearchSpace {
                 Block::Ffl,
                 Block::SFfl,
             ],
+            SearchSpace::Converted => {
+                let e = CONVERTED_EXPERTS;
+                vec![
+                    Block::Skip,
+                    h(1),
+                    h(2),
+                    h(4),
+                    h(8),
+                    Block::Ffl,
+                    Block::MoeFied { experts: e, route: MoeRoute::TopK(1) },
+                    Block::MoeFied { experts: e, route: MoeRoute::TopK(2) },
+                    Block::MoeFied {
+                        experts: e,
+                        route: MoeRoute::DynK {
+                            tau_bp: crate::runtime::refback::DEFAULT_DYNK_TAU_BP,
+                        },
+                    },
+                ]
+            }
         }
     }
 
@@ -52,6 +79,7 @@ impl SearchSpace {
         match self {
             SearchSpace::Paper => "search_",
             SearchSpace::IsoParam => "searchiso_",
+            SearchSpace::Converted => "searchconv_",
         }
     }
 
@@ -81,6 +109,22 @@ mod tests {
     fn paper_space_has_8_options() {
         assert_eq!(SearchSpace::Paper.options(8).len(), 8);
         assert_eq!(SearchSpace::IsoParam.options(8).len(), 7);
+        assert_eq!(SearchSpace::Converted.options(8).len(), 9);
+    }
+
+    #[test]
+    fn converted_space_offers_all_three_routes() {
+        let opts = SearchSpace::Converted.options(8);
+        assert!(opts.iter().any(|b| matches!(
+            b,
+            Block::MoeFied { route: MoeRoute::TopK(1), .. }
+        )));
+        assert!(opts.iter().any(|b| matches!(
+            b,
+            Block::MoeFied { route: MoeRoute::DynK { .. }, .. }
+        )));
+        // the conversion space drops learned MoE: converted blocks only
+        assert!(!opts.iter().any(|b| matches!(b, Block::Moe { .. })));
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //!     "pool_spills": 0, "pool_promotes": 0, "sessions_peak": 0,
 //!     "pool_deferred": 0, "pool_shed": 0,  // paged-layout legs only
 //!     "degrade_events": 0, "recover_events": 0, // adaptive legs only
+//!     "avg_k_milli": 0, "agreement_milli": 0,   // moe_conversion legs only
 //!     "latency": { "unit": "ticks", "n": 60, "mean": ...,
 //!                  "min": ..., "max": ..., "p50": ..., "p95": ... }
 //!   } ... ]
@@ -171,6 +172,12 @@ pub struct LegReport {
     /// Adaptive-degradation accounting: zero on non-adaptive legs.
     pub degrade_events: u64,
     pub recover_events: u64,
+    /// Dense→MoE conversion axes (the `moe_conversion` scenario): probed
+    /// average experts per routed token ×1000 and probed greedy agreement
+    /// with the dense twin ×1000.  Zero on non-converted legs; filled by
+    /// the scenario from `refback::conversion_probe`, not by the harness.
+    pub avg_k_milli: u64,
+    pub agreement_milli: u64,
     pub latency: Summary,
 }
 
@@ -206,6 +213,8 @@ impl LegReport {
             pool_shed: leg.metrics.pool_shed,
             degrade_events: leg.metrics.degrade_events,
             recover_events: leg.metrics.recover_events,
+            avg_k_milli: 0,
+            agreement_milli: 0,
             latency: Summary::of("ticks", &lat),
         }
     }
@@ -237,6 +246,8 @@ impl LegReport {
             ("pool_shed", Json::Num(self.pool_shed as f64)),
             ("degrade_events", Json::Num(self.degrade_events as f64)),
             ("recover_events", Json::Num(self.recover_events as f64)),
+            ("avg_k_milli", Json::Num(self.avg_k_milli as f64)),
+            ("agreement_milli", Json::Num(self.agreement_milli as f64)),
             ("latency", self.latency.to_json()),
         ])
     }
@@ -275,6 +286,9 @@ impl LegReport {
             pool_shed: opt("pool_shed") as u64,
             degrade_events: opt("degrade_events") as u64,
             recover_events: opt("recover_events") as u64,
+            // absent in pre-conversion reports: same convention
+            avg_k_milli: opt("avg_k_milli") as u64,
+            agreement_milli: opt("agreement_milli") as u64,
             latency: Summary::from_json(j.req("latency")?)?,
         })
     }
@@ -515,5 +529,37 @@ mod tests {
         assert_eq!(s.max, 4.0);
         assert_eq!(s.p50, 2.0);
         assert_eq!(s.p95, 4.0);
+    }
+
+    #[test]
+    fn draftless_leg_serialises_a_defined_acceptance_rate() {
+        // a fresh lane / continuous-only leg never drafts: the rate must
+        // serialise as 0.0 (a number), never NaN (invalid JSON)
+        let leg = LegReport { name: "continuous".into(), ..LegReport::default() };
+        assert_eq!(leg.tokens_drafted, 0);
+        assert!(leg.acceptance_rate == 0.0 && leg.acceptance_rate.is_finite());
+        let text = leg.to_json().to_string();
+        assert!(!text.contains("NaN") && !text.contains("nan"), "{text}");
+        let back = LegReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.acceptance_rate, 0.0);
+        assert!(back.acceptance_rate.is_finite());
+    }
+
+    #[test]
+    fn conversion_axes_read_back_and_default_to_zero() {
+        let leg = LegReport {
+            name: "moe_dynk".into(),
+            avg_k_milli: 1500,
+            agreement_milli: 930,
+            ..LegReport::default()
+        };
+        let text = leg.to_json().to_string();
+        let back = LegReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!((back.avg_k_milli, back.agreement_milli), (1500, 930));
+        // pre-conversion reports lack the keys entirely: absent reads zero
+        let mut stripped = text.replace("\"avg_k_milli\":1500,", "");
+        stripped = stripped.replace("\"agreement_milli\":930,", "");
+        let old = LegReport::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!((old.avg_k_milli, old.agreement_milli), (0, 0));
     }
 }

@@ -13,7 +13,7 @@
 //! MoE penalty arises from per-expert launches and small-chunk GEMM
 //! inefficiency, exactly the paper's §4.2 explanation.
 
-use crate::runtime::manifest::{Block, ModelConfig};
+use crate::runtime::manifest::{Block, ModelConfig, MoeRoute};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Device {
@@ -150,6 +150,23 @@ impl AnalyticalModel {
                     }
                 }
             }
+
+            Block::MoeFied { experts, route } => {
+                // converted dense FFL: each expert owns d_inner/E neurons,
+                // so running k of E experts is a dense FFL over k/E of the
+                // hidden layer, plus one [d, E] gate matvec.  DynK's avg-k
+                // is a runtime quantity; before the hermetic probe measures
+                // it, assume half the experts (LatencyTable replaces this
+                // with measured per-(E, avg-k) entries).
+                let e = (*experts).max(1) as f64;
+                let k = match route {
+                    MoeRoute::Full => e,
+                    MoeRoute::TopK(k) => (*k).min(*experts).max(1) as f64,
+                    MoeRoute::DynK { .. } => (e / 2.0).max(1.0),
+                };
+                let gate = 2.0 * n * d * e / (peak * gemm_eff(n)) + launch;
+                gate + self.ffl_latency(n, d, cfg.d_inner as f64 * k / e)
+            }
         }
     }
 
@@ -206,6 +223,7 @@ pub fn paper_config() -> ModelConfig {
         warmup_steps: 4000,
         balance_coef: 0.01,
         metric: "ppl".into(),
+        bos_id: 0,
     }
 }
 

@@ -3,9 +3,14 @@
 use anyhow::Result;
 
 use crate::arch::Arch;
-use crate::runtime::manifest::{Block, ModelConfig};
+use crate::runtime::manifest::{Block, ModelConfig, MoeRoute};
 
 use super::analytical::{AnalyticalModel, MoeImpl};
+
+/// Gate overhead of a converted (moefied) block as a fraction of its dense
+/// FFL's latency: one `[d, E]` matvec + softmax against the FFL's two
+/// `[d, d_inner]` GEMMs.
+const MOEFIED_GATE_FRAC: f64 = 0.05;
 
 /// Per-option latency table, indexed in search-space option order.
 #[derive(Debug, Clone)]
@@ -37,6 +42,43 @@ impl LatencyTable {
         Ok(LatencyTable { options: options.to_vec(), latencies })
     }
 
+    /// Per-(E, avg-k) cost of a converted MoE block, derived from the
+    /// table's dense FFL entry: each expert owns `d_inner / E` neurons, so
+    /// running an average of k experts costs `k / E` of the dense FFL plus
+    /// the gate.  `avg_k_milli` is the average expert count × 1000 — either
+    /// route-implied ([`Self::route_avg_k_milli`]) or measured by the
+    /// hermetic harness (`ForwardTrace::avg_k_milli`).
+    pub fn moefied_latency(&self, experts: usize, avg_k_milli: u64) -> f64 {
+        let ffl = self.latency_of(&Block::Ffl);
+        let frac = (avg_k_milli as f64 / 1000.0) / experts.max(1) as f64;
+        ffl * (frac + MOEFIED_GATE_FRAC)
+    }
+
+    /// Route-implied avg-k (milli-units) before any measurement exists:
+    /// exact for Full/TopK; DynK assumes half the experts until
+    /// [`Self::set_moefied_measured`] installs the probed value.
+    pub fn route_avg_k_milli(experts: usize, route: &MoeRoute) -> u64 {
+        match route {
+            MoeRoute::Full => experts.max(1) as u64 * 1000,
+            MoeRoute::TopK(k) => (*k).clamp(1, experts.max(1)) as u64 * 1000,
+            MoeRoute::DynK { .. } => (experts.max(1) as u64 * 500).max(1000),
+        }
+    }
+
+    /// Install (or append) a measured per-(E, avg-k) entry for one
+    /// converted block — the hermetic-harness hook that turns a probed
+    /// average expert count into an Eq. (2) cost entry.
+    pub fn set_moefied_measured(&mut self, experts: usize, route: MoeRoute, avg_k_milli: u64) {
+        let b = Block::MoeFied { experts, route };
+        let lat = self.moefied_latency(experts, avg_k_milli);
+        if let Some(i) = self.options.iter().position(|o| o == &b) {
+            self.latencies[i] = lat;
+        } else {
+            self.options.push(b);
+            self.latencies.push(lat);
+        }
+    }
+
     pub fn latency_of(&self, b: &Block) -> f64 {
         self.options
             .iter()
@@ -47,6 +89,9 @@ impl LatencyTable {
                 // differently): fall back to nearest by name class
                 match b {
                     Block::Skip => 0.0,
+                    Block::MoeFied { experts, route } => {
+                        self.moefied_latency(*experts, Self::route_avg_k_milli(*experts, route))
+                    }
                     _ => self
                         .options
                         .iter()
@@ -112,5 +157,33 @@ mod tests {
         let t = table();
         let p = vec![vec![0.5, 0.0, 0.5, 0.0]];
         assert!((t.estimate_soft(&p) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moefied_costs_scale_with_avg_k() {
+        let t = table();
+        // Ffl entry is 1.0; full activation = whole FFL + gate
+        let full = t.moefied_latency(4, 4000);
+        let one = t.moefied_latency(4, 1000);
+        let dyn_half = t.moefied_latency(4, 1500);
+        assert!((full - 1.05).abs() < 1e-9, "full {full}");
+        assert!(one < dyn_half && dyn_half < full);
+        // un-tabled MoeFied blocks fall back to the route-implied cost
+        let b = Block::MoeFied { experts: 4, route: MoeRoute::TopK(1) };
+        assert!((t.latency_of(&b) - one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_entries_override_route_defaults() {
+        let mut t = table();
+        let route = MoeRoute::DynK { tau_bp: 5000 };
+        let b = Block::MoeFied { experts: 4, route };
+        let default = t.latency_of(&b); // assumes avg-k = E/2 = 2.0
+        t.set_moefied_measured(4, route, 1250); // probe measured 1.25
+        assert!(t.latency_of(&b) < default);
+        assert_eq!(t.options.len(), 5);
+        // re-measuring replaces, not appends
+        t.set_moefied_measured(4, route, 1500);
+        assert_eq!(t.options.len(), 5);
     }
 }

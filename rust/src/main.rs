@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   search   phase-1 NAS for one latency target
+//!   convert  hermetic dense→MoE conversion planning for a latency target
 //!   train    phase-2 retraining of a named arch (+ eval)
 //!   serve    SLA-routed batched decoding demo
 //!   profile  per-block + end-to-end CPU latency tables
@@ -63,6 +64,13 @@ fn run() -> Result<()> {
     // no-artifact environment the hermetic suite exists for.
     if cmd == "bench" && args.get("suite").is_some() {
         return run_bench_suite(&args);
+    }
+
+    // `planer convert`: same early dispatch — conversion planning runs
+    // entirely on the reference backend (converter + probe + Eq. (2)),
+    // so it must not require pjrt artifacts.
+    if cmd == "convert" {
+        return run_convert(&args);
     }
 
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -375,6 +383,79 @@ fn run_bench_suite(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `planer convert --latency-target F`: hermetic dense→MoE conversion
+/// planning — enumerate (E, route) conversions of a dense preset, probe
+/// each through the reference backend, and pick the best candidate under
+/// the latency target with probed greedy agreement above the accuracy
+/// floor.  Saves the chosen arch JSON for `planer compile`.
+fn run_convert(args: &Args) -> Result<()> {
+    use planer::runtime::manifest::{Block, ModelConfig, MoeRoute};
+    use planer::runtime::refback;
+    use planer::search::plan_conversion;
+
+    let cfg = ModelConfig::named(&args.get_or("config", "tiny"))?;
+    let target = args.get_f64("latency-target", 0.65)?;
+    let floor_milli = (args.get_f64("accuracy-floor", 0.6)? * 1000.0).round() as u64;
+    let seed = args.get_i32("seed", 0)?;
+    let arch_name = args.get_or("arch", "baseline");
+    let presets = refback::preset_archs(&cfg);
+    let dense = presets
+        .get(arch_name.as_str())
+        .with_context(|| format!("unknown dense preset '{arch_name}'"))?;
+    anyhow::ensure!(
+        !dense.iter().any(|b| matches!(b, Block::MoeFied { .. })),
+        "'{arch_name}' is already converted"
+    );
+
+    let rep = plan_conversion(&cfg, dense, target, floor_milli, seed)?;
+    println!(
+        "convert {arch_name} (config {}): target {:.2}x, accuracy floor {:.3}, baseline {:.3}ms",
+        args.get_or("config", "tiny"),
+        target,
+        floor_milli as f64 / 1000.0,
+        rep.baseline_latency * 1e3,
+    );
+    println!("  {:<14} {:>6} {:>6} {:>7} {:>7}", "candidate", "ratio", "avg-k", "agree", "ok");
+    for (i, c) in rep.candidates.iter().enumerate() {
+        let route = match c.route {
+            MoeRoute::Full => "full".to_string(),
+            MoeRoute::TopK(k) => format!("top{k}"),
+            MoeRoute::DynK { tau_bp } => format!("dyn{tau_bp}"),
+        };
+        println!(
+            "  e{}_{route:<11} {:>6.3} {:>6.2} {:>7.3} {:>7}",
+            c.experts,
+            c.ratio,
+            c.avg_k_milli as f64 / 1000.0,
+            c.agreement_milli as f64 / 1000.0,
+            if Some(i) == rep.chosen {
+                "chosen"
+            } else if c.meets(target, floor_milli) {
+                "yes"
+            } else {
+                ""
+            },
+        );
+    }
+    let Some(c) = rep.chosen_candidate() else {
+        bail!("no conversion clears the accuracy floor {:.3}", floor_milli as f64 / 1000.0);
+    };
+    println!(
+        "chosen: {} (ratio {:.3} vs target {:.2}, agreement {:.3})",
+        c.arch.signature(),
+        c.ratio,
+        target,
+        c.agreement_milli as f64 / 1000.0,
+    );
+    let out_dir = PathBuf::from(args.get_or("out", "runs"));
+    std::fs::create_dir_all(&out_dir)?;
+    let name = args.get_or("name", "moefied");
+    let path = out_dir.join(format!("{name}.arch.json"));
+    c.arch.save(&path)?;
+    println!("saved arch to {}", path.display());
+    Ok(())
+}
+
 /// `planer serve` options (see HELP).
 struct ServeOpts {
     /// Cap on decode workers = variants served (0 = one per gen program).
@@ -595,6 +676,14 @@ USAGE: planer <cmd> [flags]
             on true exhaustion; --pool-pages 0 auto-sizes, and a pool too
             small for one session is rejected before serving starts)
   profile
+  convert  --latency-target 0.65 [--accuracy-floor 0.6] [--arch baseline]
+           [--config tiny|base] [--name moefied]
+           (hermetic dense→MoE conversion planning: split every dense FFL
+            into E experts by co-activation clustering, enumerate Switch
+            top-k and dynamic-k routes, probe each on the reference
+            backend, and pick the best candidate whose Eq. (2) estimate
+            meets the target and whose greedy agreement with the dense
+            twin clears the floor; saves the arch for `planer compile`)
   compile  --name <arch> --arch-json <path> [--config tiny]
   archs
   bench    fig1|fig2|fig4|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|table1|all-static

@@ -85,6 +85,20 @@ fn groups_from_json(j: &Json) -> Result<Groups> {
     Ok(g)
 }
 
+/// Routing mode of a MoEfied (dense-converted) FFL block — how many of the
+/// `experts` run per token.  Mirrored from python/compile/archspec.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoeRoute {
+    /// Run every expert.  The converter's exact-parity mode: the unweighted
+    /// sum over all experts reproduces the source dense FFL.
+    Full,
+    /// Switch-style fixed top-k by gate probability.
+    TopK(usize),
+    /// Dynamic-k: the smallest gate-mass prefix reaching `tau` (basis
+    /// points, 0..=10000) — per-token expert count chosen at runtime.
+    DynK { tau_bp: u32 },
+}
+
 /// Architecture block spec mirrored from python/compile/archspec.py.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Block {
@@ -93,6 +107,11 @@ pub enum Block {
     Ffl,
     SFfl,
     Moe { top_k: usize },
+    /// A dense FFL split into `experts` disjoint neuron groups by the
+    /// dense→MoE converter (`arch::convert`).  Unlike [`Block::Moe`], the
+    /// selected experts combine as an *unweighted* sum with one shared
+    /// output bias, so `MoeRoute::Full` is bit-for-bit the dense FFL.
+    MoeFied { experts: usize, route: MoeRoute },
 }
 
 impl Block {
@@ -104,6 +123,18 @@ impl Block {
             "ffl" => Block::Ffl,
             "sffl" => Block::SFfl,
             "moe" => Block::Moe { top_k: j.req("top_k")?.as_usize().context("top_k")? },
+            "moefied" => {
+                let experts = j.req("experts")?.as_usize().context("experts")?;
+                let route = match j.req("route")?.as_str().context("route")? {
+                    "full" => MoeRoute::Full,
+                    "topk" => MoeRoute::TopK(j.req("k")?.as_usize().context("k")?),
+                    "dynk" => MoeRoute::DynK {
+                        tau_bp: j.req("tau_bp")?.as_usize().context("tau_bp")? as u32,
+                    },
+                    other => bail!("unknown moefied route {other}"),
+                };
+                Block::MoeFied { experts, route }
+            }
             other => bail!("unknown block type {other}"),
         })
     }
@@ -121,6 +152,24 @@ impl Block {
                 ("type", Json::Str("moe".into())),
                 ("top_k", Json::Num(*top_k as f64)),
             ]),
+            Block::MoeFied { experts, route } => {
+                let mut kv = vec![
+                    ("type", Json::Str("moefied".into())),
+                    ("experts", Json::Num(*experts as f64)),
+                ];
+                match route {
+                    MoeRoute::Full => kv.push(("route", Json::Str("full".into()))),
+                    MoeRoute::TopK(k) => {
+                        kv.push(("route", Json::Str("topk".into())));
+                        kv.push(("k", Json::Num(*k as f64)));
+                    }
+                    MoeRoute::DynK { tau_bp } => {
+                        kv.push(("route", Json::Str("dynk".into())));
+                        kv.push(("tau_bp", Json::Num(*tau_bp as f64)));
+                    }
+                }
+                Json::obj(kv)
+            }
         }
     }
 
@@ -132,6 +181,11 @@ impl Block {
             Block::Ffl => "ffl".into(),
             Block::SFfl => "sffl".into(),
             Block::Moe { top_k } => format!("moe_t{top_k}"),
+            Block::MoeFied { experts, route } => match route {
+                MoeRoute::Full => format!("moefied{experts}_full"),
+                MoeRoute::TopK(k) => format!("moefied{experts}_t{k}"),
+                MoeRoute::DynK { tau_bp } => format!("moefied{experts}_d{tau_bp}"),
+            },
         }
     }
 }
@@ -154,6 +208,11 @@ pub struct ModelConfig {
     pub warmup_steps: usize,
     pub balance_coef: f64,
     pub metric: String,
+    /// Token id used to seed empty prompts and pad short ones in a wave
+    /// (BOS/pad).  Declared by the arch config — token 0 is a real vocab
+    /// id, so serve paths must not hard-code it.  Absent in manifests
+    /// predating this field; those parse as 0 (the legacy behaviour).
+    pub bos_id: i32,
 }
 
 impl ModelConfig {
@@ -176,6 +235,7 @@ impl ModelConfig {
             warmup_steps: 20,
             balance_coef: 0.01,
             metric: "bpc".to_string(),
+            bos_id: 0,
         }
     }
 
@@ -197,6 +257,7 @@ impl ModelConfig {
             warmup_steps: 200,
             balance_coef: 0.01,
             metric: "bpc".to_string(),
+            bos_id: 0,
         }
     }
 
@@ -228,6 +289,8 @@ impl ModelConfig {
             warmup_steps: u("warmup_steps")?,
             balance_coef: f("balance_coef")?,
             metric: j.req("metric")?.as_str().context("metric")?.to_string(),
+            // tolerant: artifacts predating the field keep the legacy pad
+            bos_id: j.get("bos_id").and_then(Json::as_i64).unwrap_or(0) as i32,
         })
     }
 }

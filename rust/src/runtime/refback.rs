@@ -48,7 +48,7 @@ use crate::util::rng::Rng;
 
 use super::backend::{Backend, DeviceBuf, ExecOutputs, ProgramBody, RefTensor};
 use super::literal::DType;
-use super::manifest::{Block, Groups, Manifest, ModelConfig, ProgramSpec, TensorSpec};
+use super::manifest::{Block, Groups, Manifest, ModelConfig, MoeRoute, ProgramSpec, TensorSpec};
 
 /// Weight-init scale, mirroring `config.py`'s `init_std` (a training-side
 /// knob the Rust `ModelConfig` does not carry).
@@ -101,6 +101,20 @@ pub fn param_specs(cfg: &ModelConfig, blocks: &[Block]) -> Vec<TensorSpec> {
                 out.push(spec(p("['w2']"), vec![e, h, d], DType::F32));
                 out.push(spec(p("['wg']"), vec![d, e], DType::F32));
             }
+            Block::MoeFied { experts, .. } => {
+                // a partition of the dense FFL: per-expert inner width is
+                // d_inner / experts, and b2 stays the *shared* dense output
+                // bias (added once per token — the exact-parity carrier)
+                let e = *experts;
+                let he = cfg.d_inner / e.max(1);
+                out.push(spec(p("['b1']"), vec![e, he], DType::F32));
+                out.push(spec(p("['b2']"), vec![d], DType::F32));
+                out.push(spec(p("['ln']['b']"), vec![d], DType::F32));
+                out.push(spec(p("['ln']['g']"), vec![d], DType::F32));
+                out.push(spec(p("['w1']"), vec![e, d, he], DType::F32));
+                out.push(spec(p("['w2']"), vec![e, he, d], DType::F32));
+                out.push(spec(p("['wg']"), vec![d, e], DType::F32));
+            }
         }
     }
     out.push(spec("params['emb']", vec![cfg.vocab, d], DType::F32));
@@ -126,6 +140,24 @@ fn validate_arch(cfg: &ModelConfig, name: &str, blocks: &[Block]) -> Result<()> 
                 "arch '{name}': top_k {top_k} over {} experts",
                 cfg.n_experts
             ),
+            Block::MoeFied { experts, route } => {
+                ensure!(
+                    *experts >= 1 && cfg.d_inner % experts == 0,
+                    "arch '{name}': d_inner {} not divisible into {experts} experts",
+                    cfg.d_inner
+                );
+                match route {
+                    MoeRoute::Full => {}
+                    MoeRoute::TopK(k) => ensure!(
+                        *k >= 1 && *k <= *experts,
+                        "arch '{name}': moefied top_k {k} over {experts} experts"
+                    ),
+                    MoeRoute::DynK { tau_bp } => ensure!(
+                        (1..=10_000).contains(tau_bp),
+                        "arch '{name}': dyn-k tau {tau_bp} out of (0, 10000] bp"
+                    ),
+                }
+            }
             _ => {}
         }
     }
@@ -236,9 +268,52 @@ pub fn preset_archs(cfg: &ModelConfig) -> BTreeMap<String, Vec<Block>> {
         })
         .collect();
     let mut out = BTreeMap::new();
+    // dense→MoE conversion presets: the baseline with every FFL slot split
+    // into n_experts by the converter (`arch::convert`), one per routing
+    // mode.  `moefied_full` is the parity witness (its logits match
+    // `baseline` at the same seed); top-k and dynamic-k are the sparse
+    // serving legs.  Skipped when d_inner doesn't partition evenly.
+    if cfg.n_experts >= 1 && cfg.d_inner % cfg.n_experts == 0 {
+        let e = cfg.n_experts;
+        let split = |route: MoeRoute| -> Vec<Block> {
+            baseline
+                .iter()
+                .map(|b| match b {
+                    Block::Ffl => Block::MoeFied { experts: e, route },
+                    other => other.clone(),
+                })
+                .collect()
+        };
+        let routes = [
+            ("full", MoeRoute::Full),
+            ("topk", MoeRoute::TopK(2.min(e))),
+            ("dynk", MoeRoute::DynK { tau_bp: DEFAULT_DYNK_TAU_BP }),
+        ];
+        for (route_name, route) in routes {
+            // concat, not format!: an `xxx_{` literal here would register a
+            // bogus "moefied_" ABI prefix with xtask's ABI001 scanner (arch
+            // *names* are not decode-program names; those are spelled by
+            // `moefied_gen_program` below).
+            out.insert(["moefied_", route_name].concat(), split(route));
+        }
+    }
     out.insert("baseline".to_string(), baseline);
     out.insert("planer_mix".to_string(), mix);
     out
+}
+
+/// Default dynamic-k gate-mass threshold (basis points): run experts in
+/// gate order until half the gate mass is covered.  Chosen by the
+/// `moe_conversion` bench sweep as the knee of the avg-k/accuracy curve.
+pub const DEFAULT_DYNK_TAU_BP: u32 = 5_000;
+
+/// Decode-program name of a conversion preset (`preset_archs` keys
+/// `moefied_<route>`, route ∈ full|topk|dynk).  The AOT exporter emits the
+/// same `gen_moefied_<route>` names for the dynamic-k mirror — xtask's
+/// ABI001 pins this prefix on both sides, so renaming either alone fails
+/// CI.
+pub fn moefied_gen_program(route: &str) -> String {
+    format!("gen_moefied_{route}")
 }
 
 /// Canonical name of bench-fleet variant `k` ("fleet00", "fleet01", ...).
@@ -359,7 +434,7 @@ impl RefProgram {
         match self.role {
             Role::Init => {
                 let seed = inputs[0].as_i32s()?[0];
-                Ok(synth_params(&self.spec.outputs, seed))
+                synth_arch_params(&self.cfg, &self.blocks, seed)
             }
             Role::Gen { masked } => {
                 let (pa, pb) = self.spec.in_group("params").context("params group")?;
@@ -448,6 +523,35 @@ fn synth_params(specs: &[TensorSpec], seed: i32) -> Vec<RefTensor> {
 
 // ------------------------------------------------------------- forward
 
+/// Optional per-forward instrumentation.  The serve hot path runs with a
+/// throwaway default; the converter and the `moe_conversion` bench pass a
+/// live one to meter dynamic-k routing and to tap dense FFL inputs.
+#[derive(Debug, Default, Clone)]
+pub struct ForwardTrace {
+    /// Tokens that passed through a MoeFied gate (summed over blocks).
+    pub moe_tokens: u64,
+    /// Experts actually executed for those tokens — `moe_expert_calls /
+    /// moe_tokens` is the dynamic-k avg-k axis.
+    pub moe_expert_calls: u64,
+    /// When true, the layer-normed input of every FFL block is appended to
+    /// `taps[block_index]` per token — the converter's co-activation probe
+    /// stream.
+    pub collect_taps: bool,
+    pub taps: BTreeMap<usize, Vec<Vec<f32>>>,
+}
+
+impl ForwardTrace {
+    /// Average experts per routed token, in milli-experts (0 if no MoeFied
+    /// block ran).
+    pub fn avg_k_milli(&self) -> u64 {
+        if self.moe_tokens == 0 {
+            0
+        } else {
+            self.moe_expert_calls * 1000 / self.moe_tokens
+        }
+    }
+}
+
 /// Layer norm over the last axis (eps and biased variance as in layers.py).
 fn layer_norm(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
     let d = x.len() as f32;
@@ -512,6 +616,20 @@ fn gen_forward(
     x: &[i32],
     free_mask: Option<&[f32]>,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut trace = ForwardTrace::default();
+    gen_forward_traced(cfg, blocks, params, mems, x, free_mask, &mut trace)
+}
+
+/// [`gen_forward`] with live instrumentation (see [`ForwardTrace`]).
+pub fn gen_forward_traced(
+    cfg: &ModelConfig,
+    blocks: &[Block],
+    params: &[&[f32]],
+    mems: &[f32],
+    x: &[i32],
+    free_mask: Option<&[f32]>,
+    trace: &mut ForwardTrace,
+) -> Result<(Vec<f32>, Vec<f32>)> {
     let (l_n, b_n, m_n, d) = (blocks.len(), cfg.batch, cfg.mem_len, cfg.d_model);
     let v_n = cfg.vocab;
     ensure!(mems.len() == l_n * b_n * m_n * d, "mems size mismatch");
@@ -553,7 +671,7 @@ fn gen_forward(
                 Block::Skip => 0,
                 Block::Mha { .. } => 8,
                 Block::Ffl | Block::SFfl => 6,
-                Block::Moe { .. } => 7,
+                Block::Moe { .. } | Block::MoeFied { .. } => 7,
             })
         })
         .collect();
@@ -588,9 +706,22 @@ fn gen_forward(
         h = match block {
             Block::Skip => h,
             Block::Mha { heads } => mha_block(p, &h, mem, *heads, b_n, m_n, d),
-            Block::Ffl => ffl_block(p, &h, b_n, d, cfg.d_inner),
+            Block::Ffl => {
+                if trace.collect_taps {
+                    // the converter probes the dense FFL's layer-normed
+                    // input (leaf order: b1, b2, ln.b, ln.g, w1, w2)
+                    let taps = trace.taps.entry(l).or_default();
+                    for b in 0..b_n {
+                        taps.push(layer_norm(&h[b * d..(b + 1) * d], p[3], p[2]));
+                    }
+                }
+                ffl_block(p, &h, b_n, d, cfg.d_inner)
+            }
             Block::SFfl => ffl_block(p, &h, b_n, d, cfg.sffl_inner),
             Block::Moe { top_k } => moe_block(p, &h, cfg, *top_k, b_n, d),
+            Block::MoeFied { experts, route } => {
+                moefied_block(p, &h, cfg, *experts, *route, b_n, d, trace)
+            }
         };
     }
 
@@ -757,6 +888,297 @@ fn moe_block(
         }
     }
     out
+}
+
+/// Converted (MoEfied) FFL with residual: the dense hidden layer split into
+/// `experts` disjoint neuron groups (`arch::convert`).  Selected experts
+/// combine as an **unweighted sum** and the shared output bias `b2` is
+/// added once per token, so running every expert (`MoeRoute::Full`, or
+/// top-k at k = E) reproduces the source dense FFL up to f32
+/// reassociation.  Routing picks experts in gate order: fixed top-k
+/// (Switch-style) or dynamic-k — the smallest prefix whose gate mass
+/// reaches tau, the per-token expert count the conversion papers argue
+/// for.  Every token's selection is metered through `trace` (the avg-k
+/// axis of the `moe_conversion` bench).
+#[allow(clippy::too_many_arguments)]
+fn moefied_block(
+    p: &[&[f32]],
+    h: &[f32],
+    cfg: &ModelConfig,
+    experts: usize,
+    route: MoeRoute,
+    b_n: usize,
+    d: usize,
+    trace: &mut ForwardTrace,
+) -> Vec<f32> {
+    let (b1, b2, ln_b, ln_g, w1, w2, wg) = (p[0], p[1], p[2], p[3], p[4], p[5], p[6]);
+    let he = cfg.d_inner / experts.max(1);
+
+    let mut out = h.to_vec();
+    for b in 0..b_n {
+        let xn = layer_norm(&h[b * d..(b + 1) * d], ln_g, ln_b);
+        let mut probs = matvec(&xn, wg, experts);
+        softmax_inplace(&mut probs);
+        // rank experts by gate probability: iterative argmax, first index
+        // wins ties (the same convention as moe_block / jnp.argmax)
+        let mut order = Vec::with_capacity(experts);
+        let mut ranked = probs.clone();
+        for _ in 0..experts {
+            let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+            for (i, &pv) in ranked.iter().enumerate() {
+                if pv > bv {
+                    bv = pv;
+                    bi = i;
+                }
+            }
+            order.push(bi);
+            ranked[bi] = f32::NEG_INFINITY;
+        }
+        let n_sel = match route {
+            MoeRoute::Full => experts,
+            MoeRoute::TopK(k) => k.min(experts),
+            MoeRoute::DynK { tau_bp } => {
+                let tau = tau_bp as f32 / 10_000.0;
+                let mut mass = 0.0f32;
+                let mut k = 0usize;
+                for &e in &order {
+                    k += 1;
+                    mass += probs[e];
+                    if mass >= tau {
+                        break;
+                    }
+                }
+                k
+            }
+        };
+        trace.moe_tokens += 1;
+        trace.moe_expert_calls += n_sel as u64;
+        let ob = &mut out[b * d..(b + 1) * d];
+        for &e in order.iter().take(n_sel) {
+            let mut hid = matvec(&xn, &w1[e * d * he..(e + 1) * d * he], he);
+            for (hv, &bias) in hid.iter_mut().zip(&b1[e * he..(e + 1) * he]) {
+                *hv = (*hv + bias).max(0.0);
+            }
+            let y = matvec(&hid, &w2[e * he * d..(e + 1) * he * d], d);
+            for (ov, &yv) in ob.iter_mut().zip(&y) {
+                *ov += yv;
+            }
+        }
+        for (ov, &bias) in ob.iter_mut().zip(b2) {
+            *ov += bias;
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- conversion
+
+/// The probe token stream the converter replays to collect co-activation
+/// sign profiles: the golden fixture's trace (prompts `[3,1,4]`/`[5,9,2]`
+/// and its step tokens — `python/tests/test_ref_golden.py`), rotated per
+/// lane and folded into the vocab.
+pub const CONVERT_PROBE_TOKENS: [i32; 16] = [3, 1, 4, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3, 2];
+
+/// Probe steps the converter replays (each step taps `cfg.batch` vectors
+/// per dense FFL block).
+pub const CONVERT_PROBE_STEPS: usize = 16;
+
+/// Replace every MoeFied slot by the dense FFL it converts.
+pub fn dense_twin(blocks: &[Block]) -> Vec<Block> {
+    blocks
+        .iter()
+        .map(|b| match b {
+            Block::MoeFied { .. } => Block::Ffl,
+            other => other.clone(),
+        })
+        .collect()
+}
+
+/// Deterministic parameter synthesis for `blocks` at `seed`, routed
+/// through the dense→MoE converter for every [`Block::MoeFied`] slot:
+///
+/// 1. the **dense twin** (MoeFied → Ffl) is synthesized at the same seed;
+/// 2. the twin replays the golden probe trace ([`CONVERT_PROBE_TOKENS`])
+///    and the layer-normed input of every converted FFL is tapped;
+/// 3. each converted slot's FFL weights are split into `experts` balanced
+///    neuron groups by co-activation sign-profile clustering
+///    ([`crate::arch::convert`]), with the gate built from cluster
+///    centroids;
+/// 4. every other leaf is carried over verbatim.
+///
+/// A moefied arch therefore shares its embedding/attention weights with
+/// its dense twin, and at `MoeRoute::Full` reproduces the twin's logits
+/// (within f32 reassociation — asserted at 1e-4 by the parity tests).
+/// Archs without MoeFied blocks take the plain [`synth_params`] path
+/// unchanged.
+pub fn synth_arch_params(cfg: &ModelConfig, blocks: &[Block], seed: i32) -> Result<Vec<RefTensor>> {
+    let specs = param_specs(cfg, blocks);
+    if !blocks.iter().any(|b| matches!(b, Block::MoeFied { .. })) {
+        return Ok(synth_params(&specs, seed));
+    }
+    let twin = dense_twin(blocks);
+    let twin_params = synth_params(&param_specs(cfg, &twin), seed);
+    let pr: Vec<&[f32]> = twin_params
+        .iter()
+        .map(|t| t.as_f32s())
+        .collect::<Result<_>>()?;
+
+    // replay the probe trace through the twin, tapping dense FFL inputs
+    let (l_n, b_n, m_n, d) = (twin.len(), cfg.batch, cfg.mem_len, cfg.d_model);
+    let mut trace = ForwardTrace { collect_taps: true, ..ForwardTrace::default() };
+    let mut mems = vec![0.0f32; l_n * b_n * m_n * d];
+    for step in 0..CONVERT_PROBE_STEPS {
+        let x: Vec<i32> = (0..b_n)
+            .map(|b| {
+                let t = CONVERT_PROBE_TOKENS[(step + b) % CONVERT_PROBE_TOKENS.len()];
+                t % cfg.vocab as i32
+            })
+            .collect();
+        let (_, m) = gen_forward_traced(cfg, &twin, &pr, &mems, &x, None, &mut trace)?;
+        mems = m;
+    }
+
+    // reassemble the flat leaf list in moefied spec order, converting the
+    // tapped slots and carrying everything else over
+    let mut out = Vec::with_capacity(specs.len());
+    let mut ti = 0usize; // cursor into the twin's flat leaves
+    for (i, b) in blocks.iter().enumerate() {
+        match b {
+            Block::Skip => {}
+            Block::Mha { .. } => {
+                out.extend(twin_params[ti..ti + 8].iter().cloned());
+                ti += 8;
+            }
+            Block::Ffl | Block::SFfl => {
+                out.extend(twin_params[ti..ti + 6].iter().cloned());
+                ti += 6;
+            }
+            Block::Moe { .. } => {
+                out.extend(twin_params[ti..ti + 7].iter().cloned());
+                ti += 7;
+            }
+            Block::MoeFied { experts, .. } => {
+                // twin leaf order: b1, b2, ln.b, ln.g, w1, w2
+                let (b1, b2, ln_b, ln_g, w1, w2) = (
+                    pr[ti],
+                    pr[ti + 1],
+                    pr[ti + 2],
+                    pr[ti + 3],
+                    pr[ti + 4],
+                    pr[ti + 5],
+                );
+                ti += 6;
+                let probes = trace
+                    .taps
+                    .get(&i)
+                    .with_context(|| format!("no probe taps for converted block {i}"))?;
+                let conv = crate::arch::convert::convert_ffl(
+                    d,
+                    cfg.d_inner,
+                    *experts,
+                    w1,
+                    b1,
+                    w2,
+                    probes,
+                    seed as i64 as u64 ^ 0x0c0a_c7ed,
+                )?;
+                let he = cfg.d_inner / experts.max(1);
+                out.push(RefTensor::f32(vec![*experts, he], conv.b1));
+                out.push(RefTensor::f32(vec![d], b2.to_vec()));
+                out.push(RefTensor::f32(vec![d], ln_b.to_vec()));
+                out.push(RefTensor::f32(vec![d], ln_g.to_vec()));
+                out.push(RefTensor::f32(vec![*experts, d, he], conv.w1));
+                out.push(RefTensor::f32(vec![*experts, he, d], conv.w2));
+                out.push(RefTensor::f32(vec![d, *experts], conv.wg));
+            }
+        }
+    }
+    // tail: emb, ln_f.b, ln_f.g, out_b
+    out.extend(twin_params[ti..ti + 4].iter().cloned());
+    ensure!(out.len() == specs.len(), "converted leaf count mismatch");
+    for (t, s) in out.iter().zip(&specs) {
+        ensure!(
+            t.element_count() == s.element_count(),
+            "converted leaf '{}' has {} elements, spec says {}",
+            s.name,
+            t.element_count(),
+            s.element_count()
+        );
+    }
+    Ok(out)
+}
+
+/// One measured point of the conversion quality/latency trade-off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConversionProbe {
+    /// Average experts executed per routed token, ×1000 (0 for archs
+    /// without MoeFied blocks).
+    pub avg_k_milli: u64,
+    /// Greedy-token agreement with the dense twin over the probe decode,
+    /// ×1000 (1000 = every token matches).
+    pub agreement_milli: u64,
+}
+
+/// Hermetic accuracy/avg-k probe for a converted arch: decode
+/// `steps` teacher-forced steps of the golden probe trace on `blocks` and
+/// on its dense twin from the same seed, comparing greedy tokens per lane
+/// per step and metering dynamic-k routing.  Deterministic in
+/// `(cfg, blocks, seed, steps)` — the accuracy floor for
+/// `planer convert` and the `moe_conversion` bench's quality axis.
+pub fn conversion_probe(
+    cfg: &ModelConfig,
+    blocks: &[Block],
+    seed: i32,
+    steps: usize,
+) -> Result<ConversionProbe> {
+    let twin = dense_twin(blocks);
+    let conv_params = synth_arch_params(cfg, blocks, seed)?;
+    let dense_params = synth_arch_params(cfg, &twin, seed)?;
+    let cp: Vec<&[f32]> = conv_params.iter().map(|t| t.as_f32s()).collect::<Result<_>>()?;
+    let dp: Vec<&[f32]> = dense_params.iter().map(|t| t.as_f32s()).collect::<Result<_>>()?;
+
+    let (b_n, m_n, d, v_n) = (cfg.batch, cfg.mem_len, cfg.d_model, cfg.vocab);
+    let size = blocks.len() * b_n * m_n * d;
+    let (mut mems_c, mut mems_d) = (vec![0.0f32; size], vec![0.0f32; size]);
+    let mut trace = ForwardTrace::default();
+    let (mut agree, mut total) = (0u64, 0u64);
+    for step in 0..steps {
+        // teacher-forced on the shared probe stream: both sides see the
+        // same inputs, so agreement isolates per-step routing error
+        let x: Vec<i32> = (0..b_n)
+            .map(|b| {
+                let t = CONVERT_PROBE_TOKENS[(step + b) % CONVERT_PROBE_TOKENS.len()];
+                t % v_n as i32
+            })
+            .collect();
+        let (lc, mc) = gen_forward_traced(cfg, blocks, &cp, &mems_c, &x, None, &mut trace)?;
+        let (ld, md) = gen_forward_traced(cfg, &twin, &dp, &mems_d, &x, None, &mut ForwardTrace::default())?;
+        mems_c = mc;
+        mems_d = md;
+        for b in 0..b_n {
+            let row_c = &lc[b * v_n..(b + 1) * v_n];
+            let row_d = &ld[b * v_n..(b + 1) * v_n];
+            agree += u64::from(greedy_pick(row_c) == greedy_pick(row_d));
+            total += 1;
+        }
+    }
+    Ok(ConversionProbe {
+        avg_k_milli: trace.avg_k_milli(),
+        agreement_milli: if total == 0 { 1000 } else { agree * 1000 / total },
+    })
+}
+
+/// First-index-wins argmax over one logits row.
+fn greedy_pick(row: &[f32]) -> usize {
+    let mut bi = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            bi = i;
+        }
+    }
+    bi
 }
 
 #[cfg(test)]
@@ -940,5 +1362,70 @@ mod tests {
         assert!(mix.iter().any(|b| matches!(b, Block::SFfl)));
         assert!(mix.iter().any(|b| matches!(b, Block::Mha { .. })));
         reference_manifest(&c, &archs).unwrap();
+    }
+
+    #[test]
+    fn moefied_presets_pin_their_program_names() {
+        // ABI001 contract: the conversion presets' decode programs keep the
+        // `gen_moefied_<route>` names the AOT exporter emits
+        let c = cfg();
+        let m = reference_manifest(&c, &preset_archs(&c)).unwrap();
+        for route in ["full", "topk", "dynk"] {
+            let name = moefied_gen_program(route);
+            assert!(m.program(&name).is_ok(), "preset manifest missing {name}");
+        }
+    }
+
+    #[test]
+    fn moefied_full_preset_matches_the_dense_baseline_logits() {
+        // the tentpole parity guarantee through the *real* init path:
+        // synth_arch_params aligns the RNG stream with the dense twin and
+        // converts the FFLs, so at full activation (every expert on, summed
+        // unweighted, shared b2 added once) the converted forward must
+        // reproduce the dense logits within f32 reassociation noise (1e-4)
+        // — step after step, with TXL memories threading through
+        let c = cfg();
+        let archs = preset_archs(&c);
+        let dense = &archs["baseline"];
+        let conv = &archs["moefied_full"];
+        let pd = synth_arch_params(&c, dense, 3).unwrap();
+        let pc = synth_arch_params(&c, conv, 3).unwrap();
+        let prd: Vec<&[f32]> = pd.iter().map(|t| t.as_f32s().unwrap()).collect();
+        let prc: Vec<&[f32]> = pc.iter().map(|t| t.as_f32s().unwrap()).collect();
+        let size = dense.len() * c.batch * c.mem_len * c.d_model;
+        let (mut md, mut mc) = (vec![0.0f32; size], vec![0.0f32; size]);
+        for step in 0..6 {
+            let x = vec![((1 + 2 * step) % c.vocab) as i32, ((3 + step) % c.vocab) as i32];
+            let (ld, nmd) = gen_forward(&c, dense, &prd, &md, &x, None).unwrap();
+            let (lc, nmc) = gen_forward(&c, conv, &prc, &mc, &x, None).unwrap();
+            for (i, (a, b)) in ld.iter().zip(&lc).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "step {step} logit {i}: dense {a} vs moefied_full {b}"
+                );
+            }
+            (md, mc) = (nmd, nmc);
+        }
+    }
+
+    #[test]
+    fn dynamic_k_selection_is_genuinely_dynamic() {
+        // the dynk preset must (a) stay inside [1, E] experts per token and
+        // (b) agree with the dense twin on a healthy fraction of greedy
+        // picks — the probe that `planer convert` ranks candidates by
+        let c = cfg();
+        let archs = preset_archs(&c);
+        let probe = conversion_probe(&c, &archs["moefied_dynk"], 3, CONVERT_PROBE_STEPS).unwrap();
+        let e = c.n_experts as u64;
+        assert!(
+            probe.avg_k_milli >= 1000 && probe.avg_k_milli <= e * 1000,
+            "avg-k {} outside [1000, {}]",
+            probe.avg_k_milli,
+            e * 1000
+        );
+        // full activation must probe as avg-k == E exactly, agreement == 1
+        let full = conversion_probe(&c, &archs["moefied_full"], 3, CONVERT_PROBE_STEPS).unwrap();
+        assert_eq!(full.avg_k_milli, e * 1000, "full route must run every expert");
+        assert_eq!(full.agreement_milli, 1000, "full route must agree with the twin");
     }
 }

@@ -1,0 +1,231 @@
+//! Latency-targeted dense→MoE conversion planning (`planer convert`).
+//!
+//! PLANER's headline loop, run over the *conversion* space instead of NAS:
+//! take a dense arch and a latency target, enumerate converted candidates
+//! — (E, route) over Switch top-k and dynamic-k thresholds — and pick the
+//! best one whose Eq. (2) estimate meets the target and whose probed
+//! greedy agreement with the dense twin clears the accuracy floor.
+//!
+//! Everything is hermetic: candidates are converted and probed through
+//! `RefBackend` (`refback::conversion_probe` replays the golden probe
+//! stream on the converted arch and its dense twin), and their measured
+//! avg-k feeds the per-(E, avg-k) `LatencyTable` entries, so the whole
+//! plan runs with zero XLA artifacts.
+
+use anyhow::{ensure, Result};
+
+use crate::arch::space::CONVERTED_EXPERTS;
+use crate::arch::{Arch, SearchSpace};
+use crate::latency::{AnalyticalModel, Device, LatencyTable, MoeImpl};
+use crate::runtime::manifest::{Block, ModelConfig, MoeRoute};
+use crate::runtime::refback::{conversion_probe, CONVERT_PROBE_STEPS, DEFAULT_DYNK_TAU_BP};
+
+/// One converted candidate: the dense arch with every FFL slot split into
+/// `experts` and routed by `route`, plus its hermetic measurements.
+#[derive(Debug, Clone)]
+pub struct ConvertCandidate {
+    pub experts: usize,
+    pub route: MoeRoute,
+    pub arch: Arch,
+    /// Eq. (2) estimate under the measured per-(E, avg-k) table entry.
+    pub est_latency: f64,
+    /// `est_latency / baseline` — comparable to the `--latency-target`.
+    pub ratio: f64,
+    /// Probed average experts per routed token ×1000.
+    pub avg_k_milli: u64,
+    /// Probed greedy agreement with the dense twin ×1000.
+    pub agreement_milli: u64,
+}
+
+impl ConvertCandidate {
+    pub fn meets(&self, target: f64, floor_milli: u64) -> bool {
+        self.ratio <= target && self.agreement_milli >= floor_milli
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvertReport {
+    pub target: f64,
+    pub floor_milli: u64,
+    /// Eq. (2) estimate of the dense arch (the ratio denominator).
+    pub baseline_latency: f64,
+    /// Every enumerated candidate, fastest-estimate first.
+    pub candidates: Vec<ConvertCandidate>,
+    /// Index into `candidates` of the pick, if any candidate clears the
+    /// accuracy floor.
+    pub chosen: Option<usize>,
+}
+
+impl ConvertReport {
+    pub fn chosen_candidate(&self) -> Option<&ConvertCandidate> {
+        self.chosen.map(|i| &self.candidates[i])
+    }
+}
+
+/// Routes enumerated per expert count: Switch top-{1,2} plus a dynamic-k
+/// threshold sweep around the default gate-mass cutoff.
+fn candidate_routes(experts: usize) -> Vec<MoeRoute> {
+    let mut routes = vec![MoeRoute::TopK(1)];
+    if experts >= 2 {
+        routes.push(MoeRoute::TopK(2));
+    }
+    for tau_bp in [DEFAULT_DYNK_TAU_BP / 2, DEFAULT_DYNK_TAU_BP, DEFAULT_DYNK_TAU_BP * 3 / 2] {
+        routes.push(MoeRoute::DynK { tau_bp });
+    }
+    routes
+}
+
+/// Replace every dense FFL slot by a converted block.
+pub fn moefy_blocks(dense: &[Block], experts: usize, route: MoeRoute) -> Vec<Block> {
+    dense
+        .iter()
+        .map(|b| match b {
+            Block::Ffl => Block::MoeFied { experts, route },
+            other => other.clone(),
+        })
+        .collect()
+}
+
+/// Enumerate (E, route) conversions of `dense`, probe each hermetically,
+/// and pick the best candidate under `target` × baseline latency with
+/// probed agreement ≥ `floor_milli`.
+///
+/// Choice rule: among candidates meeting both constraints, highest
+/// agreement wins (latency budget already met — spend it on quality), with
+/// the lower estimate breaking ties.  If the latency target is infeasible,
+/// falls back to the fastest candidate that still clears the floor.
+pub fn plan_conversion(
+    cfg: &ModelConfig,
+    dense: &[Block],
+    target: f64,
+    floor_milli: u64,
+    seed: i32,
+) -> Result<ConvertReport> {
+    ensure!(target > 0.0, "latency target must be positive");
+    ensure!(
+        dense.iter().any(|b| matches!(b, Block::Ffl)),
+        "dense arch has no FFL slots to convert"
+    );
+
+    let model = AnalyticalModel::new(Device::A100);
+    let options = SearchSpace::Converted.options(cfg.n_heads_full);
+    let base_table = LatencyTable::from_analytical(
+        &options,
+        &model,
+        cfg,
+        cfg.batch,
+        MoeImpl::Sequential { imbalance: 1.0 },
+    );
+    let baseline_latency = base_table.estimate(&Arch::new(dense.to_vec()));
+
+    let expert_counts: Vec<usize> = [2, CONVERTED_EXPERTS]
+        .into_iter()
+        .filter(|&e| e >= 2 && cfg.d_inner % e == 0)
+        .collect();
+    ensure!(
+        !expert_counts.is_empty(),
+        "d_inner {} admits no balanced expert split",
+        cfg.d_inner
+    );
+
+    let mut candidates = Vec::new();
+    for &experts in &expert_counts {
+        for route in candidate_routes(experts) {
+            let blocks = moefy_blocks(dense, experts, route);
+            let probe = conversion_probe(cfg, &blocks, seed, CONVERT_PROBE_STEPS)?;
+            let mut table = base_table.clone();
+            table.set_moefied_measured(experts, route, probe.avg_k_milli.max(1000));
+            let arch = Arch::new(blocks);
+            let est_latency = table.estimate(&arch);
+            candidates.push(ConvertCandidate {
+                experts,
+                route,
+                arch,
+                est_latency,
+                ratio: est_latency / baseline_latency,
+                avg_k_milli: probe.avg_k_milli,
+                agreement_milli: probe.agreement_milli,
+            });
+        }
+    }
+    candidates.sort_by(|a, b| a.est_latency.total_cmp(&b.est_latency));
+
+    let chosen = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.meets(target, floor_milli))
+        .max_by(|(_, a), (_, b)| {
+            a.agreement_milli
+                .cmp(&b.agreement_milli)
+                .then(b.est_latency.total_cmp(&a.est_latency))
+        })
+        .map(|(i, _)| i)
+        .or_else(|| {
+            // infeasible target: fastest candidate above the floor
+            candidates.iter().position(|c| c.agreement_milli >= floor_milli)
+        });
+
+    Ok(ConvertReport { target, floor_milli, baseline_latency, candidates, chosen })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::refback;
+
+    fn cfg() -> ModelConfig {
+        let mut c = ModelConfig::tiny();
+        // probe at bench-like scale so the test stays fast
+        c.vocab = 17;
+        c.d_model = 8;
+        c.n_slots = 4;
+        c.d_inner = 12;
+        c.n_heads_full = 2;
+        c.seq_len = 4;
+        c.mem_len = 4;
+        c.batch = 4;
+        c.n_experts = 2;
+        c
+    }
+
+    fn dense(cfg: &ModelConfig) -> Vec<Block> {
+        refback::preset_archs(cfg)["baseline"].clone()
+    }
+
+    #[test]
+    fn planning_yields_a_candidate_meeting_the_floor() {
+        let cfg = cfg();
+        let rep = plan_conversion(&cfg, &dense(&cfg), 0.95, 400, 3).unwrap();
+        assert!(!rep.candidates.is_empty());
+        let c = rep.chosen_candidate().expect("no candidate cleared the floor");
+        assert!(c.agreement_milli >= 400, "agreement {}", c.agreement_milli);
+        assert!(c.arch.blocks.iter().any(|b| matches!(b, Block::MoeFied { .. })));
+    }
+
+    #[test]
+    fn dynamic_k_candidates_report_an_avg_k_axis() {
+        let cfg = cfg();
+        let rep = plan_conversion(&cfg, &dense(&cfg), 0.95, 0, 3).unwrap();
+        let dynk: Vec<_> = rep
+            .candidates
+            .iter()
+            .filter(|c| matches!(c.route, MoeRoute::DynK { .. }))
+            .collect();
+        assert!(!dynk.is_empty());
+        for c in dynk {
+            assert!(
+                c.avg_k_milli >= 1000 && c.avg_k_milli <= c.experts as u64 * 1000,
+                "avg-k {} outside [1, E] for E={}",
+                c.avg_k_milli,
+                c.experts
+            );
+        }
+    }
+
+    #[test]
+    fn archs_without_ffl_slots_are_rejected() {
+        let cfg = cfg();
+        let blocks = vec![Block::Mha { heads: 2 }, Block::Skip];
+        assert!(plan_conversion(&cfg, &blocks, 0.9, 0, 0).is_err());
+    }
+}

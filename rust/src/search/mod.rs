@@ -12,7 +12,9 @@
 
 pub mod analysis;
 pub mod anneal;
+pub mod convert;
 pub mod orchestrator;
 
 pub use anneal::TemperatureSchedule;
+pub use convert::{plan_conversion, ConvertCandidate, ConvertReport};
 pub use orchestrator::{SearchConfig, SearchOrchestrator, SearchReport};

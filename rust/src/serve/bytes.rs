@@ -1,0 +1,86 @@
+//! Cumulative-counter delta metering for `bytes_synced`.
+//!
+//! Five serve-path sites used to hand-roll the same watermark idiom —
+//! `metrics.bytes_synced += total.saturating_sub(self.seen); self.seen =
+//! total;` — twice per scheduler (executor traffic and pool traffic).
+//! Copy-pasting it invited two bugs: forgetting the watermark advance
+//! double-charges every later step, and a *recreated* counter (executor or
+//! pool rebuilt mid-run, so its cumulative total restarts near zero)
+//! silently undercounts until the new counter re-crosses the stale
+//! high-water mark — the `saturating_sub` hides the shrink instead of
+//! handling it.  [`ByteDelta::take`] owns both edges in one place.
+
+/// Watermark over a cumulative byte counter; [`take`](ByteDelta::take)
+/// turns successive totals into charge-once deltas.
+#[derive(Debug, Clone, Default)]
+pub struct ByteDelta {
+    seen: u64,
+}
+
+impl ByteDelta {
+    /// Meter starting from zero: the first `take(total)` charges `total`.
+    pub fn new() -> Self {
+        ByteDelta::default()
+    }
+
+    /// Meter baselined at `total`, so traffic that predates serving (init
+    /// uploads, pool warm-up) is not charged to the first step.
+    pub fn starting_at(total: u64) -> Self {
+        ByteDelta { seen: total }
+    }
+
+    /// Bytes accrued since the last call, advancing the watermark.  A
+    /// `total` *below* the watermark means the underlying counter was
+    /// recreated; the whole new total is fresh traffic and the watermark
+    /// re-bases on it (rather than returning 0 until the stale high-water
+    /// mark is re-crossed).
+    pub fn take(&mut self, total: u64) -> u64 {
+        let delta = if total < self.seen { total } else { total - self.seen };
+        self.seen = total;
+        delta
+    }
+
+    /// Re-baseline without charging anything (counter swapped for a new
+    /// one whose history should not count, e.g. attaching a pool).
+    pub fn rebase(&mut self, total: u64) {
+        self.seen = total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deltas_sum_to_the_counter() {
+        let mut m = ByteDelta::new();
+        assert_eq!(m.take(10), 10);
+        assert_eq!(m.take(10), 0);
+        assert_eq!(m.take(25), 15);
+    }
+
+    #[test]
+    fn baseline_excludes_pre_serve_traffic() {
+        let mut m = ByteDelta::starting_at(1000);
+        assert_eq!(m.take(1000), 0);
+        assert_eq!(m.take(1024), 24);
+    }
+
+    #[test]
+    fn counter_reset_charges_the_new_total() {
+        // regression: the old saturating_sub idiom returned 0 here and kept
+        // returning 0 until the recreated counter re-crossed 500
+        let mut m = ByteDelta::new();
+        assert_eq!(m.take(500), 500);
+        assert_eq!(m.take(40), 40, "post-reset traffic must not be swallowed");
+        assert_eq!(m.take(100), 60, "watermark must re-base on the new counter");
+    }
+
+    #[test]
+    fn rebase_skips_history_without_charging() {
+        let mut m = ByteDelta::new();
+        assert_eq!(m.take(100), 100);
+        m.rebase(700);
+        assert_eq!(m.take(710), 10);
+    }
+}

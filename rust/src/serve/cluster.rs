@@ -725,15 +725,6 @@ impl<'a> Cluster<'a> {
         let mut out = String::from(
             "variant      reqs waves  steps  occup accept     p50      p95     tok/s   sync-B/tok\n",
         );
-        // acceptance prints "-" for lanes that never drafted (wave or
-        // continuous), so the column reads as a speculative-only signal
-        let accept = |m: &ServeMetrics| {
-            if m.tokens_drafted > 0 {
-                format!("{:6.2}", m.acceptance_rate())
-            } else {
-                format!("{:>6}", "-")
-            }
-        };
         // lane order (quality rank), not HashMap order: stable reports
         let mut total = ServeMetrics::default();
         for lane in &self.lanes {
@@ -742,35 +733,71 @@ impl<'a> Cluster<'a> {
                 continue;
             }
             total.merge(m);
-            out.push_str(&format!(
-                "{:12} {:4} {:5} {:6} {:6.2} {} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
-                lane.name,
-                m.requests,
-                m.waves,
-                m.steps,
-                m.occupancy(),
-                accept(m),
-                m.p50() * 1e3,
-                m.p95() * 1e3,
-                m.throughput_tok_s(),
-                m.bytes_per_token()
-            ));
+            out.push_str(&report_row(&lane.name, m));
         }
         if total.requests > 0 {
-            out.push_str(&format!(
-                "{:12} {:4} {:5} {:6} {:6.2} {} {:6.1}ms {:6.1}ms {:8.1} {:12.0}\n",
-                "TOTAL",
-                total.requests,
-                total.waves,
-                total.steps,
-                total.occupancy(),
-                accept(&total),
-                total.p50() * 1e3,
-                total.p95() * 1e3,
-                total.throughput_tok_s(),
-                total.bytes_per_token()
-            ));
+            out.push_str(&report_row("TOTAL", &total));
         }
         out
+    }
+}
+
+/// One formatted cluster-report row.  Every cell is a defined value:
+/// acceptance prints "-" for lanes that never drafted (the underlying
+/// `acceptance_rate()` is 0.0 there, never NaN — asserted in tests, since
+/// a naive accepted/drafted quotient would poison the column), and the
+/// latency cells come from the typed [`LatencySummary`], so a lane with no
+/// completed requests prints "-" rather than a fake 0.0ms.
+fn report_row(name: &str, m: &ServeMetrics) -> String {
+    let accept = if m.tokens_drafted > 0 {
+        format!("{:6.2}", m.acceptance_rate())
+    } else {
+        format!("{:>6}", "-")
+    };
+    let (p50, p95) = match m.latency_summary() {
+        Some(s) => (format!("{:6.1}ms", s.p50 * 1e3), format!("{:6.1}ms", s.p95 * 1e3)),
+        None => (format!("{:>8}", "-"), format!("{:>8}", "-")),
+    };
+    format!(
+        "{:12} {:4} {:5} {:6} {:6.2} {} {} {} {:8.1} {:12.0}\n",
+        name,
+        m.requests,
+        m.waves,
+        m.steps,
+        m.occupancy(),
+        accept,
+        p50,
+        p95,
+        m.throughput_tok_s(),
+        m.bytes_per_token()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draftless_report_row_has_a_defined_acceptance() {
+        // wave/continuous lanes draft nothing: the rate must be a defined
+        // 0.0 (shown as "-"), not a 0/0 NaN leaking into the report
+        let mut m = ServeMetrics::default();
+        m.requests = 2;
+        m.tokens_out = 4;
+        m.latencies.push(0.010);
+        m.latencies.push(0.020);
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert!(m.acceptance_rate().is_finite());
+        let row = report_row("wave", &m);
+        assert!(!row.contains("NaN"), "acceptance leaked a NaN: {row}");
+        assert!(row.contains('-'), "draftless lane should print '-': {row}");
+        assert!(row.contains("ms"), "latency cells missing: {row}");
+    }
+
+    #[test]
+    fn requestless_row_prints_typed_absence_not_zero_latency() {
+        let row = report_row("idle", &ServeMetrics::default());
+        assert!(!row.contains("NaN"), "row: {row}");
+        assert!(!row.contains("ms"), "empty lane must not claim 0.0ms: {row}");
     }
 }

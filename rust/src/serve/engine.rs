@@ -2,7 +2,9 @@
 //!
 //! Per wave: feed every prompt token through the single-token decode program
 //! (threading TXL memories), then greedy-decode `n_gen` tokens per slot.
-//! Unused slots are padded with token 0 and ignored.
+//! Unused slots and pre-prompt padding feed the arch's declared BOS/pad id
+//! (`ModelConfig::bos_id`) and are ignored — never a hardcoded token 0,
+//! which is a real vocab id under most tokenizers.
 //!
 //! The per-token loop is the hottest path in the repo, so everything
 //! bindable is bound once in `DecodeEngine::new`: the `gen` program `Arc`
@@ -175,6 +177,12 @@ impl ServeMetrics {
         percentile(self.latencies.samples(), 0.95)
     }
 
+    /// Typed latency digest — `None` until a request completes, so report
+    /// code can distinguish "no data" from "0 ms" (see [`LatencySummary`]).
+    pub fn latency_summary(&self) -> Option<LatencySummary> {
+        LatencySummary::of(&self.latencies)
+    }
+
     /// Step-weighted slot occupancy: live slot-steps over capacity
     /// slot-steps.  Unlike the old per-wave request-count average, this
     /// charges a wave for every step its short slots idle through the tail
@@ -249,15 +257,50 @@ impl ServeMetrics {
 /// selects in O(n) on a scratch copy instead of requiring callers to keep
 /// the sample sorted.  p50 of [1,2,3,4] is 2.0 (rank 2), p95 is 4.0.
 /// Public so benches and reports share one definition of pXX.
+///
+/// An empty sample reads as 0.0 — indistinguishable from "infinitely
+/// fast".  Numeric pipelines that must not conflate the two use
+/// [`try_percentile`] / [`LatencySummary`] instead; this lossy form stays
+/// for display paths where 0.0-on-empty is the established convention.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
+    try_percentile(xs, q).unwrap_or(0.0)
+}
+
+/// [`percentile`] with the empty case typed out instead of collapsed to
+/// 0.0.  The rank clamp (`.min(n - 1)`) is only evaluated once `n > 0`,
+/// so the empty-reservoir underflow class is unreachable by construction.
+pub fn try_percentile(xs: &[f64], q: f64) -> Option<f64> {
     let n = xs.len();
+    if n == 0 {
+        return None;
+    }
     let rank = ((q * n as f64).ceil() as usize).saturating_sub(1).min(n - 1);
     let mut scratch = xs.to_vec();
     let (_, v, _) = scratch.select_nth_unstable_by(rank, |a, b| a.total_cmp(b));
-    *v
+    Some(*v)
+}
+
+/// Typed latency digest: only constructible from a non-empty sample, so a
+/// lane that completed nothing yields `None` rather than a summary full of
+/// fake zeros that downstream math would happily average in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    /// Retained sample size the percentiles were selected from.
+    pub n: usize,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl LatencySummary {
+    /// Digest of the reservoir's retained sample; `None` when empty.
+    pub fn of(r: &LatencyReservoir) -> Option<LatencySummary> {
+        let xs = r.samples();
+        Some(LatencySummary {
+            n: xs.len(),
+            p50: try_percentile(xs, 0.50)?,
+            p95: try_percentile(xs, 0.95)?,
+        })
+    }
 }
 
 pub struct DecodeEngine<'a> {
@@ -266,6 +309,11 @@ pub struct DecodeEngine<'a> {
     /// Wave width = the gen program's compiled batch dimension.
     pub width: usize,
     vocab: usize,
+    /// The arch's declared BOS/pad token id (`ModelConfig::bos_id`): what
+    /// idle slots and pre-prompt padding feed.  Token 0 is a real vocab id,
+    /// so padding with a literal 0 would leak an arbitrary token into
+    /// short-prompt slots' TXL memories.
+    bos: i32,
     /// The `gen_<arch>` program, resolved once (the old per-wave
     /// `engine.program()` lookup went through a mutex every wave).
     gen: Arc<Program>,
@@ -291,6 +339,11 @@ impl<'a> DecodeEngine<'a> {
         let xspec = gen.spec.inputs[xa].clone();
         let width = xspec.shape[0];
         let vocab = engine.manifest.config.vocab;
+        let bos = engine.manifest.config.bos_id;
+        anyhow::ensure!(
+            bos >= 0 && (bos as usize) < vocab,
+            "bos_id {bos} outside vocab {vocab}"
+        );
         let plan = StepPlan::new(&gen.spec, &["logits"])?;
         // A malformed masked program must not take down wave serving: the
         // documented contract is per-lane degradation, so validation
@@ -310,6 +363,7 @@ impl<'a> DecodeEngine<'a> {
             arch_name: arch_name.to_string(),
             width,
             vocab,
+            bos,
             gen,
             xspec,
             plan,
@@ -367,6 +421,11 @@ impl<'a> DecodeEngine<'a> {
     /// Vocabulary size of the decode head (rows of a logits batch).
     pub fn vocab(&self) -> usize {
         self.vocab
+    }
+
+    /// The BOS/pad token id idle slots feed (`ModelConfig::bos_id`).
+    pub fn bos(&self) -> i32 {
+        self.bos
     }
 
     /// The cached `gen_<arch>` program (shared with callers that would
@@ -506,24 +565,27 @@ impl<'a> DecodeEngine<'a> {
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); wave.requests.len()];
         let mut last_logits: Vec<f32> = Vec::new();
         // one scratch token batch, refilled per step (no per-step allocs)
-        let mut x = vec![0i32; self.width];
+        let mut x = vec![self.bos; self.width];
 
         // All prompts empty but generation requested: without a seed step
         // `last_logits` stays empty and the decode loop below would silently
-        // emit zero tokens.  Feed one BOS (token 0) step so every slot has
-        // logits to decode from.
+        // emit zero tokens.  Feed one BOS step so every slot has logits to
+        // decode from.
         if shape.needs_bos {
             last_logits = self.decode_step(st, &x)?;
         }
 
         // prompt phase: feed token t of every slot (right-aligned so all
-        // prompts end on the same step and decode starts together)
+        // prompts end on the same step and decode starts together).  Slots
+        // still inside their pad prefix — and any out-of-range position —
+        // feed the declared BOS id, so a short prompt's TXL memories see
+        // the same pad stream solo or batched.
         for t in 0..max_prompt {
-            x.fill(0);
+            x.fill(self.bos);
             for (slot, (r, _)) in x.iter_mut().zip(&wave.requests) {
                 let offset = max_prompt - r.prompt.len();
                 if t >= offset {
-                    *slot = r.prompt.get(t - offset).copied().unwrap_or(0);
+                    *slot = r.prompt.get(t - offset).copied().unwrap_or(self.bos);
                 }
             }
             last_logits = self.decode_step(st, &x)?;
@@ -533,7 +595,7 @@ impl<'a> DecodeEngine<'a> {
         // `last_logits` (no prompt/BOS step ran) yields no chunks, so the
         // zip is a no-op — same behaviour as the old emptiness guard.
         for g in 0..max_gen {
-            x.fill(0);
+            x.fill(self.bos);
             for (((slot, out), row), (r, _)) in x
                 .iter_mut()
                 .zip(outputs.iter_mut())
@@ -629,6 +691,21 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 4.0);
         // odd length: p50 is the exact middle
         assert_eq!(percentile(&[1.0, 2.0, 3.0], 0.50), 2.0);
+    }
+
+    #[test]
+    fn empty_sample_yields_a_typed_absence_not_a_zero() {
+        // regression: the nearest-rank clamp `.min(n - 1)` underflows on
+        // n == 0 if reached; the typed path must refuse instead, and the
+        // lossy display path must keep its documented 0.0
+        assert_eq!(try_percentile(&[], 0.95), None);
+        assert_eq!(percentile(&[], 0.95), 0.0);
+        assert_eq!(ServeMetrics::default().latency_summary(), None);
+        let r = reservoir_of(&[0.25, 0.75]);
+        let s = LatencySummary::of(&r).expect("non-empty reservoir must summarise");
+        assert_eq!(s.n, 2);
+        assert_eq!(s.p50, 0.25);
+        assert_eq!(s.p95, 0.75);
     }
 
     #[test]

@@ -107,6 +107,7 @@
 //! HLO through PJRT (or the in-process reference forward).
 
 pub mod batcher;
+pub mod bytes;
 pub mod cluster;
 pub mod workload;
 pub mod engine;
@@ -118,9 +119,12 @@ pub mod speculative;
 pub mod worker;
 
 pub use batcher::{wave_shape, BatchWave, WaveBatcher, WaveShape};
+pub use bytes::ByteDelta;
 pub use cluster::{Cluster, ServePolicy};
 pub use workload::{Arrival, TimedRequest, WorkloadGen};
-pub use engine::{percentile, DecodeEngine, LatencyReservoir, ServeMetrics};
+pub use engine::{
+    percentile, try_percentile, DecodeEngine, LatencyReservoir, LatencySummary, ServeMetrics,
+};
 pub use paged::{
     validate_pool_geometry, MemLayout, PagedLane, PagedScheduler, PoolAdmission,
 };

@@ -39,6 +39,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::runtime::{PagePool, PoolExhausted};
 
+use super::bytes::ByteDelta;
 use super::engine::ServeMetrics;
 use super::scheduler::{SlotExecutor, PUBLISH_EVERY_STEPS};
 use super::session::Session;
@@ -124,11 +125,11 @@ pub struct PagedScheduler<E: SlotExecutor> {
     /// Scratch token batch.
     x: Vec<i32>,
     pub metrics: ServeMetrics,
-    bytes_seen: u64,
+    exec_bytes: ByteDelta,
     /// Pool traffic already folded into `metrics.bytes_synced` — a
     /// persistent watermark (not a per-step snapshot) because eager
     /// admission spills *between* steps, at submit time.
-    pool_bytes_seen: u64,
+    pool_bytes: ByteDelta,
     layers: usize,
     slot_elems: usize,
 }
@@ -158,8 +159,8 @@ impl<E: SlotExecutor> PagedScheduler<E> {
              a pool smaller than the batch would stall slots (raise --pool-pages)",
             pool.session_capacity()
         );
-        let bytes_seen = executor.bytes_synced();
-        let pool_bytes_seen = pool.stats.total_bytes();
+        let exec_bytes = ByteDelta::starting_at(executor.bytes_synced());
+        let pool_bytes = ByteDelta::starting_at(pool.stats.total_bytes());
         Ok(PagedScheduler {
             variant: variant.into(),
             executor,
@@ -171,8 +172,8 @@ impl<E: SlotExecutor> PagedScheduler<E> {
             reset: vec![false; width],
             x: vec![0; width],
             metrics: ServeMetrics::default(),
-            bytes_seen,
-            pool_bytes_seen,
+            exec_bytes,
+            pool_bytes,
             layers,
             slot_elems,
         })
@@ -332,9 +333,7 @@ impl<E: SlotExecutor> PagedScheduler<E> {
     /// added — the pool already accumulates) and charge new spill/promote
     /// traffic — including submit-time spills — to `bytes_synced`.
     fn sync_pool_metrics(&mut self) {
-        let pool_bytes = self.pool.stats.total_bytes();
-        self.metrics.bytes_synced += pool_bytes.saturating_sub(self.pool_bytes_seen);
-        self.pool_bytes_seen = pool_bytes;
+        self.metrics.bytes_synced += self.pool_bytes.take(self.pool.stats.total_bytes());
         self.metrics.pool_spill_bytes = self.pool.stats.bytes_to_host;
         self.metrics.pool_promote_bytes = self.pool.stats.bytes_to_device;
         self.metrics.pool_spills = self.pool.spill_count();
@@ -374,9 +373,7 @@ impl<E: SlotExecutor> PagedScheduler<E> {
         // executor traffic (token uploads, logits fetches); the pool's
         // spill/promote traffic is folded in by sync_pool_metrics below —
         // gather/scatter contributes to neither
-        let bytes = self.executor.bytes_synced();
-        self.metrics.bytes_synced += bytes.saturating_sub(self.bytes_seen);
-        self.bytes_seen = bytes;
+        self.metrics.bytes_synced += self.exec_bytes.take(self.executor.bytes_synced());
         self.reset.fill(false);
 
         let done = Instant::now();

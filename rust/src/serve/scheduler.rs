@@ -29,6 +29,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::bytes::ByteDelta;
 use super::engine::ServeMetrics;
 use super::session::Session;
 use super::worker::{DepthGauge, LaneHealth};
@@ -92,7 +93,7 @@ pub struct SlotScheduler<E: SlotExecutor> {
     /// Scratch token batch, refilled per step (no per-step allocs).
     x: Vec<i32>,
     pub metrics: ServeMetrics,
-    bytes_seen: u64,
+    exec_bytes: ByteDelta,
 }
 
 impl<E: SlotExecutor> SlotScheduler<E> {
@@ -101,7 +102,7 @@ impl<E: SlotExecutor> SlotScheduler<E> {
         assert!(width > 0, "scheduler needs at least one slot");
         // baseline the byte meter so pre-serve traffic (init uploads) is
         // not charged to the first decode step
-        let bytes_seen = executor.bytes_synced();
+        let exec_bytes = ByteDelta::starting_at(executor.bytes_synced());
         SlotScheduler {
             variant: variant.into(),
             executor,
@@ -110,7 +111,7 @@ impl<E: SlotExecutor> SlotScheduler<E> {
             reset: vec![false; width],
             x: vec![0; width],
             metrics: ServeMetrics::default(),
-            bytes_seen,
+            exec_bytes,
         }
     }
 
@@ -202,9 +203,7 @@ impl<E: SlotExecutor> SlotScheduler<E> {
         self.metrics.steps += 1;
         self.metrics.slot_steps += width as u64;
         self.metrics.live_slot_steps += live as u64;
-        let bytes = self.executor.bytes_synced();
-        self.metrics.bytes_synced += bytes.saturating_sub(self.bytes_seen);
-        self.bytes_seen = bytes;
+        self.metrics.bytes_synced += self.exec_bytes.take(self.executor.bytes_synced());
         self.reset.fill(false);
 
         let done = Instant::now();

@@ -87,6 +87,7 @@ use anyhow::{Context, Result};
 use crate::runtime::{literal, PagePool, StateStore, TensorSpec};
 use crate::util::rng::Rng;
 
+use super::bytes::ByteDelta;
 use super::engine::{DecodeEngine, ServeMetrics};
 use super::session::{Session, SpecCheckpoint};
 use super::worker::{DepthGauge, LaneHealth};
@@ -156,13 +157,13 @@ pub struct SpecScheduler<'a> {
     /// draft *and* first verify step of the next round.
     reset: Vec<bool>,
     pub metrics: ServeMetrics,
-    bytes_seen: u64,
+    exec_bytes: ByteDelta,
     /// Paged layout: the target sessions' TXL memories between rounds.
     /// `None` (default) keeps the slotted layout.
     pool: Option<PagePool>,
     /// Pool traffic already folded into `metrics.bytes_synced` (eager
     /// admission spills between rounds, so this is a watermark).
-    pool_bytes_seen: u64,
+    pool_bytes: ByteDelta,
 }
 
 impl<'a> SpecScheduler<'a> {
@@ -192,8 +193,9 @@ impl<'a> SpecScheduler<'a> {
         let resync_draft = tde.arch_name == dde.arch_name;
         let target = SpecHalf { de: tde, st: tst };
         let draft = SpecHalf { de: dde, st: dst };
-        let bytes_seen =
-            target.st.stats().total_bytes() + draft.st.stats().total_bytes();
+        let exec_bytes = ByteDelta::starting_at(
+            target.st.stats().total_bytes() + draft.st.stats().total_bytes(),
+        );
         Ok(SpecScheduler {
             variant: variant.into(),
             target,
@@ -205,9 +207,9 @@ impl<'a> SpecScheduler<'a> {
             queue: VecDeque::new(),
             reset: vec![false; width],
             metrics: ServeMetrics::default(),
-            bytes_seen,
+            exec_bytes,
             pool: None,
-            pool_bytes_seen: 0,
+            pool_bytes: ByteDelta::new(),
         })
     }
 
@@ -236,7 +238,7 @@ impl<'a> SpecScheduler<'a> {
             pool.session_capacity(),
             self.slots.len()
         );
-        self.pool_bytes_seen = pool.stats.total_bytes();
+        self.pool_bytes.rebase(pool.stats.total_bytes());
         self.pool = Some(pool);
         Ok(())
     }
@@ -388,9 +390,7 @@ impl<'a> SpecScheduler<'a> {
     /// Fold the pool's counters into the metrics (no-op without a pool).
     fn sync_pool_metrics(&mut self) {
         let Some(pool) = self.pool.as_ref() else { return };
-        let pool_bytes = pool.stats.total_bytes();
-        self.metrics.bytes_synced += pool_bytes.saturating_sub(self.pool_bytes_seen);
-        self.pool_bytes_seen = pool_bytes;
+        self.metrics.bytes_synced += self.pool_bytes.take(pool.stats.total_bytes());
         self.metrics.pool_spill_bytes = pool.stats.bytes_to_host;
         self.metrics.pool_promote_bytes = pool.stats.bytes_to_device;
         self.metrics.pool_spills = pool.spill_count();
@@ -568,8 +568,7 @@ impl<'a> SpecScheduler<'a> {
         self.metrics.live_slot_steps += steps * live as u64;
         let bytes =
             self.target.st.stats().total_bytes() + self.draft.st.stats().total_bytes();
-        self.metrics.bytes_synced += bytes.saturating_sub(self.bytes_seen);
-        self.bytes_seen = bytes;
+        self.metrics.bytes_synced += self.exec_bytes.take(bytes);
         self.sync_pool_metrics();
 
         Ok(RoundOutcome { responses: out, spec_steps: k as u64 })

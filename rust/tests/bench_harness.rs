@@ -274,6 +274,70 @@ fn adaptive_scenario_degrades_then_recovers() {
     );
 }
 
+/// The moe_conversion scenario's claims, at the gated seed: dynamic-k
+/// serves the burst at a strictly better p95 than Switch top-k (which in
+/// turn beats dense), *and* the routing axes that justify those step costs
+/// are what `conversion_probe` actually measures on the converted weights —
+/// top-k always pays k = 2 experts while dynamic-k's gate-mass prefix stops
+/// at the single top expert for every probe token (the converted gates are
+/// diffuse at this scale; see `MOE_DYNK_TAU_BP`), at dense-twin greedy
+/// agreement no worse than top-k's.  Agreement is compared with one
+/// greedy-token slack (1/64 of the probe = 16 per mille): the two legs'
+/// miss sets differ token-by-token, and a single near-tie flip must not
+/// gate CI.  Full-activation parity (<= 1e-4) is asserted separately in
+/// refback's conversion tests.
+#[test]
+fn moe_conversion_scenario_holds_its_routing_claims() {
+    let rep = run_named("moe_conversion", DEFAULT_SEED).unwrap();
+    let dense = rep.leg("dense").unwrap();
+    let topk = rep.leg("moe_topk").unwrap();
+    let dynk = rep.leg("moe_dynk").unwrap();
+    for leg in [dense, topk, dynk] {
+        assert_eq!(leg.requests, rep.requests, "{}: lost requests", leg.name);
+        assert_eq!(leg.tokens_out, dense.tokens_out, "{}: token volume changed", leg.name);
+    }
+
+    // the schedule claim: fewer experts -> fewer ticks -> better burst p95
+    assert!(
+        dynk.latency.p95 < topk.latency.p95,
+        "dynamic-k p95 {} !< top-k p95 {}",
+        dynk.latency.p95,
+        topk.latency.p95
+    );
+    assert!(
+        topk.latency.p95 < dense.latency.p95,
+        "top-k p95 {} !< dense p95 {}",
+        topk.latency.p95,
+        dense.latency.p95
+    );
+
+    // the routing axes those step costs were derived from
+    assert_eq!(dense.avg_k_milli, 0, "dense leg routes no experts");
+    assert_eq!(dense.agreement_milli, 1000, "dense twin must agree with itself");
+    assert_eq!(topk.avg_k_milli, 2000, "top-k must pay exactly k = 2 experts per token");
+    assert_eq!(
+        dynk.avg_k_milli, 1000,
+        "dynamic-k at tau 0.25 must stop at the top expert on every probe token"
+    );
+    assert!(dynk.avg_k_milli < topk.avg_k_milli, "the dynk leg must be the cheaper router");
+
+    // equal-or-better accuracy, modulo one near-tie greedy token
+    assert!(
+        dynk.agreement_milli + 16 >= topk.agreement_milli,
+        "dynamic-k agreement {} fell more than one greedy token below top-k's {}",
+        dynk.agreement_milli,
+        topk.agreement_milli
+    );
+    for leg in [topk, dynk] {
+        assert!(
+            (890..=1000).contains(&leg.agreement_milli),
+            "{}: agreement {} outside the converted-fleet band",
+            leg.name,
+            leg.agreement_milli
+        );
+    }
+}
+
 /// The committed baseline matches what this build actually measures, leg by
 /// leg, within the gate's threshold — the in-repo cross-check of
 /// `scripts/bench_baseline.py` (which seeded it) against the real harness.

@@ -328,6 +328,50 @@ fn cluster_rejects_a_pool_too_small_for_one_session() {
     cluster.check_pool_geometry().unwrap();
 }
 
+/// Short prompts in a mixed-length wave are right-align padded with the
+/// arch's *declared* BOS id (bugfix: the pad steps used to feed literal
+/// token 0 — a real vocab id — into short slots' TXL memories).  The
+/// batched short-prompt stream must therefore equal a solo decode of the
+/// same request with the BOS padding written out explicitly; with a
+/// nonzero `bos_id` this distinguishes declared-BOS padding from the old
+/// hardcoded 0.
+#[test]
+fn short_prompt_wave_padding_matches_an_explicit_bos_prefix() {
+    let mut cfg = serve_cfg();
+    cfg.bos_id = 11; // nonzero and < vocab: token-0 padding would diverge
+    let mut archs = BTreeMap::new();
+    archs.insert(
+        "alpha".to_string(),
+        vec![Block::Mha { heads: 2 }, Block::Ffl, Block::Moe { top_k: 2 }, Block::SFfl],
+    );
+    let engine = Engine::reference(cfg, archs).unwrap();
+    let de = DecodeEngine::new(&engine, "alpha").unwrap();
+    assert_eq!(de.bos(), 11, "DecodeEngine must read bos_id from the manifest");
+    let mut st = de.init_state(0).unwrap();
+
+    let short = Request { id: 0, prompt: vec![2, 3], n_gen: 4, sla: f64::INFINITY };
+    let long = Request { id: 1, prompt: vec![1, 4, 1, 5], n_gen: 4, sla: f64::INFINITY };
+    let wave = BatchWave {
+        requests: vec![(short.clone(), Instant::now()), (long.clone(), Instant::now())],
+    };
+    let mut m = ServeMetrics::default();
+    let rs = de.decode_wave(&mut st, &wave, &mut m).unwrap();
+
+    // the short slot saw 2 pad steps before its prompt; decoding the same
+    // request alone with those pads spelled out must reproduce its stream
+    let mut padded = short.clone();
+    padded.prompt = vec![11, 11, 2, 3];
+    let want_short = solo_oracle(&de, &mut st, &padded);
+    assert_eq!(
+        rs[0].tokens, want_short,
+        "wave padding must behave exactly like explicit BOS tokens"
+    );
+
+    // the long prompt is pad-free, so plain solo parity must still hold
+    let want_long = solo_oracle(&de, &mut st, &long);
+    assert_eq!(rs[1].tokens, want_long, "pad-free slot diverged from solo");
+}
+
 /// Empty prompts ride the BOS seeding path on both policies.
 #[test]
 fn empty_prompts_decode_identically_on_both_policies() {

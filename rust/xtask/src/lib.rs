@@ -133,10 +133,23 @@ pub fn repo_config() -> Config {
             strict("rust/src/bench/harness.rs", "WaveLane::fire"),
             // reference-backend decode kernels
             kernel("rust/src/runtime/refback.rs", "gen_forward"),
+            kernel("rust/src/runtime/refback.rs", "gen_forward_traced"),
             kernel("rust/src/runtime/refback.rs", "mha_block"),
             kernel("rust/src/runtime/refback.rs", "ffl_block"),
             kernel("rust/src/runtime/refback.rs", "moe_block"),
+            kernel("rust/src/runtime/refback.rs", "moefied_block"),
             kernel("rust/src/runtime/refback.rs", "RefProgram::run"),
+            // dense→MoE conversion: clustering/reassembly kernels + probe
+            kernel("rust/src/runtime/refback.rs", "synth_arch_params"),
+            kernel("rust/src/runtime/refback.rs", "conversion_probe"),
+            kernel("rust/src/arch/convert.rs", "sign_profiles"),
+            kernel("rust/src/arch/convert.rs", "balanced_clusters"),
+            kernel("rust/src/arch/convert.rs", "convert_ffl"),
+            // conversion search (`planer convert` planning loop)
+            strict("rust/src/search/convert.rs", "plan_conversion"),
+            strict("rust/src/search/convert.rs", "moefy_blocks"),
+            // serve byte metering (runs once per decode step on every lane)
+            strict("rust/src/serve/bytes.rs", "ByteDelta::take"),
         ],
         bench_roots: vec!["rust/src/bench".into()],
         abi: Some(AbiConfig {
@@ -146,7 +159,15 @@ pub fn repo_config() -> Config {
                 "rust/src/runtime/manifest.rs".into(),
                 "rust/src/serve/engine.rs".into(),
             ],
-            core_prefixes: vec!["init_".into(), "gen_".into(), "gen_masked_".into()],
+            core_prefixes: vec![
+                "init_".into(),
+                "gen_".into(),
+                "gen_masked_".into(),
+                // dense→MoE conversion presets (dynamic-k router included):
+                // the AOT exporter and the reference backend must agree on
+                // the `gen_moefied_<route>` decode-program family
+                "gen_moefied_".into(),
+            ],
             free_mask_files: vec![
                 "rust/src/runtime/refback.rs".into(),
                 "rust/src/runtime/manifest.rs".into(),

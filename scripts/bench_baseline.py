@@ -1003,6 +1003,40 @@ def scenario_adaptive(seed):
     return dict(scenario="adaptive", requests=len(trace), legs=legs)
 
 
+# scenarios.rs: MOE_DENSE_TICKS / MOE_TOPK_TICKS / MOE_DYNK_TICKS — the
+# per-(E, avg-k) step costs of the dense->MoE conversion legs (dense FFLs,
+# Switch top-2-of-4, dynamic-k at probed avg-k 1.0)
+MOE_DENSE_TICKS = 5
+MOE_TOPK_TICKS = 4
+MOE_DYNK_TICKS = 3
+
+
+def scenario_moe_conversion(seed):
+    """scenarios.rs::moe_conversion: 1 lane, Burst arrivals (48 requests at
+    t=0), one continuous leg per routing mode — the dense bench baseline at
+    5 ticks/step vs its converted twins at the per-(E, avg-k) costs from
+    LatencyTable::moefied_latency.  The avg_k_milli / agreement_milli axes
+    the Rust reports carry come from refback::conversion_probe (real
+    converted-weights decode) and are deliberately outside this schedule
+    mirror and the gated baseline."""
+    trace = generate(48, seed, gap_s=0.0, pmin=2, pmax=12, gmin=2, gmax=8,
+                     vocab=CFG["vocab"], tight_frac=0.5, sla_tight=0.25,
+                     sla_loose=float("inf"))
+    conv_blocks = [("mha", CFG["n_heads_full"]), ("ffl",)] * 2  # len only
+    legs = []
+    for name, ticks in (("dense", MOE_DENSE_TICKS),
+                        ("moe_topk", MOE_TOPK_TICKS),
+                        ("moe_dynk", MOE_DYNK_TICKS)):
+        lanes = [dict(token_latency=ticks / TICKS_PER_SEC)]
+        sub = routed_subtraces(trace, lanes)[0]
+        samples = []
+        sched, wall = sim_continuous(sub, WIDTH, ticks, samples)
+        sched.m.bytes = continuous_resident_bytes(conv_blocks, sched.m.steps,
+                                                  sched.admission_steps)
+        legs.append(leg_result(name, sched.m, samples, wall))
+    return dict(scenario="moe_conversion", requests=len(trace), legs=legs)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seed", type=int, default=42,
@@ -1015,7 +1049,8 @@ def main():
     results = [scenario_coordinator(args.seed), scenario_serve_fleet(args.seed),
                scenario_residency(args.seed), scenario_speculative(args.seed),
                scenario_bursty(args.seed), scenario_paging(args.seed),
-               scenario_adaptive(args.seed)]
+               scenario_adaptive(args.seed),
+               scenario_moe_conversion(args.seed)]
     for res in results:
         print(f"\nscenario {res['scenario']} ({res['requests']} reqs"
               + (f", lane loads {res['lane_loads']}" if "lane_loads" in res else "")
