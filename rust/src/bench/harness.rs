@@ -52,6 +52,17 @@
 //!   sorted-name flag refresh), after every lane has decoded up to that
 //!   tick.  The `static` twin replays the same trace through the load-blind
 //!   base router, so the pair A/Bs degrade-then-recover under overload.
+//! - **ipc / overlapped** ([`Harness::run_ipc_leg`]) — the wave loop under
+//!   the multi-process (`serve --ipc`) cost model: every request pays
+//!   `hop_ticks` router→worker on submit and worker→router on reply, each
+//!   Submit/Reply is framed through the real [`crate::serve::ipc`] codec
+//!   (so `ipc_frames`/`ipc_bytes` meter exactly the wire traffic), and an
+//!   optional crash plan SIGKILLs the worker after its `kill_wave`-th wave
+//!   decodes but before any reply frame lands — the supervisor pays
+//!   `restart_ticks`, re-submits the un-acked wave, and the replay asserts
+//!   the restarted worker's streams are bit-identical to the lost ones.
+//!   The uniform hop shift leaves the wave schedule untouched, so the
+//!   crash-free leg's every latency is the in-process wave leg's + 2·hop.
 //!
 //! Requests are routed once, up front, by the load-blind `Router::route`
 //! (the load-aware tiebreak reads live queue depths, which are a wall-clock
@@ -64,6 +75,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{Engine, ExecMode, PagePool, StateStore};
+use crate::serve::ipc::{frame_bytes, request_to_json, response_to_json, Envelope, MsgKind};
 use crate::serve::speculative::mems_geometry;
 use crate::serve::{
     AdaptiveRouter, BatchWave, DecodeEngine, DraftDivergence, PagedScheduler, PoolAdmission,
@@ -307,6 +319,29 @@ impl<'a> Harness<'a> {
         )
     }
 
+    /// Replay one wave leg through the UDS IPC topology's virtual cost
+    /// model (see the module docs' **ipc** bullet).  `crash = Some((w, r))`
+    /// kills the worker after its `w`-th fired wave (0-indexed, first lane
+    /// to reach it) and charges `r` restart ticks before the replay.
+    pub fn run_ipc_leg(
+        &self,
+        name: &str,
+        exec: ExecMode,
+        hop_ticks: u64,
+        crash: Option<(usize, u64)>,
+    ) -> Result<Leg> {
+        let (samples, metrics, wall) = self.ipc_wave(exec, hop_ticks, crash)?;
+        self.finish_leg(
+            name,
+            ServePolicy::Wave,
+            Concurrency::Overlapped,
+            exec,
+            samples,
+            metrics,
+            wall,
+        )
+    }
+
     /// Replay one speculative leg (always overlapped: one round loop per
     /// lane).  The draft engine named by `params` is bound fresh per lane.
     pub fn run_speculative_leg(
@@ -396,6 +431,71 @@ impl<'a> Harness<'a> {
             }
             metrics.merge(&lane.metrics);
             wall = wall.max(clock.now());
+        }
+        Ok((samples, metrics, wall))
+    }
+
+    /// [`Harness::wave_overlapped`] with every arrival shifted `+hop` on
+    /// the worker's clock, Submit/Reply frames metered through the real
+    /// codec, and samples recorded at the *original* arrival against the
+    /// reply's post-hop landing — so each latency is the in-process wave
+    /// latency plus exactly two hops.
+    fn ipc_wave(
+        &self,
+        exec: ExecMode,
+        hop: u64,
+        crash: Option<(usize, u64)>,
+    ) -> Result<(Vec<Sample>, ServeMetrics, u64)> {
+        let tps = self.scenario.ticks_per_sec;
+        let mut crash = crash;
+        let mut samples = Vec::new();
+        let mut metrics = ServeMetrics::default();
+        let mut wall = 0u64;
+        for (spec, sub) in self.scenario.lanes.iter().zip(&self.routed) {
+            let mut lane = WaveLane::new(self.engine, spec, exec)?;
+            let mut clock = StepClock::new();
+            let mut i = 0usize;
+            let mut fired = 0usize;
+            loop {
+                while let Some((r, at)) = sub.get(i) {
+                    if *at + hop > clock.now() {
+                        break;
+                    }
+                    // Submit frame: router → worker, landing one hop after
+                    // the request arrived at the router
+                    meter(
+                        &mut lane.metrics,
+                        &Envelope::new(r.id, MsgKind::Submit, request_to_json(r)),
+                    )?;
+                    lane.queue.push_back((r.clone(), *at + hop));
+                    i += 1;
+                }
+                if lane.queue.len() >= lane.de.width {
+                    fire_ipc(&mut lane, &mut clock, &mut samples, hop, tps, &mut fired, &mut crash)?;
+                    continue;
+                }
+                let next_at = sub.get(i).map(|(_, at)| *at + hop);
+                if let Some((_, oldest)) = lane.queue.front() {
+                    let deadline = oldest + self.scenario.max_wait_ticks;
+                    if let Some(at) = next_at.filter(|&at| at <= deadline) {
+                        // an arrival lands before the partial-wave deadline:
+                        // admit it first (it may fill the wave)
+                        clock.at_least(at);
+                        continue;
+                    }
+                    clock.at_least(deadline);
+                    fire_ipc(&mut lane, &mut clock, &mut samples, hop, tps, &mut fired, &mut crash)?;
+                    continue;
+                }
+                if let Some(at) = next_at {
+                    clock.at_least(at);
+                    continue;
+                }
+                break;
+            }
+            metrics.merge(&lane.metrics);
+            // the last wave's replies still cross the wire
+            wall = wall.max(clock.now() + hop);
         }
         Ok((samples, metrics, wall))
     }
@@ -794,19 +894,34 @@ impl<'e> WaveLane<'e> {
             || self.queue.front().is_some_and(|(_, at)| at + max_wait <= now)
     }
 
-    /// Pop one wave, decode it for real, advance the clock by the executed
-    /// steps, and record completion samples at the new time.
-    fn fire(&mut self, clock: &mut StepClock, samples: &mut Vec<Sample>) -> Result<()> {
+    /// Pop the next wave (up to `width` oldest requests) off the queue.
+    fn pop_wave(&mut self) -> Vec<(crate::serve::Request, u64)> {
         let n = self.queue.len().min(self.de.width);
-        let popped: Vec<(crate::serve::Request, u64)> = self.queue.drain(..n).collect();
+        self.queue.drain(..n).collect()
+    }
+
+    /// Decode an already-popped wave for real and advance the clock by the
+    /// executed steps; returns the responses and the completion tick.
+    fn decode_popped(
+        &mut self,
+        popped: &[(crate::serve::Request, u64)],
+        clock: &mut StepClock,
+    ) -> Result<(Vec<crate::serve::Response>, u64)> {
         let wave = BatchWave {
             // analyze:allow(bench, submission instants feed wall-clock fields the replay ignores)
             requests: popped.iter().map(|(r, _)| (r.clone(), Instant::now())).collect(),
         };
         let s0 = self.metrics.steps;
-        self.de.decode_wave(&mut self.st, &wave, &mut self.metrics)?;
+        let rs = self.de.decode_wave(&mut self.st, &wave, &mut self.metrics)?;
         clock.advance((self.metrics.steps - s0) * self.step_ticks);
-        let done = clock.now();
+        Ok((rs, clock.now()))
+    }
+
+    /// Pop one wave, decode it for real, advance the clock by the executed
+    /// steps, and record completion samples at the new time.
+    fn fire(&mut self, clock: &mut StepClock, samples: &mut Vec<Sample>) -> Result<()> {
+        let popped = self.pop_wave();
+        let (_, done) = self.decode_popped(&popped, clock)?;
         samples.extend(
             popped
                 .iter()
@@ -814,6 +929,86 @@ impl<'e> WaveLane<'e> {
         );
         Ok(())
     }
+}
+
+/// Frame `env` through the real IPC codec, charging the leg's wire counters
+/// with exactly the bytes `ipc::write_frame` would put on the socket.
+fn meter(metrics: &mut ServeMetrics, env: &Envelope) -> Result<()> {
+    let frame = frame_bytes(&env.to_json())?;
+    metrics.ipc_frames += 1;
+    metrics.ipc_bytes += frame.len() as u64;
+    Ok(())
+}
+
+/// [`WaveLane::fire`] under the IPC cost model: decode the popped wave,
+/// optionally lose it to a SIGKILL (decode done, no reply framed) and
+/// replay it on the restarted worker asserting bit-identical streams, then
+/// meter one Reply frame per response and record samples with the reply
+/// hop added.  Queue entries carry worker-clock (`+hop`) arrival ticks;
+/// samples subtract the hop back out to record router-side arrivals.
+fn fire_ipc(
+    lane: &mut WaveLane<'_>,
+    clock: &mut StepClock,
+    samples: &mut Vec<Sample>,
+    hop: u64,
+    tps: f64,
+    fired: &mut usize,
+    crash: &mut Option<(usize, u64)>,
+) -> Result<()> {
+    let popped = lane.pop_wave();
+    let (mut responses, mut done) = lane.decode_popped(&popped, clock)?;
+    let this_wave = *fired;
+    *fired += 1;
+    if let Some((_, restart_ticks)) =
+        crash.take_if(|(kill_wave, _)| this_wave == *kill_wave)
+    {
+        // SIGKILL lands after the decode but before any reply frame: the
+        // wave's work and responses die with the process
+        let lost: Vec<Vec<i32>> = responses.iter().map(|r| r.tokens.clone()).collect();
+        lane.metrics.worker_kills += 1;
+        clock.advance(restart_ticks);
+        // the supervisor re-submits every un-acked request to the restarted
+        // worker — fresh Submit frames on the wire
+        for (r, _) in &popped {
+            meter(
+                &mut lane.metrics,
+                &Envelope::new(r.id, MsgKind::Submit, request_to_json(r)),
+            )?;
+        }
+        lane.metrics.worker_restarts += 1;
+        lane.metrics.replayed_requests += popped.len() as u64;
+        let (replayed, redone) = lane.decode_popped(&popped, clock)?;
+        // decode_wave resets memories per wave, so the restarted worker
+        // must reproduce the lost streams bit-for-bit
+        anyhow::ensure!(
+            replayed.iter().map(|r| &r.tokens).eq(lost.iter()),
+            "replayed wave diverged from the streams lost to the kill"
+        );
+        responses = replayed;
+        done = redone;
+    }
+    for r in &responses {
+        let at_shifted = popped
+            .iter()
+            .find(|(q, _)| q.id == r.id)
+            .map(|(_, at)| *at)
+            .context("response for a request outside the wave")?;
+        let arrive = at_shifted - hop;
+        let done_tick = done + hop;
+        // Reply frame: worker → router.  Latency is canonicalised to
+        // virtual seconds so the metered byte count is deterministic (the
+        // wall-clock latency decode_wave stamped would jitter it).
+        let wire = crate::serve::Response {
+            latency: (done_tick - arrive) as f64 / tps,
+            ..r.clone()
+        };
+        meter(
+            &mut lane.metrics,
+            &Envelope::new(r.id, MsgKind::Reply, response_to_json(&wire)),
+        )?;
+        samples.push(Sample { id: r.id, arrive_tick: arrive, done_tick });
+    }
+    Ok(())
 }
 
 /// Continuous-lane executor over the real masked decode program (identical

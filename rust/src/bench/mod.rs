@@ -40,6 +40,6 @@ pub use harness::{
 pub use report::{env_fingerprint, LegReport, Report, Summary, BENCH_SCHEMA};
 pub use scenarios::{
     adaptive_arrival, bench_cfg, fleet_engine, run_named, run_suite, ADAPTIVE_SLA,
-    DEFAULT_SEED, HERMETIC_SUITE, PAGING_PAGE_SIZE, PAGING_POOL_PAGES, SPEC_DRAFT_TICKS,
-    SPEC_TARGET_TICKS,
+    DEFAULT_SEED, HERMETIC_SUITE, IPC_HOP_TICKS, IPC_KILL_WAVE, IPC_RESTART_TICKS,
+    PAGING_PAGE_SIZE, PAGING_POOL_PAGES, SPEC_DRAFT_TICKS, SPEC_TARGET_TICKS,
 };

@@ -29,6 +29,14 @@
 //!     "pool_deferred": 0, "pool_shed": 0,  // paged-layout legs only
 //!     "degrade_events": 0, "recover_events": 0, // adaptive legs only
 //!     "avg_k_milli": 0, "agreement_milli": 0,   // moe_conversion legs only
+//!     "ipc_frames": 0, "ipc_bytes": 0,          // ipc scenario only
+//!     "worker_kills": 0, "worker_restarts": 0, "replayed_requests": 0,
+//!     "deterministic": true,           // leg-level: false marks a
+//!                                      // wall-clock leg inside an otherwise
+//!                                      // deterministic report — the gate and
+//!                                      // bench_harness.rs skip it (absent
+//!                                      // reads as true, so old reports and
+//!                                      // baselines are unaffected)
 //!     "latency": { "unit": "ticks", "n": 60, "mean": ...,
 //!                  "min": ..., "max": ..., "p50": ..., "p95": ... }
 //!   } ... ]
@@ -38,7 +46,9 @@
 //! The gate reads `legs[*].latency.p95` and fails on >threshold regressions
 //! against the committed `rust/benches/BENCH_BASELINE.json`; everything
 //! else is context for humans and dashboards.  `deterministic: false`
-//! reports (real-engine wall clock) are archived but never gated.
+//! reports (real-engine wall clock) are archived but never gated, and a
+//! `deterministic: false` *leg* is likewise skipped by the gate — timing
+//! noise must never fail a comparison against the virtual-time baseline.
 
 use std::path::{Path, PathBuf};
 
@@ -178,6 +188,19 @@ pub struct LegReport {
     /// the scenario from `refback::conversion_probe`, not by the harness.
     pub avg_k_milli: u64,
     pub agreement_milli: u64,
+    /// IPC accounting (the `ipc` scenario / `serve --ipc`): zero elsewhere.
+    pub ipc_frames: u64,
+    pub ipc_bytes: u64,
+    pub worker_kills: u64,
+    pub worker_restarts: u64,
+    pub replayed_requests: u64,
+    /// Is this leg's latency sample virtual-time (gate-comparable)?  The
+    /// harness always says true; wall-clock writers building via
+    /// `..Default::default()` inherit false, which tells the gate, the
+    /// baseline updater and `bench_harness.rs` to skip the leg.  Absent
+    /// keys read back as *true* — every pre-existing report and baseline
+    /// leg is deterministic.
+    pub deterministic: bool,
     pub latency: Summary,
 }
 
@@ -215,6 +238,12 @@ impl LegReport {
             recover_events: leg.metrics.recover_events,
             avg_k_milli: 0,
             agreement_milli: 0,
+            ipc_frames: leg.metrics.ipc_frames,
+            ipc_bytes: leg.metrics.ipc_bytes,
+            worker_kills: leg.metrics.worker_kills,
+            worker_restarts: leg.metrics.worker_restarts,
+            replayed_requests: leg.metrics.replayed_requests,
+            deterministic: true,
             latency: Summary::of("ticks", &lat),
         }
     }
@@ -248,6 +277,12 @@ impl LegReport {
             ("recover_events", Json::Num(self.recover_events as f64)),
             ("avg_k_milli", Json::Num(self.avg_k_milli as f64)),
             ("agreement_milli", Json::Num(self.agreement_milli as f64)),
+            ("ipc_frames", Json::Num(self.ipc_frames as f64)),
+            ("ipc_bytes", Json::Num(self.ipc_bytes as f64)),
+            ("worker_kills", Json::Num(self.worker_kills as f64)),
+            ("worker_restarts", Json::Num(self.worker_restarts as f64)),
+            ("replayed_requests", Json::Num(self.replayed_requests as f64)),
+            ("deterministic", Json::Bool(self.deterministic)),
             ("latency", self.latency.to_json()),
         ])
     }
@@ -289,6 +324,15 @@ impl LegReport {
             // absent in pre-conversion reports: same convention
             avg_k_milli: opt("avg_k_milli") as u64,
             agreement_milli: opt("agreement_milli") as u64,
+            // absent in pre-ipc reports: same convention
+            ipc_frames: opt("ipc_frames") as u64,
+            ipc_bytes: opt("ipc_bytes") as u64,
+            worker_kills: opt("worker_kills") as u64,
+            worker_restarts: opt("worker_restarts") as u64,
+            replayed_requests: opt("replayed_requests") as u64,
+            // absent reads TRUE: every leg written before this key existed
+            // is a virtual-time leg the gate should keep comparing
+            deterministic: j.get("deterministic").and_then(Json::as_bool).unwrap_or(true),
             latency: Summary::from_json(j.req("latency")?)?,
         })
     }

@@ -49,6 +49,14 @@
 //!   lane and eats the burst backlog; the adaptive leg degrades overloaded
 //!   lanes mid-burst (then recovers the cheap lane once its window
 //!   refills), keeping p95 bounded.
+//! - [`ipc`] — in-process vs multi-process (`serve --ipc`) wave serving on
+//!   one lane: the `uds` leg re-runs the wave schedule under the UDS hop
+//!   cost ([`IPC_HOP_TICKS`] each way, Submit/Reply frames metered through
+//!   the real `serve::ipc` codec), so its p95 is the in-process leg's +
+//!   2·hop exactly; the `uds_crash` leg additionally SIGKILLs the worker
+//!   after wave [`IPC_KILL_WAVE`] decodes but before its replies land —
+//!   the supervisor pays [`IPC_RESTART_TICKS`] and replays the un-acked
+//!   wave, bit-identically, with zero lost requests.
 
 use std::path::{Path, PathBuf};
 
@@ -71,7 +79,18 @@ pub const HERMETIC_SUITE: &[&str] = &[
     "paging",
     "adaptive",
     "moe_conversion",
+    "ipc",
 ];
+
+/// `ipc` scenario: virtual cost of one UDS hop (router→worker or
+/// worker→router — a length-prefixed JSON frame over a local socket is
+/// ~10–100µs, ≈ 2 ticks at the suite's 1000 ticks/s), the restart penalty
+/// the supervisor pays to respawn + reconnect a SIGKILLed worker, and
+/// which fired wave (0-indexed) the crash leg kills.  Mirrored by
+/// scripts/bench_baseline.py.
+pub const IPC_HOP_TICKS: u64 = 2;
+pub const IPC_RESTART_TICKS: u64 = 40;
+pub const IPC_KILL_WAVE: usize = 3;
 
 /// `moe_conversion` fleet: the dense bench baseline vs its converted
 /// twins — E experts split from each FFL slot by `arch::convert`, routed
@@ -368,6 +387,25 @@ pub fn moe_conversion(seed: u64) -> Scenario {
     }
 }
 
+/// In-process vs UDS multi-process wave serving A/B (see module docs).
+/// Steady 3ms arrivals on one 1-tick lane: waves mostly fill, so the hop
+/// shift and the crash replay are the only differences between legs.
+pub fn ipc(seed: u64) -> Scenario {
+    let mut gen = WorkloadGen::new(bench_cfg().vocab);
+    gen.arrival = Arrival::Uniform { gap_s: 0.003 };
+    let trace = gen.generate(48, seed);
+    Scenario {
+        name: "ipc".into(),
+        suite: "hermetic".into(),
+        seed,
+        ticks_per_sec: 1000.0,
+        max_wait_ticks: 6,
+        warmup: 4,
+        lanes: fleet_lanes(1, 1),
+        trace,
+    }
+}
+
 /// Static-vs-adaptive SLA-degradation A/B (see module docs).  The trace is
 /// a Uniform-gap draw whose arrival offsets are re-laid onto the
 /// three-phase gentle/burst/gentle schedule ([`adaptive_arrival`]) —
@@ -564,6 +602,26 @@ pub fn run_named(name: &str, seed: u64) -> Result<Report> {
                 }
             }
             Ok(report)
+        }
+        "ipc" => {
+            let engine = fleet_engine(1)?;
+            let h = Harness::new(&engine, ipc(seed))?;
+            let legs = vec![
+                h.run_leg(
+                    "in_process",
+                    ServePolicy::Wave,
+                    Concurrency::Overlapped,
+                    ExecMode::Auto,
+                )?,
+                h.run_ipc_leg("uds", ExecMode::Auto, IPC_HOP_TICKS, None)?,
+                h.run_ipc_leg(
+                    "uds_crash",
+                    ExecMode::Auto,
+                    IPC_HOP_TICKS,
+                    Some((IPC_KILL_WAVE, IPC_RESTART_TICKS)),
+                )?,
+            ];
+            Ok(Report::from_legs(&h.scenario, engine.backend_name(), &legs))
         }
         other => bail!("unknown bench scenario '{other}' (try {HERMETIC_SUITE:?})"),
     }

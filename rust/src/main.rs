@@ -4,7 +4,8 @@
 //!   search   phase-1 NAS for one latency target
 //!   convert  hermetic dense→MoE conversion planning for a latency target
 //!   train    phase-2 retraining of a named arch (+ eval)
-//!   serve    SLA-routed batched decoding demo
+//!   serve    SLA-routed batched decoding demo (--ipc = multi-process)
+//!   worker   per-variant engine process behind `serve --ipc`
 //!   profile  per-block + end-to-end CPU latency tables
 //!   compile  BUILD step: AOT-compile a searched arch via python
 //!   archs    render every arch in the manifest (Appendix A style)
@@ -71,6 +72,20 @@ fn run() -> Result<()> {
     // so it must not require pjrt artifacts.
     if cmd == "convert" {
         return run_convert(&args);
+    }
+
+    // `planer worker`: the per-variant engine process the IPC supervisor
+    // spawns.  Early dispatch: it bootstraps its own engine from its own
+    // flags (ref by default) and must not touch the default pjrt path.
+    if cmd == "worker" {
+        return run_worker_cmd(&args);
+    }
+
+    // `planer serve --ipc`: multi-process topology.  The supervisor holds
+    // no backend at all — each worker process bootstraps its own — so this
+    // too dispatches before engine construction.
+    if cmd == "serve" && args.has("ipc") {
+        return run_ipc_serve(&args);
     }
 
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -456,6 +471,106 @@ fn run_convert(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `planer worker`: the per-variant engine process behind `serve --ipc`.
+/// Bootstraps its own engine (reference backend by default, so the whole
+/// multi-process topology runs hermetically), binds `--socket`, and speaks
+/// the envelope protocol until the supervisor says Bye or hangs up.
+fn run_worker_cmd(args: &Args) -> Result<()> {
+    use planer::serve::ipc::{run_worker, WorkerConfig};
+    let socket = PathBuf::from(args.get("socket").context("--socket required")?);
+    let arch = args.get("arch").context("--arch required")?;
+    let backend = args.get_or("backend", "ref");
+    let config = args.get_or("config", "tiny");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let engine = Engine::bootstrap(&backend, &config, &artifacts)?;
+    let cfg = WorkerConfig {
+        socket,
+        arch,
+        seed: args.get_i32("seed", 0)?,
+        batch_window: Duration::from_millis(args.get_usize("batch-window-ms", 2)? as u64),
+    };
+    run_worker(&engine, &cfg)
+}
+
+/// `planer serve --ipc`: the multi-process serve demo — one supervisor
+/// (router) process, one `planer worker` process per variant, UDS between
+/// them, crash recovery on (see serve::supervisor and docs/OPERATIONS.md).
+fn run_ipc_serve(args: &Args) -> Result<()> {
+    use planer::serve::{Supervisor, SupervisorOpts, WorkloadGen};
+
+    let backend = args.get_or("backend", "ref");
+    let config = args.get_or("config", "tiny");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let seed = args.get_i32("seed", 0)?;
+    let n_req = args.get_usize("requests", 12)?;
+    let workers = args.get_usize("workers", 2)?;
+
+    // Enumerate the variant pool exactly like the in-process demo, then
+    // drop the probe engine — every worker process bootstraps its own.
+    let (names, vocab) = {
+        let probe = Engine::bootstrap(&backend, &config, &artifacts)?;
+        let mut names: Vec<String> = probe
+            .manifest
+            .arch_names()
+            .into_iter()
+            .filter(|a| probe.has_program(&format!("gen_{a}")))
+            .map(String::from)
+            .collect();
+        if workers > 0 {
+            names.truncate(workers);
+        }
+        (names, probe.manifest.config.vocab)
+    };
+    anyhow::ensure!(!names.is_empty(), "no gen programs in manifest");
+
+    let mut opts = SupervisorOpts {
+        config: config.clone(),
+        backend: backend.clone(),
+        artifacts,
+        seed,
+        request_timeout: Duration::from_millis(args.get_usize("request-timeout-ms", 30_000)? as u64),
+        restart_max: args.get_usize("restart-max", 2)?,
+        backoff: Duration::from_millis(args.get_usize("backoff-ms", 50)? as u64),
+        batch_window_ms: args.get_usize("batch-window-ms", 2)? as u64,
+        ..SupervisorOpts::default()
+    };
+    if let Some(dir) = args.get("socket-dir") {
+        opts.socket_dir = PathBuf::from(dir);
+    }
+    println!(
+        "{} worker processes over UDS in {} (backend {backend}): {names:?}",
+        names.len(),
+        opts.socket_dir.display()
+    );
+    let mut sup = Supervisor::spawn(&names, opts)?;
+    for (name, ok) in sup.health_check() {
+        println!("  worker {name:10} {}", if ok { "healthy" } else { "UNHEALTHY" });
+    }
+
+    let gen = WorkloadGen::bimodal_sla(vocab, 0.05, 2.0);
+    let trace = gen.generate(n_req, seed as u64);
+    let t0 = std::time::Instant::now();
+    let responses = sup.replay(&trace)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &responses {
+        println!(
+            "  req {:3} via {:10} {:3} tokens in {:7.1}ms",
+            r.id,
+            r.variant,
+            r.tokens.len(),
+            r.latency * 1e3
+        );
+    }
+    println!(
+        "ipc: {} responses in {wall:.2}s (worker restarts {}, replayed {}, re-routed {})",
+        responses.len(),
+        sup.restarts_total,
+        sup.replays_total,
+        sup.reroutes_total
+    );
+    sup.shutdown()
+}
+
 /// `planer serve` options (see HELP).
 struct ServeOpts {
     /// Cap on decode workers = variants served (0 = one per gen program).
@@ -662,6 +777,8 @@ USAGE: planer <cmd> [flags]
            [--policy wave|continuous|speculative|ab] [--draft-k 4]
            [--adaptive-sla-ms MS] [--rps R] [--realtime]
            [--mem-layout slotted|paged] [--page-size 4] [--pool-pages N]
+           [--ipc] [--socket-dir DIR] [--restart-max 2] [--backoff-ms 50]
+           [--request-timeout-ms 30000] [--batch-window-ms 2]
            (one decode worker per variant; --mode ab replays the same trace
             serially then concurrently; --policy picks wave batching,
             continuous slot scheduling, or speculative decode — the fleet's
@@ -674,7 +791,18 @@ USAGE: planer <cmd> [flags]
             page pool — slot width becomes a pure compute knob, idle
             sessions spill to host LRU-first, and admission defers/sheds
             on true exhaustion; --pool-pages 0 auto-sizes, and a pool too
-            small for one session is rejected before serving starts)
+            small for one session is rejected before serving starts;
+            --ipc swaps worker threads for worker *processes* over Unix
+            domain sockets: a supervisor spawns `planer worker` per
+            variant, health-checks it, restarts a crashed worker with
+            doubling --backoff-ms up to --restart-max times — replaying
+            its un-acked requests — and past that budget re-routes them
+            to the surviving variants, so no accepted request is lost;
+            see docs/OPERATIONS.md)
+  worker   --socket PATH --arch NAME [--backend ref|pjrt] [--config tiny]
+           [--seed N] [--batch-window-ms 2] [--artifacts DIR]
+           (one per-variant engine process, spawned by `serve --ipc`;
+            serves length-prefixed JSON envelopes on its socket)
   profile
   convert  --latency-target 0.65 [--accuracy-floor 0.6] [--arch baseline]
            [--config tiny|base] [--name moefied]

@@ -72,6 +72,18 @@ impl Engine {
         Engine::reference(cfg, archs)
     }
 
+    /// Uniform constructor over the CLI's `--backend` axis — what
+    /// `planer serve`, `planer worker` and the IPC supervisor's worker
+    /// processes all call: `"ref"` → [`Engine::reference_named`] over the
+    /// named config, anything else → PJRT over `artifacts`.
+    pub fn bootstrap(backend: &str, config: &str, artifacts: &Path) -> Result<Engine> {
+        if backend == "ref" {
+            Engine::reference_named(config)
+        } else {
+            Engine::new(artifacts)
+        }
+    }
+
     fn over(backend: Arc<dyn Backend>, manifest: Manifest) -> Engine {
         Engine {
             backend,

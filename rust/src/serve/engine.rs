@@ -167,6 +167,18 @@ pub struct ServeMetrics {
     pub degrade_events: u64,
     /// Adaptive SLA ladder: lane recover transitions observed.
     pub recover_events: u64,
+    /// IPC topology (`serve --ipc` / the `ipc` bench scenario — all zero
+    /// in-process): envelopes framed onto a worker socket, both directions.
+    pub ipc_frames: u64,
+    /// On-wire bytes of those frames (4-byte header + JSON payload).
+    pub ipc_bytes: u64,
+    /// Worker processes killed (crashes observed or injected).
+    pub worker_kills: u64,
+    /// Worker processes relaunched by the supervisor.
+    pub worker_restarts: u64,
+    /// Requests re-submitted after a worker crash (replayed to the
+    /// restarted worker or re-routed to a survivor).
+    pub replayed_requests: u64,
 }
 
 impl ServeMetrics {
@@ -249,6 +261,11 @@ impl ServeMetrics {
         self.pool_shed += other.pool_shed;
         self.degrade_events += other.degrade_events;
         self.recover_events += other.recover_events;
+        self.ipc_frames += other.ipc_frames;
+        self.ipc_bytes += other.ipc_bytes;
+        self.worker_kills += other.worker_kills;
+        self.worker_restarts += other.worker_restarts;
+        self.replayed_requests += other.replayed_requests;
         self.latencies.merge(&other.latencies);
     }
 }

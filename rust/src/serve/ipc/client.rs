@@ -1,0 +1,170 @@
+//! Supervisor-side connection to one worker socket.
+//!
+//! [`IpcClient`] wraps a `UnixStream` with the frame codec and envelope
+//! layer, plus two conveniences the supervisor leans on:
+//!
+//! - [`IpcClient::recv_with`] — a poll-style receive: `Ok(None)` when the
+//!   timeout elapsed with no frame started (the normal idle tick),
+//!   `Err(..)` when the connection actually failed (the crash-detection
+//!   signal);
+//! - [`IpcClient::call`] — a *quiescent* control round-trip (`Ping`,
+//!   `Drain`, the `Hello` wait): allocates a correlation ID from the
+//!   control counter, sends, and insists the next frame echoes that cid —
+//!   anything else is a typed
+//!   [`EnvelopeError::CorrelationMismatch`].  Never use it while request
+//!   replies may be in flight; the drain loop speaks `recv_with` directly.
+
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{self, CodecError};
+use super::envelope::{Envelope, EnvelopeError, MsgKind};
+use crate::util::json::Json;
+
+/// Control correlation IDs start here so they can never collide with a
+/// request-id cid (request ids are dense from 0).
+pub const CONTROL_CID_BASE: u64 = 1 << 32;
+
+pub struct IpcClient {
+    stream: UnixStream,
+    next_cid: u64,
+}
+
+impl IpcClient {
+    /// Connect to `path`, retrying every 10 ms until `timeout` — the
+    /// worker needs a moment between `spawn` and `bind`.
+    pub fn connect(path: &Path, timeout: Duration) -> Result<IpcClient> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match UnixStream::connect(path) {
+                Ok(stream) => return Ok(IpcClient::from_stream(stream)),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| {
+                            format!("connecting to worker socket {}", path.display())
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    /// Wrap an already-connected stream (tests use `UnixStream::pair`).
+    pub fn from_stream(stream: UnixStream) -> IpcClient {
+        IpcClient { stream, next_cid: CONTROL_CID_BASE }
+    }
+
+    /// Send one envelope; returns the on-wire byte count.
+    pub fn send(&mut self, env: &Envelope) -> Result<usize, CodecError> {
+        codec::write_frame(&mut self.stream, &env.to_json())
+    }
+
+    /// Receive one envelope within `timeout` (`None` blocks forever).
+    /// `Ok(None)` = timeout before any frame started; `Err` = the
+    /// connection failed (closed, truncated, io) or the peer sent
+    /// something that is not an envelope.
+    pub fn recv_with(&mut self, timeout: Option<Duration>) -> Result<Option<Envelope>> {
+        self.stream
+            .set_read_timeout(timeout)
+            .context("set_read_timeout on worker socket")?;
+        match codec::read_frame(&mut self.stream) {
+            Ok(j) => {
+                let env = Envelope::from_json(&j).map_err(anyhow::Error::new)?;
+                Ok(Some(env))
+            }
+            Err(CodecError::Io(e)) if codec::is_timeout(&e) => Ok(None),
+            Err(e) => Err(anyhow::Error::new(e)),
+        }
+    }
+
+    /// One quiescent control round-trip: send `kind` under a fresh control
+    /// cid and require the next frame to echo it.
+    pub fn call(&mut self, kind: MsgKind, payload: Json, timeout: Duration) -> Result<Envelope> {
+        let cid = self.next_cid;
+        self.next_cid += 1;
+        self.send(&Envelope::new(cid, kind, payload))
+            .map_err(anyhow::Error::new)?;
+        match self.recv_with(Some(timeout))? {
+            Some(reply) => {
+                if reply.cid != cid {
+                    bail!(EnvelopeError::CorrelationMismatch { expected: cid, got: reply.cid });
+                }
+                Ok(reply)
+            }
+            None => bail!(
+                "worker did not answer {} within {:?}",
+                kind.as_str(),
+                timeout
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn call_flags_correlation_mismatch_as_typed_error() {
+        let (sup, mut worker) = UnixStream::pair().unwrap();
+        let mut client = IpcClient::from_stream(sup);
+
+        // the fake worker answers the ping under the WRONG cid
+        let t = std::thread::spawn(move || {
+            let j = codec::read_frame(&mut worker).unwrap();
+            let env = Envelope::from_json(&j).unwrap();
+            assert_eq!(env.kind, MsgKind::Ping);
+            let wrong = Envelope::new(env.cid + 1, MsgKind::Pong, Json::Null);
+            codec::write_frame(&mut worker, &wrong.to_json()).unwrap();
+        });
+
+        let err = client
+            .call(MsgKind::Ping, Json::Null, Duration::from_secs(2))
+            .unwrap_err();
+        match err.downcast_ref::<EnvelopeError>() {
+            Some(EnvelopeError::CorrelationMismatch { expected, got }) => {
+                assert_eq!(*got, *expected + 1)
+            }
+            other => panic!("expected CorrelationMismatch, got {other:?}"),
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn call_matches_echoed_cid_and_allocates_from_control_space() {
+        let (sup, mut worker) = UnixStream::pair().unwrap();
+        let mut client = IpcClient::from_stream(sup);
+
+        let t = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let j = codec::read_frame(&mut worker).unwrap();
+                let env = Envelope::from_json(&j).unwrap();
+                assert!(env.cid >= CONTROL_CID_BASE, "control cid in request-id space");
+                let pong = Envelope::new(env.cid, MsgKind::Pong, Json::Null);
+                codec::write_frame(&mut worker, &pong.to_json()).unwrap();
+            }
+        });
+
+        let a = client.call(MsgKind::Ping, Json::Null, Duration::from_secs(2)).unwrap();
+        let b = client.call(MsgKind::Ping, Json::Null, Duration::from_secs(2)).unwrap();
+        assert_eq!(a.kind, MsgKind::Pong);
+        assert_eq!(b.cid, a.cid + 1);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn recv_with_times_out_as_none_and_close_as_error() {
+        let (sup, worker) = UnixStream::pair().unwrap();
+        let mut client = IpcClient::from_stream(sup);
+        // nothing sent: a short timeout is Ok(None), not an error
+        assert!(client.recv_with(Some(Duration::from_millis(20))).unwrap().is_none());
+        drop(worker);
+        // peer gone: now it's an error (CodecError::Closed underneath)
+        let err = client.recv_with(Some(Duration::from_millis(20))).unwrap_err();
+        assert!(matches!(err.downcast_ref::<CodecError>(), Some(CodecError::Closed)));
+    }
+}

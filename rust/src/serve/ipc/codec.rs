@@ -1,0 +1,257 @@
+//! Length-prefixed JSON framing: the wire format under every IPC message.
+//!
+//! A frame is a 4-byte big-endian payload length followed by that many
+//! bytes of UTF-8 JSON (`crate::util::json::Json` — no serde offline).
+//! The length cap [`MAX_FRAME_BYTES`] is enforced *before* any allocation,
+//! so a corrupt or hostile peer cannot make the reader balloon.  Every
+//! failure mode is a typed [`CodecError`]; nothing in this module panics —
+//! both ends of the socket are decode hot paths (xtask PANIC001 strict).
+//!
+//! Timeout discipline: [`read_frame`] treats a timeout on the *first* byte
+//! as "no message pending" and returns it to the caller as an
+//! `Err(CodecError::Io(e))` with [`is_timeout`]`(&e)` true — the worker
+//! uses that as its batch-window tick, the supervisor as its poll tick.
+//! Once a frame has started, short reads retry (a frame in flight is worth
+//! waiting out) up to [`MAX_STALL_RETRIES`] timeout windows, and a clean
+//! EOF mid-frame is [`CodecError::Truncated`] — the connection is dead.
+
+use std::io::{self, Read, Write};
+
+use crate::util::json::Json;
+
+/// Hard cap on a frame's payload, checked before allocating the read
+/// buffer and before writing.  1 MiB fits any envelope this crate sends
+/// (a full-width wave of maximum-length requests is a few KiB) with two
+/// orders of magnitude of slack.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Bounded patience for a frame that *started* arriving and then stalled:
+/// after this many consecutive read-timeout windows mid-frame, the reader
+/// gives up with the underlying timeout error instead of spinning forever
+/// on a wedged-but-alive peer.
+pub const MAX_STALL_RETRIES: usize = 100;
+
+/// Typed framing failures.  `Closed`/`Truncated` mean the connection is
+/// unusable; `Oversized`/`BadJson` poison only the one frame (the stream
+/// stays in sync — the bytes were consumed); `Io` carries everything else,
+/// including first-byte timeouts (see [`is_timeout`]).
+#[derive(Debug)]
+pub enum CodecError {
+    /// Clean EOF before any byte of a frame: the peer hung up.
+    Closed,
+    /// EOF (or stall budget exhausted) inside a frame.
+    Truncated { wanted: usize, got: usize },
+    /// Declared payload length over [`MAX_FRAME_BYTES`].
+    Oversized { len: usize, max: usize },
+    /// Payload consumed but not valid UTF-8 JSON.
+    BadJson(String),
+    Io(io::Error),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Closed => write!(f, "connection closed"),
+            CodecError::Truncated { wanted, got } => {
+                write!(f, "truncated frame: wanted {wanted} bytes, got {got}")
+            }
+            CodecError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes > max {max}")
+            }
+            CodecError::BadJson(e) => write!(f, "bad frame json: {e}"),
+            CodecError::Io(e) => write!(f, "frame io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CodecError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Does this I/O error mean "read timed out" (as opposed to a real
+/// failure)?  Unix sockets report `SO_RCVTIMEO` expiry as `WouldBlock`;
+/// some platforms say `TimedOut`.
+pub fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Encode one message into its on-wire bytes (header + payload).  Shared
+/// by [`write_frame`] and the bench harness's hop-cost metering, so the
+/// bytes the bench counts are exactly the bytes the socket would carry.
+pub fn frame_bytes(msg: &Json) -> Result<Vec<u8>, CodecError> {
+    let body = msg.to_string().into_bytes();
+    if body.len() > MAX_FRAME_BYTES {
+        return Err(CodecError::Oversized { len: body.len(), max: MAX_FRAME_BYTES });
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+/// Write one frame and flush.  Returns the on-wire byte count.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> Result<usize, CodecError> {
+    let buf = frame_bytes(msg)?;
+    w.write_all(&buf).map_err(CodecError::Io)?;
+    w.flush().map_err(CodecError::Io)?;
+    Ok(buf.len())
+}
+
+/// Read one frame.  First-byte timeout propagates as `Io` (check
+/// [`is_timeout`]); first-byte EOF is `Closed`; anything that cuts a
+/// started frame short is `Truncated`.
+pub fn read_frame(r: &mut impl Read) -> Result<Json, CodecError> {
+    let mut hdr = [0u8; 4];
+    // First byte: do NOT retry timeouts — "nothing pending yet" is an
+    // answer the caller wants (batch window / poll tick).
+    loop {
+        match r.read(&mut hdr[..1]) {
+            Ok(0) => return Err(CodecError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(CodecError::Io(e)),
+        }
+    }
+    read_full(r, &mut hdr[1..], 4, 1)?;
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(CodecError::Oversized { len, max: MAX_FRAME_BYTES });
+    }
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body, len, 0)?;
+    let text = match String::from_utf8(body) {
+        Ok(t) => t,
+        Err(e) => return Err(CodecError::BadJson(format!("not utf-8: {e}"))),
+    };
+    Json::parse(&text).map_err(|e| CodecError::BadJson(e.to_string()))
+}
+
+/// Fill `buf` completely, retrying interrupts and (up to a stall budget)
+/// timeouts — a frame already on the wire is worth waiting out.
+/// `frame_wanted`/`already` only shape the `Truncated` report.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    frame_wanted: usize,
+    already: usize,
+) -> Result<(), CodecError> {
+    let mut got = 0usize;
+    let mut stalls = 0usize;
+    while got < buf.len() {
+        let dst = match buf.get_mut(got..) {
+            Some(d) => d,
+            None => break,
+        };
+        match r.read(dst) {
+            Ok(0) => {
+                return Err(CodecError::Truncated { wanted: frame_wanted, got: already + got })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                stalls += 1;
+                if stalls > MAX_STALL_RETRIES {
+                    return Err(CodecError::Truncated {
+                        wanted: frame_wanted,
+                        got: already + got,
+                    });
+                }
+            }
+            Err(e) => return Err(CodecError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Json) -> Json {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, msg).unwrap();
+        read_frame(&mut &wire[..]).unwrap()
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let msg = Json::obj(vec![
+            ("cid", Json::Num(7.0)),
+            ("kind", Json::Str("submit".into())),
+            ("payload", Json::Arr(vec![Json::Num(1.0), Json::Null])),
+        ]);
+        assert_eq!(roundtrip(&msg), msg);
+    }
+
+    #[test]
+    fn truncated_frame_is_typed_not_a_panic() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Json::Str("hello".into())).unwrap();
+        // cut the frame anywhere after the first byte: always Truncated
+        for cut in 1..wire.len() {
+            match read_frame(&mut &wire[..cut]) {
+                Err(CodecError::Truncated { wanted, got }) => {
+                    assert!(got < wanted, "cut {cut}: got {got} >= wanted {wanted}")
+                }
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        // zero bytes before any frame is a clean close, not truncation
+        assert!(matches!(read_frame(&mut &wire[..0]), Err(CodecError::Closed)));
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        // header declares 2 MiB; no payload follows — the reader must
+        // refuse at the header, not try to read (or allocate) the body
+        let hdr = ((MAX_FRAME_BYTES as u32) * 2).to_be_bytes();
+        match read_frame(&mut &hdr[..]) {
+            Err(CodecError::Oversized { len, max }) => {
+                assert_eq!(len, MAX_FRAME_BYTES * 2);
+                assert_eq!(max, MAX_FRAME_BYTES);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // and the writer refuses to emit one
+        let big = Json::Str("x".repeat(MAX_FRAME_BYTES + 1));
+        assert!(matches!(
+            frame_bytes(&big),
+            Err(CodecError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn garbage_json_is_typed_and_leaves_the_stream_in_sync() {
+        let mut wire = Vec::new();
+        let garbage = b"{not json";
+        wire.extend_from_slice(&(garbage.len() as u32).to_be_bytes());
+        wire.extend_from_slice(garbage);
+        write_frame(&mut wire, &Json::Num(42.0)).unwrap();
+        let mut r = &wire[..];
+        assert!(matches!(read_frame(&mut r), Err(CodecError::BadJson(_))));
+        // the bad payload was consumed: the next frame parses fine
+        assert_eq!(read_frame(&mut r).unwrap(), Json::Num(42.0));
+    }
+
+    #[test]
+    fn non_utf8_payload_is_bad_json() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&2u32.to_be_bytes());
+        wire.extend_from_slice(&[0xff, 0xfe]);
+        assert!(matches!(read_frame(&mut &wire[..]), Err(CodecError::BadJson(_))));
+    }
+
+    #[test]
+    fn frame_bytes_matches_write_frame() {
+        let msg = Json::obj(vec![("k", Json::Num(1.0))]);
+        let mut wire = Vec::new();
+        let n = write_frame(&mut wire, &msg).unwrap();
+        assert_eq!(frame_bytes(&msg).unwrap(), wire);
+        assert_eq!(n, wire.len());
+    }
+}

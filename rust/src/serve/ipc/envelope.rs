@@ -1,0 +1,319 @@
+//! Message envelopes: what rides inside each frame.
+//!
+//! Every message is `{v, cid, kind, payload}`.  `v` pins the protocol
+//! version (a mixed-version fleet fails loudly, not weirdly).  `cid` is
+//! the correlation ID: request/response pairs share one — a `Submit`
+//! carries `cid == request.id` and its `Reply` echoes it, control
+//! exchanges (`Ping`→`Pong`, `Drain`→`Drained`) allocate theirs from the
+//! supervisor's control-ID counter (see `client::IpcClient::call`).
+//!
+//! Request/Response payloads reuse the field conventions of
+//! `workload::trace_to_json` (`sla` is JSON `null` for an infinite
+//! budget — JSON has no `inf`).  All decoding returns typed
+//! [`EnvelopeError`]s; no panics (PANIC001 strict).
+
+use crate::serve::{Request, Response};
+use crate::util::json::Json;
+
+/// Wire protocol version; bumped on any incompatible envelope change.
+pub const IPC_VERSION: u64 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Worker → supervisor, first frame after accept: arch, width,
+    /// probed token latency, pid.
+    Hello,
+    /// Supervisor → worker health check; worker echoes `Pong` same cid.
+    Ping,
+    Pong,
+    /// Supervisor → worker: one request (cid == request id).
+    Submit,
+    /// Worker → supervisor: one completed response (cid == request id).
+    Reply,
+    /// Supervisor → worker: flush every queued request, then `Drained`.
+    Drain,
+    Drained,
+    /// Either direction: a non-fatal per-message failure report.
+    Error,
+    /// Supervisor → worker: clean shutdown; the worker exits.
+    Bye,
+}
+
+impl MsgKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MsgKind::Hello => "hello",
+            MsgKind::Ping => "ping",
+            MsgKind::Pong => "pong",
+            MsgKind::Submit => "submit",
+            MsgKind::Reply => "reply",
+            MsgKind::Drain => "drain",
+            MsgKind::Drained => "drained",
+            MsgKind::Error => "error",
+            MsgKind::Bye => "bye",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MsgKind, EnvelopeError> {
+        Ok(match s {
+            "hello" => MsgKind::Hello,
+            "ping" => MsgKind::Ping,
+            "pong" => MsgKind::Pong,
+            "submit" => MsgKind::Submit,
+            "reply" => MsgKind::Reply,
+            "drain" => MsgKind::Drain,
+            "drained" => MsgKind::Drained,
+            "error" => MsgKind::Error,
+            "bye" => MsgKind::Bye,
+            other => return Err(EnvelopeError::BadKind(other.to_string())),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub cid: u64,
+    pub kind: MsgKind,
+    pub payload: Json,
+}
+
+impl Envelope {
+    pub fn new(cid: u64, kind: MsgKind, payload: Json) -> Envelope {
+        Envelope { cid, kind, payload }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::Num(IPC_VERSION as f64)),
+            ("cid", Json::Num(self.cid as f64)),
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            ("payload", self.payload.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Envelope, EnvelopeError> {
+        let v = field_u64(j, "v")?;
+        if v != IPC_VERSION {
+            return Err(EnvelopeError::BadVersion { got: v });
+        }
+        let cid = field_u64(j, "cid")?;
+        let kind_str = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or(EnvelopeError::Field("kind"))?;
+        let kind = MsgKind::parse(kind_str)?;
+        let payload = j.get("payload").cloned().unwrap_or(Json::Null);
+        Ok(Envelope { cid, kind, payload })
+    }
+}
+
+/// Typed envelope decode failures — distinct from framing failures so a
+/// caller can tell "the wire broke" from "the peer speaks a different
+/// protocol".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnvelopeError {
+    BadVersion { got: u64 },
+    BadKind(String),
+    /// A required field is missing or has the wrong type.
+    Field(&'static str),
+    /// A control reply arrived under the wrong correlation ID.
+    CorrelationMismatch { expected: u64, got: u64 },
+}
+
+impl std::fmt::Display for EnvelopeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EnvelopeError::BadVersion { got } => {
+                write!(f, "ipc version mismatch: got v{got}, want v{IPC_VERSION}")
+            }
+            EnvelopeError::BadKind(k) => write!(f, "unknown message kind '{k}'"),
+            EnvelopeError::Field(name) => write!(f, "missing/invalid field '{name}'"),
+            EnvelopeError::CorrelationMismatch { expected, got } => {
+                write!(f, "correlation mismatch: expected cid {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EnvelopeError {}
+
+fn field_u64(j: &Json, name: &'static str) -> Result<u64, EnvelopeError> {
+    j.get(name)
+        .and_then(Json::as_f64)
+        .filter(|n| *n >= 0.0)
+        .map(|n| n as u64)
+        .ok_or(EnvelopeError::Field(name))
+}
+
+// ---- request / response payload codecs ---------------------------------
+// Same field conventions as `workload::trace_to_json`: `sla: null` encodes
+// an infinite latency budget (JSON numbers cannot carry inf).
+
+pub fn request_to_json(r: &Request) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("prompt", Json::Arr(r.prompt.iter().map(|t| Json::Num(*t as f64)).collect())),
+        ("n_gen", Json::Num(r.n_gen as f64)),
+        ("sla", if r.sla.is_finite() { Json::Num(r.sla) } else { Json::Null }),
+    ])
+}
+
+pub fn request_from_json(j: &Json) -> Result<Request, EnvelopeError> {
+    let id = field_u64(j, "id")?;
+    let prompt = j
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or(EnvelopeError::Field("prompt"))?
+        .iter()
+        .map(|t| t.as_f64().map(|n| n as i32).ok_or(EnvelopeError::Field("prompt")))
+        .collect::<Result<Vec<i32>, _>>()?;
+    let n_gen = j
+        .get("n_gen")
+        .and_then(Json::as_usize)
+        .ok_or(EnvelopeError::Field("n_gen"))?;
+    let sla = match j.get("sla") {
+        None | Some(Json::Null) => f64::INFINITY,
+        Some(v) => v.as_f64().ok_or(EnvelopeError::Field("sla"))?,
+    };
+    Ok(Request { id, prompt, n_gen, sla })
+}
+
+pub fn response_to_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("tokens", Json::Arr(r.tokens.iter().map(|t| Json::Num(*t as f64)).collect())),
+        ("latency", Json::Num(r.latency)),
+        ("variant", Json::Str(r.variant.clone())),
+    ])
+}
+
+pub fn response_from_json(j: &Json) -> Result<Response, EnvelopeError> {
+    let id = field_u64(j, "id")?;
+    let tokens = j
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .ok_or(EnvelopeError::Field("tokens"))?
+        .iter()
+        .map(|t| t.as_f64().map(|n| n as i32).ok_or(EnvelopeError::Field("tokens")))
+        .collect::<Result<Vec<i32>, _>>()?;
+    let latency = j
+        .get("latency")
+        .and_then(Json::as_f64)
+        .ok_or(EnvelopeError::Field("latency"))?;
+    let variant = j
+        .get("variant")
+        .and_then(Json::as_str)
+        .ok_or(EnvelopeError::Field("variant"))?
+        .to_string();
+    Ok(Response { id, tokens, latency, variant })
+}
+
+/// What a worker advertises in its `Hello`: enough for the supervisor to
+/// build the router's [`crate::serve::VariantInfo`] without probing across
+/// the socket itself.
+#[derive(Debug, Clone)]
+pub struct HelloInfo {
+    pub arch: String,
+    pub width: usize,
+    /// Worker-probed per-token decode latency (seconds), same probe as
+    /// `Cluster::new` runs in-process.
+    pub token_latency: f64,
+    pub pid: u32,
+}
+
+impl HelloInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("width", Json::Num(self.width as f64)),
+            ("token_latency", Json::Num(self.token_latency)),
+            ("pid", Json::Num(self.pid as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<HelloInfo, EnvelopeError> {
+        Ok(HelloInfo {
+            arch: j
+                .get("arch")
+                .and_then(Json::as_str)
+                .ok_or(EnvelopeError::Field("arch"))?
+                .to_string(),
+            width: j.get("width").and_then(Json::as_usize).ok_or(EnvelopeError::Field("width"))?,
+            token_latency: j
+                .get("token_latency")
+                .and_then(Json::as_f64)
+                .ok_or(EnvelopeError::Field("token_latency"))?,
+            pid: field_u64(j, "pid")? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_roundtrips() {
+        let env = Envelope::new(9, MsgKind::Submit, Json::obj(vec![("id", Json::Num(9.0))]));
+        let back = Envelope::from_json(&env.to_json()).unwrap();
+        assert_eq!(back.cid, 9);
+        assert_eq!(back.kind, MsgKind::Submit);
+        assert_eq!(back.payload.get("id").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn version_and_kind_drift_are_typed() {
+        let v2 = Json::obj(vec![
+            ("v", Json::Num(2.0)),
+            ("cid", Json::Num(0.0)),
+            ("kind", Json::Str("ping".into())),
+        ]);
+        assert_eq!(
+            Envelope::from_json(&v2),
+            Err(EnvelopeError::BadVersion { got: 2 })
+        );
+        let bad = Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("cid", Json::Num(0.0)),
+            ("kind", Json::Str("warp".into())),
+        ]);
+        assert_eq!(Envelope::from_json(&bad), Err(EnvelopeError::BadKind("warp".into())));
+        // a frame that parses as JSON but isn't an envelope at all
+        assert_eq!(
+            Envelope::from_json(&Json::Arr(vec![])),
+            Err(EnvelopeError::Field("v"))
+        );
+    }
+
+    #[test]
+    fn request_response_roundtrip_including_infinite_sla() {
+        let r = Request { id: 3, prompt: vec![1, 2, 5], n_gen: 4, sla: f64::INFINITY };
+        let back = request_from_json(&request_to_json(&r)).unwrap();
+        assert_eq!(back.id, 3);
+        assert_eq!(back.prompt, vec![1, 2, 5]);
+        assert_eq!(back.n_gen, 4);
+        assert!(back.sla.is_infinite());
+
+        let tight = Request { sla: 0.25, ..r };
+        assert_eq!(request_from_json(&request_to_json(&tight)).unwrap().sla, 0.25);
+
+        let resp = Response {
+            id: 3,
+            tokens: vec![7, 8],
+            latency: 0.001,
+            variant: "baseline".into(),
+        };
+        let back = response_from_json(&response_to_json(&resp)).unwrap();
+        assert_eq!(back.tokens, vec![7, 8]);
+        assert_eq!(back.variant, "baseline");
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        let h = HelloInfo { arch: "mix".into(), width: 4, token_latency: 0.002, pid: 123 };
+        let back = HelloInfo::from_json(&h.to_json()).unwrap();
+        assert_eq!(back.arch, "mix");
+        assert_eq!(back.width, 4);
+        assert_eq!(back.pid, 123);
+    }
+}

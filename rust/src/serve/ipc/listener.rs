@@ -1,0 +1,198 @@
+//! Worker side of the IPC cluster: bind one socket, serve one supervisor.
+//!
+//! `planer worker --socket S --arch A ...` lands in [`run_worker`]: build
+//! the arch's [`DecodeEngine`] over the process-local engine (reference
+//! backend by default, so the whole multi-process topology is hermetically
+//! testable), probe one decode step for the router's latency estimate —
+//! the same probe `Cluster::new` runs in-process — then accept exactly one
+//! connection and speak the envelope protocol until the supervisor says
+//! `Bye` or hangs up.
+//!
+//! Batching mirrors the in-process wave lane: queued `Submit`s fire as a
+//! [`BatchWave`] the moment the queue reaches the engine width, or when
+//! the batch window elapses with the queue non-empty (the read timeout
+//! doubles as the wave deadline).  Every response goes back as a `Reply`
+//! whose cid is the request id, so the supervisor's in-flight table keys
+//! ack bookkeeping by id alone.
+//!
+//! A malformed frame (`BadJson`) or a malformed envelope never kills the
+//! worker: the framing layer keeps the stream in sync, the worker answers
+//! with an `Error` envelope and keeps serving.  Losing the connection
+//! entirely is a clean exit — the supervisor owns restarts.
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::codec::{self, CodecError};
+use super::envelope::{
+    request_from_json, response_to_json, Envelope, HelloInfo, MsgKind,
+};
+use crate::runtime::Engine;
+use crate::serve::engine::{DecodeEngine, ServeMetrics};
+use crate::serve::{BatchWave, Request};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Socket path to bind (parent dir is created; a stale file removed).
+    pub socket: PathBuf,
+    /// Arch variant this worker serves (one variant per process).
+    pub arch: String,
+    /// Memory-init seed — must match the supervisor's oracle seed.
+    pub seed: i32,
+    /// Partial-wave deadline: how long a non-empty queue waits for more
+    /// `Submit`s before firing anyway.
+    pub batch_window: Duration,
+}
+
+/// Bind, serve one supervisor connection, clean up the socket.
+pub fn run_worker(engine: &Engine, cfg: &WorkerConfig) -> Result<()> {
+    let de = DecodeEngine::new(engine, &cfg.arch)?;
+    let mut st = de.init_state(cfg.seed)?;
+    let token_latency = probe_token_latency(&de)?;
+
+    if let Some(dir) = cfg.socket.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating socket dir {}", dir.display()))?;
+    }
+    let _ = std::fs::remove_file(&cfg.socket);
+    let listener = UnixListener::bind(&cfg.socket)
+        .with_context(|| format!("binding worker socket {}", cfg.socket.display()))?;
+    let (stream, _) = listener.accept().context("accepting supervisor connection")?;
+
+    let res = serve_conn(&de, &mut st, stream, cfg, token_latency);
+    let _ = std::fs::remove_file(&cfg.socket);
+    res
+}
+
+/// The worker's request loop over one accepted connection.
+fn serve_conn(
+    de: &DecodeEngine,
+    st: &mut crate::runtime::StateStore,
+    mut stream: UnixStream,
+    cfg: &WorkerConfig,
+    token_latency: f64,
+) -> Result<()> {
+    let hello = HelloInfo {
+        arch: cfg.arch.clone(),
+        width: de.width,
+        token_latency,
+        pid: std::process::id(),
+    };
+    codec::write_frame(&mut stream, &Envelope::new(0, MsgKind::Hello, hello.to_json()).to_json())
+        .map_err(anyhow::Error::new)?;
+
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut metrics = ServeMetrics::default();
+    loop {
+        // An empty queue blocks indefinitely; a non-empty one turns the
+        // read timeout into the partial-wave deadline.
+        let window = if queue.is_empty() { None } else { Some(cfg.batch_window) };
+        stream.set_read_timeout(window).context("set_read_timeout on worker socket")?;
+        match codec::read_frame(&mut stream) {
+            Ok(j) => match Envelope::from_json(&j) {
+                Ok(env) => match env.kind {
+                    MsgKind::Submit => match request_from_json(&env.payload) {
+                        Ok(r) => {
+                            queue.push_back(r);
+                            if queue.len() >= de.width {
+                                fire(de, st, &mut queue, &mut metrics, &mut stream)?;
+                            }
+                        }
+                        Err(e) => send_error(&mut stream, env.cid, &e.to_string())?,
+                    },
+                    MsgKind::Ping => {
+                        codec::write_frame(
+                            &mut stream,
+                            &Envelope::new(env.cid, MsgKind::Pong, Json::Null).to_json(),
+                        )
+                        .map_err(anyhow::Error::new)?;
+                    }
+                    MsgKind::Drain => {
+                        while !queue.is_empty() {
+                            fire(de, st, &mut queue, &mut metrics, &mut stream)?;
+                        }
+                        codec::write_frame(
+                            &mut stream,
+                            &Envelope::new(env.cid, MsgKind::Drained, Json::Null).to_json(),
+                        )
+                        .map_err(anyhow::Error::new)?;
+                    }
+                    MsgKind::Bye => return Ok(()),
+                    other => {
+                        send_error(&mut stream, env.cid, &format!("unexpected {}", other.as_str()))?
+                    }
+                },
+                Err(e) => send_error(&mut stream, 0, &e.to_string())?,
+            },
+            // supervisor hung up (or died): nothing left to serve
+            Err(CodecError::Closed) => return Ok(()),
+            // batch window expired with requests queued: fire the partial wave
+            Err(CodecError::Io(e)) if codec::is_timeout(&e) => {
+                if !queue.is_empty() {
+                    fire(de, st, &mut queue, &mut metrics, &mut stream)?;
+                }
+            }
+            // one poisoned frame, stream still in sync: report and continue
+            Err(CodecError::BadJson(msg)) => send_error(&mut stream, 0, &msg)?,
+            Err(e) => return Err(anyhow::Error::new(e).context("reading supervisor frame")),
+        }
+    }
+}
+
+/// Pop up to `width` queued requests, decode them as one wave, reply each.
+fn fire(
+    de: &DecodeEngine,
+    st: &mut crate::runtime::StateStore,
+    queue: &mut VecDeque<Request>,
+    metrics: &mut ServeMetrics,
+    stream: &mut UnixStream,
+) -> Result<()> {
+    let n = queue.len().min(de.width);
+    let popped: Vec<Request> = queue.drain(..n).collect();
+    let wave = BatchWave {
+        requests: popped.into_iter().map(|r| (r, Instant::now())).collect(),
+    };
+    let responses = de.decode_wave(st, &wave, metrics)?;
+    // Replies can race the batch window; take the blocking path for writes
+    // so a full send buffer waits instead of erroring WouldBlock.
+    stream.set_write_timeout(None).context("set_write_timeout on worker socket")?;
+    for r in responses {
+        codec::write_frame(stream, &Envelope::new(r.id, MsgKind::Reply, response_to_json(&r)).to_json())
+            .map_err(anyhow::Error::new)?;
+    }
+    stream.flush().ok();
+    Ok(())
+}
+
+fn send_error(stream: &mut UnixStream, cid: u64, msg: &str) -> Result<()> {
+    let payload = Json::obj(vec![("error", Json::Str(msg.to_string()))]);
+    codec::write_frame(stream, &Envelope::new(cid, MsgKind::Error, payload).to_json())
+        .map_err(anyhow::Error::new)?;
+    Ok(())
+}
+
+/// One-step decode probe for the router's latency estimate — the same
+/// probe `Cluster::new` runs per variant in-process, but executed on the
+/// worker's side of the socket so the supervisor never touches a backend.
+fn probe_token_latency(de: &DecodeEngine) -> Result<f64> {
+    let gen = Arc::clone(de.gen_program());
+    let inputs: Vec<xla::Literal> =
+        gen.spec.inputs.iter().map(crate::runtime::literal::zeros).collect();
+    gen.execute(&inputs)
+        .with_context(|| format!("probing decode step for '{}'", de.arch_name))?;
+    let t = crate::util::timer::time_iters(
+        || {
+            let _ = gen.execute(&inputs);
+        },
+        1,
+        3,
+    );
+    Ok(crate::util::timer::stats(&t).p50)
+}

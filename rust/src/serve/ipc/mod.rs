@@ -1,0 +1,34 @@
+//! Inter-process plumbing for the multi-process serve topology
+//! (docs/ARCHITECTURE.md §Topologies; runbook in docs/OPERATIONS.md).
+//!
+//! The stack, bottom up:
+//!
+//! - [`codec`] — length-prefixed JSON frames over any `Read`/`Write`
+//!   (4-byte big-endian length + UTF-8 `util::json::Json`), with a hard
+//!   [`codec::MAX_FRAME_BYTES`] cap and typed [`codec::CodecError`]s;
+//! - [`envelope`] — the versioned `{v, cid, kind, payload}` message
+//!   envelope with correlation IDs, plus the Request/Response/Hello
+//!   payload codecs (`sla: null` ⇔ infinite budget, matching
+//!   `workload::trace_to_json`);
+//! - [`client`] — the supervisor's per-worker connection: poll-style
+//!   receive and quiescent control calls with correlation checking;
+//! - [`listener`] — the worker side: bind `worker_<arch>.sock`, advertise
+//!   a `Hello`, batch `Submit`s into waves, `Reply` per response.
+//!
+//! The process-management layer above lives in [`super::supervisor`].
+//! Everything here is `std`-only (no serde, no tokio): blocking
+//! `UnixStream`s with read timeouts carry both the worker's batch window
+//! and the supervisor's poll tick.
+
+pub mod client;
+pub mod codec;
+pub mod envelope;
+pub mod listener;
+
+pub use client::IpcClient;
+pub use codec::{frame_bytes, is_timeout, read_frame, write_frame, CodecError, MAX_FRAME_BYTES};
+pub use envelope::{
+    request_from_json, request_to_json, response_from_json, response_to_json, Envelope,
+    EnvelopeError, HelloInfo, MsgKind, IPC_VERSION,
+};
+pub use listener::{run_worker, WorkerConfig};

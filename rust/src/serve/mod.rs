@@ -103,6 +103,24 @@
 //! latency-sensitive A/B *numbers* still come from artifact runs; the ref
 //! backend validates scheduling and correctness, not wall-clock.
 //!
+//! # In-process vs multi-process topology
+//!
+//! Everything above describes the **in-process** topology: one `Cluster`,
+//! per-variant worker *threads*.  `planer serve --ipc` swaps the threads
+//! for per-variant worker *processes*: a [`supervisor::Supervisor`] spawns
+//! `planer worker` once per variant, each worker owns its own
+//! `DecodeEngine`/`StateStore` and serves a Unix-domain socket speaking
+//! length-prefixed JSON envelopes ([`ipc`]), and the supervisor routes
+//! with the same SLA-fit [`Router`] (latencies probed worker-side,
+//! advertised in each worker's `Hello`).  The payoff is isolation: a
+//! panic/OOM/SIGKILL in one variant's process cannot take down the fleet —
+//! the supervisor restarts the worker with backoff and replays (or, past
+//! the restart budget, re-routes) its un-acked requests, so drain
+//! conservation holds across crashes (rust/tests/ipc_serve.rs; hop cost
+//! measured by the hermetic `ipc` bench scenario).  The full map of both
+//! topologies lives in docs/ARCHITECTURE.md, the operational runbook in
+//! docs/OPERATIONS.md.
+//!
 //! Python is never on this path — everything below executes pre-compiled
 //! HLO through PJRT (or the in-process reference forward).
 
@@ -111,11 +129,13 @@ pub mod bytes;
 pub mod cluster;
 pub mod workload;
 pub mod engine;
+pub mod ipc;
 pub mod paged;
 pub mod router;
 pub mod scheduler;
 pub mod session;
 pub mod speculative;
+pub mod supervisor;
 pub mod worker;
 
 pub use batcher::{wave_shape, BatchWave, WaveBatcher, WaveShape};
@@ -125,6 +145,7 @@ pub use workload::{Arrival, TimedRequest, WorkloadGen};
 pub use engine::{
     percentile, try_percentile, DecodeEngine, LatencyReservoir, LatencySummary, ServeMetrics,
 };
+pub use ipc::{Envelope, HelloInfo, IpcClient, MsgKind, WorkerConfig};
 pub use paged::{
     validate_pool_geometry, MemLayout, PagedLane, PagedScheduler, PoolAdmission,
 };
@@ -132,6 +153,7 @@ pub use router::{AdaptiveRouter, RollingP95, Router, RouterPolicy, VariantInfo, 
 pub use scheduler::{SlotExecutor, SlotLane, SlotScheduler};
 pub use session::{Session, SessionState, SpecCheckpoint};
 pub use speculative::{DraftDivergence, RoundOutcome, SpecLane, SpecScheduler};
+pub use supervisor::{FaultPlan, Supervisor, SupervisorOpts};
 pub use worker::{
     admit, admit_adaptive, DepthGauge, LaneHealth, LaneSender, WaveExecutor, WorkerLane,
 };

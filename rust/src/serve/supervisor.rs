@@ -1,0 +1,497 @@
+//! The frontend of the multi-process topology: spawn per-variant worker
+//! processes, route requests to them over UDS, and keep the fleet's drain
+//! conservation invariant across worker crashes.
+//!
+//! Topology (the in-process alternative is [`super::cluster::Cluster`]):
+//!
+//! ```text
+//!   supervisor (router process)
+//!     ├─ planer worker --arch <v0> ── <dir>/worker_<v0>.sock
+//!     ├─ planer worker --arch <v1> ── <dir>/worker_<v1>.sock
+//!     └─ ...          one DecodeEngine + StateStore per process
+//! ```
+//!
+//! Each worker advertises its probed token latency in its `Hello`, from
+//! which the supervisor builds the same SLA-fit [`Router`] the in-process
+//! cluster uses (quality rank = list order).  [`Supervisor::replay`]
+//! routes a trace load-aware (in-flight depth as the tiebreak), then
+//! drains by polling every worker socket.
+//!
+//! # Crash recovery
+//!
+//! A request is **in flight** from `Submit` until its `Reply` is acked;
+//! the supervisor keeps each worker's in-flight set (with submit
+//! timestamps).  When a worker's connection errors — or its oldest
+//! in-flight request exceeds the per-request timeout — [`recover`] runs:
+//!
+//! 1. SIGKILL + reap whatever is left of the process;
+//! 2. while the worker has restarts left: sleep the doubling backoff,
+//!    relaunch it on the same socket, and **replay** every un-acked
+//!    request to it (`replayed` counter);
+//! 3. past the restart budget: mark the worker dead and **re-route** the
+//!    un-acked requests to the best surviving variant via the router's
+//!    allowed-mask (`rerouted` counter); with no survivors, error out.
+//!
+//! Replies are deduplicated by request id, so a reply that raced into the
+//! socket buffer just before a kill plus the post-restart replay of the
+//! same request cannot double-count.  Workers reset TXL memories per wave
+//! (`DecodeEngine::decode_wave`), so a replayed request's committed
+//! tokens are bit-identical to the solo oracle — asserted in
+//! `rust/tests/ipc_serve.rs`, which SIGKILLs a worker mid-wave.
+//!
+//! [`recover`]: Supervisor::recover
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::ipc::client::IpcClient;
+use super::ipc::envelope::{
+    request_to_json, response_from_json, Envelope, HelloInfo, MsgKind,
+};
+use super::router::{Router, RouterPolicy, VariantInfo};
+use super::{Request, Response, TimedRequest};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SupervisorOpts {
+    /// Directory holding one `worker_<arch>.sock` per worker.
+    pub socket_dir: PathBuf,
+    /// Named model config the workers bootstrap ("tiny"/"base").
+    pub config: String,
+    /// Worker backend ("ref" for the hermetic topology, "pjrt" + artifacts
+    /// for production).
+    pub backend: String,
+    /// Artifact directory, forwarded to pjrt workers.
+    pub artifacts: PathBuf,
+    /// Memory-init seed shared by every worker (and any oracle).
+    pub seed: i32,
+    /// Worker executable; `None` = this binary (`current_exe`).
+    pub worker_bin: Option<PathBuf>,
+    /// Oldest-in-flight age that declares a worker wedged.
+    pub request_timeout: Duration,
+    /// Budget for socket connect + `Hello` after a (re)launch.
+    pub connect_timeout: Duration,
+    /// Restarts allowed per worker before its requests re-route.
+    pub restart_max: usize,
+    /// Base restart backoff; doubles per restart of the same worker.
+    pub backoff: Duration,
+    /// Worker-side partial-wave deadline (ms), forwarded on the command line.
+    pub batch_window_ms: u64,
+}
+
+impl Default for SupervisorOpts {
+    fn default() -> SupervisorOpts {
+        SupervisorOpts {
+            socket_dir: std::env::temp_dir().join(format!("planer-ipc-{}", std::process::id())),
+            config: "tiny".to_string(),
+            backend: "ref".to_string(),
+            artifacts: PathBuf::from("artifacts"),
+            seed: 0,
+            worker_bin: None,
+            request_timeout: Duration::from_secs(30),
+            connect_timeout: Duration::from_secs(5),
+            restart_max: 2,
+            backoff: Duration::from_millis(50),
+            batch_window_ms: 2,
+        }
+    }
+}
+
+/// Failure injection for tests and the CI recovery check: SIGKILL
+/// `victim` once `after_acks` replies have been accepted fleet-wide.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub victim: String,
+    pub after_acks: usize,
+}
+
+struct WorkerHandle {
+    name: String,
+    socket: PathBuf,
+    child: Child,
+    client: IpcClient,
+    info: HelloInfo,
+    restarts: usize,
+    /// Submitted, not yet acked — keyed by request id (ordered, so a
+    /// recovery replays in id order, deterministically).
+    inflight: BTreeMap<u64, Request>,
+    submitted_at: BTreeMap<u64, Instant>,
+    alive: bool,
+}
+
+pub struct Supervisor {
+    workers: Vec<WorkerHandle>,
+    router: Router,
+    opts: SupervisorOpts,
+    /// Successful worker relaunches.
+    pub restarts_total: usize,
+    /// Requests moved to a surviving variant after a restart budget ran out.
+    pub reroutes_total: usize,
+    /// Requests re-submitted to a restarted worker.
+    pub replays_total: usize,
+}
+
+impl Supervisor {
+    /// Launch one worker per variant name (list order = quality rank,
+    /// first best — same convention as `Cluster::new`) and build the
+    /// router from their `Hello`s.
+    pub fn spawn(names: &[String], opts: SupervisorOpts) -> Result<Supervisor> {
+        ensure!(!names.is_empty(), "supervisor needs at least one variant");
+        std::fs::create_dir_all(&opts.socket_dir)
+            .with_context(|| format!("creating socket dir {}", opts.socket_dir.display()))?;
+        let mut workers = Vec::new();
+        let mut variants = Vec::new();
+        for (i, name) in names.iter().enumerate() {
+            let socket = opts.socket_dir.join(format!("worker_{name}.sock"));
+            let (child, client, info) = launch_worker(name, &socket, &opts)
+                .with_context(|| format!("launching worker '{name}'"))?;
+            variants.push(VariantInfo {
+                name: name.clone(),
+                token_latency: info.token_latency,
+                quality: (names.len() - i) as f64,
+            });
+            workers.push(WorkerHandle {
+                name: name.clone(),
+                socket,
+                child,
+                client,
+                info,
+                restarts: 0,
+                inflight: BTreeMap::new(),
+                submitted_at: BTreeMap::new(),
+                alive: true,
+            });
+        }
+        Ok(Supervisor {
+            workers,
+            router: Router::new(variants, RouterPolicy::QualityWithinSla),
+            opts,
+            restarts_total: 0,
+            reroutes_total: 0,
+            replays_total: 0,
+        })
+    }
+
+    pub fn worker_names(&self) -> Vec<&str> {
+        self.workers.iter().map(|w| w.name.as_str()).collect()
+    }
+
+    /// Per-worker `Hello` info (arch, width, probed latency, pid).
+    pub fn worker_info(&self, name: &str) -> Option<&HelloInfo> {
+        self.workers.iter().find(|w| w.name == name).map(|w| &w.info)
+    }
+
+    /// Ping every live worker; returns `(name, healthy)` per worker.
+    pub fn health_check(&mut self) -> Vec<(String, bool)> {
+        let timeout = self.opts.connect_timeout;
+        self.workers
+            .iter_mut()
+            .map(|w| {
+                let ok = w.alive
+                    && w.client
+                        .call(MsgKind::Ping, Json::Null, timeout)
+                        .map(|r| r.kind == MsgKind::Pong)
+                        .unwrap_or(false);
+                (w.name.clone(), ok)
+            })
+            .collect()
+    }
+
+    /// Route and serve a whole trace, returning responses sorted by
+    /// request id.  Conservation across crashes is the contract: every
+    /// request in `trace` gets exactly one response, or this errors.
+    pub fn replay(&mut self, trace: &[TimedRequest]) -> Result<Vec<Response>> {
+        self.replay_with_fault(trace, None)
+    }
+
+    /// [`Self::replay`] with optional failure injection (see [`FaultPlan`]).
+    /// Arrival offsets are ignored: the trace is submitted as fast as the
+    /// sockets accept (worker queues provide the backpressure buffer).
+    pub fn replay_with_fault(
+        &mut self,
+        trace: &[TimedRequest],
+        fault: Option<FaultPlan>,
+    ) -> Result<Vec<Response>> {
+        let mut fault = fault;
+        let mut acks = 0usize;
+        let mut responses: BTreeMap<u64, Response> = BTreeMap::new();
+
+        // -- submit phase: route load-aware, like the in-process cluster
+        for tr in trace {
+            let target = {
+                let workers = &self.workers;
+                let depth = |v: &str| {
+                    workers
+                        .iter()
+                        .find(|w| w.name == v)
+                        .map(|w| w.inflight.len())
+                        .unwrap_or(usize::MAX)
+                };
+                let alive = |v: &str| workers.iter().any(|w| w.name == v && w.alive);
+                self.router.route_allowed(&tr.request, depth, alive).to_string()
+            };
+            let wi = self.worker_index(&target)?;
+            if self.submit_to(wi, tr.request.clone()).is_err() {
+                // the socket died mid-submit: recover now, then resubmit
+                // through the (possibly re-routed) recovery path
+                self.recover(wi)?;
+                let wi = if self.workers.get(wi).map(|w| w.alive).unwrap_or(false) {
+                    wi
+                } else {
+                    self.fastest_live()?
+                };
+                self.submit_to(wi, tr.request.clone())?;
+            }
+        }
+
+        // -- drain phase: poll every worker until all replies are in
+        while responses.len() < trace.len() {
+            let mut progressed = false;
+            for wi in 0..self.workers.len() {
+                let pending = self.workers.get(wi).map(|w| w.alive && !w.inflight.is_empty());
+                if pending != Some(true) {
+                    continue;
+                }
+                let recv = self
+                    .workers
+                    .get_mut(wi)
+                    .context("worker index out of range")?
+                    .client
+                    .recv_with(Some(Duration::from_millis(20)));
+                match recv {
+                    Ok(Some(env)) if env.kind == MsgKind::Reply => {
+                        let resp = response_from_json(&env.payload).map_err(anyhow::Error::new)?;
+                        if let Some(w) = self.workers.get_mut(wi) {
+                            w.inflight.remove(&resp.id);
+                            w.submitted_at.remove(&resp.id);
+                        }
+                        if responses.insert(resp.id, resp).is_none() {
+                            acks += 1;
+                            progressed = true;
+                        }
+                        if fault.as_ref().map(|f| acks >= f.after_acks).unwrap_or(false) {
+                            if let Some(f) = fault.take() {
+                                self.kill_by_name(&f.victim);
+                            }
+                        }
+                    }
+                    // Error envelopes and other kinds: note and move on —
+                    // the per-request timeout is the backstop.
+                    Ok(Some(_)) => {}
+                    Ok(None) => {}
+                    Err(_) => {
+                        // connection failed: the crash-recovery path
+                        self.recover(wi)?;
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                self.reap_wedged()?;
+            }
+        }
+        Ok(responses.into_values().collect())
+    }
+
+    /// SIGKILL a worker by name (failure injection; recovery happens when
+    /// its socket errors on the next poll).
+    fn kill_by_name(&mut self, name: &str) {
+        if let Some(w) = self.workers.iter_mut().find(|w| w.name == name) {
+            let _ = w.child.kill();
+        }
+    }
+
+    /// Kill-and-recover any worker whose oldest in-flight request has
+    /// exceeded the request timeout.
+    fn reap_wedged(&mut self) -> Result<()> {
+        let now = Instant::now();
+        let timeout = self.opts.request_timeout;
+        let wedged: Vec<usize> = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| {
+                w.alive
+                    && w.submitted_at
+                        .values()
+                        .next()
+                        .map(|t| now.duration_since(*t) > timeout)
+                        .unwrap_or(false)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        for wi in wedged {
+            self.recover(wi)?;
+        }
+        Ok(())
+    }
+
+    /// The crash-recovery path: reap, then restart-and-replay (within the
+    /// restart budget) or mark dead and re-route the un-acked requests.
+    pub fn recover(&mut self, wi: usize) -> Result<()> {
+        let (unacked, restarts, name) = {
+            let w = self.workers.get_mut(wi).context("worker index out of range")?;
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+            let unacked: Vec<Request> = w.inflight.values().cloned().collect();
+            w.inflight.clear();
+            w.submitted_at.clear();
+            (unacked, w.restarts, w.name.clone())
+        };
+        if restarts < self.opts.restart_max {
+            // doubling backoff, capped to keep the shift well-defined
+            let backoff = self.opts.backoff * (1u32 << restarts.min(8) as u32);
+            std::thread::sleep(backoff);
+            let socket = self
+                .workers
+                .get(wi)
+                .map(|w| w.socket.clone())
+                .context("worker index out of range")?;
+            let (child, client, info) = launch_worker(&name, &socket, &self.opts)
+                .with_context(|| format!("restarting worker '{name}'"))?;
+            if let Some(w) = self.workers.get_mut(wi) {
+                w.child = child;
+                w.client = client;
+                w.info = info;
+                w.restarts += 1;
+            }
+            self.restarts_total += 1;
+            for r in unacked {
+                self.submit_to(wi, r)?;
+                self.replays_total += 1;
+            }
+        } else {
+            if let Some(w) = self.workers.get_mut(wi) {
+                w.alive = false;
+            }
+            for r in unacked {
+                let target = {
+                    let workers = &self.workers;
+                    let depth = |v: &str| {
+                        workers
+                            .iter()
+                            .find(|w| w.name == v)
+                            .map(|w| w.inflight.len())
+                            .unwrap_or(usize::MAX)
+                    };
+                    let alive = |v: &str| workers.iter().any(|w| w.name == v && w.alive);
+                    self.router.route_allowed(&r, depth, alive).to_string()
+                };
+                let wi2 = self.worker_index(&target)?;
+                ensure!(
+                    self.workers.get(wi2).map(|w| w.alive).unwrap_or(false),
+                    "no live workers left to re-route request {} to",
+                    r.id
+                );
+                self.submit_to(wi2, r)?;
+                self.reroutes_total += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn submit_to(&mut self, wi: usize, r: Request) -> Result<()> {
+        let w = self.workers.get_mut(wi).context("worker index out of range")?;
+        w.client
+            .send(&Envelope::new(r.id, MsgKind::Submit, request_to_json(&r)))
+            .map_err(anyhow::Error::new)
+            .with_context(|| format!("submitting request {} to '{}'", r.id, w.name))?;
+        w.submitted_at.insert(r.id, Instant::now());
+        w.inflight.insert(r.id, r);
+        Ok(())
+    }
+
+    fn worker_index(&self, name: &str) -> Result<usize> {
+        self.workers
+            .iter()
+            .position(|w| w.name == name)
+            .with_context(|| format!("router picked unknown variant '{name}'"))
+    }
+
+    fn fastest_live(&self) -> Result<usize> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.alive)
+            .min_by(|(_, a), (_, b)| a.info.token_latency.total_cmp(&b.info.token_latency))
+            .map(|(i, _)| i)
+            .context("no live workers left")
+    }
+
+    /// Graceful shutdown: drain, `Bye`, reap, remove sockets.  Idempotent
+    /// enough that `Drop` can follow it.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let timeout = self.opts.connect_timeout;
+        for w in &mut self.workers {
+            if w.alive {
+                let drained = w
+                    .client
+                    .call(MsgKind::Drain, Json::Null, timeout)
+                    .map(|r| r.kind == MsgKind::Drained)
+                    .unwrap_or(false);
+                if !drained && !w.inflight.is_empty() {
+                    bail!("worker '{}' failed to drain {} in-flight requests", w.name, w.inflight.len());
+                }
+                let _ = w.client.send(&Envelope::new(0, MsgKind::Bye, Json::Null));
+            }
+            let _ = w.child.wait();
+            let _ = std::fs::remove_file(&w.socket);
+            w.alive = false;
+        }
+        let _ = std::fs::remove_dir(&self.opts.socket_dir);
+        Ok(())
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+            let _ = std::fs::remove_file(&w.socket);
+        }
+        let _ = std::fs::remove_dir(&self.opts.socket_dir);
+    }
+}
+
+/// Spawn `planer worker` for one variant and wait for its `Hello`.
+fn launch_worker(name: &str, socket: &Path, opts: &SupervisorOpts) -> Result<(Child, IpcClient, HelloInfo)> {
+    let _ = std::fs::remove_file(socket);
+    let bin = match &opts.worker_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("resolving worker binary")?,
+    };
+    let mut cmd = Command::new(&bin);
+    cmd.arg("worker")
+        .arg("--socket")
+        .arg(socket)
+        .arg("--arch")
+        .arg(name)
+        .arg("--config")
+        .arg(&opts.config)
+        .arg("--backend")
+        .arg(&opts.backend)
+        .arg("--seed")
+        .arg(opts.seed.to_string())
+        .arg("--batch-window-ms")
+        .arg(opts.batch_window_ms.to_string());
+    if opts.backend != "ref" {
+        cmd.arg("--artifacts").arg(&opts.artifacts);
+    }
+    let child = cmd.spawn().with_context(|| format!("spawning {} worker", bin.display()))?;
+    let mut client = IpcClient::connect(socket, opts.connect_timeout)?;
+    let env = client
+        .recv_with(Some(opts.connect_timeout))?
+        .with_context(|| format!("worker '{name}' closed before Hello"))?;
+    ensure!(
+        env.kind == MsgKind::Hello,
+        "worker '{name}' opened with {:?}, expected Hello",
+        env.kind
+    );
+    let info = HelloInfo::from_json(&env.payload).map_err(anyhow::Error::new)?;
+    Ok((child, client, info))
+}

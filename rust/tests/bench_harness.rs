@@ -355,6 +355,12 @@ fn committed_baseline_matches_the_harness() {
             .unwrap_or_else(|| panic!("baseline lacks scenario '{name}'"));
         let rep = run_named(name, DEFAULT_SEED).unwrap();
         for leg in &rep.legs {
+            // wall-clock legs are archived, never gated (same rule as
+            // scripts/bench_gate.sh) — no hermetic leg sets this today,
+            // but the skip must mirror the gate's
+            if !leg.deterministic {
+                continue;
+            }
             let want = entry
                 .get(&leg.name)
                 .and_then(|l| l.get("p95"))
@@ -369,6 +375,62 @@ fn committed_baseline_matches_the_harness() {
             );
         }
     }
+}
+
+/// The ipc scenario's claims: the UDS hop is a pure uniform shift (every
+/// latency stat moves by exactly two hops), the crash leg loses zero
+/// requests while recording the kill/restart/replay, and the frame
+/// counters meter exactly one Submit and one Reply per request through the
+/// real codec — plus one re-framed Submit per replayed request.
+#[test]
+fn ipc_scenario_holds_its_hop_and_recovery_claims() {
+    use planer::bench::IPC_HOP_TICKS;
+    let rep = run_named("ipc", DEFAULT_SEED).unwrap();
+    let inp = rep.leg("in_process").unwrap();
+    let uds = rep.leg("uds").unwrap();
+    let crash = rep.leg("uds_crash").unwrap();
+    let n = rep.requests as u64;
+    for leg in [inp, uds, crash] {
+        assert_eq!(leg.requests, rep.requests, "{}: lost requests", leg.name);
+        assert!(leg.deterministic, "{}: hermetic legs must stay gateable", leg.name);
+    }
+
+    // the in-process twin never touches the wire
+    assert_eq!(inp.ipc_frames, 0);
+    assert_eq!(inp.ipc_bytes, 0);
+
+    // uniform shift: every latency stat is the in-process one + 2 hops
+    let hop2 = 2.0 * IPC_HOP_TICKS as f64;
+    assert_eq!(uds.latency.p95, inp.latency.p95 + hop2, "hop cost must be a pure shift");
+    assert_eq!(uds.latency.p50, inp.latency.p50 + hop2);
+    assert_eq!(uds.latency.min, inp.latency.min + hop2);
+    assert_eq!(uds.latency.max, inp.latency.max + hop2);
+    assert_eq!(uds.tokens_out, inp.tokens_out, "the hop must not change decode");
+    assert_eq!(uds.steps, inp.steps);
+
+    // exactly one Submit and one Reply per request, all real codec frames
+    assert_eq!(uds.ipc_frames, 2 * n);
+    assert!(uds.ipc_bytes > 0, "frames must meter real bytes");
+    assert_eq!(uds.worker_kills, 0);
+    assert_eq!(uds.worker_restarts, 0);
+    assert_eq!(uds.replayed_requests, 0);
+
+    // the crash leg: one SIGKILL, one restart, a replayed wave (whose
+    // decode work — steps, tokens — is honestly double-counted in the
+    // meters), and zero lost requests
+    assert_eq!(crash.worker_kills, 1);
+    assert_eq!(crash.worker_restarts, 1);
+    assert!(crash.replayed_requests > 0, "the killed wave held requests");
+    assert_eq!(
+        crash.ipc_frames,
+        2 * n + crash.replayed_requests,
+        "replays re-frame their Submits"
+    );
+    assert!(crash.steps > uds.steps, "the replayed wave's decode is re-paid");
+    assert!(
+        crash.latency.p95 >= uds.latency.p95,
+        "crash recovery cannot beat the crash-free leg"
+    );
 }
 
 /// Harness plumbing: lane validation and the routed split.

@@ -1,0 +1,182 @@
+//! Multi-process serving over UDS IPC: end-to-end tests of the
+//! `Supervisor` + `planer worker` topology on the reference backend.
+//!
+//! These spawn the real `planer` binary (CARGO_BIN_EXE) as worker
+//! processes, speak the real length-prefixed JSON protocol over real Unix
+//! sockets, and SIGKILL workers mid-replay — then hold the committed
+//! streams to the same solo oracle `rust/tests/ref_serve.rs` uses:
+//! every response must be bit-identical to decoding its request alone
+//! through a fresh `DecodeEngine` of the serving variant.  Crash recovery
+//! (restart + replay, or budget-exhausted re-route) must lose zero
+//! accepted requests: drain conservation holds across SIGKILL.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use planer::runtime::Engine;
+use planer::serve::{
+    BatchWave, DecodeEngine, FaultPlan, Request, ServeMetrics, Supervisor, SupervisorOpts,
+    TimedRequest,
+};
+
+/// The two reference preset archs `Engine::reference_named("tiny")`
+/// synthesizes, quality-ordered: index 0 is the supervisor's best lane.
+fn fleet_names() -> Vec<String> {
+    vec!["baseline".to_string(), "planer_mix".to_string()]
+}
+
+fn opts(tag: &str) -> SupervisorOpts {
+    SupervisorOpts {
+        socket_dir: std::env::temp_dir()
+            .join(format!("planer-ipc-test-{tag}-{}", std::process::id())),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_planer"))),
+        // short batch window so partial waves flush promptly under test load
+        batch_window_ms: 5,
+        ..SupervisorOpts::default()
+    }
+}
+
+/// `n` deterministic requests, ids 0.., all with unbounded SLA — the
+/// quality-first router pins every one on the best lane (`names[0]`), so
+/// fault tests know exactly which worker carries the traffic.
+fn trace(n: usize) -> Vec<TimedRequest> {
+    (0..n)
+        .map(|i| TimedRequest {
+            at: 0.0,
+            request: Request {
+                id: i as u64,
+                prompt: vec![1, (i % 5) as i32 + 1, 2],
+                n_gen: 2 + i % 4,
+                sla: f64::INFINITY,
+            },
+        })
+        .collect()
+}
+
+/// Solo oracle: each request decoded alone through a fresh wave on `arch`,
+/// same init seed as the workers.  `decode_wave` resets memories per wave,
+/// so these streams are scheduling-independent.
+fn oracle(engine: &Engine, arch: &str, trace: &[TimedRequest]) -> HashMap<u64, Vec<i32>> {
+    let de = DecodeEngine::new(engine, arch).unwrap();
+    let mut st = de.init_state(0).unwrap();
+    trace
+        .iter()
+        .map(|tr| {
+            let wave = BatchWave { requests: vec![(tr.request.clone(), Instant::now())] };
+            let mut m = ServeMetrics::default();
+            let rs = de.decode_wave(&mut st, &wave, &mut m).unwrap();
+            (tr.request.id, rs.into_iter().next().unwrap().tokens)
+        })
+        .collect()
+}
+
+/// Oracles for every fleet arch, keyed by arch name.
+fn oracles(trace: &[TimedRequest]) -> HashMap<String, HashMap<u64, Vec<i32>>> {
+    let engine = Engine::reference_named("tiny").unwrap();
+    fleet_names()
+        .into_iter()
+        .map(|arch| {
+            let o = oracle(&engine, &arch, trace);
+            (arch, o)
+        })
+        .collect()
+}
+
+/// Every response matches the solo oracle of the variant that served it,
+/// and every submitted id came back exactly once.
+fn assert_matches_oracle(
+    trace: &[TimedRequest],
+    responses: &[planer::serve::Response],
+    oracles: &HashMap<String, HashMap<u64, Vec<i32>>>,
+) {
+    assert_eq!(
+        responses.len(),
+        trace.len(),
+        "drain conservation violated: {} of {} requests came back",
+        responses.len(),
+        trace.len()
+    );
+    let mut seen: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), trace.len(), "duplicate or missing response ids");
+    for r in responses {
+        let want = oracles
+            .get(&r.variant)
+            .unwrap_or_else(|| panic!("response {} from unknown variant '{}'", r.id, r.variant))
+            .get(&r.id)
+            .unwrap_or_else(|| panic!("no oracle stream for request {}", r.id));
+        assert_eq!(
+            &r.tokens, want,
+            "request {} via '{}': committed stream diverged from the solo oracle",
+            r.id, r.variant
+        );
+    }
+}
+
+#[test]
+fn uds_replay_matches_the_solo_oracle_exactly() {
+    let names = fleet_names();
+    let trace = trace(16);
+    let want = oracles(&trace);
+
+    let mut sup = Supervisor::spawn(&names, opts("plain")).unwrap();
+    assert_eq!(sup.worker_names(), names.iter().map(String::as_str).collect::<Vec<_>>());
+    for (name, healthy) in sup.health_check() {
+        assert!(healthy, "worker '{name}' failed its health check");
+    }
+    let info = sup.worker_info("baseline").expect("Hello recorded per worker");
+    assert!(info.width > 0 && info.token_latency > 0.0, "Hello must carry the probe");
+
+    let responses = sup.replay(&trace).unwrap();
+    assert_matches_oracle(&trace, &responses, &want);
+    // unbounded SLAs pin everything on the best-quality lane
+    assert!(responses.iter().all(|r| r.variant == "baseline"), "router left the best lane");
+    assert_eq!(sup.restarts_total, 0);
+    assert_eq!(sup.reroutes_total, 0);
+    sup.shutdown().unwrap();
+}
+
+#[test]
+fn sigkill_mid_wave_restarts_and_replays_with_zero_loss() {
+    let names = fleet_names();
+    let trace = trace(24);
+    let want = oracles(&trace);
+
+    let mut sup = Supervisor::spawn(&names, opts("kill")).unwrap();
+    let fault = FaultPlan { victim: "baseline".to_string(), after_acks: 2 };
+    let responses = sup.replay_with_fault(&trace, Some(fault)).unwrap();
+
+    assert!(sup.restarts_total >= 1, "the SIGKILLed worker must be restarted");
+    assert!(sup.replays_total >= 1, "un-acked in-flight requests must be replayed");
+    assert_eq!(sup.reroutes_total, 0, "within the restart budget nothing re-routes");
+    // zero accepted requests lost, and the restarted worker's streams are
+    // bit-identical to the oracle (decode_wave resets memories per wave)
+    assert_matches_oracle(&trace, &responses, &want);
+    sup.shutdown().unwrap();
+}
+
+#[test]
+fn exhausted_restart_budget_reroutes_to_the_survivor() {
+    let names = fleet_names();
+    let trace = trace(16);
+    let want = oracles(&trace);
+
+    let mut o = opts("reroute");
+    o.restart_max = 0; // first crash exhausts the budget
+    let mut sup = Supervisor::spawn(&names, o).unwrap();
+    let fault = FaultPlan { victim: "baseline".to_string(), after_acks: 2 };
+    let responses = sup.replay_with_fault(&trace, Some(fault)).unwrap();
+
+    assert_eq!(sup.restarts_total, 0, "restart budget 0 must never respawn");
+    assert!(sup.reroutes_total >= 1, "un-acked requests must re-route off the dead lane");
+    assert!(
+        responses.iter().any(|r| r.variant == "planer_mix"),
+        "re-routed requests must be served by the surviving lane"
+    );
+    // conservation + per-variant oracle identity still hold: re-routed
+    // streams are the survivor's solo streams, not the dead lane's
+    assert_matches_oracle(&trace, &responses, &want);
+    sup.shutdown().unwrap();
+}

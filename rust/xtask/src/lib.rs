@@ -131,6 +131,17 @@ pub fn repo_config() -> Config {
             strict("rust/src/bench/harness.rs", "Harness::paged"),
             strict("rust/src/bench/harness.rs", "Harness::adaptive"),
             strict("rust/src/bench/harness.rs", "WaveLane::fire"),
+            strict("rust/src/bench/harness.rs", "Harness::ipc_wave"),
+            strict("rust/src/bench/harness.rs", "fire_ipc"),
+            // UDS IPC frame pump + supervisor recovery (every request
+            // crosses these twice; a panic here kills a worker or wedges
+            // the router's drain loop)
+            strict("rust/src/serve/ipc/codec.rs", "read_frame"),
+            strict("rust/src/serve/ipc/codec.rs", "write_frame"),
+            strict("rust/src/serve/ipc/client.rs", "IpcClient::call"),
+            strict("rust/src/serve/ipc/listener.rs", "serve_conn"),
+            strict("rust/src/serve/supervisor.rs", "Supervisor::replay_with_fault"),
+            strict("rust/src/serve/supervisor.rs", "Supervisor::recover"),
             // reference-backend decode kernels
             kernel("rust/src/runtime/refback.rs", "gen_forward"),
             kernel("rust/src/runtime/refback.rs", "gen_forward_traced"),

@@ -364,6 +364,61 @@ def sim_wave_overlapped(sub, width, step_ticks, max_wait, samples):
     return lane.m, clock.now
 
 
+def sim_wave_ipc(sub, width, step_ticks, max_wait, hop, kill_wave,
+                 restart_ticks, samples):
+    """bench/harness.rs::Harness::ipc_wave, one lane: the wave_overlapped
+    loop with every arrival shifted +hop onto the worker's clock (queue
+    entries and deadlines carry the shifted ticks), and — when kill_wave
+    >= 0 — the fired wave of that index decodes but loses its completions
+    to a SIGKILL before any reply lands: the supervisor pays restart_ticks
+    and the identical wave is re-fired (steps honestly re-paid, matching
+    the Rust metrics).  Samples are post-processed back to router-side
+    time: arrivals unshifted, completions + one reply hop.  The frame and
+    byte metering of the Rust leg never touches the schedule, so it has no
+    mirror here."""
+    lane = WaveLaneSim(width, step_ticks)
+    clock = Clock()
+    i = 0
+    fired = 0
+
+    def fire_ipc():
+        nonlocal fired
+        if fired == kill_wave:
+            popped = lane.queue[:min(len(lane.queue), width)]
+            n0 = len(samples)
+            lane.fire(clock, samples)
+            del samples[n0:]          # replies lost with the process
+            clock.now += restart_ticks
+            lane.queue[:0] = popped   # replayed to the restarted worker
+            lane.fire(clock, samples)
+        else:
+            lane.fire(clock, samples)
+        fired += 1
+
+    while True:
+        while i < len(sub) and sub[i][1] + hop <= clock.now:
+            r, at = sub[i]
+            lane.queue.append((r, at + hop))
+            i += 1
+        if len(lane.queue) >= width:
+            fire_ipc()
+            continue
+        if lane.queue:
+            deadline = lane.queue[0][1] + max_wait
+            if i < len(sub) and sub[i][1] + hop <= deadline:
+                clock.at_least(sub[i][1] + hop)
+                continue
+            clock.at_least(deadline)
+            fire_ipc()
+            continue
+        if i < len(sub):
+            clock.at_least(sub[i][1] + hop)
+            continue
+        break
+    samples[:] = [(done + hop, rid, at - hop) for done, rid, at in samples]
+    return lane.m, clock.now + hop
+
+
 def sim_wave_serial(routed, width, step_ticks_per_lane, max_wait, samples):
     """bench/harness.rs::Harness::wave_serial: shared clock, fire-to-fixpoint
     after each admission, force-drain at the end."""
@@ -1037,6 +1092,43 @@ def scenario_moe_conversion(seed):
     return dict(scenario="moe_conversion", requests=len(trace), legs=legs)
 
 
+# scenarios.rs: IPC_HOP_TICKS / IPC_RESTART_TICKS / IPC_KILL_WAVE
+IPC_HOP_TICKS = 2
+IPC_RESTART_TICKS = 40
+IPC_KILL_WAVE = 3
+
+
+def scenario_ipc(seed):
+    """scenarios.rs::ipc: 1 lane, Uniform 3ms gaps, wave policy — the
+    in-process schedule vs the UDS hop model (+2 ticks each way, a pure
+    uniform shift: every latency stat moves by exactly 2 * hop) vs the
+    same with a SIGKILL after fired wave 3 (decode lost, restart paid,
+    wave replayed bit-identically)."""
+    trace = generate(48, seed, gap_s=0.003, pmin=2, pmax=12, gmin=2, gmax=8,
+                     vocab=CFG["vocab"], tight_frac=0.5, sla_tight=0.25,
+                     sla_loose=float("inf"))
+    lanes = [dict(token_latency=1 / TICKS_PER_SEC)]
+    sub = routed_subtraces(trace, lanes)[0]
+
+    samples = []
+    m, wall = sim_wave_overlapped(sub, WIDTH, 1, MAX_WAIT, samples)
+    m.bytes = wave_resident_bytes(m.steps)
+    inp = leg_result("in_process", m, samples, wall)
+
+    samples = []
+    m, wall = sim_wave_ipc(sub, WIDTH, 1, MAX_WAIT, IPC_HOP_TICKS, -1, 0,
+                           samples)
+    m.bytes = wave_resident_bytes(m.steps)
+    uds = leg_result("uds", m, samples, wall)
+
+    samples = []
+    m, wall = sim_wave_ipc(sub, WIDTH, 1, MAX_WAIT, IPC_HOP_TICKS,
+                           IPC_KILL_WAVE, IPC_RESTART_TICKS, samples)
+    m.bytes = wave_resident_bytes(m.steps)
+    crash = leg_result("uds_crash", m, samples, wall)
+    return dict(scenario="ipc", requests=len(trace), legs=[inp, uds, crash])
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seed", type=int, default=42,
@@ -1050,7 +1142,7 @@ def main():
                scenario_residency(args.seed), scenario_speculative(args.seed),
                scenario_bursty(args.seed), scenario_paging(args.seed),
                scenario_adaptive(args.seed),
-               scenario_moe_conversion(args.seed)]
+               scenario_moe_conversion(args.seed), scenario_ipc(args.seed)]
     for res in results:
         print(f"\nscenario {res['scenario']} ({res['requests']} reqs"
               + (f", lane loads {res['lane_loads']}" if "lane_loads" in res else "")
